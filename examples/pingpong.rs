@@ -1,0 +1,122 @@
+//! Pingpong: a quick look at the paper's headline measurement — DART
+//! one-sided operations vs raw MPI-3 RMA, across placements.
+//!
+//! ```sh
+//! cargo run --release --example pingpong
+//! ```
+//!
+//! This is the interactive sibling of the full figure benches
+//! (`cargo bench`): one pair of units per placement tier, a short sweep of
+//! message sizes, blocking put DTCT + non-blocking put DTIT for DART and
+//! raw mpisim side by side.
+
+use dart::bench_util::{fmt_ns, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::simnet::{PinPolicy, Tier};
+use std::sync::Mutex;
+use std::time::Instant;
+
+const REPS: usize = 200;
+
+fn main() -> anyhow::Result<()> {
+    println!("== DART vs MPI pingpong (blocking put DTCT / non-blocking put DTIT) ==");
+    for (tier, pin) in [
+        (Tier::IntraNuma, PinPolicy::Block),
+        (Tier::InterNuma, PinPolicy::ScatterNuma),
+        (Tier::InterNode, PinPolicy::ScatterNode),
+    ] {
+        println!("\n-- placement: {tier} --");
+        println!("{:>10} {:>14} {:>14} {:>14} {:>14}", "size", "DART put_b", "MPI put+flush", "DART put(nb)", "MPI rput");
+        let rows = Mutex::new(Vec::new());
+        let cfg = DartConfig::hermit(2, 2).with_pin(pin);
+        run(cfg, |env| {
+            let me = env.myid();
+            let g = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 21).unwrap();
+            let comm = env.placement(); // placement sanity
+            let _ = comm;
+            for pow in [0usize, 6, 10, 12, 14, 17, 21] {
+                let size = 1usize << pow;
+                let buf = vec![0xA5u8; size];
+                env.barrier(DART_TEAM_ALL).unwrap();
+                if me == 0 {
+                    // DART blocking put DTCT
+                    let mut s_dart_b = Samples::new();
+                    for _ in 0..REPS {
+                        let t = Instant::now();
+                        env.put_blocking(g.with_unit(1), &buf).unwrap();
+                        s_dart_b.push(t.elapsed().as_nanos() as f64);
+                    }
+                    // DART non-blocking put DTIT
+                    let mut s_dart_nb = Samples::new();
+                    let mut handles = Vec::with_capacity(REPS);
+                    for _ in 0..REPS {
+                        let t = Instant::now();
+                        let h = env.put(g.with_unit(1), &buf).unwrap();
+                        s_dart_nb.push(t.elapsed().as_nanos() as f64);
+                        handles.push(h);
+                    }
+                    env.waitall(handles).unwrap();
+                    rows.lock().unwrap().push((size, s_dart_b.median(), s_dart_nb.median()));
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+            }
+            env.team_memfree(DART_TEAM_ALL, g).unwrap();
+        })?;
+
+        // Raw mpisim side (same worlds, windows directly).
+        let mpi_rows = Mutex::new(Vec::new());
+        let pin2 = match tier {
+            Tier::IntraNuma => PinPolicy::Block,
+            Tier::InterNuma => PinPolicy::ScatterNuma,
+            Tier::InterNode => PinPolicy::ScatterNode,
+        };
+        let mut wcfg = dart::mpisim::WorldConfig::hermit(2, 2);
+        wcfg.pin = pin2;
+        dart::mpisim::World::run(wcfg, |mpi| {
+            let comm = mpi.comm_world();
+            let win = dart::mpisim::Win::allocate(&comm, 1 << 21).unwrap();
+            win.lock_all().unwrap();
+            for pow in [0usize, 6, 10, 12, 14, 17, 21] {
+                let size = 1usize << pow;
+                let buf = vec![0xA5u8; size];
+                comm.barrier().unwrap();
+                if comm.rank() == 0 {
+                    let mut s_b = Samples::new();
+                    for _ in 0..REPS {
+                        let t = Instant::now();
+                        win.put(&buf, 1, 0).unwrap();
+                        win.flush(1).unwrap();
+                        s_b.push(t.elapsed().as_nanos() as f64);
+                    }
+                    let mut s_nb = Samples::new();
+                    let mut reqs = Vec::with_capacity(REPS);
+                    for _ in 0..REPS {
+                        let t = Instant::now();
+                        let r = win.rput(&buf, 1, 0).unwrap();
+                        s_nb.push(t.elapsed().as_nanos() as f64);
+                        reqs.push(r);
+                    }
+                    dart::mpisim::RmaRequest::waitall(reqs);
+                    mpi_rows.lock().unwrap().push((size, s_b.median(), s_nb.median()));
+                }
+                comm.barrier().unwrap();
+            }
+            win.unlock_all().unwrap();
+        });
+
+        let rows = rows.into_inner().unwrap();
+        let mpi_rows = mpi_rows.into_inner().unwrap();
+        for ((size, db, dnb), (_, mb, mnb)) in rows.iter().zip(&mpi_rows) {
+            println!(
+                "{:>10} {:>14} {:>14} {:>14} {:>14}",
+                size,
+                fmt_ns(*db),
+                fmt_ns(*mb),
+                fmt_ns(*dnb),
+                fmt_ns(*mnb)
+            );
+        }
+    }
+    println!("\npingpong OK (full sweeps: cargo bench)");
+    Ok(())
+}

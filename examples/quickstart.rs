@@ -1,0 +1,83 @@
+//! Quickstart: a tour of the DART PGAS API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [units]
+//! ```
+//!
+//! Demonstrates, on one SPMD launch: identity queries, sorted groups,
+//! sub-team creation, collective aligned allocation + global-pointer
+//! arithmetic, one-sided blocking/non-blocking put/get, collectives, and
+//! the MCS lock.
+
+use dart::dart::{run, DartConfig, DartGroup, DART_TEAM_ALL};
+use dart::mpisim::MpiOp;
+use std::sync::Mutex;
+
+fn main() -> anyhow::Result<()> {
+    let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    println!("== DART quickstart: {units} units ==");
+    let log = Mutex::new(Vec::<String>::new());
+
+    run(DartConfig::with_units(units), |env| {
+        let me = env.myid();
+
+        // --- 1. Global memory + one-sided communication -----------------
+        // A symmetric allocation: every unit owns `units` u64 slots.
+        let table = env
+            .team_memalloc_aligned(DART_TEAM_ALL, (units * 8) as u64)
+            .expect("alloc");
+        // Everyone deposits its id into slot `me` of EVERY unit — pure
+        // global-pointer arithmetic, no receives anywhere.
+        let mut handles = Vec::new();
+        for u in 0..units {
+            let dst = table.with_unit(u as i32).add((me as u64) * 8);
+            handles.push(env.put(dst, &(me as u64 + 100).to_ne_bytes()).expect("put"));
+        }
+        env.waitall(handles).expect("waitall");
+        env.barrier(DART_TEAM_ALL).expect("barrier");
+        // Read my local slots back.
+        let mut slots = vec![0u64; units];
+        env.local_read(table.with_unit(me), dart::mpisim::as_bytes_mut(&mut slots))
+            .expect("local_read");
+        assert!(slots.iter().enumerate().all(|(u, &v)| v == u as u64 + 100));
+
+        // --- 2. Collectives ---------------------------------------------
+        let mut sum = [0i64];
+        env.allreduce(DART_TEAM_ALL, &[me as i64], &mut sum, MpiOp::Sum).expect("allreduce");
+
+        // --- 3. Teams over sorted groups --------------------------------
+        // The evens team, built by adding members in scrambled order.
+        let w = env.mpi_world_group();
+        let mut evens = DartGroup::new();
+        for u in (0..units as i32).filter(|u| u % 2 == 0).rev() {
+            evens.addmember(u, &w).expect("addmember");
+        }
+        let team = env.team_create(DART_TEAM_ALL, &evens).expect("team_create");
+        if let Some(t) = team {
+            let tr = env.team_myid(t).expect("team_myid");
+            let g = env.team_memalloc_aligned(t, 64).expect("team alloc");
+            env.put_blocking(g.with_unit(me), &[tr as u8; 8]).expect("put");
+            env.barrier(t).expect("team barrier");
+            env.team_memfree(t, g).expect("team free");
+            env.team_destroy(t).expect("team destroy");
+        }
+
+        // --- 4. The MCS lock ---------------------------------------------
+        let lock = env.lock_init(DART_TEAM_ALL).expect("lock_init");
+        env.lock_acquire(&lock).expect("acquire");
+        log.lock().unwrap().push(format!(
+            "unit {me}: in critical section (sum of ids = {})",
+            sum[0]
+        ));
+        env.lock_release(&lock).expect("release");
+        env.barrier(DART_TEAM_ALL).expect("barrier");
+        env.lock_free(lock).expect("lock_free");
+        env.team_memfree(DART_TEAM_ALL, table).expect("free");
+    })?;
+
+    for line in log.into_inner().unwrap() {
+        println!("{line}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

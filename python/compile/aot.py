@@ -1,0 +1,107 @@
+"""AOT bridge: lower the L2 JAX step functions to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads
+the text with ``HloModuleProto::from_text_file`` and compiles it on its
+PJRT CPU client. Text — NOT ``lowered.compile()`` / serialized protos —
+because jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Every artifact ``<name>.hlo.txt`` ships with a ``<name>.meta`` sidecar
+describing its I/O signature in a line format the Rust side parses:
+
+    input f32 66 66
+    output f32 64 64
+    output f32
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts]``
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _meta_line(kind, aval) -> str:
+    dims = " ".join(str(d) for d in aval.shape)
+    return f"{kind} {aval.dtype} {dims}".rstrip()
+
+
+def emit(fn, args, name: str, out_dir: str) -> None:
+    """Lower ``fn(*args)``, write ``<name>.hlo.txt`` + ``<name>.meta``."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    # I/O signature sidecar.
+    outs = jax.eval_shape(fn, *args)
+    flat_outs = jax.tree_util.tree_leaves(outs)
+    lines = [_meta_line("input", a) for a in args]
+    lines += [_meta_line("output", o) for o in flat_outs]
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {hlo_path} ({len(text)} chars, {len(args)} in / {len(flat_outs)} out)")
+
+
+# Artifact catalog: every (name, fn, example-args) the system ships.
+def catalog():
+    arts = []
+    # Stencil steps for the block sizes the examples/benches use.
+    for h, w, br in [(64, 64, 16), (32, 32, 8), (128, 64, 16)]:
+        arts.append(
+            (
+                f"stencil_f32_{h}x{w}",
+                functools.partial(model.stencil_step, alpha=0.25, block_rows=br),
+                (_spec((h + 2, w + 2)),),
+            )
+        )
+    # SUMMA tiles.
+    for mb, kb, nb in [(128, 128, 128), (64, 64, 64)]:
+        arts.append(
+            (
+                f"summa_f32_{mb}x{kb}x{nb}",
+                model.summa_tile,
+                (_spec((mb, nb)), _spec((mb, kb)), _spec((kb, nb))),
+            )
+        )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="emit only artifacts whose name contains this")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    for name, fn, specs in catalog():
+        if args.only and args.only not in name:
+            continue
+        emit(fn, specs, name, out_dir)
+    # Build stamp so `make` can skip rebuilds.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: blocked GEMM tile for the distributed SUMMA matmul.
+
+The PGAS matmul example (``examples/matmul.rs``) distributes ``C = A @ B``
+block-cyclically over units; every SUMMA step broadcasts an ``A``-panel and
+a ``B``-panel over the team and each unit multiplies its local panels. This
+kernel is that local multiply.
+
+Hardware adaptation: tiles are MXU-shaped — ``(bm, bn) = (128, 128)``
+output blocks with the full ``K`` panel resident, i.e. the classic
+``A(bm,K) × B(K,bn)`` inner-product schedule. ``preferred_element_type``
+pins the accumulator to f32. ``interpret=True`` for CPU-PJRT executability.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def gemm_pallas(a, b, *, bm: int = 128, bn: int = 128):
+    """Blocked ``a @ b``.
+
+    Args:
+      a: ``(M, K)`` f32.
+      b: ``(K, N)`` f32.
+      bm, bn: output tile shape; must divide ``M`` / ``N``. Defaults are
+        MXU-systolic-array-shaped.
+
+    Returns:
+      ``(M, N)`` f32 product.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims differ: {k} vs {k2}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"tile ({bm},{bn}) must divide ({m},{n})")
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)

@@ -1,0 +1,42 @@
+"""L2: the JAX compute graphs of the PGAS example applications.
+
+Each function here is the *whole* per-unit compute step that gets lowered
+once by ``aot.py`` into an HLO-text artifact; the Rust coordinator executes
+the artifact on its PJRT CPU client from the request path (Python never
+runs at runtime).
+
+The functions call the L1 Pallas kernels so that kernel and surrounding
+graph lower into one fused HLO module.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gemm_kernel import gemm_pallas
+from .kernels.stencil_kernel import stencil_pallas
+
+
+def stencil_step(padded, *, alpha: float = 0.25, block_rows: int = 16):
+    """One halo-exchanged stencil step: sweep + residual.
+
+    Args:
+      padded: ``(H+2, W+2)`` local block with halo.
+
+    Returns:
+      ``(out, residual)`` — the updated ``(H, W)`` interior and the local
+      sum of squared updates (reduced over the team by the coordinator to
+      drive convergence logging).
+    """
+    out = stencil_pallas(padded, alpha=alpha, block_rows=block_rows)
+    residual = jnp.sum((out - padded[1:-1, 1:-1]) ** 2)
+    return out, residual
+
+
+def summa_tile(c_acc, a_panel, b_panel):
+    """One SUMMA accumulation step: ``C += A_panel @ B_panel``.
+
+    Args:
+      c_acc: ``(mb, nb)`` running local accumulator.
+      a_panel: ``(mb, kb)`` broadcast panel of A.
+      b_panel: ``(kb, nb)`` broadcast panel of B.
+    """
+    return c_acc + gemm_pallas(a_panel, b_panel)

@@ -1,0 +1,141 @@
+"""Kernel-vs-reference correctness: the CORE build-time signal.
+
+Hypothesis-style sweeps (seeded rng over shapes/dtypes/parameters) assert
+the Pallas kernels match the pure-jnp oracles to float tolerance before
+any artifact is emitted.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.gemm_kernel import gemm_pallas
+from compile.kernels.ref import gemm_ref, stencil_ref, stencil_sweeps_ref
+from compile.kernels.stencil_kernel import stencil_pallas, stencil_sweeps_pallas
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stencil kernel
+# ---------------------------------------------------------------------------
+
+STENCIL_CASES = [
+    # (H, W, block_rows, alpha)
+    (16, 16, 4, 0.25),
+    (16, 16, 16, 0.25),
+    (32, 8, 8, 0.1),
+    (64, 64, 16, 0.25),
+    (8, 128, 2, 0.5),
+    (128, 64, 32, 0.01),
+]
+
+
+@pytest.mark.parametrize("h,w,br,alpha", STENCIL_CASES)
+def test_stencil_matches_ref(h, w, br, alpha):
+    key = jax.random.PRNGKey(h * 1000 + w * 10 + br)
+    padded = rand(key, (h + 2, w + 2))
+    got = stencil_pallas(padded, alpha=alpha, block_rows=br)
+    want = stencil_ref(padded, alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_stencil_sweep_shapes_sweep():
+    # Seeded random sweep over shapes — hypothesis-style.
+    rng = np.random.RandomState(42)
+    for _ in range(20):
+        br = int(rng.choice([1, 2, 4, 8]))
+        h = br * int(rng.randint(1, 9))
+        w = int(rng.randint(3, 65))
+        alpha = float(rng.uniform(0.0, 1.0))
+        key = jax.random.PRNGKey(rng.randint(0, 2**31))
+        padded = rand(key, (h + 2, w + 2))
+        got = stencil_pallas(padded, alpha=alpha, block_rows=br)
+        want = stencil_ref(padded, alpha)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_rejects_nondivisible_blocks():
+    padded = jnp.zeros((18, 18))
+    with pytest.raises(ValueError):
+        stencil_pallas(padded, block_rows=5)
+
+
+def test_stencil_constant_field_is_fixed_point():
+    # A uniform field has zero Laplacian: the sweep must not change it.
+    padded = jnp.full((34, 34), 3.25)
+    out = stencil_pallas(padded, alpha=0.25, block_rows=8)
+    np.testing.assert_allclose(out, jnp.full((32, 32), 3.25), rtol=1e-7)
+
+
+def test_stencil_multi_sweep_matches_ref():
+    key = jax.random.PRNGKey(7)
+    padded = rand(key, (18, 18))
+    for sweeps in [1, 2, 5]:
+        got = stencil_sweeps_pallas(padded, alpha=0.2, sweeps=sweeps, block_rows=4)
+        want = stencil_sweeps_ref(padded, alpha=0.2, sweeps=sweeps)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_f64():
+    key = jax.random.PRNGKey(3)
+    padded = rand(key, (10, 10), dtype=jnp.float32).astype(jnp.float64)
+    got = stencil_pallas(padded, alpha=0.25, block_rows=4)
+    want = stencil_ref(padded, 0.25)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernel
+# ---------------------------------------------------------------------------
+
+GEMM_CASES = [
+    # (M, K, N, bm, bn)
+    (128, 128, 128, 128, 128),
+    (128, 64, 128, 64, 64),
+    (256, 32, 128, 128, 128),
+    (64, 256, 64, 32, 32),
+    (8, 8, 8, 8, 8),
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn", GEMM_CASES)
+def test_gemm_matches_ref(m, k, n, bm, bn):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + k + n))
+    a = rand(k1, (m, k))
+    b = rand(k2, (k, n))
+    got = gemm_pallas(a, b, bm=bm, bn=bn)
+    want = gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_random_shape_sweep():
+    rng = np.random.RandomState(1234)
+    for _ in range(15):
+        bm = int(rng.choice([8, 16, 32]))
+        bn = int(rng.choice([8, 16, 32]))
+        m = bm * int(rng.randint(1, 5))
+        n = bn * int(rng.randint(1, 5))
+        k = int(rng.randint(1, 97))
+        k1, k2 = jax.random.split(jax.random.PRNGKey(rng.randint(0, 2**31)))
+        a = rand(k1, (m, k))
+        b = rand(k2, (k, n))
+        got = gemm_pallas(a, b, bm=bm, bn=bn)
+        np.testing.assert_allclose(got, gemm_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        gemm_pallas(jnp.zeros((8, 4)), jnp.zeros((5, 8)))
+    with pytest.raises(ValueError):
+        gemm_pallas(jnp.zeros((10, 4)), jnp.zeros((4, 8)), bm=4, bn=4)
+
+
+def test_gemm_identity():
+    a = jnp.eye(32, dtype=jnp.float32)
+    b = rand(jax.random.PRNGKey(0), (32, 32))
+    np.testing.assert_allclose(gemm_pallas(a, b, bm=32, bn=32), b, rtol=1e-6)

@@ -1,0 +1,7 @@
+//! Regenerates the paper's fig12 (see bench_util::figure). Run via
+//! `cargo bench --bench fig12_bw_blocking_put`; set DART_BENCH_QUICK=1 for a short sweep.
+use dart::bench_util::figure::{run_figure, Figure};
+
+fn main() {
+    run_figure(Figure::BwBlockingPut);
+}

@@ -1,0 +1,7 @@
+//! Regenerates the paper's fig13 (see bench_util::figure). Run via
+//! `cargo bench --bench fig13_bw_blocking_get`; set DART_BENCH_QUICK=1 for a short sweep.
+use dart::bench_util::figure::{run_figure, Figure};
+
+fn main() {
+    run_figure(Figure::BwBlockingGet);
+}

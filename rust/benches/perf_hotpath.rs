@@ -1,0 +1,149 @@
+//! §Perf — the DART one-sided hot path, software cost only.
+//!
+//! Measures the per-op cost of the full dereference chain (flags dispatch,
+//! teamlist lookup, unit translation, translation-table lookup, epoch
+//! check, bounds check) with the network cost model DISABLED, against the
+//! raw mpisim window ops. The delta is the pure DART-layer software
+//! overhead — the quantity the whole §V evaluation is about.
+
+use dart::bench_util::{fmt_ns, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::mpisim::{RmaRequest, Win, World, WorldConfig};
+use dart::simnet::CostModel;
+use std::sync::Mutex;
+use std::time::Instant;
+
+const REPS: usize = 20_000;
+
+fn dart_side(collective: bool) -> (f64, f64, f64) {
+    let out = Mutex::new((0f64, 0f64, 0f64));
+    let cfg = DartConfig::with_units(2).with_cost(CostModel::zero()).with_pools(1 << 16, 1 << 16);
+    run(cfg, |env| {
+        let gptr = if collective {
+            env.team_memalloc_aligned(DART_TEAM_ALL, 4096).unwrap().with_unit(1)
+        } else {
+            // exchange a non-collective pointer from unit 1
+            let mine = env.memalloc(4096).unwrap();
+            let mut all = vec![0u8; 32];
+            env.allgather(DART_TEAM_ALL, &mine.to_bits().to_ne_bytes(), &mut all).unwrap();
+            dart::dart::GlobalPtr::from_bits(u128::from_ne_bytes(all[16..32].try_into().unwrap()))
+        };
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            let buf = [42u8; 8];
+            let mut dst = [0u8; 8];
+            // blocking put
+            let mut s_put = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    env.put_blocking(gptr, &buf).unwrap();
+                }
+                s_put.push(t.elapsed().as_nanos() as f64 / 1000.0);
+            }
+            // blocking get
+            let mut s_get = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    env.get_blocking(gptr, &mut dst).unwrap();
+                }
+                s_get.push(t.elapsed().as_nanos() as f64 / 1000.0);
+            }
+            // non-blocking put initiation (+ drain outside timing)
+            let mut s_nb = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let mut handles = Vec::with_capacity(1000);
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    handles.push(env.put(gptr, &buf).unwrap());
+                }
+                s_nb.push(t.elapsed().as_nanos() as f64 / 1000.0);
+                env.waitall(handles).unwrap();
+            }
+            *out.lock().unwrap() = (s_put.median(), s_get.median(), s_nb.median());
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn mpi_side() -> (f64, f64, f64) {
+    let out = Mutex::new((0f64, 0f64, 0f64));
+    World::run(WorldConfig::local(2), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 4096).unwrap();
+        win.lock_all().unwrap();
+        c.barrier().unwrap();
+        if c.rank() == 0 {
+            let buf = [42u8; 8];
+            let mut dst = [0u8; 8];
+            let mut s_put = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    win.put(&buf, 1, 0).unwrap();
+                    win.flush(1).unwrap();
+                }
+                s_put.push(t.elapsed().as_nanos() as f64 / 1000.0);
+            }
+            let mut s_get = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    win.get(&mut dst, 1, 0).unwrap();
+                    win.flush(1).unwrap();
+                }
+                s_get.push(t.elapsed().as_nanos() as f64 / 1000.0);
+            }
+            let mut s_nb = Samples::new();
+            for _ in 0..REPS / 1000 {
+                let mut reqs = Vec::with_capacity(1000);
+                let t = Instant::now();
+                for _ in 0..1000 {
+                    reqs.push(win.rput(&buf, 1, 0).unwrap());
+                }
+                s_nb.push(t.elapsed().as_nanos() as f64 / 1000.0);
+                RmaRequest::waitall(reqs);
+            }
+            *out.lock().unwrap() = (s_put.median(), s_get.median(), s_nb.median());
+        }
+        c.barrier().unwrap();
+        win.unlock_all().unwrap();
+    });
+    out.into_inner().unwrap()
+}
+
+fn main() {
+    println!("==== §Perf — DART one-sided hot path (8-byte ops, zero-cost network) ====");
+    let (mp, mg, mn) = mpi_side();
+    let (cp, cg, cn) = dart_side(true);
+    let (np, ng, nn) = dart_side(false);
+    println!("\n{:>28} {:>12} {:>12} {:>12}", "", "put_blocking", "get_blocking", "put (DTIT)");
+    println!("{:>28} {:>12} {:>12} {:>12}", "raw mpisim", fmt_ns(mp), fmt_ns(mg), fmt_ns(mn));
+    println!(
+        "{:>28} {:>12} {:>12} {:>12}",
+        "DART (collective gptr)",
+        fmt_ns(cp),
+        fmt_ns(cg),
+        fmt_ns(cn)
+    );
+    println!(
+        "{:>28} {:>12} {:>12} {:>12}",
+        "DART (non-collective gptr)",
+        fmt_ns(np),
+        fmt_ns(ng),
+        fmt_ns(nn)
+    );
+    println!(
+        "\nDART-layer overhead: collective {:+.0}/{:+.0}/{:+.0} ns, non-collective {:+.0}/{:+.0}/{:+.0} ns",
+        cp - mp,
+        cg - mg,
+        cn - mn,
+        np - mp,
+        ng - mg,
+        nn - mn
+    );
+    println!("(paper: ~0 ns blocking, 80–130 ns non-blocking on 2.3 GHz Interlagos)");
+}

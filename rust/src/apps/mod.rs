@@ -1,0 +1,10 @@
+//! PGAS mini-applications built on the public DART API + PJRT runtime.
+//!
+//! These are the workloads the paper's introduction motivates — shared-
+//! memory-style scientific codes on distributed memory — and they double
+//! as the end-to-end proof that the three layers compose: DART one-sided
+//! communication (L3) around AOT JAX/Pallas compute artifacts (L2/L1).
+
+pub mod matmul;
+pub mod stencil;
+pub mod stencil2d;

@@ -1,0 +1,219 @@
+//! Distributed 2D heat diffusion over the DART PGAS: the end-to-end
+//! application that composes all three layers.
+//!
+//! The global `rows × width` grid is distributed row-wise over the team:
+//! every unit owns a `local_rows × width` block stored in a *collective
+//! aligned* global allocation, so any unit can address any other unit's
+//! rows by global pointer arithmetic alone (no communication, §III).
+//!
+//! Per step:
+//! 1. **halo exchange** — one-sided `dart_get` of the neighbouring units'
+//!    boundary rows (non-blocking handles + `waitall`);
+//! 2. **local sweep** — the AOT-compiled JAX/Pallas stencil artifact
+//!    executes on the unit's PJRT engine (L1+L2), returning the updated
+//!    interior and the local squared-residual;
+//! 3. **reduction** — `dart_allreduce` of the residual drives the
+//!    convergence log;
+//! 4. write-back into the global allocation and `dart_barrier`.
+//!
+//! Fixed (zero) boundary conditions on the global border.
+
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use crate::runtime::Engine;
+
+/// Parameters of a distributed stencil run.
+#[derive(Debug, Clone)]
+pub struct StencilConfig {
+    /// Rows per unit (must match the artifact's input height − 2).
+    pub local_rows: usize,
+    /// Grid width (must match the artifact's input width − 2).
+    pub width: usize,
+    /// Diffusion steps (halo exchanges).
+    pub steps: usize,
+    /// Artifact name (e.g. `stencil_f32_64x64`).
+    pub artifact: String,
+    /// Team to run on.
+    pub team: TeamId,
+}
+
+impl StencilConfig {
+    /// The configuration matching the `stencil_f32_64x64` artifact.
+    pub fn block64(steps: usize) -> Self {
+        StencilConfig {
+            local_rows: 64,
+            width: 64,
+            steps,
+            artifact: "stencil_f32_64x64".into(),
+            team: crate::dart::DART_TEAM_ALL,
+        }
+    }
+
+    /// The small test configuration (`stencil_f32_32x32`).
+    pub fn block32(steps: usize) -> Self {
+        StencilConfig {
+            local_rows: 32,
+            width: 32,
+            steps,
+            artifact: "stencil_f32_32x32".into(),
+            team: crate::dart::DART_TEAM_ALL,
+        }
+    }
+}
+
+/// Result of a distributed run (per unit; identical on all units for the
+/// residual series).
+#[derive(Debug, Clone)]
+pub struct StencilReport {
+    /// Global squared residual after each step (the "loss curve").
+    pub residuals: Vec<f64>,
+    /// Sum of the unit's final block (combine with allreduce for a global
+    /// checksum).
+    pub local_checksum: f64,
+    /// Global checksum (sum over all blocks).
+    pub global_checksum: f64,
+}
+
+/// Deterministic initial condition: a hot square in the global interior.
+/// `row` is the global row index.
+pub fn initial_value(row: usize, col: usize, rows_total: usize, width: usize) -> f32 {
+    let hot_r = rows_total / 4..rows_total / 2;
+    let hot_c = width / 4..width / 2;
+    if hot_r.contains(&row) && hot_c.contains(&col) {
+        100.0
+    } else {
+        0.0
+    }
+}
+
+/// Run the distributed stencil on the calling unit. Collective over
+/// `cfg.team`; every member must call with identical `cfg`.
+pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &StencilConfig) -> DartResult<StencilReport> {
+    let team = cfg.team;
+    let p = env.team_size(team)?;
+    let me = env.team_myid(team)?;
+    let (lr, w) = (cfg.local_rows, cfg.width);
+    let rows_total = lr * p;
+    let row0 = me * lr; // my first global row
+
+    let exe = engine
+        .load(&cfg.artifact)
+        .map_err(|e| DartErr::Invalid(format!("artifact {}: {e}", cfg.artifact)))?;
+    let sig = &exe.artifact().inputs[0];
+    if sig.dims != vec![lr + 2, w + 2] {
+        return Err(DartErr::Invalid(format!(
+            "artifact {} expects {:?}, config is {}x{}",
+            cfg.artifact,
+            sig.dims,
+            lr + 2,
+            w + 2
+        )));
+    }
+
+    // The distributed grid: one aligned collective allocation, my segment
+    // holds my block row-major.
+    let block_bytes = (lr * w * 4) as u64;
+    let grid = env.team_memalloc_aligned(team, block_bytes)?;
+    let my_block = grid.with_unit(env.team_unit_l2g(team, me)?);
+
+    // Initial condition.
+    let mut local: Vec<f32> = (0..lr * w)
+        .map(|i| initial_value(row0 + i / w, i % w, rows_total, w))
+        .collect();
+    env.local_write(my_block, as_bytes(&local))?;
+    env.barrier(team)?;
+
+    let row_bytes = w * 4;
+    let mut padded = vec![0f32; (lr + 2) * (w + 2)];
+    let mut top_halo = vec![0f32; w];
+    let mut bot_halo = vec![0f32; w];
+    let mut residuals = Vec::with_capacity(cfg.steps);
+
+    for _step in 0..cfg.steps {
+        // --- 1. halo exchange: one-sided gets from the neighbours.
+        let mut handles = Vec::with_capacity(2);
+        if me > 0 {
+            let up = env.team_unit_l2g(team, me - 1)?;
+            // neighbour's LAST row
+            let src = grid.with_unit(up).add(((lr - 1) * row_bytes) as u64);
+            handles.push(env.get(src, as_bytes_mut(&mut top_halo))?);
+        } else {
+            top_halo.fill(0.0);
+        }
+        if me + 1 < p {
+            let down = env.team_unit_l2g(team, me + 1)?;
+            // neighbour's FIRST row
+            let src = grid.with_unit(down);
+            handles.push(env.get(src, as_bytes_mut(&mut bot_halo))?);
+        } else {
+            bot_halo.fill(0.0);
+        }
+        env.waitall(handles)?;
+
+        // --- 2. assemble the padded block (zero left/right boundary).
+        padded.fill(0.0);
+        let wp = w + 2;
+        padded[1..1 + w].copy_from_slice(&top_halo);
+        for r in 0..lr {
+            padded[(r + 1) * wp + 1..(r + 1) * wp + 1 + w]
+                .copy_from_slice(&local[r * w..(r + 1) * w]);
+        }
+        padded[(lr + 1) * wp + 1..(lr + 1) * wp + 1 + w].copy_from_slice(&bot_halo);
+
+        // --- 3. local sweep on the PJRT engine (L1 Pallas + L2 JAX).
+        let outs = exe
+            .run_f32(&[&padded])
+            .map_err(|e| DartErr::Invalid(format!("artifact execution: {e}")))?;
+        local.copy_from_slice(&outs[0]);
+        let local_res = outs[1][0] as f64;
+
+        // --- 4. global residual + write-back + step barrier.
+        let mut global_res = [0f64];
+        env.allreduce(team, &[local_res], &mut global_res, MpiOp::Sum)?;
+        residuals.push(global_res[0]);
+        env.local_write(my_block, as_bytes(&local))?;
+        env.barrier(team)?;
+    }
+
+    let local_checksum: f64 = local.iter().map(|&v| v as f64).sum();
+    let mut global_checksum = [0f64];
+    env.allreduce(team, &[local_checksum], &mut global_checksum, MpiOp::Sum)?;
+    env.barrier(team)?;
+    env.team_memfree(team, grid)?;
+    Ok(StencilReport { residuals, local_checksum, global_checksum: global_checksum[0] })
+}
+
+/// Single-threaded reference of the same computation (zero boundary),
+/// used by the end-to-end tests and the example's verification step.
+pub fn run_reference(rows: usize, width: usize, steps: usize, alpha: f32) -> (Vec<f32>, Vec<f64>) {
+    let mut grid: Vec<f32> = (0..rows * width)
+        .map(|i| initial_value(i / width, i % width, rows, width))
+        .collect();
+    let mut residuals = Vec::with_capacity(steps);
+    let at = |g: &Vec<f32>, r: i64, c: i64| -> f32 {
+        if r < 0 || c < 0 || r >= rows as i64 || c >= width as i64 {
+            0.0
+        } else {
+            g[r as usize * width + c as usize]
+        }
+    };
+    for _ in 0..steps {
+        let mut next = vec![0f32; rows * width];
+        let mut res = 0f64;
+        for r in 0..rows as i64 {
+            for c in 0..width as i64 {
+                let center = at(&grid, r, c);
+                let v = center
+                    + alpha
+                        * (at(&grid, r - 1, c) + at(&grid, r + 1, c) + at(&grid, r, c - 1)
+                            + at(&grid, r, c + 1)
+                            - 4.0 * center);
+                next[r as usize * width + c as usize] = v;
+                res += ((v - center) as f64).powi(2);
+            }
+        }
+        grid = next;
+        residuals.push(res);
+    }
+    (grid, residuals)
+}

@@ -1,0 +1,195 @@
+//! 2D-decomposed distributed stencil: the strided-transfer consumer.
+//!
+//! Unlike [`crate::apps::stencil`] (1D row decomposition, contiguous row
+//! halos only), this variant tiles the global grid over a `px × py` unit
+//! grid, so every step exchanges **row halos** (contiguous one-sided gets
+//! from the north/south neighbours) *and* **column halos** (strided
+//! one-sided gets from the west/east neighbours —
+//! [`crate::dart::DartEnv::get_strided`], one 4-byte block per row of the
+//! neighbour's boundary column). A 5-point stencil needs no corner cells,
+//! so the four halo edges suffice.
+//!
+//! The local sweep runs the same AOT Pallas artifact as the 1D app; the
+//! result is verified against the sequential reference over the full
+//! `py·B × px·B` grid.
+
+use super::stencil::{initial_value, run_reference};
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId, DART_TEAM_ALL};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use crate::runtime::Engine;
+
+/// Parameters of a 2D-decomposed run. Requires `px · py == team size` and
+/// a square per-unit block matching the artifact.
+#[derive(Debug, Clone)]
+pub struct Stencil2dConfig {
+    /// Unit-grid width (columns of units).
+    pub px: usize,
+    /// Unit-grid height (rows of units).
+    pub py: usize,
+    /// Per-unit block edge (artifact input is `(block+2)²`).
+    pub block: usize,
+    pub steps: usize,
+    pub artifact: String,
+    pub team: TeamId,
+}
+
+impl Stencil2dConfig {
+    /// `px × py` units, 32×32 blocks (`stencil_f32_32x32`).
+    pub fn block32(px: usize, py: usize, steps: usize) -> Self {
+        Stencil2dConfig {
+            px,
+            py,
+            block: 32,
+            steps,
+            artifact: "stencil_f32_32x32".into(),
+            team: DART_TEAM_ALL,
+        }
+    }
+}
+
+/// Result (per unit; `residuals`/`global_checksum` identical everywhere).
+#[derive(Debug, Clone)]
+pub struct Stencil2dReport {
+    pub residuals: Vec<f64>,
+    pub global_checksum: f64,
+}
+
+/// Run the 2D-decomposed stencil. Collective over `cfg.team`.
+pub fn run_distributed(
+    env: &DartEnv,
+    engine: &Engine,
+    cfg: &Stencil2dConfig,
+) -> DartResult<Stencil2dReport> {
+    let team = cfg.team;
+    let p = env.team_size(team)?;
+    if cfg.px * cfg.py != p {
+        return Err(DartErr::Invalid(format!(
+            "unit grid {}×{} != team size {p}",
+            cfg.px, cfg.py
+        )));
+    }
+    let me = env.team_myid(team)?;
+    let (ux, uy) = (me % cfg.px, me / cfg.px); // my unit-grid coordinate
+    let b = cfg.block;
+    let (rows_total, cols_total) = (cfg.py * b, cfg.px * b);
+    let (row0, col0) = (uy * b, ux * b);
+
+    let exe = engine
+        .load(&cfg.artifact)
+        .map_err(|e| DartErr::Invalid(format!("artifact {}: {e}", cfg.artifact)))?;
+    if exe.artifact().inputs[0].dims != vec![b + 2, b + 2] {
+        return Err(DartErr::Invalid(format!(
+            "artifact {} expects {:?}, config block is {b}",
+            cfg.artifact,
+            exe.artifact().inputs[0].dims
+        )));
+    }
+
+    // One aligned allocation: my segment = my b×b block, row-major f32.
+    let grid = env.team_memalloc_aligned(team, (b * b * 4) as u64)?;
+    let my_block = grid.with_unit(env.team_unit_l2g(team, me)?);
+    let mut local: Vec<f32> = (0..b * b)
+        .map(|i| initial_value(row0 + i / b, col0 + i % b, rows_total, cols_total))
+        .collect();
+    env.local_write(my_block, as_bytes(&local))?;
+    env.barrier(team)?;
+
+    let neighbor = |dx: isize, dy: isize| -> DartResult<Option<i32>> {
+        let (nx, ny) = (ux as isize + dx, uy as isize + dy);
+        if nx < 0 || ny < 0 || nx >= cfg.px as isize || ny >= cfg.py as isize {
+            return Ok(None);
+        }
+        Ok(Some(env.team_unit_l2g(team, ny as usize * cfg.px + nx as usize)?))
+    };
+
+    let row_bytes = (b * 4) as u64;
+    let mut north = vec![0f32; b];
+    let mut south = vec![0f32; b];
+    let mut west = vec![0f32; b];
+    let mut east = vec![0f32; b];
+    let mut padded = vec![0f32; (b + 2) * (b + 2)];
+    let mut residuals = Vec::with_capacity(cfg.steps);
+
+    for _ in 0..cfg.steps {
+        // --- halo exchange: 2 contiguous + 2 strided one-sided gets.
+        let mut handles = Vec::with_capacity(4);
+        match neighbor(0, -1)? {
+            Some(u) => handles.push(
+                // north neighbour's LAST row
+                env.get(grid.with_unit(u).add((b as u64 - 1) * row_bytes), as_bytes_mut(&mut north))?,
+            ),
+            None => north.fill(0.0),
+        }
+        match neighbor(0, 1)? {
+            Some(u) => handles.push(env.get(grid.with_unit(u), as_bytes_mut(&mut south))?),
+            None => south.fill(0.0),
+        }
+        match neighbor(-1, 0)? {
+            Some(u) => {
+                // west neighbour's LAST column: one f32 per row, stride = row
+                let hs = env.get_strided(
+                    grid.with_unit(u).add((b as u64 - 1) * 4),
+                    as_bytes_mut(&mut west),
+                    b,
+                    4,
+                    row_bytes,
+                )?;
+                handles.extend(hs);
+            }
+            None => west.fill(0.0),
+        }
+        match neighbor(1, 0)? {
+            Some(u) => {
+                // east neighbour's FIRST column
+                let hs = env.get_strided(
+                    grid.with_unit(u),
+                    as_bytes_mut(&mut east),
+                    b,
+                    4,
+                    row_bytes,
+                )?;
+                handles.extend(hs);
+            }
+            None => east.fill(0.0),
+        }
+        env.waitall(handles)?;
+
+        // --- assemble padded block (corners unused by the 5-point sweep).
+        let wp = b + 2;
+        padded.fill(0.0);
+        padded[1..1 + b].copy_from_slice(&north);
+        for r in 0..b {
+            padded[(r + 1) * wp] = west[r];
+            padded[(r + 1) * wp + 1..(r + 1) * wp + 1 + b]
+                .copy_from_slice(&local[r * b..(r + 1) * b]);
+            padded[(r + 1) * wp + 1 + b] = east[r];
+        }
+        padded[(b + 1) * wp + 1..(b + 1) * wp + 1 + b].copy_from_slice(&south);
+
+        // --- local sweep on PJRT + residual reduction.
+        let outs = exe
+            .run_f32(&[&padded])
+            .map_err(|e| DartErr::Invalid(format!("artifact execution: {e}")))?;
+        local.copy_from_slice(&outs[0]);
+        let mut global_res = [0f64];
+        env.allreduce(team, &[outs[1][0] as f64], &mut global_res, MpiOp::Sum)?;
+        residuals.push(global_res[0]);
+        env.local_write(my_block, as_bytes(&local))?;
+        env.barrier(team)?;
+    }
+
+    let local_sum: f64 = local.iter().map(|&v| v as f64).sum();
+    let mut global = [0f64];
+    env.allreduce(team, &[local_sum], &mut global, MpiOp::Sum)?;
+    env.barrier(team)?;
+    env.team_memfree(team, grid)?;
+    Ok(Stencil2dReport { residuals, global_checksum: global[0] })
+}
+
+/// Sequential reference checksum for a `px × py` unit grid of `block²`
+/// blocks after `steps` sweeps (delegates to the 1D app's reference —
+/// the decomposition must not change the math).
+pub fn reference_checksum(cfg: &Stencil2dConfig) -> f64 {
+    let (grid, _) = run_reference(cfg.py * cfg.block, cfg.px * cfg.block, cfg.steps, 0.25);
+    grid.iter().map(|&v| v as f64).sum()
+}

@@ -1,0 +1,337 @@
+//! The paper's figures 8–15 as reusable measurement drivers.
+//!
+//! Each figure compares one DART one-sided operation against the
+//! semantically equivalent raw MPI-3 sequence, over the message-size sweep
+//! (1 B … 2 MiB) and the three placements of §V-A. The benches in
+//! `rust/benches/fig*.rs` are thin wrappers around [`run_figure`].
+//!
+//! Metrics (§V-A):
+//! - **DTCT** (data transfer completion time) for blocking put/get —
+//!   the call does not return before remote completion;
+//! - **DTIT** (data transfer initiation time) for non-blocking put/get —
+//!   only the initiation is timed ("these calls return immediately after
+//!   initiating the transfer"); completion is drained outside the timer;
+//! - **bandwidth** — blocking: back-to-back completed ops; non-blocking:
+//!   "many overlapping non-blocking operations" finished by one waitall.
+
+use super::{
+    adaptive_reps, fit_constant_overhead, paper_msg_sizes, paper_placements, print_comparison_table,
+    quick_mode, quick_msg_sizes, Samples,
+};
+use crate::dart::{DartConfig, DartHandle, DART_TEAM_ALL};
+use crate::mpisim::{RmaRequest, Win, World, WorldConfig};
+use crate::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which figure is being regenerated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Figure {
+    /// Fig. 8 — DTCT of blocking put.
+    DtctBlockingPut,
+    /// Fig. 9 — DTCT of blocking get.
+    DtctBlockingGet,
+    /// Fig. 10 — DTIT of non-blocking put.
+    DtitNonblockingPut,
+    /// Fig. 11 — DTIT of non-blocking get.
+    DtitNonblockingGet,
+    /// Fig. 12 — bandwidth of blocking put.
+    BwBlockingPut,
+    /// Fig. 13 — bandwidth of blocking get.
+    BwBlockingGet,
+    /// Fig. 14 — bandwidth of non-blocking put.
+    BwNonblockingPut,
+    /// Fig. 15 — bandwidth of non-blocking get.
+    BwNonblockingGet,
+}
+
+impl Figure {
+    pub fn title(&self) -> &'static str {
+        match self {
+            Figure::DtctBlockingPut => "Fig. 8 — DTCT of the Blocking Put Operation",
+            Figure::DtctBlockingGet => "Fig. 9 — DTCT of the Blocking Get Operation",
+            Figure::DtitNonblockingPut => "Fig. 10 — DTIT of the Non-blocking Put Operation",
+            Figure::DtitNonblockingGet => "Fig. 11 — DTIT of the Non-blocking Get Operation",
+            Figure::BwBlockingPut => "Fig. 12 — Bandwidth of the Blocking Put Operation",
+            Figure::BwBlockingGet => "Fig. 13 — Bandwidth of the Blocking Get Operation",
+            Figure::BwNonblockingPut => "Fig. 14 — Bandwidth of the Non-blocking Put Operation",
+            Figure::BwNonblockingGet => "Fig. 15 — Bandwidth of the Non-blocking Get Operation",
+        }
+    }
+
+    pub fn is_bandwidth(&self) -> bool {
+        matches!(
+            self,
+            Figure::BwBlockingPut | Figure::BwBlockingGet | Figure::BwNonblockingPut | Figure::BwNonblockingGet
+        )
+    }
+
+    fn unit(&self) -> &'static str {
+        if self.is_bandwidth() {
+            "MB/s"
+        } else {
+            "ns"
+        }
+    }
+}
+
+/// Overlap depth for the non-blocking bandwidth figures.
+const NB_WINDOW: usize = 32;
+const BASE_REPS: usize = 256;
+
+/// Measure the DART side of a figure: 2 units, unit 0 drives, returns
+/// `(size, value)` rows (ns or MB/s).
+pub fn measure_dart(fig: Figure, pin: PinPolicy, sizes: &[usize]) -> Vec<(usize, f64)> {
+    let rows = Mutex::new(Vec::new());
+    let cfg = DartConfig::hermit(2, 2).with_pin(pin);
+    crate::dart::run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 21).unwrap();
+        let target = g.with_unit(1);
+        let me = env.myid();
+        for &size in sizes {
+            let src = vec![0x5Au8; size];
+            let mut dst = vec![0u8; size];
+            let reps = adaptive_reps(size, BASE_REPS);
+            env.barrier(DART_TEAM_ALL).unwrap();
+            if me == 0 {
+                let value = match fig {
+                    Figure::DtctBlockingPut => {
+                        let mut s = Samples::new();
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            env.put_blocking(target, &src).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                        }
+                        s.median()
+                    }
+                    Figure::DtctBlockingGet => {
+                        let mut s = Samples::new();
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            env.get_blocking(target, &mut dst).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                        }
+                        s.median()
+                    }
+                    Figure::DtitNonblockingPut => {
+                        let mut s = Samples::new();
+                        let mut handles: Vec<DartHandle> = Vec::with_capacity(reps);
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            let h = env.put(target, &src).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                            handles.push(h);
+                        }
+                        env.waitall(handles).unwrap();
+                        s.median()
+                    }
+                    Figure::DtitNonblockingGet => {
+                        let mut s = Samples::new();
+                        let mut handles: Vec<DartHandle> = Vec::with_capacity(reps);
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            let h = env.get(target, &mut dst).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                            handles.push(h);
+                        }
+                        env.waitall(handles).unwrap();
+                        s.median()
+                    }
+                    Figure::BwBlockingPut => {
+                        let t = Instant::now();
+                        for _ in 0..reps {
+                            env.put_blocking(target, &src).unwrap();
+                        }
+                        super::bandwidth_mb_s(size * reps, t.elapsed().as_nanos() as f64)
+                    }
+                    Figure::BwBlockingGet => {
+                        let t = Instant::now();
+                        for _ in 0..reps {
+                            env.get_blocking(target, &mut dst).unwrap();
+                        }
+                        super::bandwidth_mb_s(size * reps, t.elapsed().as_nanos() as f64)
+                    }
+                    Figure::BwNonblockingPut => {
+                        let windows = (reps / NB_WINDOW).max(1);
+                        let t = Instant::now();
+                        for _ in 0..windows {
+                            let mut handles = Vec::with_capacity(NB_WINDOW);
+                            for _ in 0..NB_WINDOW {
+                                handles.push(env.put(target, &src).unwrap());
+                            }
+                            env.waitall(handles).unwrap();
+                        }
+                        super::bandwidth_mb_s(
+                            size * windows * NB_WINDOW,
+                            t.elapsed().as_nanos() as f64,
+                        )
+                    }
+                    Figure::BwNonblockingGet => {
+                        let windows = (reps / NB_WINDOW).max(1);
+                        let t = Instant::now();
+                        for _ in 0..windows {
+                            let mut handles = Vec::with_capacity(NB_WINDOW);
+                            for _ in 0..NB_WINDOW {
+                                handles.push(env.get(target, &mut dst).unwrap());
+                            }
+                            env.waitall(handles).unwrap();
+                        }
+                        super::bandwidth_mb_s(
+                            size * windows * NB_WINDOW,
+                            t.elapsed().as_nanos() as f64,
+                        )
+                    }
+                };
+                rows.lock().unwrap().push((size, value));
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    rows.into_inner().unwrap()
+}
+
+/// Measure the raw-MPI side: the semantically equivalent `mpisim` calls
+/// without any DART layer ("overheads with respect to semantically
+/// equivalent operations done in pure MPI", §V-A).
+pub fn measure_mpi(fig: Figure, pin: PinPolicy, sizes: &[usize]) -> Vec<(usize, f64)> {
+    let rows = Mutex::new(Vec::new());
+    let mut cfg = WorldConfig::hermit(2, 2);
+    cfg.pin = pin;
+    World::run(cfg, |mpi| {
+        let comm = mpi.comm_world();
+        let win = Win::allocate(&comm, 1 << 21).unwrap();
+        win.lock_all().unwrap();
+        for &size in sizes {
+            let src = vec![0x5Au8; size];
+            let mut dst = vec![0u8; size];
+            let reps = adaptive_reps(size, BASE_REPS);
+            comm.barrier().unwrap();
+            if comm.rank() == 0 {
+                let value = match fig {
+                    Figure::DtctBlockingPut => {
+                        let mut s = Samples::new();
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            win.put(&src, 1, 0).unwrap();
+                            win.flush(1).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                        }
+                        s.median()
+                    }
+                    Figure::DtctBlockingGet => {
+                        let mut s = Samples::new();
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            win.get(&mut dst, 1, 0).unwrap();
+                            win.flush(1).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                        }
+                        s.median()
+                    }
+                    Figure::DtitNonblockingPut => {
+                        let mut s = Samples::new();
+                        let mut reqs: Vec<RmaRequest> = Vec::with_capacity(reps);
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            let r = win.rput(&src, 1, 0).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                            reqs.push(r);
+                        }
+                        RmaRequest::waitall(reqs);
+                        s.median()
+                    }
+                    Figure::DtitNonblockingGet => {
+                        let mut s = Samples::new();
+                        let mut reqs: Vec<RmaRequest> = Vec::with_capacity(reps);
+                        for _ in 0..reps {
+                            let t = Instant::now();
+                            let r = win.rget(&mut dst, 1, 0).unwrap();
+                            s.push(t.elapsed().as_nanos() as f64);
+                            reqs.push(r);
+                        }
+                        RmaRequest::waitall(reqs);
+                        s.median()
+                    }
+                    Figure::BwBlockingPut => {
+                        let t = Instant::now();
+                        for _ in 0..reps {
+                            win.put(&src, 1, 0).unwrap();
+                            win.flush(1).unwrap();
+                        }
+                        super::bandwidth_mb_s(size * reps, t.elapsed().as_nanos() as f64)
+                    }
+                    Figure::BwBlockingGet => {
+                        let t = Instant::now();
+                        for _ in 0..reps {
+                            win.get(&mut dst, 1, 0).unwrap();
+                            win.flush(1).unwrap();
+                        }
+                        super::bandwidth_mb_s(size * reps, t.elapsed().as_nanos() as f64)
+                    }
+                    Figure::BwNonblockingPut => {
+                        let windows = (reps / NB_WINDOW).max(1);
+                        let t = Instant::now();
+                        for _ in 0..windows {
+                            let mut reqs = Vec::with_capacity(NB_WINDOW);
+                            for _ in 0..NB_WINDOW {
+                                reqs.push(win.rput(&src, 1, 0).unwrap());
+                            }
+                            RmaRequest::waitall(reqs);
+                        }
+                        super::bandwidth_mb_s(
+                            size * windows * NB_WINDOW,
+                            t.elapsed().as_nanos() as f64,
+                        )
+                    }
+                    Figure::BwNonblockingGet => {
+                        let windows = (reps / NB_WINDOW).max(1);
+                        let t = Instant::now();
+                        for _ in 0..windows {
+                            let mut reqs = Vec::with_capacity(NB_WINDOW);
+                            for _ in 0..NB_WINDOW {
+                                reqs.push(win.rget(&mut dst, 1, 0).unwrap());
+                            }
+                            RmaRequest::waitall(reqs);
+                        }
+                        super::bandwidth_mb_s(
+                            size * windows * NB_WINDOW,
+                            t.elapsed().as_nanos() as f64,
+                        )
+                    }
+                };
+                rows.lock().unwrap().push((size, value));
+            }
+            comm.barrier().unwrap();
+        }
+        win.unlock_all().unwrap();
+    });
+    rows.into_inner().unwrap()
+}
+
+/// Regenerate one figure: sweep sizes × the three placements, print the
+/// series (DART and pure-MPI, like the paper's two curves) and the
+/// constant-overhead fit.
+pub fn run_figure(fig: Figure) {
+    let sizes = if quick_mode() { quick_msg_sizes() } else { paper_msg_sizes() };
+    println!("==== {} ====", fig.title());
+    println!(
+        "(message sizes 1 B … 2 MiB; {} reps ≤4 KiB, adaptive above; medians of per-op times)",
+        BASE_REPS
+    );
+    for (tier, pin) in paper_placements() {
+        let dart = measure_dart(fig, pin.clone(), &sizes);
+        let mpi = measure_mpi(fig, pin, &sizes);
+        let rows: Vec<(usize, f64, f64)> =
+            dart.iter().zip(&mpi).map(|(&(s, d), &(_, m))| (s, d, m)).collect();
+        print_comparison_table(&format!("{} — {}", fig.title(), tier), fig.unit(), &rows);
+        if !fig.is_bandwidth() {
+            let (c, sd) = fit_constant_overhead(&dart, &mpi);
+            println!(
+                "constant-overhead fit t_DART − t_MPI = c: c = {:.0} ± {:.0} ns  [{tier}]",
+                c, sd
+            );
+        }
+    }
+}

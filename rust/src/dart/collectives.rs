@@ -1,0 +1,96 @@
+//! DART collective communication (§III, §IV-B5).
+//!
+//! "The semantics of DART collective routines are the same as that of MPI.
+//! Therefore, we can implement the DART collective interfaces
+//! straightforwardly by using the MPI-3 collective counterparts. Before
+//! calling the MPI-3 collective counterparts, we need to determine the
+//! communicator based on the given teamID." — which is exactly what every
+//! function here does: teamlist lookup, then delegate.
+//!
+//! Roots are given as *team-relative* ranks (like MPI); use
+//! [`crate::dart::DartEnv::team_unit_g2l`] to translate an absolute unit.
+
+use super::gptr::TeamId;
+use super::{DartEnv, DartResult};
+use crate::mpisim::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, Pod};
+
+impl DartEnv {
+    /// `dart_barrier(team)`.
+    pub fn barrier(&self, team: TeamId) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.barrier()?)
+    }
+
+    /// `dart_bcast(buf, team, root)`: `buf` is input at `root`
+    /// (team-relative), output elsewhere.
+    pub fn bcast(&self, team: TeamId, buf: &mut [u8], root: usize) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.bcast(buf, root)?)
+    }
+
+    /// `dart_scatter`: the root's `send` (team_size × chunk bytes) is
+    /// distributed in team-rank order; each unit receives into `recv`.
+    pub fn scatter(&self, team: TeamId, send: &[u8], recv: &mut [u8], root: usize) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.scatter(send, recv, root)?)
+    }
+
+    /// `dart_gather`: every unit contributes `send`; the root's `recv`
+    /// (team_size × send.len() bytes) is filled in team-rank order.
+    pub fn gather(&self, team: TeamId, send: &[u8], recv: &mut [u8], root: usize) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.gather(send, recv, root)?)
+    }
+
+    /// `dart_allgather`.
+    pub fn allgather(&self, team: TeamId, send: &[u8], recv: &mut [u8]) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.allgather(send, recv)?)
+    }
+
+    /// `dart_reduce` (typed): element-wise reduction to the root.
+    pub fn reduce<T: HasMpiType>(
+        &self,
+        team: TeamId,
+        send: &[T],
+        recv: &mut [T],
+        op: MpiOp,
+        root: usize,
+    ) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        let recv_bytes: &mut [u8] =
+            if comm.rank() == root { as_bytes_mut(recv) } else { &mut [] };
+        Ok(comm.reduce(as_bytes(send), recv_bytes, op, T::MPI_TYPE, root)?)
+    }
+
+    /// `dart_allreduce` (typed).
+    pub fn allreduce<T: HasMpiType>(
+        &self,
+        team: TeamId,
+        send: &[T],
+        recv: &mut [T],
+        op: MpiOp,
+    ) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.allreduce(as_bytes(send), as_bytes_mut(recv), op, T::MPI_TYPE)?)
+    }
+
+    /// `dart_alltoall` (equal chunk size in bytes).
+    pub fn alltoall(&self, team: TeamId, send: &[u8], recv: &mut [u8], chunk: usize) -> DartResult<()> {
+        let comm = self.team_comm(team)?;
+        self.metrics.collectives.bump();
+        Ok(comm.alltoall(send, recv, chunk)?)
+    }
+
+    /// Typed bcast convenience.
+    pub fn bcast_typed<T: Pod>(&self, team: TeamId, buf: &mut [T], root: usize) -> DartResult<()> {
+        self.bcast(team, as_bytes_mut(buf), root)
+    }
+}

@@ -1,0 +1,131 @@
+//! DART runtime configuration.
+
+use crate::simnet::{CostModel, PinPolicy, Topology};
+
+/// Configuration for a DART SPMD launch ([`crate::dart::run`]).
+#[derive(Clone)]
+pub struct DartConfig {
+    /// Number of units to spawn (one OS thread each).
+    pub units: usize,
+    /// Modelled cluster topology.
+    pub topology: Topology,
+    /// Unit → core placement policy.
+    pub pin: PinPolicy,
+    /// Network cost model injected into the MPI substrate.
+    pub cost: CostModel,
+    /// Pin OS threads to real cores (best effort).
+    pub pin_os_threads: bool,
+    /// Capacity of the `teamlist` array (paper §IV-B2): the maximum number
+    /// of *live* teams per unit. Team ids themselves are unbounded and
+    /// never reused; only slots are recycled.
+    pub teamlist_size: usize,
+    /// Bytes reserved per unit in the pre-defined world window that backs
+    /// all *non-collective* allocations (`dart_memalloc`, Fig. 4).
+    pub non_collective_pool: usize,
+    /// Bytes reserved per unit in each team's collective memory pool
+    /// (`dart_team_memalloc_aligned` carves aligned windows out of this,
+    /// Fig. 5).
+    pub team_pool: usize,
+    /// Use a direct-index map instead of the paper's linear `teamlist`
+    /// scan for team lookup (ablation A2; the paper's future work notes
+    /// the scan "can be significant when the teamlist is extremely
+    /// large").
+    pub indexed_teamlist: bool,
+    /// §VI future work: back DART global memory with MPI-3 **shared-memory
+    /// windows** ("true zero-copy mechanisms, as opposed to traditional
+    /// single-copy") — same-node one-sided transfers bypass the messaging
+    /// protocol. Reproduces the paper's "promising preliminary results".
+    pub shmem_windows: bool,
+    /// §VI future work: "balance the distribution of the *tail* between
+    /// all participating units of a team" — the i-th lock initialized on a
+    /// team places its tail on member `i % team_size` instead of always
+    /// unit 0, avoiding congestion when many locks live on one team.
+    pub balanced_lock_tails: bool,
+}
+
+impl DartConfig {
+    /// `units` units on a flat topology with no cost injection — the
+    /// configuration tests use.
+    pub fn with_units(units: usize) -> Self {
+        DartConfig {
+            units,
+            topology: Topology::flat(units.max(1)),
+            pin: PinPolicy::Block,
+            cost: CostModel::zero(),
+            pin_os_threads: false,
+            teamlist_size: 64,
+            non_collective_pool: 8 << 20,
+            team_pool: 16 << 20,
+            indexed_teamlist: false,
+            shmem_windows: false,
+            balanced_lock_tails: false,
+        }
+    }
+
+    /// `units` units block-placed on a Hermit-like cluster with the
+    /// calibrated cost model — the configuration benches use.
+    pub fn hermit(units: usize, nodes: usize) -> Self {
+        DartConfig {
+            topology: Topology::hermit(nodes),
+            cost: CostModel::hermit(),
+            ..Self::with_units(units)
+        }
+    }
+
+    /// Builder-style override of the placement policy.
+    #[must_use]
+    pub fn with_pin(mut self, pin: PinPolicy) -> Self {
+        self.pin = pin;
+        self
+    }
+
+    /// Builder-style override of the cost model.
+    #[must_use]
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Builder-style override of the pool sizes.
+    #[must_use]
+    pub fn with_pools(mut self, non_collective: usize, team: usize) -> Self {
+        self.non_collective_pool = non_collective;
+        self.team_pool = team;
+        self
+    }
+
+    /// Enable the §VI shared-memory-window fast path.
+    #[must_use]
+    pub fn with_shmem_windows(mut self, on: bool) -> Self {
+        self.shmem_windows = on;
+        self
+    }
+
+    /// Enable the §VI balanced lock-tail placement.
+    #[must_use]
+    pub fn with_balanced_lock_tails(mut self, on: bool) -> Self {
+        self.balanced_lock_tails = on;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = DartConfig::with_units(4);
+        assert_eq!(c.units, 4);
+        assert!(c.teamlist_size >= 2);
+        assert!(c.non_collective_pool > 0 && c.team_pool > 0);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = DartConfig::hermit(8, 2).with_pools(1 << 20, 2 << 20);
+        assert_eq!(c.non_collective_pool, 1 << 20);
+        assert_eq!(c.team_pool, 2 << 20);
+        assert_eq!(c.topology.cores_per_node(), 32);
+    }
+}

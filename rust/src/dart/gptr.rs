@@ -1,0 +1,165 @@
+//! DART global pointers — 128 bits: `{unitid:32, segid:16, flags:16,
+//! addr_or_offset:64}` (paper §III).
+//!
+//! A global pointer addresses one location in the partitioned global
+//! address space: `unitid` is the **absolute** unit (its rank in
+//! `DART_TEAM_ALL`), `segid` identifies the team whose collective
+//! allocation the pointer lives in, `flags` distinguishes collective from
+//! non-collective allocations (§IV-B4), and the final 64 bits carry the
+//! displacement:
+//!
+//! - *non-collective* pointers: displacement relative to the unit's
+//!   partition base in the pre-reserved world window (Fig. 4) — these
+//!   dereference "trivially, without the unit translations";
+//! - *collective* pointers: displacement relative to the base of the
+//!   team's reserved memory pool, **not** the beginning of the individual
+//!   allocation (Fig. 5) — so aligned allocations let any unit locally
+//!   compute a pointer to any member's copy.
+
+use std::fmt;
+
+/// Flag bit: the pointer refers to a *collective* global allocation.
+pub const FLAG_COLLECTIVE: u16 = 1 << 0;
+
+/// Absolute unit id (rank in `DART_TEAM_ALL`).
+pub type UnitId = i32;
+
+/// Team id (also used as the global pointer's segment id).
+pub type TeamId = i16;
+
+/// The default team containing all units (`DART_TEAM_ALL`).
+pub const DART_TEAM_ALL: TeamId = 0;
+
+/// 128-bit DART global pointer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GlobalPtr {
+    /// Absolute unit id of the addressed memory's owner.
+    pub unitid: UnitId,
+    /// Segment id — the team id of the collective allocation (0 for
+    /// non-collective pointers, which always live in the world window).
+    pub segid: TeamId,
+    /// Flag bits ([`FLAG_COLLECTIVE`], rest reserved).
+    pub flags: u16,
+    /// Displacement (see module docs for what it is relative to).
+    pub offset: u64,
+}
+
+impl GlobalPtr {
+    /// The null global pointer (`DART_GPTR_NULL`).
+    pub const NULL: GlobalPtr = GlobalPtr { unitid: -1, segid: 0, flags: 0, offset: 0 };
+
+    /// A non-collective pointer into `unit`'s world-window partition.
+    pub fn non_collective(unit: UnitId, offset: u64) -> GlobalPtr {
+        GlobalPtr { unitid: unit, segid: 0, flags: 0, offset }
+    }
+
+    /// A collective pointer into team `segid`'s memory pool.
+    pub fn collective(unit: UnitId, segid: TeamId, offset: u64) -> GlobalPtr {
+        GlobalPtr { unitid: unit, segid, flags: FLAG_COLLECTIVE, offset }
+    }
+
+    /// Is this `DART_GPTR_NULL`?
+    pub fn is_null(&self) -> bool {
+        self.unitid < 0
+    }
+
+    /// Does the pointer refer to a collective allocation?
+    pub fn is_collective(&self) -> bool {
+        self.flags & FLAG_COLLECTIVE != 0
+    }
+
+    /// `dart_gptr_setunit`: the same location in another unit's copy of an
+    /// aligned collective allocation (the paper's "advantageous property").
+    #[must_use]
+    pub fn with_unit(mut self, unit: UnitId) -> GlobalPtr {
+        self.unitid = unit;
+        self
+    }
+
+    /// `dart_gptr_incaddr`: advance the displacement by `bytes`.
+    #[must_use]
+    pub fn add(mut self, bytes: u64) -> GlobalPtr {
+        self.offset += bytes;
+        self
+    }
+
+    /// Pack into the 128-bit wire representation.
+    pub fn to_bits(&self) -> u128 {
+        ((self.unitid as u32 as u128) << 96)
+            | ((self.segid as u16 as u128) << 80)
+            | ((self.flags as u128) << 64)
+            | self.offset as u128
+    }
+
+    /// Unpack from the 128-bit wire representation.
+    pub fn from_bits(bits: u128) -> GlobalPtr {
+        GlobalPtr {
+            unitid: (bits >> 96) as u32 as i32,
+            segid: (bits >> 80) as u16 as i16,
+            flags: (bits >> 64) as u16,
+            offset: bits as u64,
+        }
+    }
+}
+
+impl fmt::Display for GlobalPtr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_null() {
+            return write!(f, "gptr(NULL)");
+        }
+        write!(
+            f,
+            "gptr(u{} seg{} {} +{})",
+            self.unitid,
+            self.segid,
+            if self.is_collective() { "coll" } else { "priv" },
+            self.offset
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_128_bits() {
+        assert_eq!(std::mem::size_of::<GlobalPtr>(), 16);
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let cases = [
+            GlobalPtr::non_collective(0, 0),
+            GlobalPtr::non_collective(12345, u64::MAX / 3),
+            GlobalPtr::collective(7, 42, 0xdead_beef),
+            GlobalPtr::collective(i32::MAX, i16::MAX, u64::MAX),
+            GlobalPtr::NULL,
+        ];
+        for g in cases {
+            assert_eq!(GlobalPtr::from_bits(g.to_bits()), g, "roundtrip failed for {g}");
+        }
+    }
+
+    #[test]
+    fn null_detection() {
+        assert!(GlobalPtr::NULL.is_null());
+        assert!(!GlobalPtr::non_collective(0, 0).is_null());
+    }
+
+    #[test]
+    fn setunit_preserves_offset() {
+        let g = GlobalPtr::collective(1, 3, 128).with_unit(5);
+        assert_eq!(g.unitid, 5);
+        assert_eq!(g.segid, 3);
+        assert_eq!(g.offset, 128);
+        assert!(g.is_collective());
+    }
+
+    #[test]
+    fn add_advances_offset() {
+        let g = GlobalPtr::non_collective(2, 100).add(28);
+        assert_eq!(g.offset, 128);
+        assert!(!g.is_collective());
+    }
+}

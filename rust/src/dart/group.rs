@@ -1,0 +1,254 @@
+//! DART groups: ordered sets of absolute unit ids, **always sorted
+//! ascending** (paper §IV-B1, Fig. 2).
+//!
+//! This is the first semantic gap the paper bridges: DART group creation
+//! is *non-collective* (`dart_group_addmember`) and operates on absolute
+//! unit ids, while MPI groups are built collectively from relative ranks
+//! and end up "arranged in a random fashion" after unions. Following the
+//! paper:
+//!
+//! - [`DartGroup::union`] is a **merge-sort** of the two inputs;
+//! - [`DartGroup::addmember`] first builds a singleton via
+//!   `MPI_Group_incl(MPI_COMM_WORLD, 1, [unit])`, then merges it in with
+//!   the sorting union — so "DART groups are guaranteed to be ordered once
+//!   created".
+
+use super::gptr::UnitId;
+use super::{DartErr, DartResult};
+use crate::mpisim::Group as MpiGroup;
+
+/// An ordered (ascending, by absolute unit id) set of units.
+///
+/// Group operations are *local* (§III): unlike teams, no communication is
+/// involved, so methods take `&self` and need no runtime handle.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DartGroup {
+    /// Invariant: strictly ascending absolute unit ids.
+    members: Vec<UnitId>,
+}
+
+impl DartGroup {
+    /// `dart_group_init`: the empty group.
+    pub fn new() -> DartGroup {
+        DartGroup { members: Vec::new() }
+    }
+
+    /// A group from arbitrary unit ids (sorted + deduplicated — the DART
+    /// invariant is established on construction).
+    pub fn from_units(mut units: Vec<UnitId>) -> DartGroup {
+        units.sort_unstable();
+        units.dedup();
+        DartGroup { members: units }
+    }
+
+    /// `dart_group_addmember(g, unitid)`: insert one absolute unit id,
+    /// keeping the group sorted.
+    ///
+    /// Implemented exactly as §IV-B1 describes: build the singleton MPI
+    /// group `MPI_Group_incl(world, 1, [unitid])`, then merge it with the
+    /// sorting [`DartGroup::union`] — rather than trusting MPI's unsorted
+    /// union semantics.
+    pub fn addmember(&mut self, unitid: UnitId, world: &MpiGroup) -> DartResult<()> {
+        if unitid < 0 || unitid as usize >= world.size() {
+            return Err(DartErr::InvalidUnit(unitid));
+        }
+        // MPI_Group_incl on MPI_COMM_WORLD's group: relative rank ==
+        // absolute id there, which is what makes this correct.
+        let singleton = world
+            .incl(&[unitid as usize])
+            .map_err(DartErr::Mpi)?;
+        let merged = Self::union(self, &DartGroup::from_mpi(&singleton));
+        *self = merged;
+        Ok(())
+    }
+
+    /// `dart_group_delmember`.
+    pub fn delmember(&mut self, unitid: UnitId) {
+        self.members.retain(|&m| m != unitid);
+    }
+
+    /// `dart_group_union(g1, g2)`: **merge-sort** union (paper §IV-B1) —
+    /// the output is sorted regardless of input order, unlike
+    /// `MPI_Group_union` which appends.
+    pub fn union(g1: &DartGroup, g2: &DartGroup) -> DartGroup {
+        let (a, b) = (&g1.members, &g2.members);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(a[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        DartGroup { members: out }
+    }
+
+    /// `dart_group_intersect`.
+    pub fn intersect(g1: &DartGroup, g2: &DartGroup) -> DartGroup {
+        DartGroup {
+            members: g1.members.iter().copied().filter(|m| g2.ismember(*m)).collect(),
+        }
+    }
+
+    /// `dart_group_ismember`.
+    pub fn ismember(&self, unitid: UnitId) -> bool {
+        self.members.binary_search(&unitid).is_ok()
+    }
+
+    /// `dart_group_size`.
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// `dart_group_getmembers`: the sorted absolute unit ids.
+    pub fn members(&self) -> &[UnitId] {
+        &self.members
+    }
+
+    /// `dart_group_split`: partition into `n` contiguous sub-groups of
+    /// near-equal size (the first `size % n` parts get one extra member).
+    pub fn split(&self, n: usize) -> DartResult<Vec<DartGroup>> {
+        if n == 0 {
+            return Err(DartErr::Invalid("split into 0 parts".into()));
+        }
+        let base = self.members.len() / n;
+        let extra = self.members.len() % n;
+        let mut parts = Vec::with_capacity(n);
+        let mut at = 0;
+        for k in 0..n {
+            let len = base + usize::from(k < extra);
+            parts.push(DartGroup { members: self.members[at..at + len].to_vec() });
+            at += len;
+        }
+        Ok(parts)
+    }
+
+    /// Relative position of a unit within the group (the unit's rank in a
+    /// team created from this group).
+    pub fn rank_of(&self, unitid: UnitId) -> Option<usize> {
+        self.members.binary_search(&unitid).ok()
+    }
+
+    /// Convert from an MPI group (member identities, re-sorted to DART
+    /// order).
+    pub fn from_mpi(g: &MpiGroup) -> DartGroup {
+        DartGroup::from_units(g.members().iter().map(|&m| m as UnitId).collect())
+    }
+
+    /// Convert to an MPI group, in DART (sorted) order.
+    pub fn to_mpi(&self) -> MpiGroup {
+        MpiGroup::new(self.members.iter().map(|&m| m as usize).collect())
+    }
+
+    /// Check the sortedness invariant (used by property tests).
+    pub fn is_sorted_invariant(&self) -> bool {
+        self.members.windows(2).all(|w| w[0] < w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world(n: usize) -> MpiGroup {
+        MpiGroup::new((0..n).collect())
+    }
+
+    #[test]
+    fn addmember_keeps_sorted() {
+        // Paper Fig. 2: members added in arbitrary order, group stays
+        // ascending.
+        let w = world(10);
+        let mut g = DartGroup::new();
+        for u in [5, 1, 9, 3, 0] {
+            g.addmember(u, &w).unwrap();
+        }
+        assert_eq!(g.members(), &[0, 1, 3, 5, 9]);
+        assert!(g.is_sorted_invariant());
+    }
+
+    #[test]
+    fn addmember_duplicate_is_idempotent() {
+        let w = world(4);
+        let mut g = DartGroup::new();
+        g.addmember(2, &w).unwrap();
+        g.addmember(2, &w).unwrap();
+        assert_eq!(g.members(), &[2]);
+    }
+
+    #[test]
+    fn addmember_rejects_out_of_range() {
+        let w = world(4);
+        let mut g = DartGroup::new();
+        assert!(g.addmember(4, &w).is_err());
+        assert!(g.addmember(-1, &w).is_err());
+    }
+
+    #[test]
+    fn union_merge_sorts() {
+        // Contrast with MpiGroup::union_mpi, which appends unsorted.
+        let g1 = DartGroup::from_units(vec![5, 1]);
+        let g2 = DartGroup::from_units(vec![3, 1, 0]);
+        let u = DartGroup::union(&g1, &g2);
+        assert_eq!(u.members(), &[0, 1, 3, 5]);
+
+        let mpi_u = g1.to_mpi().union_mpi(&g2.to_mpi());
+        assert_ne!(
+            mpi_u.members().iter().map(|&m| m as i32).collect::<Vec<_>>(),
+            u.members(),
+            "MPI union must NOT be sorted — that's the gap DART bridges"
+        );
+    }
+
+    #[test]
+    fn intersect_and_ismember() {
+        let g1 = DartGroup::from_units(vec![1, 3, 5, 7]);
+        let g2 = DartGroup::from_units(vec![3, 4, 5]);
+        let i = DartGroup::intersect(&g1, &g2);
+        assert_eq!(i.members(), &[3, 5]);
+        assert!(i.ismember(3));
+        assert!(!i.ismember(1));
+    }
+
+    #[test]
+    fn split_balances() {
+        let g = DartGroup::from_units((0..10).collect());
+        let parts = g.split(3).unwrap();
+        assert_eq!(parts.iter().map(|p| p.size()).collect::<Vec<_>>(), vec![4, 3, 3]);
+        let rejoined = parts.iter().fold(DartGroup::new(), |acc, p| DartGroup::union(&acc, p));
+        assert_eq!(rejoined, g);
+    }
+
+    #[test]
+    fn delmember() {
+        let mut g = DartGroup::from_units(vec![1, 2, 3]);
+        g.delmember(2);
+        assert_eq!(g.members(), &[1, 3]);
+        g.delmember(9); // absent: no-op
+        assert_eq!(g.members(), &[1, 3]);
+    }
+
+    #[test]
+    fn rank_of_is_sorted_position() {
+        let g = DartGroup::from_units(vec![10, 20, 30]);
+        assert_eq!(g.rank_of(20), Some(1));
+        assert_eq!(g.rank_of(15), None);
+    }
+}

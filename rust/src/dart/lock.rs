@@ -1,0 +1,207 @@
+//! DART mutexes: the MCS list-based queuing lock over MPI-3 RMA atomics
+//! (paper §IV-B6, Fig. 6).
+//!
+//! Every lock consists of:
+//!
+//! - **`tail`** — a non-collective global allocation on the team's first
+//!   unit, holding the absolute id of the last unit in the queue, or -1
+//!   when the lock is free;
+//! - **`list`** — one cell per unit from a collective aligned allocation;
+//!   a unit's own cell holds the absolute id of its *successor* in the
+//!   queue (the next unit waiting), or -1.
+//!
+//! `acquire` atomically **fetch-and-swaps** its own id into `tail`
+//! (`MPI_Fetch_and_op` with `MPI_REPLACE`); if the old value names a
+//! predecessor, the unit enqueues itself in the predecessor's cell and
+//! blocks in a zero-byte `MPI_Recv`. `release` uses
+//! **compare-and-swap** on `tail` to detect whether it is the only queued
+//! unit; otherwise it sends the zero-size hand-off notification to its
+//! successor. The queue guarantees FIFO ordering of lock acquisition.
+
+use super::gptr::{GlobalPtr, TeamId};
+use super::{DartEnv, DartErr, DartResult};
+use crate::mpisim::MpiOp;
+use std::cell::Cell;
+
+/// First tag used for lock hand-off messages (tags below are user/collective
+/// space). Each lock gets `LOCK_TAG_BASE + teamID * MAX_LOCKS_PER_TEAM +
+/// seq`, so locks never share a tag.
+pub const LOCK_TAG_BASE: i32 = 1 << 20;
+
+/// Maximum concurrently initialized locks per team (tag-space bound).
+pub const MAX_LOCKS_PER_TEAM: i32 = 2048;
+
+/// Sentinel: no unit (free lock / no successor).
+const NIL: i64 = -1;
+
+/// A DART team lock (`dart_lock_t`).
+pub struct DartLock {
+    team: TeamId,
+    /// Global pointer to the queue tail (on the team's first unit).
+    tail: GlobalPtr,
+    /// Collective allocation: my cell holds my successor's absolute id.
+    list: GlobalPtr,
+    /// Hand-off message tag (unique per lock).
+    tag: i32,
+    /// Does this unit currently hold the lock?
+    held: Cell<bool>,
+}
+
+impl DartEnv {
+    /// `dart_team_lock_init`: collective over `team`. Allocates `tail` on
+    /// the team's first unit (via `dart_memalloc`) and the distributed
+    /// queue (via `dart_team_memalloc_aligned`), both initialized to -1
+    /// (paper Fig. 6, step 1).
+    pub fn lock_init(&self, team: TeamId) -> DartResult<DartLock> {
+        let my_team_rank = self.team_myid(team)?;
+        // Unique tag: collective lock-inits are ordered per team, so the
+        // per-team sequence number agrees on every member.
+        let seq = self.next_lock_seq(team)?;
+        // The tail host: unit 0 of the team (paper §IV-B6), or — with the
+        // §VI balanced-tails option — member `seq % team_size`, spreading
+        // separate locks' tail traffic over the team.
+        let tail_host = if self.config().balanced_lock_tails {
+            (seq as usize) % self.team_size(team)?
+        } else {
+            0
+        };
+        let mut tail_bits = [0u8; 16];
+        if my_team_rank == tail_host {
+            let tail = self.memalloc(8)?;
+            self.local_write(tail, &NIL.to_ne_bytes())?;
+            tail_bits = tail.to_bits().to_ne_bytes();
+        }
+        self.bcast(team, &mut tail_bits, tail_host)?;
+        let tail = GlobalPtr::from_bits(u128::from_ne_bytes(tail_bits));
+
+        // The distributed queue: one cell per unit, aligned, init -1.
+        let list = self.team_memalloc_aligned(team, 8)?;
+        let my_cell = list.with_unit(self.myid());
+        self.local_write(my_cell, &NIL.to_ne_bytes())?;
+
+        if seq >= MAX_LOCKS_PER_TEAM {
+            return Err(DartErr::LockMisuse(format!(
+                "more than {MAX_LOCKS_PER_TEAM} locks initialized on team {team}"
+            )));
+        }
+        let tag = LOCK_TAG_BASE + (team as i32) * MAX_LOCKS_PER_TEAM + seq;
+        // All cells must be initialized before anyone can enqueue.
+        self.barrier(team)?;
+        Ok(DartLock { team, tail, list, tag, held: Cell::new(false) })
+    }
+
+    /// `dart_lock_acquire` (paper Fig. 6, step 2): FIFO blocking acquire.
+    pub fn lock_acquire(&self, lock: &DartLock) -> DartResult<()> {
+        if lock.held.get() {
+            return Err(DartErr::LockMisuse("acquire of a lock already held".into()));
+        }
+        let me = self.myid() as i64;
+        // My successor cell starts empty.
+        let my_cell = lock.list.with_unit(self.myid());
+        self.local_write(my_cell, &NIL.to_ne_bytes())?;
+        // Atomic fetch-and-store: queue myself at the tail.
+        let pred = self.fetch_and_op(lock.tail, me, MpiOp::Replace)?;
+        if pred != NIL {
+            // Someone holds the lock: register with the predecessor and
+            // wait for its zero-size hand-off notification.
+            let pred_cell = lock.list.with_unit(pred as i32);
+            self.put_blocking(pred_cell, &me.to_ne_bytes())?;
+            let world = self.team_comm(super::DART_TEAM_ALL)?;
+            world.recv(&mut [], pred as usize, lock.tag)?;
+        }
+        lock.held.set(true);
+        self.metrics.lock_acquires.bump();
+        Ok(())
+    }
+
+    /// `dart_lock_try_acquire`: acquire iff the lock is free (does not
+    /// enqueue).
+    pub fn lock_try_acquire(&self, lock: &DartLock) -> DartResult<bool> {
+        if lock.held.get() {
+            return Err(DartErr::LockMisuse("try_acquire of a lock already held".into()));
+        }
+        let me = self.myid() as i64;
+        let old = self.compare_and_swap(lock.tail, NIL, me)?;
+        if old == NIL {
+            let my_cell = lock.list.with_unit(self.myid());
+            self.local_write(my_cell, &NIL.to_ne_bytes())?;
+            lock.held.set(true);
+            self.metrics.lock_acquires.bump();
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    /// `dart_lock_release` (paper Fig. 6, steps 3–4): compare-and-swap the
+    /// tail back to -1 if we are alone; otherwise hand off to the
+    /// successor with a zero-size notification.
+    pub fn lock_release(&self, lock: &DartLock) -> DartResult<()> {
+        if !lock.held.get() {
+            return Err(DartErr::LockMisuse("release of a lock not held".into()));
+        }
+        let me = self.myid() as i64;
+        let old = self.compare_and_swap(lock.tail, me, NIL)?;
+        if old != me {
+            // A successor is enqueuing (it already swapped the tail but may
+            // not have registered in our cell yet): wait for it to appear.
+            let my_cell = lock.list.with_unit(self.myid());
+            let successor = loop {
+                let mut cell = [0u8; 8];
+                self.local_read(my_cell, &mut cell)?;
+                let s = i64::from_ne_bytes(cell);
+                if s != NIL {
+                    break s;
+                }
+                // The successor needs CPU time to register itself; on an
+                // oversubscribed host a pure spin would stall it.
+                std::thread::yield_now();
+            };
+            // Reset my cell for the next acquisition, then notify.
+            self.local_write(my_cell, &NIL.to_ne_bytes())?;
+            let world = self.team_comm(super::DART_TEAM_ALL)?;
+            world.send(&[], successor as usize, lock.tag)?;
+        }
+        lock.held.set(false);
+        Ok(())
+    }
+
+    /// `dart_team_lock_free`: collective over the team; the lock must be
+    /// free everywhere.
+    pub fn lock_free(&self, lock: DartLock) -> DartResult<()> {
+        if lock.held.get() {
+            return Err(DartErr::LockMisuse("freeing a lock while holding it".into()));
+        }
+        // No one may still be queued.
+        self.barrier(lock.team)?;
+        self.team_memfree(lock.team, lock.list)?;
+        if lock.tail.unitid == self.myid() {
+            self.memfree(lock.tail)?;
+        }
+        Ok(())
+    }
+}
+
+impl DartLock {
+    /// The team this lock belongs to.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// Does *this unit* currently hold the lock?
+    pub fn is_held(&self) -> bool {
+        self.held.get()
+    }
+
+    /// The lock's hand-off tag (diagnostics).
+    pub fn tag(&self) -> i32 {
+        self.tag
+    }
+
+    /// The absolute unit hosting this lock's tail (unit 0 of the team in
+    /// the paper's scheme; spread over members with
+    /// [`crate::dart::DartConfig::balanced_lock_tails`]).
+    pub fn tail_unit(&self) -> i32 {
+        self.tail.unitid
+    }
+}

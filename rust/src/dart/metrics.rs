@@ -1,0 +1,91 @@
+//! Lightweight per-unit operation counters for the DART hot path.
+//!
+//! `Cell`-based (the env is thread-local), so bumping a counter is a plain
+//! store — cheap enough to leave enabled in release builds and in the
+//! figure benches.
+
+use std::cell::Cell;
+use std::fmt;
+
+/// One monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(Cell<u64>);
+
+impl Counter {
+    #[inline]
+    pub fn bump(&self) {
+        self.0.set(self.0.get() + 1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.set(self.0.get() + n);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.get()
+    }
+}
+
+/// Per-unit DART operation counters.
+#[derive(Default)]
+pub struct Metrics {
+    /// Non-blocking puts issued.
+    pub puts: Counter,
+    /// Non-blocking gets issued.
+    pub gets: Counter,
+    /// Blocking puts issued.
+    pub puts_blocking: Counter,
+    /// Blocking gets issued.
+    pub gets_blocking: Counter,
+    /// Bytes moved by one-sided operations.
+    pub bytes: Counter,
+    /// Collective global memory allocations.
+    pub allocs: Counter,
+    /// Collective operations (barrier/bcast/...).
+    pub collectives: Counter,
+    /// Lock acquisitions.
+    pub lock_acquires: Counter,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl fmt::Display for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={}",
+            self.puts.get(),
+            self.gets.get(),
+            self.puts_blocking.get(),
+            self.gets_blocking.get(),
+            self.bytes.get(),
+            self.allocs.get(),
+            self.collectives.get(),
+            self.lock_acquires.get()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_count() {
+        let m = Metrics::new();
+        m.puts.bump();
+        m.puts.bump();
+        m.bytes.add(128);
+        assert_eq!(m.puts.get(), 2);
+        assert_eq!(m.bytes.get(), 128);
+        assert_eq!(m.gets.get(), 0);
+        let s = m.to_string();
+        assert!(s.contains("puts=2"));
+    }
+}

@@ -1,0 +1,552 @@
+//! The DART PGAS runtime on MPI-3 RMA — the paper's contribution.
+//!
+//! The API follows the five-part structure of §III:
+//!
+//! 1. **Initialization and shutdown** — [`run`] (spawns units, runs
+//!    `dart_init`/`dart_exit` around the SPMD closure), [`DartEnv::myid`],
+//!    [`DartEnv::size`].
+//! 2. **Team and group management** — [`DartGroup`] (local, always
+//!    sorted), [`DartEnv::team_create`], [`DartEnv::team_destroy`],
+//!    [`DartEnv::team_myid`], [`DartEnv::team_size`], unit translation.
+//! 3. **Synchronization** — [`DartEnv::barrier`] and the MCS queue lock
+//!    ([`lock::DartLock`]).
+//! 4. **Global memory management** — [`DartEnv::memalloc`] /
+//!    [`DartEnv::team_memalloc_aligned`] and the 128-bit [`GlobalPtr`].
+//! 5. **Communication** — one-sided blocking/non-blocking put/get with
+//!    handles ([`onesided`]) and team collectives ([`collectives`]).
+//!
+//! ## How the semantic gaps are bridged (paper §IV-B)
+//!
+//! | DART concept | MPI-3 realization here |
+//! |---|---|
+//! | sorted groups, non-collective creation | merge-sort union over `MPI_Group_incl` singletons ([`group`]) |
+//! | never-reused team ids | bounded, linearly-scanned `teamlist` of recycled slots ([`team`]) |
+//! | non-collective `dart_memalloc` | per-unit free-list over one pre-reserved world window ([`translation::FreeListAllocator`]) |
+//! | collective aligned allocation | deterministic pool allocator + sub-window per allocation + translation table ([`translation::TranslationTable`]) |
+//! | global pointer dereference | flags dispatch + absolute→relative unit translation ([`onesided`]) |
+//! | RMA epochs | `lock_all` (shared) opened eagerly at init/allocation; never on the hot path |
+//! | mutexes | MCS list-based queue lock from `fetch_and_op`/`compare_and_swap` ([`lock`]) |
+
+pub mod collectives;
+pub mod config;
+pub mod gptr;
+pub mod group;
+pub mod lock;
+pub mod metrics;
+pub mod onesided;
+pub mod team;
+pub mod translation;
+
+#[cfg(test)]
+mod tests;
+
+pub use config::DartConfig;
+pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE};
+pub use group::DartGroup;
+pub use lock::DartLock;
+pub use metrics::Metrics;
+pub use onesided::DartHandle;
+
+use crate::mpisim::{Mpi, MpiErr, Win, World, WorldConfig};
+use crate::simnet::Placement;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::sync::Arc;
+use team::{TeamEntry, TeamRegistry};
+use thiserror::Error;
+use translation::FreeListAllocator;
+
+/// Errors surfaced by the DART API.
+#[derive(Debug, Error)]
+pub enum DartErr {
+    #[error("MPI substrate error: {0}")]
+    Mpi(#[from] MpiErr),
+    #[error("invalid unit id {0}")]
+    InvalidUnit(UnitId),
+    #[error("unknown or destroyed team {0}")]
+    UnknownTeam(TeamId),
+    #[error("unit {unit} is not a member of team {team}")]
+    NotInTeam { unit: UnitId, team: TeamId },
+    #[error("teamlist is full ({0} slots) — raise DartConfig::teamlist_size")]
+    TeamListFull(usize),
+    #[error("team id space exhausted (ids are never reused)")]
+    TeamIdOverflow,
+    #[error("global memory pool exhausted: requested {requested} bytes of {pool}")]
+    OutOfMemory { requested: u64, pool: u64 },
+    #[error("invalid global pointer: {0}")]
+    InvalidGptr(String),
+    #[error("lock misuse: {0}")]
+    LockMisuse(String),
+    #[error("{0}")]
+    Invalid(String),
+}
+
+/// DART result alias.
+pub type DartResult<T> = Result<T, DartErr>;
+
+/// State shared across all units of one DART program (created before the
+/// unit threads spawn).
+struct DartShared {
+    /// Team ids are handed out from here and **never reused** (§IV-B2).
+    next_team_id: AtomicI32,
+}
+
+/// Per-unit mutable runtime state.
+struct EnvState {
+    registry: TeamRegistry,
+    /// The pre-defined world window backing all non-collective
+    /// allocations (Fig. 4), inside an eager shared epoch.
+    world_win: Rc<Win>,
+    /// My partition of the world window.
+    nc_alloc: FreeListAllocator,
+}
+
+/// The per-unit DART runtime handle (what `dart_init` yields).
+///
+/// All DART calls go through this. It is bound to its unit's thread.
+pub struct DartEnv {
+    mpi: Mpi,
+    myid: UnitId,
+    size: usize,
+    config: DartConfig,
+    shared: Arc<DartShared>,
+    state: RefCell<EnvState>,
+    /// Hot-path operation counters.
+    pub metrics: Metrics,
+}
+
+/// SPMD entry point: spawn `cfg.units` unit threads, run `dart_init`, call
+/// `f(&env)` on every unit, then `dart_exit`, and join.
+///
+/// ```no_run
+/// use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+/// run(DartConfig::with_units(4), |env| {
+///     println!("unit {}/{}", env.myid(), env.size());
+///     env.barrier(DART_TEAM_ALL).unwrap();
+/// }).unwrap();
+/// ```
+pub fn run<F>(cfg: DartConfig, f: F) -> DartResult<()>
+where
+    F: Fn(&DartEnv) + Send + Sync,
+{
+    let shared = Arc::new(DartShared { next_team_id: AtomicI32::new(1) });
+    let world_cfg = WorldConfig {
+        nranks: cfg.units,
+        topology: cfg.topology,
+        pin: cfg.pin.clone(),
+        cost: cfg.cost,
+        pin_os_threads: cfg.pin_os_threads,
+    };
+    World::run(world_cfg, move |mpi| {
+        let env = DartEnv::init(mpi, cfg.clone(), shared.clone()).expect("dart_init failed");
+        f(&env);
+        env.exit().expect("dart_exit failed");
+    });
+    Ok(())
+}
+
+impl DartEnv {
+    /// `dart_init`: establish the world team (`DART_TEAM_ALL`), reserve
+    /// the non-collective world window and the world team's collective
+    /// pool, and open the eager shared epochs (§IV-B5).
+    fn init(mpi: Mpi, config: DartConfig, shared: Arc<DartShared>) -> DartResult<Self> {
+        let comm = mpi.comm_world();
+        let alloc_win = |size: usize| {
+            if config.shmem_windows {
+                Win::allocate_shared(&comm, size)
+            } else {
+                Win::allocate(&comm, size)
+            }
+        };
+        // Pre-reserved world window for non-collective allocations.
+        let world_win = alloc_win(config.non_collective_pool)?;
+        world_win.lock_all()?;
+        // DART_TEAM_ALL's collective pool (sub-windows inherit the
+        // shared-memory flavour).
+        let pool = alloc_win(config.team_pool)?;
+        pool.lock_all()?;
+
+        let mut registry = TeamRegistry::new(config.teamlist_size, config.indexed_teamlist);
+        registry.insert(TeamEntry::new(
+            DART_TEAM_ALL,
+            comm.clone(),
+            Rc::new(pool),
+            config.team_pool as u64,
+        ))?;
+
+        let myid = mpi.world_rank() as UnitId;
+        let size = mpi.world_size();
+        let nc_alloc = FreeListAllocator::new(config.non_collective_pool as u64);
+        Ok(DartEnv {
+            mpi,
+            myid,
+            size,
+            config,
+            shared,
+            state: RefCell::new(EnvState {
+                registry,
+                world_win: Rc::new(world_win),
+                nc_alloc,
+            }),
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// `dart_exit`: collective teardown of whatever is still live.
+    fn exit(self) -> DartResult<()> {
+        // A final rendezvous so no unit tears down while others still
+        // communicate. Window memory is reclaimed when handles drop;
+        // epochs are released by `Win::drop`.
+        self.barrier(DART_TEAM_ALL)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Identity & environment queries
+    // ------------------------------------------------------------------
+
+    /// `dart_myid`: my absolute unit id (rank in `DART_TEAM_ALL`).
+    #[inline]
+    pub fn myid(&self) -> UnitId {
+        self.myid
+    }
+
+    /// `dart_size`: total number of units.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The modelled placement (topology + unit coordinates).
+    pub fn placement(&self) -> &Placement {
+        &self.mpi.state().placement
+    }
+
+    /// The launch configuration.
+    pub fn config(&self) -> &DartConfig {
+        &self.config
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn mpi(&self) -> &Mpi {
+        &self.mpi
+    }
+
+    /// The world group (every unit) as a DART group.
+    pub fn group_all(&self) -> DartGroup {
+        DartGroup::from_units((0..self.size as UnitId).collect())
+    }
+
+    /// The MPI world group (for `dart_group_addmember`).
+    pub fn mpi_world_group(&self) -> crate::mpisim::Group {
+        self.mpi.group_world()
+    }
+
+    // ------------------------------------------------------------------
+    // Teams (§IV-B2)
+    // ------------------------------------------------------------------
+
+    /// `dart_team_create(parent, group)`: collective over the *parent*
+    /// team. Members of `group` (which must be a subset of the parent) get
+    /// the new team's id; other parent members get `Ok(None)`
+    /// (`DART_TEAM_NULL`).
+    pub fn team_create(&self, parent: TeamId, group: &DartGroup) -> DartResult<Option<TeamId>> {
+        if group.is_empty() {
+            return Err(DartErr::Invalid("cannot create a team from an empty group".into()));
+        }
+        let parent_comm = {
+            let st = self.state.borrow();
+            st.registry.get(parent)?.comm.clone()
+        };
+        // Agree on the new id: the parent's rank-0 draws from the global
+        // dispenser (ids are never reused), then broadcasts.
+        let mut id_bytes = if parent_comm.rank() == 0 {
+            let id = self.shared.next_team_id.fetch_add(1, Ordering::SeqCst);
+            if id > i16::MAX as i32 {
+                return Err(DartErr::TeamIdOverflow);
+            }
+            (id as i16).to_ne_bytes()
+        } else {
+            [0; 2]
+        };
+        parent_comm.bcast(&mut id_bytes, 0)?;
+        let team_id = TeamId::from_ne_bytes(id_bytes);
+
+        // Build the communicator: collective over the parent. The group is
+        // sorted (DART invariant), so team rank == sorted position.
+        let sub = parent_comm.create_from_group(&group.to_mpi())?;
+        let Some(comm) = sub else {
+            return Ok(None);
+        };
+        // Members reserve the team's collective pool and open its epoch.
+        let pool = if self.config.shmem_windows {
+            Win::allocate_shared(&comm, self.config.team_pool)?
+        } else {
+            Win::allocate(&comm, self.config.team_pool)?
+        };
+        pool.lock_all()?;
+        let entry = TeamEntry::new(team_id, comm, Rc::new(pool), self.config.team_pool as u64);
+        self.state.borrow_mut().registry.insert(entry)?;
+        Ok(Some(team_id))
+    }
+
+    /// `dart_team_destroy`: collective over the team's members. Frees all
+    /// of the team's collective allocations (in creation order — every
+    /// member holds the same table), the pool, and recycles the teamlist
+    /// slot. The id is never reused.
+    pub fn team_destroy(&self, team: TeamId) -> DartResult<()> {
+        if team == DART_TEAM_ALL {
+            return Err(DartErr::Invalid("cannot destroy DART_TEAM_ALL".into()));
+        }
+        let mut entry = self.state.borrow_mut().registry.remove(team)?;
+        for e in entry.table.drain() {
+            e.win.unlock_all()?;
+            match Rc::try_unwrap(e.win) {
+                Ok(w) => w.free()?,
+                Err(_) => {
+                    return Err(DartErr::Invalid(
+                        "collective allocation window still referenced at team destroy".into(),
+                    ))
+                }
+            }
+        }
+        entry.pool.unlock_all()?;
+        match Rc::try_unwrap(entry.pool) {
+            Ok(w) => w.free()?,
+            Err(_) => {
+                return Err(DartErr::Invalid("team pool still referenced at team destroy".into()))
+            }
+        }
+        Ok(())
+    }
+
+    /// `dart_team_myid`: my rank within `team`.
+    pub fn team_myid(&self, team: TeamId) -> DartResult<usize> {
+        let st = self.state.borrow();
+        Ok(st.registry.get(team)?.comm.rank())
+    }
+
+    /// `dart_team_size`.
+    pub fn team_size(&self, team: TeamId) -> DartResult<usize> {
+        let st = self.state.borrow();
+        Ok(st.registry.get(team)?.comm.size())
+    }
+
+    /// `dart_team_get_group`: the team's members as a (sorted) DART group.
+    pub fn team_get_group(&self, team: TeamId) -> DartResult<DartGroup> {
+        let st = self.state.borrow();
+        let entry = st.registry.get(team)?;
+        Ok(DartGroup::from_units(
+            entry.comm.rank_table().iter().map(|&w| w as UnitId).collect(),
+        ))
+    }
+
+    /// `dart_team_unit_l2g`: team-relative rank → absolute unit id.
+    pub fn team_unit_l2g(&self, team: TeamId, rel: usize) -> DartResult<UnitId> {
+        let st = self.state.borrow();
+        let entry = st.registry.get(team)?;
+        Ok(entry.comm.world_rank_of(rel).map(|w| w as UnitId)?)
+    }
+
+    /// `dart_team_unit_g2l`: absolute unit id → team-relative rank.
+    pub fn team_unit_g2l(&self, team: TeamId, unit: UnitId) -> DartResult<usize> {
+        let st = self.state.borrow();
+        let entry = st.registry.get(team)?;
+        entry.rank_of_unit(unit).ok_or(DartErr::NotInTeam { unit, team })
+    }
+
+    /// Live team ids on this unit (diagnostics).
+    pub fn live_teams(&self) -> Vec<TeamId> {
+        self.state.borrow().registry.live_teams()
+    }
+
+    // ------------------------------------------------------------------
+    // Global memory (§IV-B3)
+    // ------------------------------------------------------------------
+
+    /// `dart_memalloc`: **non-collective** (local) allocation of `nbytes`
+    /// of globally accessible memory from my partition of the pre-reserved
+    /// world window (Fig. 4). Returns a non-collective global pointer.
+    pub fn memalloc(&self, nbytes: u64) -> DartResult<GlobalPtr> {
+        let mut st = self.state.borrow_mut();
+        let base = st.nc_alloc.alloc(nbytes)?;
+        Ok(GlobalPtr::non_collective(self.myid, base))
+    }
+
+    /// `dart_memfree`: free a non-collective allocation. Only the owning
+    /// unit may free (the allocation lives in *its* partition).
+    pub fn memfree(&self, gptr: GlobalPtr) -> DartResult<()> {
+        if gptr.is_collective() {
+            return Err(DartErr::InvalidGptr("memfree on a collective pointer".into()));
+        }
+        if gptr.unitid != self.myid {
+            return Err(DartErr::InvalidGptr(format!(
+                "memfree of unit {}'s memory by unit {}",
+                gptr.unitid, self.myid
+            )));
+        }
+        self.state.borrow_mut().nc_alloc.free(gptr.offset)
+    }
+
+    /// `dart_team_memalloc_aligned`: **collective** over `team`; every
+    /// member allocates `nbytes` and a window is created over that range
+    /// of the team's pool (Fig. 5). Returns a collective global pointer
+    /// whose offset is pool-relative and identical on every member
+    /// (aligned + symmetric), initially pointing at the team's first
+    /// member.
+    pub fn team_memalloc_aligned(&self, team: TeamId, nbytes: u64) -> DartResult<GlobalPtr> {
+        let (base, len, pool, unit0) = {
+            let mut st = self.state.borrow_mut();
+            let entry = st.registry.get_mut(team)?;
+            let base = entry.alloc.alloc(nbytes)?;
+            let len = entry.alloc.size_of(base).expect("just allocated");
+            let unit0 = entry.comm.world_rank_of(0)? as UnitId;
+            (base, len, entry.pool.clone(), unit0)
+        };
+        // One window per collective allocation, over the pool sub-range
+        // (collective call — must happen outside the RefCell borrow);
+        // start its shared epoch eagerly (§IV-B5).
+        let win = pool.create_sub(base as usize, len as usize)?;
+        win.lock_all()?;
+        {
+            let mut st = self.state.borrow_mut();
+            let entry = st.registry.get_mut(team)?;
+            entry.table.add(base, len, Rc::new(win))?;
+        }
+        self.metrics.allocs.bump();
+        Ok(GlobalPtr::collective(unit0, team, base))
+    }
+
+    /// `dart_team_memfree`: collective; frees the allocation `gptr` points
+    /// into and its window.
+    pub fn team_memfree(&self, team: TeamId, gptr: GlobalPtr) -> DartResult<()> {
+        if !gptr.is_collective() || gptr.segid != team {
+            return Err(DartErr::InvalidGptr(format!(
+                "team_memfree({team}) of non-matching pointer {gptr}"
+            )));
+        }
+        let entry_win = {
+            let mut st = self.state.borrow_mut();
+            let entry = st.registry.get_mut(team)?;
+            let e = entry.table.remove(gptr.offset)?;
+            entry.alloc.free(e.base)?;
+            e.win
+        };
+        entry_win.unlock_all()?;
+        match Rc::try_unwrap(entry_win) {
+            Ok(w) => Ok(w.free()?),
+            Err(_) => Err(DartErr::Invalid(
+                "collective allocation window still referenced at free".into(),
+            )),
+        }
+    }
+
+    /// Number of live collective allocations in a team (diagnostics).
+    pub fn team_live_allocs(&self, team: TeamId) -> DartResult<usize> {
+        Ok(self.state.borrow().registry.get(team)?.table.len())
+    }
+
+    // ------------------------------------------------------------------
+    // Internal plumbing shared with onesided/collectives/lock
+    // ------------------------------------------------------------------
+
+    /// Dereference a global pointer (§IV-B4): resolve the window, the
+    /// MPI-relative target rank, and the window displacement.
+    ///
+    /// Non-collective pointers resolve against the world window with the
+    /// absolute unit as the target — "trivially dereferenced without the
+    /// unit translations". Collective pointers translate the absolute unit
+    /// to its team rank and look the window up in the translation table.
+    #[inline]
+    pub(crate) fn deref_gptr(&self, gptr: GlobalPtr) -> DartResult<(Rc<Win>, usize, u64)> {
+        if gptr.is_null() {
+            return Err(DartErr::InvalidGptr("null pointer dereference".into()));
+        }
+        let st = self.state.borrow();
+        if !gptr.is_collective() {
+            if gptr.unitid as usize >= self.size {
+                return Err(DartErr::InvalidUnit(gptr.unitid));
+            }
+            return Ok((st.world_win.clone(), gptr.unitid as usize, gptr.offset));
+        }
+        let entry = st.registry.get(gptr.segid)?;
+        let target = entry
+            .rank_of_unit(gptr.unitid)
+            .ok_or(DartErr::NotInTeam { unit: gptr.unitid, team: gptr.segid })?;
+        let (win, disp) = entry
+            .table
+            .lookup(gptr.offset)
+            .ok_or_else(|| DartErr::InvalidGptr(format!("{gptr} not in any allocation")))?;
+        Ok((win.clone(), target, disp))
+    }
+
+    /// Borrow-scoped dereference: run `f` with the resolved window while
+    /// the registry borrow is held — the hot-path variant of
+    /// [`DartEnv::deref_gptr`] (§Perf: saves the `Rc` clone + drop per
+    /// one-sided operation).
+    #[inline]
+    pub(crate) fn with_win<R>(
+        &self,
+        gptr: GlobalPtr,
+        f: impl FnOnce(&Win, usize, u64) -> DartResult<R>,
+    ) -> DartResult<R> {
+        if gptr.is_null() {
+            return Err(DartErr::InvalidGptr("null pointer dereference".into()));
+        }
+        let st = self.state.borrow();
+        if !gptr.is_collective() {
+            if gptr.unitid as usize >= self.size {
+                return Err(DartErr::InvalidUnit(gptr.unitid));
+            }
+            return f(&st.world_win, gptr.unitid as usize, gptr.offset);
+        }
+        let entry = st.registry.get(gptr.segid)?;
+        let target = entry
+            .rank_of_unit(gptr.unitid)
+            .ok_or(DartErr::NotInTeam { unit: gptr.unitid, team: gptr.segid })?;
+        let (win, disp) = entry
+            .table
+            .lookup(gptr.offset)
+            .ok_or_else(|| DartErr::InvalidGptr(format!("{gptr} not in any allocation")))?;
+        f(win, target, disp)
+    }
+
+    /// The communicator of a team (for collectives and the lock).
+    pub(crate) fn team_comm(&self, team: TeamId) -> DartResult<crate::mpisim::Comm> {
+        Ok(self.state.borrow().registry.get(team)?.comm.clone())
+    }
+
+    /// Per-team lock-init sequence (collectively consistent, §IV-B6).
+    pub(crate) fn next_lock_seq(&self, team: TeamId) -> DartResult<i32> {
+        let mut st = self.state.borrow_mut();
+        let entry = st.registry.get_mut(team)?;
+        let seq = entry.lock_seq;
+        entry.lock_seq += 1;
+        Ok(seq)
+    }
+
+    /// Local read of memory this unit owns, through a global pointer.
+    pub fn local_read(&self, gptr: GlobalPtr, buf: &mut [u8]) -> DartResult<()> {
+        if gptr.unitid != self.myid {
+            return Err(DartErr::InvalidGptr(format!(
+                "local_read of unit {}'s memory on unit {}",
+                gptr.unitid, self.myid
+            )));
+        }
+        let (win, _target, disp) = self.deref_gptr(gptr)?;
+        Ok(win.read_local(disp as usize, buf)?)
+    }
+
+    /// Local write to memory this unit owns, through a global pointer.
+    pub fn local_write(&self, gptr: GlobalPtr, buf: &[u8]) -> DartResult<()> {
+        if gptr.unitid != self.myid {
+            return Err(DartErr::InvalidGptr(format!(
+                "local_write of unit {}'s memory on unit {}",
+                gptr.unitid, self.myid
+            )));
+        }
+        let (win, _target, disp) = self.deref_gptr(gptr)?;
+        Ok(win.write_local(disp as usize, buf)?)
+    }
+}

@@ -1,0 +1,242 @@
+//! One-sided communication (§III, §IV-B5): blocking and non-blocking
+//! put/get over global pointers, with `wait`/`test` completion calls.
+//!
+//! Every operation performs the §IV-B4 dereference chain:
+//!
+//! 1. flags dispatch — collective vs non-collective pointer;
+//! 2. unit translation (collective only) — absolute unit id → team rank;
+//! 3. window resolution — world window, or translation-table lookup;
+//! 4. the MPI request-based RMA call, inside the eagerly-opened shared
+//!    passive-target epoch (so no epoch calls appear here).
+//!
+//! *Blocking* operations "do not return until the data transfers complete
+//! both at the origin locally and at the target remotely" — put/get +
+//! flush. *Non-blocking* operations return a [`DartHandle`] for
+//! `dart_wait`/`dart_test`/`dart_waitall`/`dart_testall`.
+
+use super::gptr::GlobalPtr;
+use super::{DartEnv, DartResult};
+use crate::mpisim::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, Pod, RmaRequest};
+
+/// Completion handle of a non-blocking DART one-sided operation
+/// (`dart_handle_t`).
+pub struct DartHandle {
+    req: Option<RmaRequest>,
+}
+
+impl DartHandle {
+    fn new(req: RmaRequest) -> Self {
+        DartHandle { req: Some(req) }
+    }
+
+    /// An already-completed handle (zero-byte transfers).
+    pub fn completed() -> Self {
+        DartHandle { req: None }
+    }
+
+    /// Has the transfer completed?
+    pub fn is_complete(&self) -> bool {
+        self.req.as_ref().map_or(true, |r| r.test())
+    }
+}
+
+impl DartEnv {
+    // ------------------------------------------------------------------
+    // Non-blocking (dart_put / dart_get)
+    // ------------------------------------------------------------------
+
+    /// `dart_put`: non-blocking transfer of `src` to the global location
+    /// `gptr`. The returned handle must be completed with
+    /// [`DartEnv::wait`] (or `waitall`) before `src`'s remote visibility
+    /// is guaranteed.
+    pub fn put(&self, gptr: GlobalPtr, src: &[u8]) -> DartResult<DartHandle> {
+        let req =
+            self.with_win(gptr, |win, target, disp| Ok(win.rput(src, target, disp as usize)?))?;
+        self.metrics.puts.bump();
+        self.metrics.bytes.add(src.len() as u64);
+        Ok(DartHandle::new(req))
+    }
+
+    /// `dart_get`: non-blocking transfer from the global location `gptr`
+    /// into `dst`. `dst` must not be read until the handle completes.
+    pub fn get(&self, gptr: GlobalPtr, dst: &mut [u8]) -> DartResult<DartHandle> {
+        let req =
+            self.with_win(gptr, |win, target, disp| Ok(win.rget(dst, target, disp as usize)?))?;
+        self.metrics.gets.bump();
+        self.metrics.bytes.add(dst.len() as u64);
+        Ok(DartHandle::new(req))
+    }
+
+    /// `dart_wait`: block until the operation behind `handle` completes.
+    pub fn wait(&self, handle: DartHandle) -> DartResult<()> {
+        if let Some(req) = handle.req {
+            req.wait();
+        }
+        Ok(())
+    }
+
+    /// `dart_test`: non-blocking completion check. Returns the handle back
+    /// if still in flight.
+    pub fn test(&self, handle: DartHandle) -> Result<(), DartHandle> {
+        if handle.is_complete() {
+            Ok(())
+        } else {
+            Err(handle)
+        }
+    }
+
+    /// `dart_waitall`.
+    pub fn waitall(&self, handles: Vec<DartHandle>) -> DartResult<()> {
+        let reqs: Vec<RmaRequest> = handles.into_iter().filter_map(|h| h.req).collect();
+        RmaRequest::waitall(reqs);
+        Ok(())
+    }
+
+    /// `dart_testall`: true iff every handle has completed.
+    pub fn testall(&self, handles: &[DartHandle]) -> bool {
+        handles.iter().all(|h| h.is_complete())
+    }
+
+    // ------------------------------------------------------------------
+    // Blocking (dart_put_blocking / dart_get_blocking)
+    // ------------------------------------------------------------------
+
+    /// `dart_put_blocking`: returns only when the transfer is complete at
+    /// both origin and target (put + flush).
+    pub fn put_blocking(&self, gptr: GlobalPtr, src: &[u8]) -> DartResult<()> {
+        self.with_win(gptr, |win, target, disp| Ok(win.put_flush(src, target, disp as usize)?))?;
+        self.metrics.puts_blocking.bump();
+        self.metrics.bytes.add(src.len() as u64);
+        Ok(())
+    }
+
+    /// `dart_get_blocking`: returns only when `dst` holds the remote data.
+    pub fn get_blocking(&self, gptr: GlobalPtr, dst: &mut [u8]) -> DartResult<()> {
+        self.with_win(gptr, |win, target, disp| Ok(win.get_flush(dst, target, disp as usize)?))?;
+        self.metrics.gets_blocking.bump();
+        self.metrics.bytes.add(dst.len() as u64);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Strided transfers (column halos, sub-matrix exchange)
+    // ------------------------------------------------------------------
+
+    /// Strided non-blocking put: `count` blocks of `block` bytes from
+    /// `src` (contiguous) to the target, where remote block `i` starts at
+    /// `gptr.offset + i * stride` (`stride ≥ block`, in bytes).
+    ///
+    /// This is the access shape of a *column* halo in a row-major grid —
+    /// the complement of the contiguous row halo the stencil app uses.
+    pub fn put_strided(
+        &self,
+        gptr: GlobalPtr,
+        src: &[u8],
+        count: usize,
+        block: usize,
+        stride: u64,
+    ) -> DartResult<Vec<DartHandle>> {
+        if src.len() != count * block {
+            return Err(super::DartErr::Invalid(format!(
+                "strided put: buffer {} bytes != {count} × {block}",
+                src.len()
+            )));
+        }
+        if (stride as usize) < block {
+            return Err(super::DartErr::Invalid("stride smaller than block".into()));
+        }
+        let (win, target, disp) = self.deref_gptr(gptr)?;
+        let mut handles = Vec::with_capacity(count);
+        for i in 0..count {
+            let req = win.rput(
+                &src[i * block..(i + 1) * block],
+                target,
+                (disp + i as u64 * stride) as usize,
+            )?;
+            handles.push(DartHandle::new(req));
+        }
+        self.metrics.puts.add(count as u64);
+        self.metrics.bytes.add(src.len() as u64);
+        Ok(handles)
+    }
+
+    /// Strided non-blocking get: the mirror of [`DartEnv::put_strided`].
+    pub fn get_strided(
+        &self,
+        gptr: GlobalPtr,
+        dst: &mut [u8],
+        count: usize,
+        block: usize,
+        stride: u64,
+    ) -> DartResult<Vec<DartHandle>> {
+        if dst.len() != count * block {
+            return Err(super::DartErr::Invalid(format!(
+                "strided get: buffer {} bytes != {count} × {block}",
+                dst.len()
+            )));
+        }
+        if (stride as usize) < block {
+            return Err(super::DartErr::Invalid("stride smaller than block".into()));
+        }
+        let (win, target, disp) = self.deref_gptr(gptr)?;
+        let mut handles = Vec::with_capacity(count);
+        for (i, chunk) in dst.chunks_exact_mut(block).enumerate() {
+            let req = win.rget(chunk, target, (disp + i as u64 * stride) as usize)?;
+            handles.push(DartHandle::new(req));
+        }
+        self.metrics.gets.add(count as u64);
+        self.metrics.bytes.add((count * block) as u64);
+        Ok(handles)
+    }
+
+    // ------------------------------------------------------------------
+    // Typed conveniences
+    // ------------------------------------------------------------------
+
+    /// Typed blocking put of a slice of `T`.
+    pub fn put_blocking_typed<T: Pod>(&self, gptr: GlobalPtr, src: &[T]) -> DartResult<()> {
+        self.put_blocking(gptr, as_bytes(src))
+    }
+
+    /// Typed blocking get into a slice of `T`.
+    pub fn get_blocking_typed<T: Pod>(&self, gptr: GlobalPtr, dst: &mut [T]) -> DartResult<()> {
+        self.get_blocking(gptr, as_bytes_mut(dst))
+    }
+
+    /// `dart_accumulate`-style atomic element-wise update (MPI-3
+    /// `MPI_Accumulate` under the hood).
+    pub fn accumulate<T: HasMpiType>(
+        &self,
+        gptr: GlobalPtr,
+        src: &[T],
+        op: MpiOp,
+    ) -> DartResult<()> {
+        let (win, target, disp) = self.deref_gptr(gptr)?;
+        win.accumulate(as_bytes(src), target, disp as usize, op, T::MPI_TYPE)?;
+        win.flush(target)?;
+        Ok(())
+    }
+
+    /// Atomic fetch-and-op on a single `T` (exposed for lock-free
+    /// algorithms beyond the built-in lock; paper §IV-B6).
+    pub fn fetch_and_op<T: HasMpiType>(
+        &self,
+        gptr: GlobalPtr,
+        value: T,
+        op: MpiOp,
+    ) -> DartResult<T> {
+        let (win, target, disp) = self.deref_gptr(gptr)?;
+        Ok(win.fetch_and_op_with(value, target, disp as usize, op)?)
+    }
+
+    /// Atomic compare-and-swap on a single `T`.
+    pub fn compare_and_swap<T: HasMpiType + PartialEq>(
+        &self,
+        gptr: GlobalPtr,
+        compare: T,
+        value: T,
+    ) -> DartResult<T> {
+        let (win, target, disp) = self.deref_gptr(gptr)?;
+        Ok(win.compare_and_swap(compare, value, target, disp as usize)?)
+    }
+}

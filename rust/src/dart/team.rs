@@ -1,0 +1,173 @@
+//! Teams and the `teamlist` mechanism (paper §IV-B2).
+//!
+//! A DART team is an ordered set of units identified by an integer id that
+//! is **never reused**, even after destruction. Because ids grow without
+//! bound, they cannot index a dense array; the paper's solution is a
+//! bounded `teamlist` whose slots are linearly scanned (`teamlist[i] == -1`
+//! marks a free slot) and recycled on destroy. The slot index is then "a
+//! perfect index" into the per-team state: the communicator, the collective
+//! memory pool and the translation table.
+//!
+//! The paper's future work notes the linear scan "can be significant when
+//! the teamlist is extremely large"; [`TeamRegistry::new`] optionally
+//! builds a direct-index map instead (`indexed_teamlist`, ablation A2).
+
+use super::gptr::TeamId;
+use super::translation::{FreeListAllocator, TranslationTable};
+use super::{DartErr, DartResult};
+use crate::mpisim::{Comm, Win};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Per-unit state of one team this unit belongs to.
+pub struct TeamEntry {
+    pub team_id: TeamId,
+    /// The communicator realizing the team (`teams[teamID]` in the paper).
+    pub comm: Comm,
+    /// The team's reserved collective global memory pool, already inside a
+    /// shared access epoch (`lock_all`, §IV-B5).
+    pub pool: Rc<Win>,
+    /// Allocator over the pool. Deterministic and driven only by
+    /// collective calls, so every member computes identical offsets —
+    /// that is what makes allocations *aligned* (§III).
+    pub alloc: FreeListAllocator,
+    /// offset → window translation table (§IV-B3).
+    pub table: TranslationTable,
+    /// Fast absolute-unit → team-rank translation (perf: avoids the
+    /// O(size) scan of `Comm::rank_of_world` on the hot path).
+    pub unit_map: HashMap<i32, usize>,
+    /// Per-team lock-init sequence number (collective calls keep this in
+    /// lock-step on every member; used for unique hand-off tags, §IV-B6).
+    pub lock_seq: i32,
+}
+
+impl TeamEntry {
+    pub fn new(team_id: TeamId, comm: Comm, pool: Rc<Win>, pool_size: u64) -> Self {
+        let unit_map =
+            comm.rank_table().iter().enumerate().map(|(r, &w)| (w as i32, r)).collect();
+        TeamEntry {
+            team_id,
+            comm,
+            pool,
+            alloc: FreeListAllocator::new(pool_size),
+            table: TranslationTable::new(),
+            unit_map,
+            lock_seq: 0,
+        }
+    }
+
+    /// Absolute unit id → team-relative rank (the §IV-B4 unit translation).
+    #[inline]
+    pub fn rank_of_unit(&self, unit: i32) -> Option<usize> {
+        self.unit_map.get(&unit).copied()
+    }
+}
+
+/// The unit-local team registry: `teamlist` (slot → id) plus the per-slot
+/// team state.
+pub struct TeamRegistry {
+    /// `teamlist[slot]` = team id, or -1 for a free slot (paper §IV-B2).
+    teamlist: Vec<TeamId>,
+    entries: Vec<Option<TeamEntry>>,
+    /// Ablation A2: direct-index map instead of the linear scan.
+    index: Option<HashMap<TeamId, usize>>,
+}
+
+impl TeamRegistry {
+    pub fn new(capacity: usize, indexed: bool) -> Self {
+        TeamRegistry {
+            teamlist: vec![-1; capacity],
+            entries: (0..capacity).map(|_| None).collect(),
+            index: indexed.then(HashMap::new),
+        }
+    }
+
+    /// Find the slot of a live team — the paper's linear `teamlist` scan
+    /// (or the indexed alternative).
+    #[inline]
+    pub fn slot_of(&self, team: TeamId) -> Option<usize> {
+        match &self.index {
+            Some(map) => map.get(&team).copied(),
+            None => self.teamlist.iter().position(|&t| t == team),
+        }
+    }
+
+    /// Shared access to a live team's entry.
+    #[inline]
+    pub fn get(&self, team: TeamId) -> DartResult<&TeamEntry> {
+        self.slot_of(team)
+            .and_then(|s| self.entries[s].as_ref())
+            .ok_or(DartErr::UnknownTeam(team))
+    }
+
+    /// Mutable access to a live team's entry.
+    #[inline]
+    pub fn get_mut(&mut self, team: TeamId) -> DartResult<&mut TeamEntry> {
+        let slot = self.slot_of(team).ok_or(DartErr::UnknownTeam(team))?;
+        self.entries[slot].as_mut().ok_or(DartErr::UnknownTeam(team))
+    }
+
+    /// Claim the first free slot for a new team (the paper's scan for
+    /// `teamlist[i] == -1`).
+    pub fn insert(&mut self, entry: TeamEntry) -> DartResult<usize> {
+        if self.slot_of(entry.team_id).is_some() {
+            return Err(DartErr::Invalid(format!("team {} already registered", entry.team_id)));
+        }
+        let slot = self
+            .teamlist
+            .iter()
+            .position(|&t| t == -1)
+            .ok_or(DartErr::TeamListFull(self.teamlist.len()))?;
+        self.teamlist[slot] = entry.team_id;
+        if let Some(map) = &mut self.index {
+            map.insert(entry.team_id, slot);
+        }
+        self.entries[slot] = Some(entry);
+        Ok(slot)
+    }
+
+    /// Release a team's slot (`teamlist[i] = -1`) and return its entry for
+    /// teardown. The id is *not* recycled — ids are never reused.
+    pub fn remove(&mut self, team: TeamId) -> DartResult<TeamEntry> {
+        let slot = self.slot_of(team).ok_or(DartErr::UnknownTeam(team))?;
+        self.teamlist[slot] = -1;
+        if let Some(map) = &mut self.index {
+            map.remove(&team);
+        }
+        self.entries[slot].take().ok_or(DartErr::UnknownTeam(team))
+    }
+
+    /// Ids of all live teams (ascending slot order).
+    pub fn live_teams(&self) -> Vec<TeamId> {
+        self.teamlist.iter().copied().filter(|&t| t != -1).collect()
+    }
+
+    /// Number of live teams.
+    pub fn len(&self) -> usize {
+        self.teamlist.iter().filter(|&&t| t != -1).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Property-test invariant: teamlist/index agree, entries match slots.
+    pub fn check_invariants(&self) -> bool {
+        for (slot, &t) in self.teamlist.iter().enumerate() {
+            if (t == -1) != self.entries[slot].is_none() {
+                return false;
+            }
+            if let Some(e) = &self.entries[slot] {
+                if e.team_id != t {
+                    return false;
+                }
+            }
+            if let Some(map) = &self.index {
+                if t != -1 && map.get(&t) != Some(&slot) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}

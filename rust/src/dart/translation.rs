@@ -1,0 +1,272 @@
+//! The per-team translation table (paper §IV-B3, Fig. 5).
+//!
+//! Every *collective* global memory allocation creates one MPI window over
+//! a range of the team's reserved pool; the table records `(pool offset →
+//! window)` so that dereferencing a collective global pointer — whose
+//! offset is relative to the **pool base**, not the allocation — can find
+//! the right window object and the window-relative displacement.
+
+use super::{DartErr, DartResult};
+use crate::mpisim::Win;
+use std::rc::Rc;
+
+/// One collective allocation: `[base, base+len)` of the team pool, exposed
+/// through `win`.
+pub struct TransEntry {
+    pub base: u64,
+    pub len: u64,
+    pub win: Rc<Win>,
+}
+
+/// Sorted-by-offset table of a team's collective allocations.
+#[derive(Default)]
+pub struct TranslationTable {
+    /// Invariant: sorted by `base`, non-overlapping.
+    entries: Vec<TransEntry>,
+}
+
+impl TranslationTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a new allocation. Keeps the table sorted.
+    pub fn add(&mut self, base: u64, len: u64, win: Rc<Win>) -> DartResult<()> {
+        let pos = self.entries.partition_point(|e| e.base < base);
+        // Overlap checks against neighbours.
+        if let Some(prev) = pos.checked_sub(1).and_then(|p| self.entries.get(p)) {
+            if prev.base + prev.len > base {
+                return Err(DartErr::Invalid(format!(
+                    "allocation at {base} overlaps previous [{}, {})",
+                    prev.base,
+                    prev.base + prev.len
+                )));
+            }
+        }
+        if let Some(next) = self.entries.get(pos) {
+            if base + len > next.base {
+                return Err(DartErr::Invalid(format!(
+                    "allocation at {base} overlaps next [{}, {})",
+                    next.base,
+                    next.base + next.len
+                )));
+            }
+        }
+        self.entries.insert(pos, TransEntry { base, len, win });
+        Ok(())
+    }
+
+    /// Dereference a pool-relative offset: the covering window and the
+    /// window-relative displacement. This is on the one-sided hot path.
+    #[inline]
+    pub fn lookup(&self, offset: u64) -> Option<(&Rc<Win>, u64)> {
+        let pos = self.entries.partition_point(|e| e.base <= offset);
+        let e = &self.entries[pos.checked_sub(1)?];
+        (offset < e.base + e.len).then(|| (&e.win, offset - e.base))
+    }
+
+    /// Remove the allocation starting exactly at `base`, returning its
+    /// window (for collective freeing).
+    pub fn remove(&mut self, base: u64) -> DartResult<TransEntry> {
+        match self.entries.binary_search_by_key(&base, |e| e.base) {
+            Ok(i) => Ok(self.entries.remove(i)),
+            Err(_) => Err(DartErr::InvalidGptr(format!("no collective allocation at offset {base}"))),
+        }
+    }
+
+    /// Number of live allocations.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate entries in offset order (team teardown frees in creation
+    /// order on every member, keeping the collective frees aligned).
+    pub fn entries(&self) -> &[TransEntry] {
+        &self.entries
+    }
+
+    /// Drain all entries in offset order.
+    pub fn drain(&mut self) -> Vec<TransEntry> {
+        std::mem::take(&mut self.entries)
+    }
+
+    /// Invariant check for property tests: sorted and non-overlapping.
+    pub fn check_invariants(&self) -> bool {
+        self.entries
+            .windows(2)
+            .all(|w| w[0].base + w[0].len <= w[1].base)
+    }
+}
+
+/// First-fit free-list allocator with 8-byte alignment — manages both the
+/// per-unit partition of the world window (non-collective allocations,
+/// Fig. 4) and each team's collective pool (Fig. 5).
+///
+/// Determinism matters for the collective pool: every team member runs the
+/// same alloc/free sequence (collective calls), so identical allocator
+/// states yield identical offsets — which is exactly what makes DART's
+/// *aligned* allocations line up without communication.
+pub struct FreeListAllocator {
+    size: u64,
+    /// Sorted, coalesced free extents `(base, len)`.
+    free: Vec<(u64, u64)>,
+    /// Live allocation sizes by base (so `free(base)` needs no length).
+    live: std::collections::HashMap<u64, u64>,
+}
+
+/// All DART allocations are 8-byte aligned.
+pub const DART_ALIGN: u64 = 8;
+
+impl FreeListAllocator {
+    pub fn new(size: u64) -> Self {
+        FreeListAllocator {
+            size,
+            free: if size > 0 { vec![(0, size)] } else { vec![] },
+            live: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Allocate `len` bytes (rounded up to [`DART_ALIGN`]); first fit.
+    pub fn alloc(&mut self, len: u64) -> DartResult<u64> {
+        if len == 0 {
+            return Err(DartErr::Invalid("zero-size allocation".into()));
+        }
+        let len = len.div_ceil(DART_ALIGN) * DART_ALIGN;
+        for i in 0..self.free.len() {
+            let (base, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (base + len, flen - len);
+                }
+                self.live.insert(base, len);
+                return Ok(base);
+            }
+        }
+        Err(DartErr::OutOfMemory { requested: len, pool: self.size })
+    }
+
+    /// Free the allocation starting at `base`, coalescing neighbours.
+    pub fn free(&mut self, base: u64) -> DartResult<()> {
+        let len = self
+            .live
+            .remove(&base)
+            .ok_or_else(|| DartErr::InvalidGptr(format!("free of unallocated offset {base}")))?;
+        let pos = self.free.partition_point(|&(b, _)| b < base);
+        self.free.insert(pos, (base, len));
+        // Coalesce with next, then previous.
+        if pos + 1 < self.free.len() && self.free[pos].0 + self.free[pos].1 == self.free[pos + 1].0
+        {
+            self.free[pos].1 += self.free[pos + 1].1;
+            self.free.remove(pos + 1);
+        }
+        if pos > 0 && self.free[pos - 1].0 + self.free[pos - 1].1 == self.free[pos].0 {
+            self.free[pos - 1].1 += self.free[pos].1;
+            self.free.remove(pos);
+        }
+        Ok(())
+    }
+
+    /// Size of the live allocation starting at `base` (rounded length).
+    pub fn size_of(&self, base: u64) -> Option<u64> {
+        self.live.get(&base).copied()
+    }
+
+    /// Total bytes currently allocated.
+    pub fn used(&self) -> u64 {
+        self.live.values().sum()
+    }
+
+    /// Pool capacity.
+    pub fn capacity(&self) -> u64 {
+        self.size
+    }
+
+    /// Property-test invariant: free list sorted, coalesced, disjoint from
+    /// live allocations, and free+live == capacity.
+    pub fn check_invariants(&self) -> bool {
+        let sorted_coalesced = self
+            .free
+            .windows(2)
+            .all(|w| w[0].0 + w[0].1 < w[1].0);
+        let total_free: u64 = self.free.iter().map(|&(_, l)| l).sum();
+        sorted_coalesced && total_free + self.used() == self.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_first_fit() {
+        let mut a = FreeListAllocator::new(1024);
+        let x = a.alloc(10).unwrap(); // rounds to 16
+        let y = a.alloc(8).unwrap();
+        assert_eq!(x, 0);
+        assert_eq!(y, 16);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn free_coalesces() {
+        let mut a = FreeListAllocator::new(256);
+        let x = a.alloc(64).unwrap();
+        let y = a.alloc(64).unwrap();
+        let z = a.alloc(64).unwrap();
+        a.free(y).unwrap();
+        assert!(a.check_invariants());
+        a.free(x).unwrap();
+        a.free(z).unwrap();
+        assert!(a.check_invariants());
+        // fully coalesced: a 256-byte alloc must fit again
+        assert_eq!(a.alloc(256).unwrap(), 0);
+    }
+
+    #[test]
+    fn oom_and_reuse() {
+        let mut a = FreeListAllocator::new(64);
+        let x = a.alloc(64).unwrap();
+        assert!(matches!(a.alloc(8), Err(DartErr::OutOfMemory { .. })));
+        a.free(x).unwrap();
+        assert!(a.alloc(8).is_ok());
+    }
+
+    #[test]
+    fn double_free_is_error() {
+        let mut a = FreeListAllocator::new(64);
+        let x = a.alloc(8).unwrap();
+        a.free(x).unwrap();
+        assert!(a.free(x).is_err());
+    }
+
+    #[test]
+    fn zero_alloc_is_error() {
+        let mut a = FreeListAllocator::new(64);
+        assert!(a.alloc(0).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_replicas() {
+        // Two allocators fed the same sequence produce the same offsets —
+        // the property aligned team allocations rely on.
+        let mut a = FreeListAllocator::new(4096);
+        let mut b = FreeListAllocator::new(4096);
+        let mut offs_a = vec![];
+        let mut offs_b = vec![];
+        for (i, len) in [100u64, 24, 8, 512, 64].iter().enumerate() {
+            offs_a.push(a.alloc(*len).unwrap());
+            offs_b.push(b.alloc(*len).unwrap());
+            if i == 2 {
+                a.free(offs_a[1]).unwrap();
+                b.free(offs_b[1]).unwrap();
+            }
+        }
+        assert_eq!(offs_a, offs_b);
+    }
+}

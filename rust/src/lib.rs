@@ -1,0 +1,50 @@
+//! # DART — a PGAS runtime system on an MPI-3 RMA substrate
+//!
+//! This crate is a from-scratch reproduction of **"DART-MPI: An MPI-based
+//! Implementation of a PGAS Runtime System"** (Zhou et al., PGAS'14).
+//!
+//! It is organised as the paper's system plus every substrate it depends on:
+//!
+//! - [`simnet`] — cluster topology (nodes × NUMA domains × cores) and a
+//!   calibrated network cost model standing in for the Cray XE6 "Hermit"
+//!   testbed and its Gemini interconnect.
+//! - [`mpisim`] — an MPI-3 subset implemented over OS threads and shared
+//!   memory: communicators, groups, two-sided p2p, RMA windows with
+//!   passive-target synchronization, request-based RMA, atomics and
+//!   collectives. This is the communication substrate DART is built on,
+//!   playing the role Cray MPICH played in the paper.
+//! - [`dart`] — the paper's contribution: the DART PGAS runtime API
+//!   (teams/groups, global memory with 128-bit global pointers, one-sided
+//!   blocking/non-blocking put/get, collectives, and MCS queue locks) mapped
+//!   onto MPI-3 RMA.
+//! - [`runtime`] — a PJRT/XLA executor that loads AOT-compiled JAX/Pallas
+//!   compute kernels (HLO text artifacts) so PGAS applications can run their
+//!   local compute step without Python on the request path.
+//! - [`apps`] — PGAS mini-applications (distributed stencil, SUMMA matmul)
+//!   used by the examples and the end-to-end tests.
+//! - [`bench_util`] — the measurement harness that regenerates the paper's
+//!   figures 8–15.
+//! - [`testing`] — a minimal property-based testing framework used by the
+//!   test suite.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+//!
+//! // SPMD launch: 4 units, each runs the closure with its own env.
+//! run(DartConfig::with_units(4), |env| {
+//!     let myid = env.myid();
+//!     let size = env.size();
+//!     assert_eq!(size, 4);
+//!     env.barrier(DART_TEAM_ALL).unwrap();
+//! }).unwrap();
+//! ```
+
+pub mod apps;
+pub mod bench_util;
+pub mod dart;
+pub mod mpisim;
+pub mod runtime;
+pub mod simnet;
+pub mod testing;

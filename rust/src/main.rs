@@ -1,0 +1,187 @@
+//! `dart` — the launcher/CLI of the DART-MPI reproduction.
+//!
+//! Subcommands (no external CLI crate is available offline, so parsing is
+//! by hand):
+//!
+//! ```text
+//! dart info                         show topology, artifacts, config
+//! dart selftest                     quick end-to-end sanity run
+//! dart stencil  [--units N] [--steps N] [--block 32|64] [--shmem]
+//! dart matmul   [--units N] [--shmem]
+//! dart bench    <fig8..fig15|all>   regenerate the paper's figures
+//! ```
+
+use dart::apps::{matmul, stencil};
+use dart::bench_util::figure::{run_figure, Figure};
+use dart::dart::{run, DartConfig};
+use dart::runtime::{artifacts_dir, Artifact, Engine};
+use dart::simnet::Topology;
+use std::sync::Mutex;
+
+fn parse_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn parse_opt(args: &[String], name: &str) -> Option<usize> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("DART-MPI reproduction — PGAS runtime on an MPI-3 RMA substrate");
+    let t = Topology::hermit(2);
+    println!("\nmodelled topology (per node, Cray XE6 'Hermit', paper Fig. 7):");
+    println!(
+        "  {} NUMA domains × {} cores = {} cores/node",
+        t.numa_per_node,
+        t.cores_per_numa,
+        t.cores_per_node()
+    );
+    let cost = dart::simnet::CostModel::hermit();
+    println!("\ncost model (calibrated, §V shapes):");
+    for (i, tier) in dart::simnet::Tier::ALL.iter().enumerate() {
+        println!(
+            "  {tier:<11} latency {:>6.0} ns   bandwidth {:>4.1} GB/s",
+            cost.tiers[i].latency_ns, cost.tiers[i].bytes_per_ns
+        );
+    }
+    println!(
+        "  eager E0→E1 switch at {} B (+{} ns, double copy)",
+        cost.eager_e0_limit, cost.e1_latency_ns
+    );
+    let dir = artifacts_dir();
+    println!("\nartifacts ({}):", dir.display());
+    match Artifact::discover(&dir) {
+        Ok(names) if !names.is_empty() => {
+            for n in names {
+                let a = Artifact::load(&dir, &n).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+                println!("  {n:<24} {} in / {} out", a.inputs.len(), a.outputs.len());
+            }
+        }
+        _ => println!("  (none — run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> anyhow::Result<()> {
+    print!("selftest: 4-unit PGAS roundtrip ... ");
+    run(DartConfig::with_units(4), |env| {
+        let g = env.team_memalloc_aligned(dart::dart::DART_TEAM_ALL, 64).unwrap();
+        let me = env.myid();
+        env.put_blocking(g.with_unit((me + 1) % 4), &[me as u8; 8]).unwrap();
+        env.barrier(dart::dart::DART_TEAM_ALL).unwrap();
+        let mut got = [0u8; 8];
+        env.get_blocking(g.with_unit(me), &mut got).unwrap();
+        assert_eq!(got, [((me + 3) % 4) as u8; 8]);
+        env.barrier(dart::dart::DART_TEAM_ALL).unwrap();
+        env.team_memfree(dart::dart::DART_TEAM_ALL, g).unwrap();
+    })
+    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("OK");
+    print!("selftest: PJRT artifact execution ... ");
+    let engine = Engine::new().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let exe = engine.load("stencil_f32_32x32").map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let outs =
+        exe.run_f32(&[&vec![1.0f32; 34 * 34]]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    assert!(outs[1][0].abs() < 1e-9);
+    println!("OK (platform: {})", engine.platform());
+    Ok(())
+}
+
+fn cmd_stencil(args: &[String]) -> anyhow::Result<()> {
+    let units = parse_opt(args, "--units").unwrap_or(4);
+    let steps = parse_opt(args, "--steps").unwrap_or(100);
+    let block = parse_opt(args, "--block").unwrap_or(64);
+    let cfg = match block {
+        32 => stencil::StencilConfig::block32(steps),
+        64 => stencil::StencilConfig::block64(steps),
+        other => anyhow::bail!("--block must be 32 or 64, got {other}"),
+    };
+    let dart_cfg = DartConfig::hermit(units, (units + 31) / 32)
+        .with_shmem_windows(parse_flag(args, "--shmem"));
+    println!("stencil: {units} units × {}×{} blocks, {steps} steps", cfg.local_rows, cfg.width);
+    let report = Mutex::new(None);
+    run(dart_cfg, |env| {
+        let engine = Engine::new().expect("PJRT engine");
+        let r = stencil::run_distributed(env, &engine, &cfg).expect("stencil");
+        if env.myid() == 0 {
+            *report.lock().unwrap() = Some(r);
+        }
+    })
+    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let r = report.into_inner().unwrap().unwrap();
+    println!(
+        "final residual {:.6e}, checksum {:.6}",
+        r.residuals.last().unwrap(),
+        r.global_checksum
+    );
+    Ok(())
+}
+
+fn cmd_matmul(args: &[String]) -> anyhow::Result<()> {
+    let units = parse_opt(args, "--units").unwrap_or(4);
+    let cfg = matmul::SummaConfig::block64();
+    let dart_cfg = DartConfig::hermit(units, (units + 31) / 32)
+        .with_shmem_windows(parse_flag(args, "--shmem"));
+    println!(
+        "matmul: C({m}×{n}) = A({m}×{k}) @ B({k}×{n}) on {units} units",
+        m = cfg.mb * units,
+        k = cfg.kb * units,
+        n = cfg.nb
+    );
+    let norm = Mutex::new(0f64);
+    run(dart_cfg, |env| {
+        let engine = Engine::new().expect("PJRT engine");
+        let r = matmul::run_distributed(env, &engine, &cfg).expect("summa");
+        if env.myid() == 0 {
+            *norm.lock().unwrap() = r.global_norm;
+        }
+    })
+    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("global ||C||_F = {:.6}", norm.into_inner().unwrap());
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let figs: Vec<(&str, Figure)> = vec![
+        ("fig8", Figure::DtctBlockingPut),
+        ("fig9", Figure::DtctBlockingGet),
+        ("fig10", Figure::DtitNonblockingPut),
+        ("fig11", Figure::DtitNonblockingGet),
+        ("fig12", Figure::BwBlockingPut),
+        ("fig13", Figure::BwBlockingGet),
+        ("fig14", Figure::BwNonblockingPut),
+        ("fig15", Figure::BwNonblockingGet),
+    ];
+    let mut ran = false;
+    for (name, fig) in figs {
+        if which == "all" || which == name {
+            run_figure(fig);
+            ran = true;
+        }
+    }
+    if !ran {
+        anyhow::bail!("unknown figure {which:?} (use fig8..fig15 or all)");
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("info") => cmd_info(),
+        Some("selftest") => cmd_selftest(),
+        Some("stencil") => cmd_stencil(&args[1..]),
+        Some("matmul") => cmd_matmul(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
+        _ => {
+            eprintln!("usage: dart <info|selftest|stencil|matmul|bench> [options]");
+            eprintln!("  info                      topology, cost model, artifacts");
+            eprintln!("  selftest                  quick end-to-end sanity check");
+            eprintln!("  stencil [--units N] [--steps N] [--block 32|64] [--shmem]");
+            eprintln!("  matmul  [--units N] [--shmem]");
+            eprintln!("  bench   <fig8..fig15|all>   (DART_BENCH_QUICK=1 for short sweeps)");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,457 @@
+//! Collective operations, implemented over the p2p layer with reserved
+//! (negative) tags — the same layering real MPI implementations use.
+//!
+//! All ranks of a communicator must call collectives in the same order
+//! (an MPI requirement); a per-communicator sequence number keeps each
+//! collective's traffic from matching any other's.
+//!
+//! Algorithms: dissemination barrier, binomial-tree bcast and reduce,
+//! linear (all)gather/scatter, pairwise alltoall, linear scan — chosen for
+//! clarity; the DART layer on top is oblivious to the algorithm.
+
+use super::comm::Comm;
+use super::datatype::{reduce_bytes, MpiOp, MpiType};
+use super::error::{MpiErr, MpiResult};
+use std::sync::atomic::Ordering;
+
+/// Tag-space partitioning: collectives use tags below this base, user p2p
+/// uses tags ≥ 0. Each collective call gets `COLL_BASE - seq*MAX_ROUNDS -
+/// round` so rounds never collide across calls.
+const COLL_BASE: i32 = -2;
+const MAX_ROUNDS: i32 = 64;
+
+impl Comm {
+    /// Fresh tag block for one collective invocation.
+    fn coll_tag(&self) -> i32 {
+        let seq = self.coll_seq.fetch_add(1, Ordering::Relaxed);
+        COLL_BASE - (seq as i64 % ((i32::MAX / MAX_ROUNDS) as i64)) as i32 * MAX_ROUNDS
+    }
+
+    /// `MPI_Barrier`: dissemination algorithm, ⌈log2(n)⌉ rounds.
+    pub fn barrier(&self) -> MpiResult<()> {
+        let n = self.size();
+        let me = self.rank();
+        let tag = self.coll_tag();
+        let mut round = 0;
+        let mut dist = 1;
+        while dist < n {
+            let dst = (me + dist) % n;
+            let src = (me + n - dist % n) % n;
+            self.send_internal(&[], dst, tag - round, true)?;
+            self.recv(&mut [], src, tag - round)?;
+            dist <<= 1;
+            round += 1;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Bcast`: binomial tree rooted at `root`; `buf` is input at the
+    /// root, output everywhere else.
+    pub fn bcast(&self, buf: &mut [u8], root: usize) -> MpiResult<()> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiErr::RankOutOfRange(root, n));
+        }
+        if n == 1 {
+            return Ok(());
+        }
+        let tag = self.coll_tag();
+        let vrank = (self.rank() + n - root) % n;
+
+        // Receive from parent (all non-root vranks).
+        if vrank != 0 {
+            // parent clears the lowest set bit of vrank
+            let parent_v = vrank & (vrank - 1);
+            let parent = (parent_v + root) % n;
+            self.recv(buf, parent, tag)?;
+        }
+        // Forward to children: set bits above my lowest set bit.
+        let lowest = if vrank == 0 { n.next_power_of_two() } else { vrank & vrank.wrapping_neg() };
+        let mut bit = 1;
+        while bit < lowest && bit < n {
+            let child_v = vrank | bit;
+            if child_v != vrank && child_v < n {
+                let child = (child_v + root) % n;
+                self.send_internal(buf, child, tag, true)?;
+            }
+            bit <<= 1;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Gather` with equal contribution sizes: every rank sends
+    /// `sendbuf`; at the root, `recvbuf` (length `size() * sendbuf.len()`)
+    /// is filled in rank order. Non-roots may pass an empty `recvbuf`.
+    pub fn gather(&self, sendbuf: &[u8], recvbuf: &mut [u8], root: usize) -> MpiResult<()> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiErr::RankOutOfRange(root, n));
+        }
+        let tag = self.coll_tag();
+        if self.rank() == root {
+            let chunk = sendbuf.len();
+            if recvbuf.len() != n * chunk {
+                return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: n * chunk });
+            }
+            recvbuf[root * chunk..(root + 1) * chunk].copy_from_slice(sendbuf);
+            for r in 0..n {
+                if r != root {
+                    self.recv(&mut recvbuf[r * chunk..(r + 1) * chunk], r, tag)?;
+                }
+            }
+        } else {
+            self.send_internal(sendbuf, root, tag, true)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Gatherv` with per-rank sizes discovered at the root: returns
+    /// the concatenated payloads (rank order) at the root, `None` elsewhere.
+    pub fn gatherv(&self, sendbuf: &[u8], root: usize) -> MpiResult<Option<Vec<Vec<u8>>>> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiErr::RankOutOfRange(root, n));
+        }
+        let tag = self.coll_tag();
+        if self.rank() == root {
+            let mut parts = vec![Vec::new(); n];
+            parts[root] = sendbuf.to_vec();
+            for r in 0..n {
+                if r != root {
+                    let (data, _) = self.recv_vec(r, tag)?;
+                    parts[r] = data;
+                }
+            }
+            Ok(Some(parts))
+        } else {
+            self.send_internal(sendbuf, root, tag, true)?;
+            Ok(None)
+        }
+    }
+
+    /// `MPI_Scatter` with equal chunk sizes: the root's `sendbuf` (length
+    /// `size() * chunk`) is split in rank order; every rank receives its
+    /// chunk into `recvbuf` (length `chunk`). Non-roots pass `&[]`.
+    pub fn scatter(&self, sendbuf: &[u8], recvbuf: &mut [u8], root: usize) -> MpiResult<()> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiErr::RankOutOfRange(root, n));
+        }
+        let tag = self.coll_tag();
+        let chunk = recvbuf.len();
+        if self.rank() == root {
+            if sendbuf.len() != n * chunk {
+                return Err(MpiErr::SizeMismatch { local: sendbuf.len(), remote: n * chunk });
+            }
+            for r in 0..n {
+                if r != root {
+                    self.send_internal(&sendbuf[r * chunk..(r + 1) * chunk], r, tag, true)?;
+                }
+            }
+            recvbuf.copy_from_slice(&sendbuf[root * chunk..(root + 1) * chunk]);
+            Ok(())
+        } else {
+            self.recv(recvbuf, root, tag)?;
+            Ok(())
+        }
+    }
+
+    /// `MPI_Allgather` (equal sizes): gather to rank 0, then bcast.
+    pub fn allgather(&self, sendbuf: &[u8], recvbuf: &mut [u8]) -> MpiResult<()> {
+        self.gather(sendbuf, recvbuf, 0)?;
+        self.bcast(recvbuf, 0)
+    }
+
+    /// `MPI_Reduce`: element-wise `(op, ty)` reduction into the root's
+    /// `recvbuf`. Binomial tree; reduction order is deterministic for a
+    /// given size (children fold into parents by increasing bit).
+    pub fn reduce(
+        &self,
+        sendbuf: &[u8],
+        recvbuf: &mut [u8],
+        op: MpiOp,
+        ty: MpiType,
+        root: usize,
+    ) -> MpiResult<()> {
+        let n = self.size();
+        if root >= n {
+            return Err(MpiErr::RankOutOfRange(root, n));
+        }
+        let tag = self.coll_tag();
+        let vrank = (self.rank() + n - root) % n;
+        let mut acc = sendbuf.to_vec();
+
+        // Fold in children (reverse binomial bcast tree).
+        let lowest = if vrank == 0 { n.next_power_of_two() } else { vrank & vrank.wrapping_neg() };
+        let mut bits = Vec::new();
+        let mut bit = 1;
+        while bit < lowest && bit < n {
+            if (vrank | bit) != vrank && (vrank | bit) < n {
+                bits.push(bit);
+            }
+            bit <<= 1;
+        }
+        // Children must be folded from the highest bit down so the
+        // reduction order mirrors the bcast tree's construction.
+        for &b in bits.iter().rev() {
+            let child_v = vrank | b;
+            let child = (child_v + root) % n;
+            let mut contrib = vec![0u8; acc.len()];
+            self.recv(&mut contrib, child, tag)?;
+            reduce_bytes(op, ty, &mut acc, &contrib)?;
+        }
+        if vrank != 0 {
+            let parent_v = vrank & (vrank - 1);
+            let parent = (parent_v + root) % n;
+            self.send_internal(&acc, parent, tag, true)?;
+        } else {
+            if recvbuf.len() != acc.len() {
+                return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: acc.len() });
+            }
+            recvbuf.copy_from_slice(&acc);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Allreduce`: reduce to rank 0, then bcast.
+    pub fn allreduce(
+        &self,
+        sendbuf: &[u8],
+        recvbuf: &mut [u8],
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<()> {
+        self.reduce(sendbuf, recvbuf, op, ty, 0)?;
+        self.bcast(recvbuf, 0)
+    }
+
+    /// `MPI_Alltoall` (equal chunk sizes): `sendbuf` holds one chunk per
+    /// destination in rank order; `recvbuf` receives one chunk per source.
+    pub fn alltoall(&self, sendbuf: &[u8], recvbuf: &mut [u8], chunk: usize) -> MpiResult<()> {
+        let n = self.size();
+        if sendbuf.len() != n * chunk || recvbuf.len() != n * chunk {
+            return Err(MpiErr::SizeMismatch { local: sendbuf.len(), remote: n * chunk });
+        }
+        let tag = self.coll_tag();
+        let me = self.rank();
+        // Eager sends buffer at the destination, so send-all then recv-all
+        // cannot deadlock.
+        for r in 0..n {
+            if r != me {
+                self.send_internal(&sendbuf[r * chunk..(r + 1) * chunk], r, tag, true)?;
+            }
+        }
+        recvbuf[me * chunk..(me + 1) * chunk]
+            .copy_from_slice(&sendbuf[me * chunk..(me + 1) * chunk]);
+        for r in 0..n {
+            if r != me {
+                self.recv(&mut recvbuf[r * chunk..(r + 1) * chunk], r, tag)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// `MPI_Scan` (inclusive): rank `i` receives the reduction of ranks
+    /// `0..=i`. Linear chain.
+    pub fn scan(&self, sendbuf: &[u8], recvbuf: &mut [u8], op: MpiOp, ty: MpiType) -> MpiResult<()> {
+        let me = self.rank();
+        let tag = self.coll_tag();
+        if recvbuf.len() != sendbuf.len() {
+            return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: sendbuf.len() });
+        }
+        recvbuf.copy_from_slice(sendbuf);
+        if me > 0 {
+            let mut prefix = vec![0u8; sendbuf.len()];
+            self.recv(&mut prefix, me - 1, tag)?;
+            // recvbuf := prefix (op) mine, preserving left-to-right order.
+            let mut acc = prefix;
+            reduce_bytes(op, ty, &mut acc, recvbuf)?;
+            recvbuf.copy_from_slice(&acc);
+        }
+        if me + 1 < self.size() {
+            self.send_internal(recvbuf, me + 1, tag, true)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::datatype::{as_bytes, as_bytes_mut};
+    use crate::mpisim::{World, WorldConfig};
+    use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+
+    #[test]
+    fn barrier_synchronizes() {
+        let phase = AtomicUsize::new(0);
+        World::run(WorldConfig::local(6), |mpi| {
+            let c = mpi.comm_world();
+            phase.fetch_add(1, AOrd::SeqCst);
+            c.barrier().unwrap();
+            // After the barrier every rank must observe all 6 arrivals.
+            assert_eq!(phase.load(AOrd::SeqCst), 6);
+        });
+    }
+
+    #[test]
+    fn bcast_all_roots_all_sizes() {
+        for n in [1usize, 2, 3, 5, 8] {
+            World::run(WorldConfig::local(n), |mpi| {
+                let c = mpi.comm_world();
+                for root in 0..n {
+                    let mut buf = if c.rank() == root { [0xAB, root as u8] } else { [0, 0] };
+                    c.bcast(&mut buf, root).unwrap();
+                    assert_eq!(buf, [0xAB, root as u8]);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn gather_in_rank_order() {
+        World::run(WorldConfig::local(5), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [c.rank() as u8; 3];
+            let mut all = vec![0u8; 15];
+            c.gather(&mine, if c.rank() == 2 { &mut all } else { &mut [] }, 2).unwrap();
+            if c.rank() == 2 {
+                for r in 0..5 {
+                    assert_eq!(&all[r * 3..(r + 1) * 3], &[r as u8; 3]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gatherv_variable_sizes() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let mine = vec![c.rank() as u8; c.rank() + 1];
+            let parts = c.gatherv(&mine, 0).unwrap();
+            if c.rank() == 0 {
+                let parts = parts.unwrap();
+                for (r, p) in parts.iter().enumerate() {
+                    assert_eq!(p, &vec![r as u8; r + 1]);
+                }
+            } else {
+                assert!(parts.is_none());
+            }
+        });
+    }
+
+    #[test]
+    fn scatter_distributes_chunks() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let send: Vec<u8> = if c.rank() == 1 { (0..8).collect() } else { vec![] };
+            let mut mine = [0u8; 2];
+            c.scatter(&send, &mut mine, 1).unwrap();
+            assert_eq!(mine, [2 * c.rank() as u8, 2 * c.rank() as u8 + 1]);
+        });
+    }
+
+    #[test]
+    fn allgather_everyone_sees_everything() {
+        World::run(WorldConfig::local(5), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [c.rank() as u32 * 10];
+            let mut all = [0u32; 5];
+            c.allgather(as_bytes(&mine), as_bytes_mut(&mut all)).unwrap();
+            assert_eq!(all, [0, 10, 20, 30, 40]);
+        });
+    }
+
+    #[test]
+    fn reduce_sum_every_root() {
+        World::run(WorldConfig::local(7), |mpi| {
+            let c = mpi.comm_world();
+            for root in 0..7 {
+                let mine = [c.rank() as i64, 1];
+                let mut out = [0i64; 2];
+                c.reduce(
+                    as_bytes(&mine),
+                    if c.rank() == root { as_bytes_mut(&mut out) } else { &mut [] },
+                    MpiOp::Sum,
+                    MpiType::I64,
+                    root,
+                )
+                .unwrap();
+                if c.rank() == root {
+                    assert_eq!(out, [21, 7]); // 0+..+6, 7×1
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn allreduce_max_f64() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [c.rank() as f64 * 1.5];
+            let mut out = [0f64];
+            c.allreduce(as_bytes(&mine), as_bytes_mut(&mut out), MpiOp::Max, MpiType::F64)
+                .unwrap();
+            assert_eq!(out[0], 4.5);
+        });
+    }
+
+    #[test]
+    fn alltoall_transpose() {
+        World::run(WorldConfig::local(3), |mpi| {
+            let c = mpi.comm_world();
+            let me = c.rank() as u8;
+            // send chunk j = [me, j]
+            let send: Vec<u8> = (0..3).flat_map(|j| [me, j as u8]).collect();
+            let mut recv = vec![0u8; 6];
+            c.alltoall(&send, &mut recv, 2).unwrap();
+            for src in 0..3 {
+                assert_eq!(&recv[src * 2..src * 2 + 2], &[src as u8, me]);
+            }
+        });
+    }
+
+    #[test]
+    fn scan_prefix_sums() {
+        World::run(WorldConfig::local(6), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [1i32, c.rank() as i32];
+            let mut out = [0i32; 2];
+            c.scan(as_bytes(&mine), as_bytes_mut(&mut out), MpiOp::Sum, MpiType::I32).unwrap();
+            let r = c.rank() as i32;
+            assert_eq!(out, [r + 1, r * (r + 1) / 2]);
+        });
+    }
+
+    #[test]
+    fn collectives_on_subcommunicator() {
+        World::run(WorldConfig::local(6), |mpi| {
+            let c = mpi.comm_world();
+            let sub = c.split(Some((mpi.world_rank() % 2) as i32), 0).unwrap().unwrap();
+            let mine = [sub.rank() as i32 + 1];
+            let mut out = [0i32];
+            sub.allreduce(as_bytes(&mine), as_bytes_mut(&mut out), MpiOp::Sum, MpiType::I32)
+                .unwrap();
+            assert_eq!(out[0], 6); // 1+2+3 in each half
+        });
+    }
+
+    #[test]
+    fn interleaved_collectives_and_p2p() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            // p2p traffic in flight across a barrier must not be consumed
+            // by the collective machinery.
+            if c.rank() == 0 {
+                c.send(b"user", 3, 11).unwrap();
+            }
+            c.barrier().unwrap();
+            let mut buf = [0u8; 5];
+            c.bcast(&mut buf, 1).unwrap();
+            if c.rank() == 3 {
+                let (m, _) = c.recv_vec(0, 11).unwrap();
+                assert_eq!(m, b"user");
+            }
+        });
+    }
+}

@@ -1,0 +1,326 @@
+//! Communicators: a group of ranks plus an isolated communication context.
+//!
+//! Like MPI, every communicator owns a *context id* so that traffic on one
+//! communicator can never match receives on another, even between the same
+//! pair of ranks with the same tag. New contexts are agreed collectively
+//! (rank 0 of the parent allocates, then broadcasts over the parent), which
+//! is also how real MPI implementations do it.
+
+use super::error::{MpiErr, MpiResult};
+use super::group::Group;
+use super::WorldState;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// A communicator handle. Cheap to clone; clones share the collective
+/// sequence counter (they are the *same* communicator).
+#[derive(Clone)]
+pub struct Comm {
+    world: Arc<WorldState>,
+    my_world: usize,
+    ctx: u32,
+    /// Communicator rank → world rank.
+    ranks: Arc<Vec<usize>>,
+    /// This rank's index within the communicator.
+    my_rank: usize,
+    /// Per-communicator collective sequence number. All ranks call
+    /// collectives in the same order (an MPI requirement), so local
+    /// counters stay in lock-step and serve as collective-unique tags.
+    pub(crate) coll_seq: Arc<AtomicU32>,
+}
+
+impl Comm {
+    /// `MPI_COMM_WORLD` for this rank.
+    pub(crate) fn new_world(world: Arc<WorldState>, my_world: usize) -> Comm {
+        let n = world.nranks;
+        Comm {
+            world,
+            my_world,
+            ctx: 0,
+            ranks: Arc::new((0..n).collect()),
+            my_rank: my_world,
+            coll_seq: Arc::new(AtomicU32::new(0)),
+        }
+    }
+
+    /// My rank within this communicator (`MPI_Comm_rank`).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.my_rank
+    }
+
+    /// Number of ranks in this communicator (`MPI_Comm_size`).
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// My world rank.
+    #[inline]
+    pub fn my_world(&self) -> usize {
+        self.my_world
+    }
+
+    /// The context id (test/debug aid).
+    #[inline]
+    pub fn context(&self) -> u32 {
+        self.ctx
+    }
+
+    /// Shared world state.
+    #[inline]
+    pub(crate) fn world(&self) -> &Arc<WorldState> {
+        &self.world
+    }
+
+    /// Translate a communicator rank to a world rank.
+    #[inline]
+    pub fn world_rank_of(&self, comm_rank: usize) -> MpiResult<usize> {
+        self.ranks
+            .get(comm_rank)
+            .copied()
+            .ok_or(MpiErr::RankOutOfRange(comm_rank, self.ranks.len()))
+    }
+
+    /// Translate a world rank to a communicator rank, if the process is a
+    /// member.
+    #[inline]
+    pub fn rank_of_world(&self, world_rank: usize) -> Option<usize> {
+        // Fast path: on MPI_COMM_WORLD the mapping is the identity.
+        if self.ctx == 0 {
+            return (world_rank < self.ranks.len()).then_some(world_rank);
+        }
+        self.ranks.iter().position(|&w| w == world_rank)
+    }
+
+    /// The communicator's group (`MPI_Comm_group`).
+    pub fn group(&self) -> Group {
+        Group::new(self.ranks.as_ref().clone())
+    }
+
+    /// Full comm-rank → world-rank table.
+    pub fn rank_table(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Allocate a fresh context id, agreed by all members: rank 0 draws
+    /// from the world counter and broadcasts it over `self`.
+    fn agree_context(&self) -> MpiResult<u32> {
+        let mut ctx = if self.rank() == 0 {
+            self.world.next_context_id.fetch_add(1, Ordering::SeqCst)
+        } else {
+            0
+        };
+        let mut buf = ctx.to_ne_bytes();
+        self.bcast(&mut buf, 0)?;
+        ctx = u32::from_ne_bytes(buf);
+        Ok(ctx)
+    }
+
+    /// `MPI_Comm_dup`: same group, fresh context. Collective.
+    pub fn dup(&self) -> MpiResult<Comm> {
+        let ctx = self.agree_context()?;
+        Ok(Comm {
+            world: self.world.clone(),
+            my_world: self.my_world,
+            ctx,
+            ranks: self.ranks.clone(),
+            my_rank: self.my_rank,
+            coll_seq: Arc::new(AtomicU32::new(0)),
+        })
+    }
+
+    /// `MPI_Comm_create(parent, group)`: collective over the parent; the
+    /// members of `group` (given as world ranks, in group order) get the
+    /// new communicator, everyone else gets `None` (`MPI_COMM_NULL`).
+    pub fn create_from_group(&self, group: &Group) -> MpiResult<Option<Comm>> {
+        for &w in group.members() {
+            if self.rank_of_world(w).is_none() {
+                return Err(MpiErr::Invalid(format!(
+                    "group member (world rank {w}) is not in the parent communicator"
+                )));
+            }
+        }
+        let ctx = self.agree_context()?;
+        match group.rank_of(self.my_world) {
+            None => Ok(None),
+            Some(my_rank) => Ok(Some(Comm {
+                world: self.world.clone(),
+                my_world: self.my_world,
+                ctx,
+                ranks: Arc::new(group.members().to_vec()),
+                my_rank,
+                coll_seq: Arc::new(AtomicU32::new(0)),
+            })),
+        }
+    }
+
+    /// `MPI_Comm_split(color, key)`: collective. Ranks with the same
+    /// `color` form a new communicator, ordered by `(key, parent rank)`.
+    /// `color = None` (MPI_UNDEFINED) yields `None`.
+    pub fn split(&self, color: Option<i32>, key: i32) -> MpiResult<Option<Comm>> {
+        // Gather (color?, key, world_rank) triples everywhere (allgather).
+        let mine = [
+            color.map_or(i64::MIN, |c| c as i64),
+            key as i64,
+            self.my_world as i64,
+        ];
+        let mut all = vec![0i64; 3 * self.size()];
+        self.allgather(super::datatype::as_bytes(&mine), super::datatype::as_bytes_mut(&mut all))?;
+        let ctx_base = self.agree_context_block()?;
+
+        let my_color = match color {
+            None => return Ok(None),
+            Some(c) => c as i64,
+        };
+        // Deterministic color ordering: distinct colors sorted ascending,
+        // each gets ctx_base + its index.
+        let mut colors: Vec<i64> =
+            all.chunks_exact(3).map(|t| t[0]).filter(|&c| c != i64::MIN).collect();
+        colors.sort_unstable();
+        colors.dedup();
+        let color_idx = colors.binary_search(&my_color).unwrap();
+        let ctx = ctx_base + color_idx as u32;
+
+        let mut members: Vec<(i64, usize, usize)> = all
+            .chunks_exact(3)
+            .enumerate()
+            .filter(|(_, t)| t[0] == my_color)
+            .map(|(parent_rank, t)| (t[1], parent_rank, t[2] as usize))
+            .collect();
+        members.sort_unstable_by_key(|&(key, parent_rank, _)| (key, parent_rank));
+        let ranks: Vec<usize> = members.iter().map(|&(_, _, w)| w).collect();
+        let my_rank = ranks.iter().position(|&w| w == self.my_world).unwrap();
+        Ok(Some(Comm {
+            world: self.world.clone(),
+            my_world: self.my_world,
+            ctx,
+            ranks: Arc::new(ranks),
+            my_rank,
+            coll_seq: Arc::new(AtomicU32::new(0)),
+        }))
+    }
+
+    /// Allocate a *block* of context ids (one per split color): rank 0
+    /// reserves a generous block, broadcasts the base.
+    fn agree_context_block(&self) -> MpiResult<u32> {
+        let mut base = if self.rank() == 0 {
+            self.world.next_context_id.fetch_add(self.size() as u32, Ordering::SeqCst)
+        } else {
+            0
+        };
+        let mut buf = base.to_ne_bytes();
+        self.bcast(&mut buf, 0)?;
+        base = u32::from_ne_bytes(buf);
+        Ok(base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::{World, WorldConfig};
+
+    #[test]
+    fn world_comm_identity() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            assert_eq!(c.size(), 4);
+            assert_eq!(c.rank(), mpi.world_rank());
+            assert_eq!(c.world_rank_of(2).unwrap(), 2);
+            assert_eq!(c.rank_of_world(3), Some(3));
+        });
+    }
+
+    #[test]
+    fn dup_isolates_context() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let d = c.dup().unwrap();
+            assert_ne!(c.context(), d.context());
+            // A message on d must not match a recv on c.
+            if c.rank() == 0 {
+                d.send(b"on-dup", 1, 0).unwrap();
+                c.send(b"on-world", 1, 0).unwrap();
+            } else {
+                let (m, _) = c.recv_vec(0, 0).unwrap();
+                assert_eq!(m, b"on-world");
+                let (m, _) = d.recv_vec(0, 0).unwrap();
+                assert_eq!(m, b"on-dup");
+            }
+        });
+    }
+
+    #[test]
+    fn create_from_group_orders_by_group() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            // group in non-sorted order: world ranks [3, 1]
+            let g = Group::new(vec![3, 1]);
+            let sub = c.create_from_group(&g).unwrap();
+            match mpi.world_rank() {
+                3 => assert_eq!(sub.unwrap().rank(), 0),
+                1 => assert_eq!(sub.unwrap().rank(), 1),
+                _ => assert!(sub.is_none()),
+            }
+        });
+    }
+
+    #[test]
+    fn split_by_parity() {
+        World::run(WorldConfig::local(5), |mpi| {
+            let c = mpi.comm_world();
+            let color = (mpi.world_rank() % 2) as i32;
+            let sub = c.split(Some(color), mpi.world_rank() as i32).unwrap().unwrap();
+            let expected_size = if color == 0 { 3 } else { 2 };
+            assert_eq!(sub.size(), expected_size);
+            assert_eq!(sub.world_rank_of(sub.rank()).unwrap(), mpi.world_rank());
+            // key ordering = world rank ordering here
+            let table = sub.rank_table().to_vec();
+            let mut sorted = table.clone();
+            sorted.sort_unstable();
+            assert_eq!(table, sorted);
+        });
+    }
+
+    #[test]
+    fn split_undefined_color() {
+        World::run(WorldConfig::local(3), |mpi| {
+            let c = mpi.comm_world();
+            let color = if mpi.world_rank() == 0 { None } else { Some(1) };
+            let sub = c.split(color, 0).unwrap();
+            if mpi.world_rank() == 0 {
+                assert!(sub.is_none());
+            } else {
+                assert_eq!(sub.unwrap().size(), 2);
+            }
+        });
+    }
+
+    #[test]
+    fn split_reverse_key_reverses_order() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let key = -(mpi.world_rank() as i32);
+            let sub = c.split(Some(0), key).unwrap().unwrap();
+            assert_eq!(sub.rank(), 3 - mpi.world_rank());
+        });
+    }
+
+    #[test]
+    fn nested_subcommunicators() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let g = Group::new(vec![0, 1, 2]);
+            if let Some(sub) = c.create_from_group(&g).unwrap() {
+                let g2 = Group::new(vec![2, 0]);
+                let subsub = sub.create_from_group(&g2).unwrap();
+                match mpi.world_rank() {
+                    2 => assert_eq!(subsub.unwrap().rank(), 0),
+                    0 => assert_eq!(subsub.unwrap().rank(), 1),
+                    _ => assert!(subsub.is_none()),
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,281 @@
+//! Typed views over byte buffers plus the MPI reduction-op machinery.
+//!
+//! The substrate moves raw bytes (like real MPI's `void*` + datatype); this
+//! module provides the safe typed casts used at the API boundary and the
+//! `(op, datatype)` dispatch used by `MPI_Accumulate`, `MPI_Reduce` and the
+//! atomics (`fetch_and_op`, `compare_and_swap`).
+
+use super::error::{MpiErr, MpiResult};
+
+/// Marker trait for plain-old-data element types that can cross the
+/// substrate as raw bytes.
+///
+/// # Safety
+/// Implementors must be `Copy`, have no padding with illegal values and be
+/// valid for any bit pattern (all primitive numeric types qualify).
+pub unsafe trait Pod: Copy + Send + Sync + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for usize {}
+unsafe impl Pod for isize {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// Reinterpret a typed slice as bytes.
+pub fn as_bytes<T: Pod>(s: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+/// Reinterpret a typed mutable slice as bytes.
+pub fn as_bytes_mut<T: Pod>(s: &mut [T]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, std::mem::size_of_val(s)) }
+}
+
+/// The element datatypes understood by the reduction machinery
+/// (a subset of MPI's predefined datatypes, enough for DART).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MpiType {
+    U8,
+    I16,
+    I32,
+    U32,
+    I64,
+    U64,
+    F32,
+    F64,
+}
+
+impl MpiType {
+    /// Size of one element in bytes.
+    pub fn size(&self) -> usize {
+        match self {
+            MpiType::U8 => 1,
+            MpiType::I16 => 2,
+            MpiType::I32 | MpiType::U32 | MpiType::F32 => 4,
+            MpiType::I64 | MpiType::U64 | MpiType::F64 => 8,
+        }
+    }
+}
+
+/// Trait connecting Rust element types to their [`MpiType`] tag.
+pub trait HasMpiType: Pod {
+    const MPI_TYPE: MpiType;
+}
+
+impl HasMpiType for u8 {
+    const MPI_TYPE: MpiType = MpiType::U8;
+}
+impl HasMpiType for i16 {
+    const MPI_TYPE: MpiType = MpiType::I16;
+}
+impl HasMpiType for i32 {
+    const MPI_TYPE: MpiType = MpiType::I32;
+}
+impl HasMpiType for u32 {
+    const MPI_TYPE: MpiType = MpiType::U32;
+}
+impl HasMpiType for i64 {
+    const MPI_TYPE: MpiType = MpiType::I64;
+}
+impl HasMpiType for u64 {
+    const MPI_TYPE: MpiType = MpiType::U64;
+}
+impl HasMpiType for f32 {
+    const MPI_TYPE: MpiType = MpiType::F32;
+}
+impl HasMpiType for f64 {
+    const MPI_TYPE: MpiType = MpiType::F64;
+}
+
+/// Predefined reduction / accumulate operations (MPI_SUM, MPI_REPLACE, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MpiOp {
+    Sum,
+    Prod,
+    Min,
+    Max,
+    /// Bitwise AND (integer types only).
+    Band,
+    /// Bitwise OR (integer types only).
+    Bor,
+    /// Bitwise XOR (integer types only).
+    Bxor,
+    /// `MPI_REPLACE` — target := origin (used by `fetch_and_op` to get
+    /// atomic swap semantics, as the paper's MCS lock does).
+    Replace,
+    /// `MPI_NO_OP` — target unchanged (used by `fetch_and_op` to get an
+    /// atomic read).
+    NoOp,
+}
+
+macro_rules! arith_case {
+    ($op:expr, $t:ty, $acc:expr, $src:expr) => {{
+        let n = std::mem::size_of::<$t>();
+        debug_assert_eq!($acc.len() % n, 0);
+        for (a, s) in $acc.chunks_exact_mut(n).zip($src.chunks_exact(n)) {
+            let mut av = <$t>::from_ne_bytes(a.try_into().unwrap());
+            let sv = <$t>::from_ne_bytes(s.try_into().unwrap());
+            av = apply_scalar::<$t>($op, av, sv);
+            a.copy_from_slice(&av.to_ne_bytes());
+        }
+    }};
+}
+
+trait Scalar: Copy + PartialOrd {
+    fn add(a: Self, b: Self) -> Self;
+    fn mul(a: Self, b: Self) -> Self;
+    fn band(a: Self, b: Self) -> Self;
+    fn bor(a: Self, b: Self) -> Self;
+    fn bxor(a: Self, b: Self) -> Self;
+}
+
+macro_rules! scalar_int {
+    ($($t:ty),*) => {$(
+        impl Scalar for $t {
+            fn add(a: Self, b: Self) -> Self { a.wrapping_add(b) }
+            fn mul(a: Self, b: Self) -> Self { a.wrapping_mul(b) }
+            fn band(a: Self, b: Self) -> Self { a & b }
+            fn bor(a: Self, b: Self) -> Self { a | b }
+            fn bxor(a: Self, b: Self) -> Self { a ^ b }
+        }
+    )*};
+}
+scalar_int!(u8, i16, i32, u32, i64, u64);
+
+macro_rules! scalar_float {
+    ($($t:ty),*) => {$(
+        impl Scalar for $t {
+            fn add(a: Self, b: Self) -> Self { a + b }
+            fn mul(a: Self, b: Self) -> Self { a * b }
+            fn band(_: Self, _: Self) -> Self { panic!("bitwise op on float") }
+            fn bor(_: Self, _: Self) -> Self { panic!("bitwise op on float") }
+            fn bxor(_: Self, _: Self) -> Self { panic!("bitwise op on float") }
+        }
+    )*};
+}
+scalar_float!(f32, f64);
+
+fn apply_scalar<T: Scalar>(op: MpiOp, acc: T, src: T) -> T {
+    match op {
+        MpiOp::Sum => T::add(acc, src),
+        MpiOp::Prod => T::mul(acc, src),
+        MpiOp::Min => {
+            if src < acc {
+                src
+            } else {
+                acc
+            }
+        }
+        MpiOp::Max => {
+            if src > acc {
+                src
+            } else {
+                acc
+            }
+        }
+        MpiOp::Band => T::band(acc, src),
+        MpiOp::Bor => T::bor(acc, src),
+        MpiOp::Bxor => T::bxor(acc, src),
+        MpiOp::Replace => src,
+        MpiOp::NoOp => acc,
+    }
+}
+
+/// Element-wise `acc := acc (op) src` over byte buffers interpreted as
+/// `ty`-typed arrays. Both buffers must be a multiple of the element size
+/// and equal length.
+pub fn reduce_bytes(op: MpiOp, ty: MpiType, acc: &mut [u8], src: &[u8]) -> MpiResult<()> {
+    if acc.len() != src.len() {
+        return Err(MpiErr::SizeMismatch { local: src.len(), remote: acc.len() });
+    }
+    if acc.len() % ty.size() != 0 {
+        return Err(MpiErr::TypeMismatch { type_size: ty.size(), buf: acc.len() });
+    }
+    match ty {
+        MpiType::U8 => arith_case!(op, u8, acc, src),
+        MpiType::I16 => arith_case!(op, i16, acc, src),
+        MpiType::I32 => arith_case!(op, i32, acc, src),
+        MpiType::U32 => arith_case!(op, u32, acc, src),
+        MpiType::I64 => arith_case!(op, i64, acc, src),
+        MpiType::U64 => arith_case!(op, u64, acc, src),
+        MpiType::F32 => arith_case!(op, f32, acc, src),
+        MpiType::F64 => arith_case!(op, f64, acc, src),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let v = [1i32, -2, 3];
+        let b = as_bytes(&v);
+        assert_eq!(b.len(), 12);
+        let mut w = [0i32; 3];
+        as_bytes_mut(&mut w).copy_from_slice(b);
+        assert_eq!(v, w);
+    }
+
+    #[test]
+    fn reduce_sum_i32() {
+        let mut acc = [1i32, 2, 3];
+        let src = [10i32, 20, 30];
+        reduce_bytes(MpiOp::Sum, MpiType::I32, as_bytes_mut(&mut acc), as_bytes(&src)).unwrap();
+        assert_eq!(acc, [11, 22, 33]);
+    }
+
+    #[test]
+    fn reduce_minmax_f64() {
+        let mut acc = [1.5f64, 9.0];
+        let src = [2.5f64, 3.0];
+        reduce_bytes(MpiOp::Max, MpiType::F64, as_bytes_mut(&mut acc), as_bytes(&src)).unwrap();
+        assert_eq!(acc, [2.5, 9.0]);
+        reduce_bytes(MpiOp::Min, MpiType::F64, as_bytes_mut(&mut acc), as_bytes(&[0.5f64, 4.0]))
+            .unwrap();
+        assert_eq!(acc, [0.5, 4.0]);
+    }
+
+    #[test]
+    fn reduce_replace_and_noop() {
+        let mut acc = [7u64];
+        reduce_bytes(MpiOp::Replace, MpiType::U64, as_bytes_mut(&mut acc), as_bytes(&[42u64]))
+            .unwrap();
+        assert_eq!(acc, [42]);
+        reduce_bytes(MpiOp::NoOp, MpiType::U64, as_bytes_mut(&mut acc), as_bytes(&[0u64]))
+            .unwrap();
+        assert_eq!(acc, [42]);
+    }
+
+    #[test]
+    fn reduce_bitwise_i64() {
+        let mut acc = [0b1100i64];
+        reduce_bytes(MpiOp::Bxor, MpiType::I64, as_bytes_mut(&mut acc), as_bytes(&[0b1010i64]))
+            .unwrap();
+        assert_eq!(acc, [0b0110]);
+    }
+
+    #[test]
+    fn reduce_size_mismatch_is_error() {
+        let mut acc = [0u8; 4];
+        assert!(matches!(
+            reduce_bytes(MpiOp::Sum, MpiType::I32, &mut acc, &[0u8; 8]),
+            Err(MpiErr::SizeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn reduce_wrapping_sum_u8() {
+        let mut acc = [250u8];
+        reduce_bytes(MpiOp::Sum, MpiType::U8, &mut acc, &[10u8]).unwrap();
+        assert_eq!(acc, [4]); // wraps, does not panic
+    }
+}

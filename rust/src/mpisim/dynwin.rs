@@ -1,0 +1,305 @@
+//! Dynamic windows — `MPI_Win_create_dynamic` + `MPI_Win_attach`/`detach`
+//! (paper §II: "a dynamic version which exposes no memory but allows the
+//! user to register remotely accessible memory locally and dynamically at
+//! each process").
+//!
+//! A dynamic window starts empty; each rank attaches regions at any time
+//! and publishes the returned *address token* to peers out of band (in
+//! real MPI the virtual address is shipped; here the token plays that
+//! role). RMA targets `(rank, token + offset)`.
+
+use super::comm::Comm;
+use super::error::{MpiErr, MpiResult};
+use super::window::LockKind;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// One attached region.
+struct Region {
+    mem: Box<[u8]>,
+}
+
+/// Per-rank attach table: token base → region (sorted for range lookup).
+#[derive(Default)]
+struct RankRegions {
+    regions: BTreeMap<u64, Region>,
+}
+
+impl RankRegions {
+    /// Resolve `(addr, len)` to a raw pointer inside one attached region.
+    fn resolve(&self, addr: u64, len: usize) -> Option<*mut u8> {
+        let (&base, region) = self.regions.range(..=addr).next_back()?;
+        let off = addr - base;
+        if off as usize + len <= region.mem.len() {
+            // Box contents are heap-stable; many threads may target this
+            // region concurrently under RMA semantics.
+            Some(unsafe { (region.mem.as_ptr() as *mut u8).add(off as usize) })
+        } else {
+            None
+        }
+    }
+}
+
+struct DynState {
+    /// Indexed by comm rank.
+    ranks: Vec<RwLock<RankRegions>>,
+    /// Address-token dispenser (region bases never collide, any rank).
+    next_addr: AtomicU64,
+    /// Simple passive-target lock per rank (shared only — what DART-style
+    /// consumers use).
+    epoch: Vec<(Mutex<usize>, Condvar)>,
+}
+
+/// A dynamic RMA window handle (rank-local).
+pub struct DynWin {
+    state: Arc<DynState>,
+    comm: Comm,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl DynWin {
+    /// `MPI_Win_create_dynamic`: collective; exposes no memory yet.
+    pub fn create(comm: &Comm) -> MpiResult<DynWin> {
+        let n = comm.size();
+        // Rendezvous: rank 0 builds the shared state, parks it in a
+        // process-global side table under a globally unique key, and
+        // broadcasts the key; everyone clones the Arc, then rank 0 cleans
+        // the table entry up.
+        static NEXT_KEY: AtomicU64 = AtomicU64::new(1);
+        let mut key = 0u64;
+        if comm.rank() == 0 {
+            key = NEXT_KEY.fetch_add(1, Ordering::SeqCst);
+            let st = Arc::new(DynState {
+                ranks: (0..n).map(|_| RwLock::new(RankRegions::default())).collect(),
+                next_addr: AtomicU64::new(1 << 20),
+                epoch: (0..n).map(|_| (Mutex::new(0), Condvar::new())).collect(),
+            });
+            dyn_side_table().lock().unwrap().insert(key, st);
+        }
+        let mut kb = key.to_ne_bytes();
+        comm.bcast(&mut kb, 0)?;
+        key = u64::from_ne_bytes(kb);
+        let state = dyn_side_table()
+            .lock()
+            .unwrap()
+            .get(&key)
+            .cloned()
+            .ok_or(MpiErr::UnknownWindow(key))?;
+        comm.barrier()?;
+        if comm.rank() == 0 {
+            dyn_side_table().lock().unwrap().remove(&key);
+        }
+        Ok(DynWin { state, comm: comm.clone(), _not_send: std::marker::PhantomData })
+    }
+
+    /// `MPI_Win_attach`: expose `size` fresh zeroed bytes; returns the
+    /// address token peers use to target this region.
+    pub fn attach(&self, size: usize) -> MpiResult<u64> {
+        if size == 0 {
+            return Err(MpiErr::Invalid("attach of empty region".into()));
+        }
+        let base = self
+            .state
+            .next_addr
+            .fetch_add(size.next_power_of_two() as u64 + 64, Ordering::SeqCst);
+        let mem = vec![0u8; size].into_boxed_slice();
+        self.state.ranks[self.comm.rank()]
+            .write()
+            .unwrap()
+            .regions
+            .insert(base, Region { mem });
+        Ok(base)
+    }
+
+    /// `MPI_Win_detach`: withdraw a region (by its attach token).
+    pub fn detach(&self, addr: u64) -> MpiResult<()> {
+        let removed =
+            self.state.ranks[self.comm.rank()].write().unwrap().regions.remove(&addr);
+        match removed {
+            Some(_) => Ok(()),
+            None => Err(MpiErr::Invalid(format!("detach of unattached address {addr}"))),
+        }
+    }
+
+    /// `MPI_Win_lock(SHARED, target)` for the dynamic window.
+    pub fn lock_shared(&self, target: usize) -> MpiResult<()> {
+        let (m, _cv) = self
+            .state
+            .epoch
+            .get(target)
+            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?;
+        *m.lock().unwrap() += 1;
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock`.
+    pub fn unlock(&self, target: usize) -> MpiResult<()> {
+        let (m, cv) = self
+            .state
+            .epoch
+            .get(target)
+            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?;
+        let mut g = m.lock().unwrap();
+        if *g == 0 {
+            return Err(MpiErr::NoMatchingLock { win: 0, target });
+        }
+        *g -= 1;
+        cv.notify_all();
+        Ok(())
+    }
+
+    /// `MPI_Put` on an attached region (blocking through flush like the
+    /// static window's put+flush; dynamic windows are not on DART's hot
+    /// path, so the simpler completion model is fine).
+    pub fn put(&self, origin: &[u8], target: usize, addr: u64) -> MpiResult<()> {
+        let regions = self
+            .state
+            .ranks
+            .get(target)
+            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?
+            .read()
+            .unwrap();
+        let dst = regions.resolve(addr, origin.len()).ok_or(MpiErr::DispOutOfRange {
+            disp: addr as usize,
+            len: origin.len(),
+            size: 0,
+        })?;
+        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
+        drop(regions);
+        let src_w = self.comm.my_world();
+        let dst_w = self.comm.world_rank_of(target)?;
+        let at = self.comm.world().book_transfer(src_w, dst_w, origin.len());
+        self.comm.world().wait_until(at);
+        Ok(())
+    }
+
+    /// `MPI_Get` on an attached region.
+    pub fn get(&self, dest: &mut [u8], target: usize, addr: u64) -> MpiResult<()> {
+        let regions = self
+            .state
+            .ranks
+            .get(target)
+            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?
+            .read()
+            .unwrap();
+        let src = regions.resolve(addr, dest.len()).ok_or(MpiErr::DispOutOfRange {
+            disp: addr as usize,
+            len: dest.len(),
+            size: 0,
+        })?;
+        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
+        drop(regions);
+        let src_w = self.comm.my_world();
+        let dst_w = self.comm.world_rank_of(target)?;
+        let at = self.comm.world().book_transfer(dst_w, src_w, dest.len());
+        self.comm.world().wait_until(at);
+        Ok(())
+    }
+
+    /// Kind marker (diagnostics; mirrors `MPI_WIN_FLAVOR_DYNAMIC`).
+    pub fn lock_kind_supported(&self) -> LockKind {
+        LockKind::Shared
+    }
+}
+
+/// Process-global side table used only during `DynWin::create` rendezvous.
+fn dyn_side_table() -> &'static Mutex<std::collections::HashMap<u64, Arc<DynState>>> {
+    use once_cell::sync::OnceCell;
+    static TABLE: OnceCell<Mutex<std::collections::HashMap<u64, Arc<DynState>>>> = OnceCell::new();
+    TABLE.get_or_init(|| Mutex::new(std::collections::HashMap::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::{World, WorldConfig, ANY_SOURCE};
+
+    #[test]
+    fn attach_put_get_detach() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            // Rank 1 attaches and publishes the token.
+            if c.rank() == 1 {
+                let addr = win.attach(64).unwrap();
+                c.send(&addr.to_ne_bytes(), 0, 1).unwrap();
+                c.barrier().unwrap();
+                let mut got = [0u8; 5];
+                win.get(&mut got, 1, addr).unwrap();
+                assert_eq!(&got, b"hello");
+                win.detach(addr).unwrap();
+            } else {
+                let (bytes, _) = c.recv_vec(1, 1).unwrap();
+                let addr = u64::from_ne_bytes(bytes.try_into().unwrap());
+                win.lock_shared(1).unwrap();
+                win.put(b"hello", 1, addr).unwrap();
+                win.unlock(1).unwrap();
+                c.barrier().unwrap();
+            }
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn multiple_regions_resolve_correctly() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            if c.rank() == 0 {
+                let a1 = win.attach(32).unwrap();
+                let a2 = win.attach(32).unwrap();
+                c.send(&a1.to_ne_bytes(), 1, 0).unwrap();
+                c.send(&a2.to_ne_bytes(), 1, 0).unwrap();
+                c.barrier().unwrap();
+                let mut b1 = [0u8; 4];
+                let mut b2 = [0u8; 4];
+                win.get(&mut b1, 0, a1 + 8).unwrap();
+                win.get(&mut b2, 0, a2).unwrap();
+                assert_eq!(b1, [1; 4]);
+                assert_eq!(b2, [2; 4]);
+            } else {
+                let (b, _) = c.recv_vec(ANY_SOURCE, 0).unwrap();
+                let a1 = u64::from_ne_bytes(b.try_into().unwrap());
+                let (b, _) = c.recv_vec(ANY_SOURCE, 0).unwrap();
+                let a2 = u64::from_ne_bytes(b.try_into().unwrap());
+                // offset addressing within a region
+                win.put(&[1u8; 4], 0, a1 + 8).unwrap();
+                win.put(&[2u8; 4], 0, a2).unwrap();
+                c.barrier().unwrap();
+            }
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn out_of_range_and_detached_errors() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            let addr = win.attach(16).unwrap();
+            // beyond the region
+            assert!(win.put(&[0u8; 32], 0, addr).is_err());
+            assert!(win.put(&[0u8; 8], 0, addr + 12).is_err());
+            win.detach(addr).unwrap();
+            assert!(win.put(&[0u8; 4], 0, addr).is_err());
+            assert!(win.detach(addr).is_err());
+        });
+    }
+
+    #[test]
+    fn two_dynamic_windows_are_independent() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let w1 = DynWin::create(&c).unwrap();
+            let w2 = DynWin::create(&c).unwrap();
+            if c.rank() == 0 {
+                let a1 = w1.attach(8).unwrap();
+                // The same token is meaningless on w2.
+                assert!(w2.put(&[1u8; 4], 0, a1).is_err());
+                w1.put(&[1u8; 4], 0, a1).unwrap();
+            }
+            c.barrier().unwrap();
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! Error type for the MPI-3 substrate.
+
+use thiserror::Error;
+
+/// Errors surfaced by [`crate::mpisim`] operations.
+///
+/// Real MPI aborts by default; we return errors so the test suite can probe
+/// misuse (e.g. RMA outside an access epoch) without killing the process.
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum MpiErr {
+    #[error("rank {0} out of range (communicator size {1})")]
+    RankOutOfRange(usize, usize),
+    #[error("window displacement {disp}..{} out of range (segment size {size})", disp + len)]
+    DispOutOfRange { disp: usize, len: usize, size: usize },
+    #[error("RMA call outside an access epoch (win {win}, target {target})")]
+    NoEpoch { win: u64, target: usize },
+    #[error("epoch already held (win {win}, target {target})")]
+    EpochAlreadyHeld { win: u64, target: usize },
+    #[error("unlock without matching lock (win {win}, target {target})")]
+    NoMatchingLock { win: u64, target: usize },
+    #[error("window {0} is not known (freed or never created)")]
+    UnknownWindow(u64),
+    #[error("buffer size mismatch: local {local} bytes vs remote {remote} bytes")]
+    SizeMismatch { local: usize, remote: usize },
+    #[error("type size mismatch: op on {type_size}-byte type, buffer of {buf} bytes")]
+    TypeMismatch { type_size: usize, buf: usize },
+    #[error("group rank translation failed: rank {0} not in group")]
+    NotInGroup(usize),
+    #[error("communicator is empty for this rank (MPI_COMM_NULL)")]
+    NullComm,
+    #[error("request already consumed")]
+    RequestConsumed,
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("world finalized")]
+    Finalized,
+}
+
+/// Substrate result alias.
+pub type MpiResult<T> = Result<T, MpiErr>;

@@ -1,0 +1,219 @@
+//! MPI process groups — with MPI's order-sensitive, relative-rank semantics.
+//!
+//! A group is an ordered set of process identities (world ranks, since our
+//! process identities coincide with `MPI_COMM_WORLD` ranks). The paper's
+//! §IV-B1 leans on two MPI behaviours that this module reproduces
+//! faithfully so the DART layer genuinely has something to fix:
+//!
+//! - [`Group::incl`] selects by **relative** rank in the parent group, and
+//!   the output ordering follows the `ranks` argument, not process identity;
+//! - [`Group::union_mpi`] **appends** the members of `g2` not already in
+//!   `g1` in `g2`'s order — it does not sort. "For all practical purposes,
+//!   the processes in each MPI group are arranged in a random fashion."
+
+use super::error::{MpiErr, MpiResult};
+
+/// An ordered set of process identities (world ranks).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Group {
+    members: Vec<usize>,
+}
+
+impl Group {
+    /// Build a group from an explicit member list (order preserved).
+    /// Duplicate members are rejected.
+    pub fn new(members: Vec<usize>) -> Group {
+        debug_assert!(
+            {
+                let mut m = members.clone();
+                m.sort_unstable();
+                m.windows(2).all(|w| w[0] != w[1])
+            },
+            "duplicate members in group"
+        );
+        Group { members }
+    }
+
+    /// `MPI_GROUP_EMPTY`.
+    pub fn empty() -> Group {
+        Group { members: Vec::new() }
+    }
+
+    /// Number of members (`MPI_Group_size`).
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The member list, in group order. Element `i` is the process identity
+    /// (world rank) of group rank `i`.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// `MPI_Group_rank`: the calling process's rank in this group, by its
+    /// world rank. `None` if not a member (`MPI_UNDEFINED`).
+    pub fn rank_of(&self, world_rank: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == world_rank)
+    }
+
+    /// Membership test.
+    pub fn contains(&self, world_rank: usize) -> bool {
+        self.rank_of(world_rank).is_some()
+    }
+
+    /// `MPI_Group_incl(parent, n, ranks)`: the group consisting of the
+    /// processes with **relative** ranks `ranks[0..n]` in `self`, in that
+    /// order. This is the operation whose relative-rank, order-following
+    /// behaviour the paper's Fig. 3 illustrates.
+    pub fn incl(&self, ranks: &[usize]) -> MpiResult<Group> {
+        let mut members = Vec::with_capacity(ranks.len());
+        for &r in ranks {
+            let m = *self.members.get(r).ok_or(MpiErr::NotInGroup(r))?;
+            if members.contains(&m) {
+                return Err(MpiErr::Invalid(format!("duplicate rank {r} in incl")));
+            }
+            members.push(m);
+        }
+        Ok(Group { members })
+    }
+
+    /// `MPI_Group_excl`: all members except those with relative ranks in
+    /// `ranks`, preserving order.
+    pub fn excl(&self, ranks: &[usize]) -> MpiResult<Group> {
+        for &r in ranks {
+            if r >= self.members.len() {
+                return Err(MpiErr::NotInGroup(r));
+            }
+        }
+        let members = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !ranks.contains(i))
+            .map(|(_, &m)| m)
+            .collect();
+        Ok(Group { members })
+    }
+
+    /// `MPI_Group_union(g1, g2)`: `g1` followed by the members of `g2` not
+    /// in `g1`, **in `g2`'s order — no sorting** (paper Fig. 3, bottom).
+    pub fn union_mpi(&self, other: &Group) -> Group {
+        let mut members = self.members.clone();
+        for &m in &other.members {
+            if !members.contains(&m) {
+                members.push(m);
+            }
+        }
+        Group { members }
+    }
+
+    /// `MPI_Group_intersection`: members of `g1` that are also in `g2`, in
+    /// `g1`'s order.
+    pub fn intersection(&self, other: &Group) -> Group {
+        Group {
+            members: self.members.iter().copied().filter(|m| other.contains(*m)).collect(),
+        }
+    }
+
+    /// `MPI_Group_difference`: members of `g1` not in `g2`, in `g1`'s order.
+    pub fn difference(&self, other: &Group) -> Group {
+        Group {
+            members: self.members.iter().copied().filter(|m| !other.contains(*m)).collect(),
+        }
+    }
+
+    /// `MPI_Group_translate_ranks`: map relative ranks in `self` to relative
+    /// ranks in `other` (`None` where the process is not in `other`).
+    pub fn translate_ranks(&self, ranks: &[usize], other: &Group) -> MpiResult<Vec<Option<usize>>> {
+        ranks
+            .iter()
+            .map(|&r| {
+                let m = *self.members.get(r).ok_or(MpiErr::NotInGroup(r))?;
+                Ok(other.rank_of(m))
+            })
+            .collect()
+    }
+
+    /// `MPI_Group_compare` ≈ MPI_IDENT: same members, same order.
+    pub fn identical(&self, other: &Group) -> bool {
+        self.members == other.members
+    }
+
+    /// `MPI_Group_compare` ≈ MPI_SIMILAR: same members, any order.
+    pub fn similar(&self, other: &Group) -> bool {
+        if self.members.len() != other.members.len() {
+            return false;
+        }
+        let mut a = self.members.clone();
+        let mut b = other.members.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        a == b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world(n: usize) -> Group {
+        Group::new((0..n).collect())
+    }
+
+    #[test]
+    fn incl_is_relative_and_order_following() {
+        // Paper Fig. 3: incl on a parent group uses relative ranks and the
+        // output order follows the `ranks` array.
+        let parent = Group::new(vec![4, 9, 2, 7]);
+        let g = parent.incl(&[3, 0]).unwrap();
+        assert_eq!(g.members(), &[7, 4]); // NOT sorted
+    }
+
+    #[test]
+    fn union_appends_without_sorting() {
+        let g1 = Group::new(vec![5, 1]);
+        let g2 = Group::new(vec![3, 1, 0]);
+        let u = g1.union_mpi(&g2);
+        assert_eq!(u.members(), &[5, 1, 3, 0]); // g2's new members appended
+    }
+
+    #[test]
+    fn excl_preserves_order() {
+        let g = world(5).excl(&[1, 3]).unwrap();
+        assert_eq!(g.members(), &[0, 2, 4]);
+    }
+
+    #[test]
+    fn translate_ranks_roundtrip() {
+        let g1 = Group::new(vec![2, 0, 3]);
+        let g2 = Group::new(vec![3, 2]);
+        let t = g1.translate_ranks(&[0, 1, 2], &g2).unwrap();
+        assert_eq!(t, vec![Some(1), None, Some(0)]);
+    }
+
+    #[test]
+    fn intersection_and_difference() {
+        let g1 = Group::new(vec![4, 1, 3]);
+        let g2 = Group::new(vec![3, 4]);
+        assert_eq!(g1.intersection(&g2).members(), &[4, 3]);
+        assert_eq!(g1.difference(&g2).members(), &[1]);
+    }
+
+    #[test]
+    fn incl_out_of_range_is_error() {
+        assert!(world(3).incl(&[3]).is_err());
+    }
+
+    #[test]
+    fn compare_modes() {
+        let a = Group::new(vec![1, 2]);
+        let b = Group::new(vec![2, 1]);
+        assert!(a.similar(&b));
+        assert!(!a.identical(&b));
+        assert!(a.identical(&a.clone()));
+    }
+}

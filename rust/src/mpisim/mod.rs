@@ -1,0 +1,324 @@
+//! An MPI-3 subset implemented from scratch over OS threads + shared memory.
+//!
+//! This module plays the role Cray MPICH played in the paper: the
+//! communication substrate underneath the DART runtime. It implements the
+//! parts of MPI-3 that DART-MPI consumes, with the semantics the paper
+//! leans on:
+//!
+//! - **ranks** are OS threads inside one process ([`World::run`] spawns one
+//!   thread per rank and hands each a rank-local [`Mpi`] handle);
+//! - **two-sided p2p** with tags, `MPI_ANY_SOURCE`/`MPI_ANY_TAG` matching
+//!   and non-overtaking delivery ([`p2p`]);
+//! - **groups** with MPI's relative-rank, order-sensitive semantics —
+//!   including the append-without-sort `MPI_Group_union` behaviour the
+//!   paper works around ([`group`]);
+//! - **communicators** with isolated contexts, `split`/`create` ([`comm`]);
+//! - **collectives**: barrier, bcast, gather(v), scatter, allgather,
+//!   reduce, allreduce, alltoall, scan ([`collectives`]);
+//! - **RMA windows** (collective allocate, sub-windows over reserved pools,
+//!   dynamic attach), passive-target **lock/unlock/lock_all** with
+//!   shared/exclusive epochs, **put/get/accumulate**, request-based
+//!   **rput/rget**, **flush**, and the MPI-3 atomics **fetch_and_op** /
+//!   **compare_and_swap** ([`window`]);
+//! - the **RMA unified memory model** (§IV-A): public and private copies
+//!   coincide because ranks share one address space.
+//!
+//! Network behaviour is injected by [`crate::simnet::CostModel`] through a
+//! virtual-time channel model ([`WorldState::book_transfer`]): every
+//! directed rank pair owns a channel whose serialization (bandwidth + the
+//! E1 bounce-buffer copy) occupies the channel, while wire latency
+//! pipelines. Blocking operations spin until the modelled completion
+//! instant; request-based operations carry it in their handle.
+
+pub mod collectives;
+pub mod comm;
+pub mod dynwin;
+pub mod datatype;
+pub mod error;
+pub mod group;
+pub mod p2p;
+pub mod request;
+pub mod window;
+
+pub use comm::Comm;
+pub use dynwin::DynWin;
+pub use datatype::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, MpiType, Pod};
+pub use error::{MpiErr, MpiResult};
+pub use group::Group;
+pub use p2p::{Status, ANY_SOURCE, ANY_TAG};
+pub use request::{RecvRequest, RmaRequest, SendRequest};
+pub use window::{LockKind, Win};
+
+use crate::simnet::{CostModel, PinPolicy, Placement, Tier, Topology};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Configuration for a simulated MPI world.
+#[derive(Clone)]
+pub struct WorldConfig {
+    /// Number of ranks (= spawned threads).
+    pub nranks: usize,
+    /// Modelled cluster topology.
+    pub topology: Topology,
+    /// Rank → core placement policy.
+    pub pin: PinPolicy,
+    /// Network cost model (use [`CostModel::zero`] to disable injection).
+    pub cost: CostModel,
+    /// Also pin the OS threads to real cores (best effort).
+    pub pin_os_threads: bool,
+}
+
+impl WorldConfig {
+    /// `nranks` ranks on a flat single-NUMA topology with no cost injection
+    /// — the configuration unit tests use.
+    pub fn local(nranks: usize) -> Self {
+        WorldConfig {
+            nranks,
+            topology: Topology::flat(nranks.max(1)),
+            pin: PinPolicy::Block,
+            cost: CostModel::zero(),
+            pin_os_threads: false,
+        }
+    }
+
+    /// `nranks` ranks block-placed on a Hermit-like cluster with the
+    /// calibrated cost model.
+    pub fn hermit(nranks: usize, nodes: usize) -> Self {
+        WorldConfig {
+            nranks,
+            topology: Topology::hermit(nodes),
+            pin: PinPolicy::Block,
+            cost: CostModel::hermit(),
+            pin_os_threads: false,
+        }
+    }
+}
+
+/// Globally shared world state (one per [`World::run`] call).
+pub struct WorldState {
+    pub(crate) nranks: usize,
+    pub(crate) placement: Placement,
+    pub(crate) cost: CostModel,
+    pub(crate) mailboxes: Vec<p2p::Mailbox>,
+    pub(crate) windows: RwLock<HashMap<u64, Arc<window::WinState>>>,
+    pub(crate) next_win_id: AtomicU64,
+    pub(crate) next_context_id: AtomicU32,
+    /// Directed-pair virtual-time channels, indexed `src * nranks + dst`.
+    channels: Vec<Mutex<Channel>>,
+    pub(crate) finalized: AtomicBool,
+}
+
+#[derive(Default)]
+struct Channel {
+    /// Instant until which the channel's serialization stage is occupied.
+    busy_until: Option<Instant>,
+}
+
+impl WorldState {
+    fn new(cfg: &WorldConfig) -> Arc<Self> {
+        let placement = Placement::new(cfg.topology, cfg.nranks, &cfg.pin);
+        Arc::new(WorldState {
+            nranks: cfg.nranks,
+            placement,
+            cost: cfg.cost,
+            mailboxes: (0..cfg.nranks).map(|_| p2p::Mailbox::new()).collect(),
+            windows: RwLock::new(HashMap::new()),
+            next_win_id: AtomicU64::new(1),
+            next_context_id: AtomicU32::new(1),
+            channels: (0..cfg.nranks * cfg.nranks).map(|_| Mutex::new(Channel::default())).collect(),
+            finalized: AtomicBool::new(false),
+        })
+    }
+
+    /// Placement tier between two world ranks.
+    #[inline]
+    pub fn tier(&self, src: usize, dst: usize) -> Tier {
+        self.placement.tier(src, dst)
+    }
+
+    /// Book a `bytes`-sized transfer on the `src → dst` channel and return
+    /// the modelled completion instant.
+    ///
+    /// Serialization time (bandwidth term plus, above the eager limit, the
+    /// E1 double bounce-buffer copy) occupies the channel — back-to-back
+    /// transfers queue up behind each other — while the tier's base latency
+    /// pipelines (it is added after the serialization slot, so overlapped
+    /// transfers pay it only once in aggregate).
+    pub fn book_transfer(&self, src: usize, dst: usize, bytes: usize) -> Instant {
+        let now = Instant::now();
+        if self.cost.scale <= 0.0 || src == dst {
+            return now;
+        }
+        let tier = self.tier(src, dst);
+        let tc = &self.cost.tiers[tier as usize];
+        let mut serialize_ns = bytes as f64 / tc.bytes_per_ns;
+        if bytes > self.cost.eager_e0_limit {
+            serialize_ns += self.cost.e1_latency_ns + 2.0 * bytes as f64 / self.cost.e1_copy_bytes_per_ns;
+        }
+        let serialize = Duration::from_nanos((serialize_ns * self.cost.scale) as u64);
+        let latency = Duration::from_nanos((tc.latency_ns * self.cost.scale) as u64);
+        let mut ch = self.channels[src * self.nranks + dst].lock().unwrap();
+        let start = match ch.busy_until {
+            Some(b) if b > now => b,
+            _ => now,
+        };
+        let done = start + serialize;
+        ch.busy_until = Some(done);
+        drop(ch);
+        done + latency
+    }
+
+    /// Wait until `t` has passed (no-op if already past). Yield-aware: see
+    /// [`crate::simnet::cost::spin_for`].
+    #[inline]
+    pub fn wait_until(&self, t: Instant) {
+        let now = Instant::now();
+        if t > now {
+            crate::simnet::cost::spin_for(t - now);
+        }
+    }
+}
+
+/// Rank-local MPI handle, one per spawned thread. Not `Send`: like a real
+/// MPI rank, it belongs to the thread it was created on.
+pub struct Mpi {
+    pub(crate) world: Arc<WorldState>,
+    pub(crate) rank: usize,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Mpi {
+    /// This rank's index in `MPI_COMM_WORLD`.
+    #[inline]
+    pub fn world_rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Total number of ranks.
+    #[inline]
+    pub fn world_size(&self) -> usize {
+        self.world.nranks
+    }
+
+    /// The world communicator (`MPI_COMM_WORLD`).
+    pub fn comm_world(&self) -> Comm {
+        Comm::new_world(self.world.clone(), self.rank)
+    }
+
+    /// The group of `MPI_COMM_WORLD`.
+    pub fn group_world(&self) -> Group {
+        Group::new((0..self.world.nranks).collect())
+    }
+
+    /// Shared world state (used by the DART layer).
+    pub fn state(&self) -> &Arc<WorldState> {
+        &self.world
+    }
+}
+
+/// Entry point: spawn `cfg.nranks` threads, run `f(mpi)` on each (SPMD),
+/// join them all, and propagate the first panic if any.
+pub struct World;
+
+impl World {
+    pub fn run<F>(cfg: WorldConfig, f: F)
+    where
+        F: Fn(Mpi) + Send + Sync,
+    {
+        assert!(cfg.nranks > 0, "world must have at least one rank");
+        let state = WorldState::new(&cfg);
+        let f = Arc::new(f);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(cfg.nranks);
+            for rank in 0..cfg.nranks {
+                let state = state.clone();
+                let f = f.clone();
+                let pin_os = cfg.pin_os_threads;
+                let coord = state.placement.coord(rank);
+                let topo = cfg.topology;
+                let builder = std::thread::Builder::new().name(format!("mpi-rank-{rank}"));
+                handles.push(
+                    builder
+                        .spawn_scoped(s, move || {
+                            if pin_os {
+                                crate::simnet::pin_current_thread(topo.index_of(coord));
+                            }
+                            let mpi = Mpi {
+                                world: state,
+                                rank,
+                                _not_send: std::marker::PhantomData,
+                            };
+                            f(mpi);
+                        })
+                        .expect("spawn rank thread"),
+                );
+            }
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+        state.finalized.store(true, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn world_runs_all_ranks() {
+        let counter = AtomicUsize::new(0);
+        World::run(WorldConfig::local(7), |mpi| {
+            assert_eq!(mpi.world_size(), 7);
+            counter.fetch_add(1 + mpi.world_rank(), Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), (1..=7).sum());
+    }
+
+    #[test]
+    fn ranks_have_distinct_ids() {
+        let seen = Mutex::new(vec![false; 5]);
+        World::run(WorldConfig::local(5), |mpi| {
+            let mut s = seen.lock().unwrap();
+            assert!(!s[mpi.world_rank()]);
+            s[mpi.world_rank()] = true;
+        });
+        assert!(seen.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn book_transfer_zero_cost_is_now() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let t = mpi.state().book_transfer(0, 1, 1 << 20);
+            assert!(t <= Instant::now());
+        });
+    }
+
+    #[test]
+    fn book_transfer_serializes_channel() {
+        let mut cfg = WorldConfig::hermit(2, 1);
+        cfg.cost.scale = 1.0;
+        World::run(cfg, |mpi| {
+            if mpi.world_rank() == 0 {
+                let a = mpi.state().book_transfer(0, 1, 1 << 16);
+                let b = mpi.state().book_transfer(0, 1, 1 << 16);
+                assert!(b > a, "second transfer must queue behind the first");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_panic_propagates() {
+        World::run(WorldConfig::local(2), |mpi| {
+            if mpi.world_rank() == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! Two-sided point-to-point messaging: tagged, context-isolated, eager.
+//!
+//! Every rank owns a [`Mailbox`]; `send` books the transfer on the
+//! virtual-time channel, deposits an envelope (eager copy — the E0/E1
+//! distinction is costed by the channel model, see
+//! [`crate::simnet::CostModel`]) and wakes the receiver. `recv` matches by
+//! `(context, source, tag)` with `MPI_ANY_SOURCE`/`MPI_ANY_TAG` wildcards
+//! and non-overtaking order, then waits out the envelope's modelled wire
+//! time.
+//!
+//! The paper's DART uses p2p in two places: internally for all collectives
+//! and for the zero-byte MCS-lock hand-off notification (§IV-B6), which is
+//! an `MPI_Recv` on the waiting unit.
+
+use super::comm::Comm;
+use super::error::{MpiErr, MpiResult};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Wildcard source for [`Comm::recv`] (`MPI_ANY_SOURCE`).
+pub const ANY_SOURCE: usize = usize::MAX;
+/// Wildcard tag for [`Comm::recv`] (`MPI_ANY_TAG`).
+pub const ANY_TAG: i32 = i32::MIN;
+
+/// Completion information of a receive (`MPI_Status`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Status {
+    /// Source rank, relative to the communicator the recv was posted on.
+    pub source: usize,
+    /// Tag of the matched message.
+    pub tag: i32,
+    /// Payload length in bytes.
+    pub len: usize,
+}
+
+pub(crate) struct Envelope {
+    pub ctx: u32,
+    pub tag: i32,
+    /// Source rank relative to the sending communicator (== receiving one,
+    /// since contexts are communicator-unique).
+    pub src: usize,
+    pub data: Vec<u8>,
+    /// Modelled wire completion instant.
+    pub ready_at: Instant,
+}
+
+/// Per-rank incoming-message queue.
+pub struct Mailbox {
+    inner: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> Self {
+        Mailbox { inner: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    pub(crate) fn deposit(&self, env: Envelope) {
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(env);
+        self.cv.notify_all();
+    }
+
+    /// Block until an envelope matching `(ctx, src, tag)` is available and
+    /// remove it. First match in arrival order — per-pair FIFO, so delivery
+    /// is non-overtaking.
+    pub(crate) fn take_match(&self, ctx: u32, src: usize, tag: i32) -> Envelope {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|e| {
+                e.ctx == ctx
+                    && (src == ANY_SOURCE || e.src == src)
+                    && (tag == ANY_TAG || e.tag == tag)
+            }) {
+                return q.remove(pos).unwrap();
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking probe: true if a matching envelope is queued.
+    pub(crate) fn probe(&self, ctx: u32, src: usize, tag: i32) -> bool {
+        let q = self.inner.lock().unwrap();
+        q.iter().any(|e| {
+            e.ctx == ctx
+                && (src == ANY_SOURCE || e.src == src)
+                && (tag == ANY_TAG || e.tag == tag)
+        })
+    }
+}
+
+impl Comm {
+    /// Blocking standard-mode send (`MPI_Send`). Eager: the payload is
+    /// buffered at the destination and the call returns once the local
+    /// buffer is reusable (immediately, since we copy).
+    ///
+    /// User tags must be non-negative; negative tags are reserved for the
+    /// collective machinery.
+    pub fn send(&self, buf: &[u8], dst: usize, tag: i32) -> MpiResult<()> {
+        self.send_internal(buf, dst, tag, false)
+    }
+
+    pub(crate) fn send_internal(
+        &self,
+        buf: &[u8],
+        dst: usize,
+        tag: i32,
+        internal: bool,
+    ) -> MpiResult<()> {
+        if !internal && tag < 0 {
+            return Err(MpiErr::Invalid(format!("user tag must be >= 0, got {tag}")));
+        }
+        let dst_world = self.world_rank_of(dst)?;
+        let ready_at = self.world().book_transfer(self.my_world(), dst_world, buf.len());
+        self.world().mailboxes[dst_world].deposit(Envelope {
+            ctx: self.context(),
+            tag,
+            src: self.rank(),
+            data: buf.to_vec(),
+            ready_at,
+        });
+        Ok(())
+    }
+
+    /// Blocking receive (`MPI_Recv`). `src`/`tag` accept [`ANY_SOURCE`] /
+    /// [`ANY_TAG`]. The payload must fit in `buf` (truncation is an error,
+    /// like `MPI_ERR_TRUNCATE`); shorter messages are allowed.
+    pub fn recv(&self, buf: &mut [u8], src: usize, tag: i32) -> MpiResult<Status> {
+        if src != ANY_SOURCE {
+            self.world_rank_of(src)?; // validate
+        }
+        let env = self.world().mailboxes[self.my_world()].take_match(self.context(), src, tag);
+        self.world().wait_until(env.ready_at);
+        if env.data.len() > buf.len() {
+            return Err(MpiErr::SizeMismatch { local: buf.len(), remote: env.data.len() });
+        }
+        buf[..env.data.len()].copy_from_slice(&env.data);
+        Ok(Status { source: env.src, tag: env.tag, len: env.data.len() })
+    }
+
+    /// Blocking receive into a fresh vector (for variable-size payloads).
+    pub fn recv_vec(&self, src: usize, tag: i32) -> MpiResult<(Vec<u8>, Status)> {
+        if src != ANY_SOURCE {
+            self.world_rank_of(src)?;
+        }
+        let env = self.world().mailboxes[self.my_world()].take_match(self.context(), src, tag);
+        self.world().wait_until(env.ready_at);
+        let status = Status { source: env.src, tag: env.tag, len: env.data.len() };
+        Ok((env.data, status))
+    }
+
+    /// Non-blocking send (`MPI_Isend`). Eager, so the returned request
+    /// completes at the modelled local-completion instant.
+    pub fn isend(&self, buf: &[u8], dst: usize, tag: i32) -> MpiResult<super::SendRequest> {
+        self.send(buf, dst, tag)?;
+        Ok(super::SendRequest::completed(self.world().clone()))
+    }
+
+    /// Non-blocking receive (`MPI_Irecv`). Matching is deferred to
+    /// `wait`/`test` on the returned request (legal MPI behaviour: progress
+    /// may happen inside completion calls).
+    pub fn irecv(&self, src: usize, tag: i32) -> super::RecvRequest {
+        super::RecvRequest::new(self.clone(), src, tag)
+    }
+
+    /// Non-blocking probe (`MPI_Iprobe`): is a matching message queued?
+    pub fn iprobe(&self, src: usize, tag: i32) -> bool {
+        self.world().mailboxes[self.my_world()].probe(self.context(), src, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::{World, WorldConfig};
+
+    #[test]
+    fn send_recv_roundtrip() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                comm.send(b"hello", 1, 7).unwrap();
+            } else {
+                let mut buf = [0u8; 16];
+                let st = comm.recv(&mut buf, 0, 7).unwrap();
+                assert_eq!(&buf[..st.len], b"hello");
+                assert_eq!(st.source, 0);
+                assert_eq!(st.tag, 7);
+            }
+        });
+    }
+
+    #[test]
+    fn any_source_any_tag() {
+        World::run(WorldConfig::local(3), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() != 0 {
+                comm.send(&[comm.rank() as u8], 0, comm.rank() as i32).unwrap();
+            } else {
+                let mut seen = [false; 3];
+                for _ in 0..2 {
+                    let (data, st) = comm.recv_vec(ANY_SOURCE, ANY_TAG).unwrap();
+                    assert_eq!(data[0] as usize, st.source);
+                    assert_eq!(st.tag as usize, st.source);
+                    seen[st.source] = true;
+                }
+                assert!(seen[1] && seen[2]);
+            }
+        });
+    }
+
+    #[test]
+    fn non_overtaking_same_pair() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                for i in 0..100u32 {
+                    comm.send(&i.to_ne_bytes(), 1, 5).unwrap();
+                }
+            } else {
+                for i in 0..100u32 {
+                    let mut b = [0u8; 4];
+                    comm.recv(&mut b, 0, 5).unwrap();
+                    assert_eq!(u32::from_ne_bytes(b), i);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn tag_selectivity() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                comm.send(b"a", 1, 1).unwrap();
+                comm.send(b"b", 1, 2).unwrap();
+            } else {
+                // receive tag 2 first even though tag 1 arrived first
+                let (d2, _) = comm.recv_vec(0, 2).unwrap();
+                let (d1, _) = comm.recv_vec(0, 1).unwrap();
+                assert_eq!((d1.as_slice(), d2.as_slice()), (&b"a"[..], &b"b"[..]));
+            }
+        });
+    }
+
+    #[test]
+    fn self_send() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let comm = mpi.comm_world();
+            comm.send(b"self", 0, 3).unwrap();
+            let (d, st) = comm.recv_vec(0, 3).unwrap();
+            assert_eq!(d, b"self");
+            assert_eq!(st.source, 0);
+        });
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                comm.send(&[0u8; 8], 1, 0).unwrap();
+            } else {
+                let mut small = [0u8; 4];
+                assert!(matches!(
+                    comm.recv(&mut small, 0, 0),
+                    Err(MpiErr::SizeMismatch { .. })
+                ));
+            }
+        });
+    }
+
+    #[test]
+    fn negative_user_tag_rejected() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let comm = mpi.comm_world();
+            assert!(comm.send(b"", 0, -1).is_err());
+        });
+    }
+
+    #[test]
+    fn zero_byte_message() {
+        // The MCS lock hand-off is a zero-size notification (§IV-B6).
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                comm.send(&[], 1, 9).unwrap();
+            } else {
+                let st = comm.recv(&mut [], 0, 9).unwrap();
+                assert_eq!(st.len, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn iprobe_sees_queued_message() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let comm = mpi.comm_world();
+            if comm.rank() == 0 {
+                comm.send(b"x", 1, 4).unwrap();
+                comm.send(b"done", 1, 5).unwrap();
+            } else {
+                comm.recv_vec(0, 5).unwrap(); // after this, tag-4 msg must be visible
+                assert!(comm.iprobe(0, 4));
+                assert!(!comm.iprobe(0, 6));
+                comm.recv_vec(0, 4).unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,1028 @@
+//! RMA windows, passive-target synchronization, one-sided communication
+//! and MPI-3 atomics.
+//!
+//! This is the substrate surface DART-MPI is built on (paper §IV-A):
+//!
+//! - [`Win::allocate`] — collective window allocation (`MPI_Win_allocate`),
+//!   used for DART's pre-reserved world window and per-team memory pools;
+//! - [`Win::create_sub`] — a window over a sub-range of an existing
+//!   window's memory (`MPI_Win_create` on pool memory), used for each DART
+//!   collective global allocation (paper Fig. 5);
+//! - passive-target epochs: [`Win::lock`]/[`Win::unlock`] with
+//!   [`LockKind::Shared`]/[`LockKind::Exclusive`], plus
+//!   [`Win::lock_all`]/[`Win::unlock_all`]. DART opens *shared* epochs
+//!   eagerly and keeps them open (§IV-B5), maximizing concurrency;
+//! - one-sided [`Win::put`]/[`Win::get`]/[`Win::accumulate`] and the
+//!   request-based [`Win::rput`]/[`Win::rget`] (`MPI_Rput`/`MPI_Rget`);
+//! - [`Win::flush`]/[`Win::flush_all`] remote completion;
+//! - atomics [`Win::fetch_and_op`] and [`Win::compare_and_swap`], the
+//!   exact primitives the paper's MCS lock is built from (§IV-B6).
+//!
+//! Memory model: ranks share one address space, so the *public* and
+//! *private* window copies coincide — this is MPI-3's **unified** memory
+//! model, which the paper notes "fully matches the semantics of DART".
+//! Concurrent conflicting accesses produce undefined *values* (torn bytes)
+//! but never crash, mirroring MPI-3's relaxation over MPI-2 (§IV-A).
+
+use super::comm::Comm;
+use super::datatype::{reduce_bytes, HasMpiType, MpiOp, MpiType, Pod};
+use super::error::{MpiErr, MpiResult};
+use super::request::RmaRequest;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Passive-target lock mode (`MPI_LOCK_SHARED` / `MPI_LOCK_EXCLUSIVE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    /// Concurrent access epochs from many origins (the mode DART uses —
+    /// exclusive locks "impair the concurrency of RMA operations", §IV-A).
+    Shared,
+    /// Mutual exclusion against all other epochs on the target.
+    Exclusive,
+}
+
+/// One rank's exposed memory segment.
+pub(crate) struct Segment {
+    ptr: *mut u8,
+    len: usize,
+    owner: SegmentOwner,
+}
+
+#[allow(dead_code)]
+pub(crate) enum SegmentOwner {
+    /// The segment owns its allocation (window was `allocate`d).
+    Owned,
+    /// The segment borrows a parent window's memory (`create_sub`); the
+    /// Arc keeps the parent's allocation alive.
+    Parent(Arc<WinState>),
+}
+
+impl Segment {
+    fn owned(len: usize) -> Segment {
+        // Zero-initialized, stable heap allocation. We manage the buffer
+        // through a raw pointer because many threads access it
+        // concurrently (that is the point of an RMA window).
+        let mem = vec![0u8; len.max(1)].into_boxed_slice();
+        let ptr = Box::into_raw(mem) as *mut u8;
+        Segment { ptr, len, owner: SegmentOwner::Owned }
+    }
+}
+
+impl Drop for Segment {
+    fn drop(&mut self) {
+        if matches!(self.owner, SegmentOwner::Owned) {
+            // Reconstruct the box allocated in `owned` (len.max(1) bytes).
+            unsafe {
+                drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
+                    self.ptr,
+                    self.len.max(1),
+                )));
+            }
+        }
+    }
+}
+
+// Safety: Segment is a registered RMA region; concurrent access is governed
+// by MPI RMA semantics (undefined values on conflicts, never memory
+// unsafety beyond the region itself, which bounds checks enforce).
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+/// Passive-target lock state of one target rank.
+struct TargetLock {
+    m: Mutex<LockSt>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct LockSt {
+    shared: usize,
+    exclusive: bool,
+}
+
+impl TargetLock {
+    fn new() -> Self {
+        TargetLock { m: Mutex::new(LockSt::default()), cv: Condvar::new() }
+    }
+
+    fn acquire(&self, kind: LockKind) {
+        let mut st = self.m.lock().unwrap();
+        match kind {
+            LockKind::Shared => {
+                while st.exclusive {
+                    st = self.cv.wait(st).unwrap();
+                }
+                st.shared += 1;
+            }
+            LockKind::Exclusive => {
+                while st.exclusive || st.shared > 0 {
+                    st = self.cv.wait(st).unwrap();
+                }
+                st.exclusive = true;
+            }
+        }
+    }
+
+    fn release(&self, kind: LockKind) {
+        let mut st = self.m.lock().unwrap();
+        match kind {
+            LockKind::Shared => st.shared -= 1,
+            LockKind::Exclusive => st.exclusive = false,
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Shared (cross-rank) state of one window.
+pub struct WinState {
+    pub(crate) id: u64,
+    /// comm rank → world rank at creation time.
+    comm_ranks: Vec<usize>,
+    segments: Vec<OnceLock<Segment>>,
+    locks: Vec<TargetLock>,
+    /// Serializes accumulates and atomics (MPI guarantees element-wise
+    /// atomicity among accumulate-family operations).
+    atomic_m: Mutex<()>,
+    /// `MPI_Win_allocate_shared` semantics: same-node peers access the
+    /// memory load/store, so same-node transfers bypass the messaging
+    /// protocol entirely (zero-copy; the paper's §VI future work).
+    shmem: bool,
+}
+
+impl WinState {
+    fn segment(&self, target: usize) -> MpiResult<&Segment> {
+        self.segments
+            .get(target)
+            .and_then(|s| s.get())
+            .ok_or(MpiErr::RankOutOfRange(target, self.segments.len()))
+    }
+
+    fn check_range(&self, target: usize, disp: usize, len: usize) -> MpiResult<*mut u8> {
+        let seg = self.segment(target)?;
+        if disp.checked_add(len).map_or(true, |end| end > seg.len) {
+            return Err(MpiErr::DispOutOfRange { disp, len, size: seg.len });
+        }
+        Ok(unsafe { seg.ptr.add(disp) })
+    }
+}
+
+/// Rank-local window handle. Like a real `MPI_Win`, it is bound to the rank
+/// (thread) that created it: epoch state is per-origin.
+pub struct Win {
+    state: Arc<WinState>,
+    comm: Comm,
+    /// Epochs this origin currently holds: target → lock kind.
+    epochs: RefCell<HashMap<usize, LockKind>>,
+    /// Wire-completion instants of RMA ops not yet flushed, per target.
+    pending: RefCell<Vec<(usize, Instant)>>,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Win {
+    // ------------------------------------------------------------------
+    // Construction (collective)
+    // ------------------------------------------------------------------
+
+    /// `MPI_Win_allocate`: collective over `comm`; every rank exposes a
+    /// fresh zero-initialized segment of `local_size` bytes.
+    pub fn allocate(comm: &Comm, local_size: usize) -> MpiResult<Win> {
+        Self::build(comm, false, |_| Segment::owned(local_size))
+    }
+
+    /// `MPI_Win_allocate_shared`: like [`Win::allocate`], but same-node
+    /// RMA is true zero-copy — transfers between ranks on the same
+    /// modelled node skip the eager-protocol cost entirely and pay only a
+    /// load/store cost (the paper's §VI: "especially for small message
+    /// sizes, intra- and inter-NUMA communication becomes a lot more
+    /// efficient"). Inter-node behaviour is unchanged.
+    pub fn allocate_shared(comm: &Comm, local_size: usize) -> MpiResult<Win> {
+        Self::build(comm, true, |_| Segment::owned(local_size))
+    }
+
+    /// `MPI_Win_allocate` with per-rank sizes.
+    pub fn allocate_per_rank(comm: &Comm, local_size: usize, _sizes_hint: &[usize]) -> MpiResult<Win> {
+        Self::build(comm, false, |_| Segment::owned(local_size))
+    }
+
+    /// A window over `[offset, offset+len)` of this window's memory on
+    /// every rank — `MPI_Win_create` on registered pool memory, the paper's
+    /// per-allocation window over the team's reserved pool (Fig. 5).
+    /// Collective over the window's communicator; all ranks must pass the
+    /// same `offset`/`len` (aligned allocation).
+    pub fn create_sub(&self, offset: usize, len: usize) -> MpiResult<Win> {
+        // Validate locally against my own segment (all segments are
+        // symmetric for pool windows).
+        let my_rank = self.comm.rank();
+        let seg = self.state.segment(my_rank)?;
+        if offset.checked_add(len).map_or(true, |end| end > seg.len) {
+            return Err(MpiErr::DispOutOfRange { disp: offset, len, size: seg.len });
+        }
+        let parent = self.state.clone();
+        let shmem = self.state.shmem;
+        Self::build(&self.comm, shmem, move |rank| {
+            let pseg = parent.segment(rank).expect("parent segment");
+            Segment {
+                ptr: unsafe { pseg.ptr.add(offset) },
+                len,
+                owner: SegmentOwner::Parent(parent.clone()),
+            }
+        })
+    }
+
+    fn build(
+        comm: &Comm,
+        shmem: bool,
+        make_segment: impl Fn(usize) -> Segment,
+    ) -> MpiResult<Win> {
+        let world = comm.world().clone();
+        let n = comm.size();
+        // Rank 0 registers the WinState, then broadcasts its id. Bcast
+        // ordering guarantees every rank observes the registry entry.
+        let mut id = 0u64;
+        if comm.rank() == 0 {
+            id = world.next_win_id.fetch_add(1, Ordering::SeqCst);
+            let st = Arc::new(WinState {
+                id,
+                comm_ranks: comm.rank_table().to_vec(),
+                segments: (0..n).map(|_| OnceLock::new()).collect(),
+                locks: (0..n).map(|_| TargetLock::new()).collect(),
+                atomic_m: Mutex::new(()),
+                shmem,
+            });
+            world.windows.write().unwrap().insert(id, st);
+        }
+        let mut buf = id.to_ne_bytes();
+        comm.bcast(&mut buf, 0)?;
+        id = u64::from_ne_bytes(buf);
+        let state =
+            world.windows.read().unwrap().get(&id).cloned().ok_or(MpiErr::UnknownWindow(id))?;
+        // Publish my segment, then rendezvous so every segment is visible.
+        let my_rank = comm.rank();
+        state.segments[my_rank]
+            .set(make_segment(my_rank))
+            .map_err(|_| MpiErr::Invalid("segment set twice".into()))?;
+        comm.barrier()?;
+        Ok(Win {
+            state,
+            comm: comm.clone(),
+            epochs: RefCell::new(HashMap::new()),
+            pending: RefCell::new(Vec::new()),
+            _not_send: std::marker::PhantomData,
+        })
+    }
+
+    /// `MPI_Win_free`: collective; completes all epochs, unregisters the
+    /// window. Memory is reclaimed when the last handle drops.
+    pub fn free(self) -> MpiResult<()> {
+        // Release anything this origin still holds (MPI would erroneously
+        // abort; we are permissive to keep teardown simple).
+        let held: Vec<(usize, LockKind)> =
+            self.epochs.borrow().iter().map(|(&t, &k)| (t, k)).collect();
+        for (t, k) in held {
+            self.flush(t)?;
+            self.state.locks[t].release(k);
+        }
+        self.comm.barrier()?;
+        if self.comm.rank() == 0 {
+            self.comm.world().windows.write().unwrap().remove(&self.state.id);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection & local access
+    // ------------------------------------------------------------------
+
+    /// The communicator this window was created over.
+    pub fn comm(&self) -> &Comm {
+        &self.comm
+    }
+
+    /// Window id (diagnostics).
+    pub fn id(&self) -> u64 {
+        self.state.id
+    }
+
+    /// Size in bytes of `target`'s exposed segment.
+    pub fn segment_len(&self, target: usize) -> MpiResult<usize> {
+        Ok(self.state.segment(target)?.len)
+    }
+
+    /// Copy out of my own segment (the *private copy* — identical to the
+    /// public one under the unified memory model).
+    pub fn read_local(&self, disp: usize, buf: &mut [u8]) -> MpiResult<()> {
+        let src = self.state.check_range(self.comm.rank(), disp, buf.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(src, buf.as_mut_ptr(), buf.len()) };
+        Ok(())
+    }
+
+    /// Copy into my own segment.
+    pub fn write_local(&self, disp: usize, buf: &[u8]) -> MpiResult<()> {
+        let dst = self.state.check_range(self.comm.rank(), disp, buf.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(buf.as_ptr(), dst, buf.len()) };
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Passive-target synchronization
+    // ------------------------------------------------------------------
+
+    /// `MPI_Win_lock(kind, target)`: start a passive-target access epoch.
+    pub fn lock(&self, kind: LockKind, target: usize) -> MpiResult<()> {
+        self.state.segment(target)?; // validate target
+        let mut epochs = self.epochs.borrow_mut();
+        if epochs.contains_key(&target) {
+            return Err(MpiErr::EpochAlreadyHeld { win: self.state.id, target });
+        }
+        self.state.locks[target].acquire(kind);
+        epochs.insert(target, kind);
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock(target)`: complete all operations on `target` and
+    /// end the epoch.
+    pub fn unlock(&self, target: usize) -> MpiResult<()> {
+        let kind = {
+            let epochs = self.epochs.borrow();
+            *epochs
+                .get(&target)
+                .ok_or(MpiErr::NoMatchingLock { win: self.state.id, target })?
+        };
+        self.flush(target)?;
+        self.epochs.borrow_mut().remove(&target);
+        self.state.locks[target].release(kind);
+        Ok(())
+    }
+
+    /// `MPI_Win_lock_all`: shared epochs on every target. This is what
+    /// DART issues right after every window creation (§IV-B5), so its
+    /// one-sided operations never have to manage epochs.
+    pub fn lock_all(&self) -> MpiResult<()> {
+        for t in 0..self.comm.size() {
+            self.lock(LockKind::Shared, t)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_unlock_all`.
+    pub fn unlock_all(&self) -> MpiResult<()> {
+        for t in 0..self.comm.size() {
+            self.unlock(t)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_flush(target)`: block until all my outstanding operations
+    /// on `target` are complete at the target.
+    pub fn flush(&self, target: usize) -> MpiResult<()> {
+        let mut latest: Option<Instant> = None;
+        self.pending.borrow_mut().retain(|&(t, at)| {
+            if t == target {
+                latest = Some(latest.map_or(at, |l| l.max(at)));
+                false
+            } else {
+                true
+            }
+        });
+        if let Some(at) = latest {
+            self.comm.world().wait_until(at);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Win_flush_all`: complete all outstanding operations.
+    pub fn flush_all(&self) -> MpiResult<()> {
+        let latest = {
+            let mut p = self.pending.borrow_mut();
+            let latest = p.iter().map(|&(_, at)| at).max();
+            p.clear();
+            latest
+        };
+        if let Some(at) = latest {
+            self.comm.world().wait_until(at);
+        }
+        Ok(())
+    }
+
+    fn assert_epoch(&self, target: usize) -> MpiResult<()> {
+        if !self.epochs.borrow().contains_key(&target) {
+            return Err(MpiErr::NoEpoch { win: self.state.id, target });
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // One-sided communication
+    // ------------------------------------------------------------------
+
+    /// `MPI_Put`: transfer `origin` into `target`'s segment at byte
+    /// displacement `disp`. Completes locally immediately (eager); remote
+    /// completion at the next `flush`/`unlock`.
+    pub fn put(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
+        let at = self.book(target, origin.len());
+        self.pending.borrow_mut().push((target, at));
+        Ok(())
+    }
+
+    /// `MPI_Get`: transfer from `target`'s segment into `dest`.
+    pub fn get(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        let src = self.state.check_range(target, disp, dest.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
+        let at = self.book(target, dest.len());
+        self.pending.borrow_mut().push((target, at));
+        Ok(())
+    }
+
+    /// Fused put + flush of that one operation (§Perf): semantically
+    /// `put(..); flush(target)` when no other operation is outstanding on
+    /// `target`, without touching the pending list. Used by DART's
+    /// blocking put.
+    pub fn put_flush(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
+        let at = self.book(target, origin.len());
+        // Earlier unflushed ops on this target still complete first (the
+        // channel serializes), but their pending entries stay queued for
+        // the next explicit flush.
+        self.comm.world().wait_until(at);
+        Ok(())
+    }
+
+    /// Fused get + flush (§Perf): see [`Win::put_flush`].
+    pub fn get_flush(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        let src = self.state.check_range(target, disp, dest.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
+        let at = self.book(target, dest.len());
+        self.comm.world().wait_until(at);
+        Ok(())
+    }
+
+    /// `MPI_Rput`: like [`Win::put`] but returns a completion request.
+    pub fn rput(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<RmaRequest> {
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
+        let at = self.book(target, origin.len());
+        Ok(RmaRequest::new(self.comm.world().clone(), at))
+    }
+
+    /// `MPI_Rget`: like [`Win::get`] but returns a completion request.
+    pub fn rget(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<RmaRequest> {
+        self.assert_epoch(target)?;
+        let src = self.state.check_range(target, disp, dest.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
+        let at = self.book(target, dest.len());
+        Ok(RmaRequest::new(self.comm.world().clone(), at))
+    }
+
+    /// `MPI_Accumulate`: element-wise `target := target (op) origin`,
+    /// atomically per element w.r.t. other accumulate-family operations.
+    pub fn accumulate(
+        &self,
+        origin: &[u8],
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        {
+            let _g = self.state.atomic_m.lock().unwrap();
+            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, origin.len()) };
+            reduce_bytes(op, ty, dst_slice, origin)?;
+        }
+        let at = self.book(target, origin.len());
+        self.pending.borrow_mut().push((target, at));
+        Ok(())
+    }
+
+    /// `MPI_Get_accumulate`: atomically fetch the target range into
+    /// `result` and apply `target := target (op) origin`. With
+    /// [`MpiOp::NoOp`] this is an atomic read of an array.
+    pub fn get_accumulate(
+        &self,
+        origin: &[u8],
+        result: &mut [u8],
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<()> {
+        self.assert_epoch(target)?;
+        if origin.len() != result.len() {
+            return Err(MpiErr::SizeMismatch { local: origin.len(), remote: result.len() });
+        }
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        {
+            let _g = self.state.atomic_m.lock().unwrap();
+            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, origin.len()) };
+            result.copy_from_slice(dst_slice);
+            reduce_bytes(op, ty, dst_slice, origin)?;
+        }
+        // Fetch + update: a full round trip, like the scalar atomics.
+        let at = self.book(target, origin.len());
+        self.comm.world().wait_until(at);
+        let at = self.book_reverse(target, origin.len());
+        self.comm.world().wait_until(at);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // MPI-3 atomics — the primitives under the paper's MCS lock (§IV-B6)
+    // ------------------------------------------------------------------
+
+    /// `MPI_Fetch_and_op`: atomically `old := target; target := old (op)
+    /// value; return old`. With [`MpiOp::Replace`] this is atomic swap
+    /// (the paper's `fetch_and_store`); with [`MpiOp::NoOp`] an atomic read.
+    ///
+    /// Synchronous: the modelled round trip is paid before returning, like
+    /// a real fetch-op that must deliver its result.
+    pub fn fetch_and_op<T: HasMpiType + Pod>(
+        &self,
+        value: T,
+        target: usize,
+        disp: usize,
+    ) -> MpiResult<T> {
+        self.fetch_and_op_with(value, target, disp, MpiOp::Replace)
+    }
+
+    /// `MPI_Fetch_and_op` with an explicit op.
+    pub fn fetch_and_op_with<T: HasMpiType + Pod>(
+        &self,
+        value: T,
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+    ) -> MpiResult<T> {
+        self.assert_epoch(target)?;
+        let n = std::mem::size_of::<T>();
+        let dst = self.state.check_range(target, disp, n)?;
+        let old = {
+            let _g = self.state.atomic_m.lock().unwrap();
+            let old = unsafe { std::ptr::read(dst as *const T) };
+            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, n) };
+            let val_bytes =
+                unsafe { std::slice::from_raw_parts(&value as *const T as *const u8, n) };
+            reduce_bytes(op, T::MPI_TYPE, dst_slice, val_bytes)?;
+            old
+        };
+        // Round trip: request + response.
+        let at = self.book(target, n);
+        self.comm.world().wait_until(at);
+        let at = self.book_reverse(target, n);
+        self.comm.world().wait_until(at);
+        Ok(old)
+    }
+
+    /// `MPI_Compare_and_swap`: atomically `old := target; if old ==
+    /// compare { target := value }; return old`.
+    pub fn compare_and_swap<T: HasMpiType + Pod + PartialEq>(
+        &self,
+        compare: T,
+        value: T,
+        target: usize,
+        disp: usize,
+    ) -> MpiResult<T> {
+        self.assert_epoch(target)?;
+        let n = std::mem::size_of::<T>();
+        let dst = self.state.check_range(target, disp, n)?;
+        let old = {
+            let _g = self.state.atomic_m.lock().unwrap();
+            let old = unsafe { std::ptr::read(dst as *const T) };
+            if old == compare {
+                unsafe { std::ptr::write(dst as *mut T, value) };
+            }
+            old
+        };
+        let at = self.book(target, n);
+        self.comm.world().wait_until(at);
+        let at = self.book_reverse(target, n);
+        self.comm.world().wait_until(at);
+        Ok(old)
+    }
+
+    // ------------------------------------------------------------------
+
+    /// Is `target` reachable by plain load/store (shared-memory window on
+    /// the same modelled node)?
+    #[inline]
+    fn is_shmem_local(&self, target: usize) -> bool {
+        if !self.state.shmem {
+            return false;
+        }
+        let w = self.comm.world();
+        let src = w.placement.coord(self.comm.my_world());
+        let dst = w.placement.coord(self.state.comm_ranks[target]);
+        src.node == dst.node
+    }
+
+    #[inline]
+    fn book(&self, target: usize, bytes: usize) -> Instant {
+        if self.is_shmem_local(target) {
+            // Zero-copy load/store: only the real memcpy is paid (already
+            // done by the caller); no protocol cost is modelled.
+            return Instant::now();
+        }
+        let src_w = self.comm.my_world();
+        let dst_w = self.state.comm_ranks[target];
+        self.comm.world().book_transfer(src_w, dst_w, bytes)
+    }
+
+    #[inline]
+    fn book_reverse(&self, target: usize, bytes: usize) -> Instant {
+        if self.is_shmem_local(target) {
+            return Instant::now();
+        }
+        let src_w = self.comm.my_world();
+        let dst_w = self.state.comm_ranks[target];
+        self.comm.world().book_transfer(dst_w, src_w, bytes)
+    }
+}
+
+impl Drop for Win {
+    fn drop(&mut self) {
+        // Release epochs this origin still holds so a dropped handle can't
+        // deadlock other ranks.
+        let held: Vec<(usize, LockKind)> =
+            self.epochs.borrow().iter().map(|(&t, &k)| (t, k)).collect();
+        for (t, k) in held {
+            self.state.locks[t].release(k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::{as_bytes, as_bytes_mut, World, WorldConfig};
+
+    #[test]
+    fn put_get_roundtrip() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 64).unwrap();
+            win.lock_all().unwrap();
+            if c.rank() == 0 {
+                win.put(b"remote-data", 1, 8).unwrap();
+                win.flush(1).unwrap();
+            }
+            c.barrier().unwrap();
+            if c.rank() == 1 {
+                let mut buf = [0u8; 11];
+                win.read_local(8, &mut buf).unwrap();
+                assert_eq!(&buf, b"remote-data");
+                // also via self-get
+                let mut buf2 = [0u8; 11];
+                win.get(&mut buf2, 1, 8).unwrap();
+                win.flush(1).unwrap();
+                assert_eq!(&buf2, b"remote-data");
+            }
+            c.barrier().unwrap();
+            win.unlock_all().unwrap();
+            win.free().unwrap();
+        });
+    }
+
+    #[test]
+    fn rma_requires_epoch() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            let r = win.put(&[1], (c.rank() + 1) % 2, 0);
+            assert!(matches!(r, Err(MpiErr::NoEpoch { .. })));
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn bounds_checked() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock_all().unwrap();
+            assert!(matches!(
+                win.put(&[0u8; 4], 0, 6),
+                Err(MpiErr::DispOutOfRange { .. })
+            ));
+            assert!(win.put(&[0u8; 4], 0, 4).is_ok());
+            win.unlock_all().unwrap();
+        });
+    }
+
+    #[test]
+    fn exclusive_lock_excludes() {
+        use std::sync::atomic::{AtomicI64, Ordering as AOrd};
+        let acc = AtomicI64::new(0);
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            // Everyone hammers rank 0 under an exclusive lock; the final
+            // value must equal the op count (no lost updates).
+            for _ in 0..50 {
+                win.lock(LockKind::Exclusive, 0).unwrap();
+                let mut v = [0u8; 8];
+                win.get(&mut v, 0, 0).unwrap();
+                win.flush(0).unwrap();
+                let mut x = i64::from_ne_bytes(v);
+                x += 1;
+                win.put(&x.to_ne_bytes(), 0, 0).unwrap();
+                win.unlock(0).unwrap();
+            }
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let mut v = [0u8; 8];
+                win.read_local(0, &mut v).unwrap();
+                acc.store(i64::from_ne_bytes(v), AOrd::SeqCst);
+            }
+            c.barrier().unwrap();
+            win.free().unwrap();
+        });
+        assert_eq!(acc.load(std::sync::atomic::Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn accumulate_is_atomic() {
+        use std::sync::atomic::{AtomicI64, Ordering as AOrd};
+        let result = AtomicI64::new(0);
+        World::run(WorldConfig::local(8), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock_all().unwrap();
+            for _ in 0..100 {
+                win.accumulate(as_bytes(&[1i64]), 0, 0, MpiOp::Sum, MpiType::I64).unwrap();
+            }
+            win.flush(0).unwrap();
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let mut v = [0i64];
+                win.read_local(0, as_bytes_mut(&mut v)).unwrap();
+                result.store(v[0], AOrd::SeqCst);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+        assert_eq!(result.load(std::sync::atomic::Ordering::SeqCst), 800);
+    }
+
+    #[test]
+    fn fetch_and_op_swap_is_atomic() {
+        // Each rank swaps its id+1 into the slot; every value 0..n must be
+        // observed exactly once across all fetch results + the final value.
+        let seen = Mutex::new(Vec::new());
+        World::run(WorldConfig::local(8), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock_all().unwrap();
+            let old =
+                win.fetch_and_op((c.rank() + 1) as i64, 0, 0).unwrap();
+            seen.lock().unwrap().push(old);
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let mut v = [0i64];
+                win.read_local(0, as_bytes_mut(&mut v)).unwrap();
+                seen.lock().unwrap().push(v[0]);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+        let mut all = seen.into_inner().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..=8).map(|x| x as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compare_and_swap_only_one_wins() {
+        use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+        let winners = AtomicUsize::new(0);
+        World::run(WorldConfig::local(8), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock_all().unwrap();
+            c.barrier().unwrap();
+            let old = win
+                .compare_and_swap(0i64, (c.rank() + 1) as i64, 0, 0)
+                .unwrap();
+            if old == 0 {
+                winners.fetch_add(1, AOrd::SeqCst);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+        assert_eq!(winners.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn rput_rget_requests() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 16).unwrap();
+            win.lock_all().unwrap();
+            if c.rank() == 0 {
+                let r = win.rput(&[7u8; 16], 1, 0).unwrap();
+                r.wait();
+            }
+            c.barrier().unwrap();
+            if c.rank() == 1 {
+                let mut d = [0u8; 16];
+                let r = win.rget(&mut d, 1, 0).unwrap();
+                r.wait();
+                assert_eq!(d, [7u8; 16]);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn sub_window_aliases_pool() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let pool = Win::allocate(&c, 256).unwrap();
+            let sub = pool.create_sub(64, 128).unwrap();
+            sub.lock_all().unwrap();
+            pool.lock_all().unwrap();
+            if c.rank() == 0 {
+                sub.put(b"via-sub", 1, 0).unwrap();
+                sub.flush(1).unwrap();
+            }
+            c.barrier().unwrap();
+            if c.rank() == 1 {
+                // visible through the parent pool at offset 64
+                let mut buf = [0u8; 7];
+                pool.read_local(64, &mut buf).unwrap();
+                assert_eq!(&buf, b"via-sub");
+            }
+            c.barrier().unwrap();
+            pool.unlock_all().unwrap();
+            sub.unlock_all().unwrap();
+            sub.free().unwrap();
+            pool.free().unwrap();
+        });
+    }
+
+    #[test]
+    fn sub_window_out_of_range() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let c = mpi.comm_world();
+            let pool = Win::allocate(&c, 64).unwrap();
+            assert!(pool.create_sub(32, 64).is_err());
+        });
+    }
+
+    #[test]
+    fn double_lock_is_error() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock(LockKind::Shared, 0).unwrap();
+            assert!(matches!(
+                win.lock(LockKind::Shared, 0),
+                Err(MpiErr::EpochAlreadyHeld { .. })
+            ));
+            win.unlock(0).unwrap();
+            assert!(matches!(win.unlock(0), Err(MpiErr::NoMatchingLock { .. })));
+        });
+    }
+
+    #[test]
+    fn get_accumulate_fetches_and_updates() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 8).unwrap();
+            win.lock_all().unwrap();
+            // Everyone atomically adds 1 and fetches the pre-value: the
+            // fetched values must be a permutation of 0..4.
+            let mut fetched = [0u8; 8];
+            win.get_accumulate(as_bytes(&[1i64]), &mut fetched, 0, 0, MpiOp::Sum, MpiType::I64)
+                .unwrap();
+            let old = i64::from_ne_bytes(fetched);
+            assert!((0..4).contains(&old));
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let mut v = [0i64];
+                win.read_local(0, as_bytes_mut(&mut v)).unwrap();
+                assert_eq!(v[0], 4);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn shmem_window_zero_copy_same_node() {
+        use crate::simnet::{PinPolicy, Topology};
+        use std::time::Instant;
+        // Same data path, but same-node transfers through a shared window
+        // must be much faster than through a regular window under the
+        // Hermit cost model (the §VI future-work claim).
+        let time_with = |shared: bool| -> f64 {
+            let out = std::sync::Mutex::new(0f64);
+            let cfg = WorldConfig {
+                nranks: 2,
+                topology: Topology::hermit(1),
+                pin: PinPolicy::ScatterNuma, // inter-NUMA, same node
+                cost: crate::simnet::CostModel::hermit(),
+                pin_os_threads: false,
+            };
+            World::run(cfg, |mpi| {
+                let c = mpi.comm_world();
+                let win = if shared {
+                    Win::allocate_shared(&c, 4096).unwrap()
+                } else {
+                    Win::allocate(&c, 4096).unwrap()
+                };
+                win.lock_all().unwrap();
+                c.barrier().unwrap();
+                if c.rank() == 0 {
+                    let buf = [1u8; 64];
+                    let mut best = f64::INFINITY;
+                    for _ in 0..40 {
+                        let t = Instant::now();
+                        win.put(&buf, 1, 0).unwrap();
+                        win.flush(1).unwrap();
+                        best = best.min(t.elapsed().as_nanos() as f64);
+                    }
+                    *out.lock().unwrap() = best;
+                }
+                c.barrier().unwrap();
+                win.unlock_all().unwrap();
+            });
+            out.into_inner().unwrap()
+        };
+        let regular = time_with(false);
+        let shmem = time_with(true);
+        assert!(
+            shmem < regular / 2.0,
+            "shmem window not faster: shmem={shmem}ns regular={regular}ns"
+        );
+    }
+
+    #[test]
+    fn shmem_window_inter_node_unchanged() {
+        use crate::simnet::{PinPolicy, Topology};
+        // Across nodes a shared window behaves like a regular one (the
+        // messaging protocol still applies).
+        let cfg = WorldConfig {
+            nranks: 2,
+            topology: Topology::hermit(2),
+            pin: PinPolicy::ScatterNode,
+            cost: crate::simnet::CostModel::hermit(),
+            pin_os_threads: false,
+        };
+        World::run(cfg, |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate_shared(&c, 64).unwrap();
+            win.lock_all().unwrap();
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let t = std::time::Instant::now();
+                win.put(&[9u8; 8], 1, 0).unwrap();
+                win.flush(1).unwrap();
+                // inter-node latency ≈ 1400 ns must still be paid
+                assert!(t.elapsed().as_nanos() > 800, "inter-node cost skipped");
+            }
+            c.barrier().unwrap();
+            if c.rank() == 1 {
+                let mut b = [0u8; 8];
+                win.read_local(0, &mut b).unwrap();
+                assert_eq!(b, [9u8; 8]);
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn windows_on_subcommunicator() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let sub = c.split(Some((mpi.world_rank() / 2) as i32), 0).unwrap().unwrap();
+            let win = Win::allocate(&sub, 8).unwrap();
+            win.lock_all().unwrap();
+            // rank 0 of each half writes to rank 1 of that half
+            if sub.rank() == 0 {
+                let v = mpi.world_rank() as u64;
+                win.put(&v.to_ne_bytes(), 1, 0).unwrap();
+                win.flush(1).unwrap();
+            }
+            sub.barrier().unwrap();
+            if sub.rank() == 1 {
+                let mut b = [0u8; 8];
+                win.read_local(0, &mut b).unwrap();
+                assert_eq!(u64::from_ne_bytes(b), (mpi.world_rank() - 1) as u64);
+            }
+            win.unlock_all().unwrap();
+            sub.barrier().unwrap();
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! AOT artifact discovery and I/O-signature metadata.
+//!
+//! `python -m compile.aot` emits, per compiled step function, an HLO-text
+//! file (`<name>.hlo.txt`) and a `.meta` sidecar whose line format is:
+//!
+//! ```text
+//! input float32 66 66
+//! output float32 64 64
+//! output float32
+//! ```
+//!
+//! (dtype followed by dims; a bare dtype is a scalar). This module locates
+//! artifacts and parses the sidecars so the executor can validate shapes
+//! before handing buffers to PJRT.
+
+use super::{RuntimeErr, RuntimeResult};
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact tensor (only what the catalog uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl DType {
+    fn parse(s: &str) -> RuntimeResult<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "float64" | "f64" => Ok(DType::F64),
+            "int32" | "i32" => Ok(DType::I32),
+            "int64" | "i64" => Ok(DType::I64),
+            other => Err(RuntimeErr::Meta(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One discovered artifact: HLO path plus its I/O signature.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.meta`.
+    pub fn load(dir: &Path, name: &str) -> RuntimeResult<Artifact> {
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        if !hlo_path.exists() {
+            return Err(RuntimeErr::Missing(format!(
+                "{} — run `make artifacts` first",
+                hlo_path.display()
+            )));
+        }
+        let meta_path = dir.join(format!("{name}.meta"));
+        let meta = std::fs::read_to_string(&meta_path)
+            .map_err(|e| RuntimeErr::Meta(format!("{}: {e}", meta_path.display())))?;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (lineno, line) in meta.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let dtype = DType::parse(
+                parts
+                    .next()
+                    .ok_or_else(|| RuntimeErr::Meta(format!("line {}: missing dtype", lineno + 1)))?,
+            )?;
+            let dims = parts
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|e| RuntimeErr::Meta(format!("line {}: {e}", lineno + 1)))
+                })
+                .collect::<RuntimeResult<Vec<_>>>()?;
+            let spec = TensorSpec { dtype, dims };
+            match kind {
+                "input" => inputs.push(spec),
+                "output" => outputs.push(spec),
+                other => return Err(RuntimeErr::Meta(format!("line {}: bad kind {other:?}", lineno + 1))),
+            }
+        }
+        Ok(Artifact { name: name.to_string(), hlo_path, inputs, outputs })
+    }
+
+    /// List artifact names available in `dir` (sorted).
+    pub fn discover(dir: &Path) -> RuntimeResult<Vec<String>> {
+        let mut names = Vec::new();
+        let rd = std::fs::read_dir(dir)
+            .map_err(|e| RuntimeErr::Missing(format!("{}: {e}", dir.display())))?;
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if let Some(fname) = p.file_name().and_then(|f| f.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// The artifacts directory: `$DART_ARTIFACTS` or `./artifacts` (relative to
+/// the workspace root, where `make` runs).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DART_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path, name: &str, meta: &str) {
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule fake").unwrap();
+        std::fs::write(dir.join(format!("{name}.meta")), meta).unwrap();
+    }
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let dir = std::env::temp_dir().join("dart-artifact-test-1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "t", "input float32 66 66\noutput float32 64 64\noutput float32\n");
+        let a = Artifact::load(&dir, "t").unwrap();
+        assert_eq!(a.inputs, vec![TensorSpec { dtype: DType::F32, dims: vec![66, 66] }]);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.outputs[1].dims, Vec::<usize>::new()); // scalar
+        assert_eq!(a.outputs[0].elements(), 4096);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_is_actionable() {
+        let dir = std::env::temp_dir().join("dart-artifact-test-2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Artifact::load(&dir, "nope").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_meta_is_error() {
+        let dir = std::env::temp_dir().join("dart-artifact-test-3");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "bad", "frobnicate float32 2\n");
+        assert!(Artifact::load(&dir, "bad").is_err());
+        write_meta(&dir, "bad2", "input notadtype 2\n");
+        assert!(Artifact::load(&dir, "bad2").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn discover_lists_hlo_files() {
+        let dir = std::env::temp_dir().join("dart-artifact-test-4");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "b_art", "input float32 1\noutput float32 1\n");
+        write_meta(&dir, "a_art", "input float32 1\noutput float32 1\n");
+        let names = Artifact::discover(&dir).unwrap();
+        assert_eq!(names, vec!["a_art", "b_art"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,139 @@
+//! PJRT/XLA executor: load AOT-compiled JAX/Pallas artifacts and run them
+//! from the Rust request path (Python is build-time only).
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` and
+//! `/opt/xla-example/README.md`): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!
+//! PJRT handles are not `Send`, so every DART unit that computes creates
+//! its own [`Engine`] (mirroring one-PJRT-client-per-process in a real
+//! deployment); compiled executables are cached per engine by name.
+
+pub mod artifact;
+
+pub use artifact::{artifacts_dir, Artifact, DType, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use thiserror::Error;
+
+/// Errors from the executor.
+#[derive(Debug, Error)]
+pub enum RuntimeErr {
+    #[error("XLA/PJRT error: {0}")]
+    Xla(String),
+    #[error("artifact missing: {0}")]
+    Missing(String),
+    #[error("artifact metadata error: {0}")]
+    Meta(String),
+    #[error("shape mismatch for {name}: expected {expected} f32 elements, got {got}")]
+    Shape { name: String, expected: usize, got: usize },
+}
+
+impl From<xla::Error> for RuntimeErr {
+    fn from(e: xla::Error) -> Self {
+        RuntimeErr::Xla(e.to_string())
+    }
+}
+
+/// Executor result alias.
+pub type RuntimeResult<T> = Result<T, RuntimeErr>;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// The artifact's I/O signature.
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Execute with f32 inputs (the catalog is all-f32); returns the flat
+    /// f32 buffers of every output, in artifact order.
+    ///
+    /// Inputs are validated against the `.meta` signature before touching
+    /// PJRT, so shape bugs surface as [`RuntimeErr::Shape`] rather than an
+    /// XLA abort.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> RuntimeResult<Vec<Vec<f32>>> {
+        let sig = &self.artifact;
+        if inputs.len() != sig.inputs.len() {
+            return Err(RuntimeErr::Shape {
+                name: sig.name.clone(),
+                expected: sig.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, buf) in sig.inputs.iter().zip(inputs) {
+            if spec.elements() != buf.len() {
+                return Err(RuntimeErr::Shape {
+                    name: sig.name.clone(),
+                    expected: spec.elements(),
+                    got: buf.len(),
+                });
+            }
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf);
+            let lit = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let mut parts = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (spec, lit) in sig.outputs.iter().zip(parts.drain(..)) {
+            let v = lit.to_vec::<f32>()?;
+            debug_assert_eq!(v.len(), spec.elements(), "output shape drift");
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// A per-thread PJRT CPU client with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// CPU PJRT client over the default artifacts directory.
+    pub fn new() -> RuntimeResult<Engine> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// CPU PJRT client over an explicit artifacts directory.
+    pub fn with_dir(dir: PathBuf) -> RuntimeResult<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()?, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available to this engine.
+    pub fn available(&self) -> RuntimeResult<Vec<String>> {
+        Artifact::discover(&self.dir)
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> RuntimeResult<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let artifact = Artifact::load(&self.dir, name)?;
+        let proto = xla::HloModuleProto::from_text_file(&artifact.hlo_path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exe = Rc::new(Executable { artifact, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}

@@ -1,0 +1,208 @@
+//! Network cost model standing in for the Cray XE6 / Gemini testbed.
+//!
+//! The model is deliberately simple — the paper's analysis (§V-C) fits the
+//! data to `t(m) = latency + m / bandwidth` per placement tier, with a
+//! protocol change on top: Cray MPICH switches from **eager E0** (no copy)
+//! to **eager E1** (data copied through internal MPI buffers on both the
+//! send and the receive side) for messages larger than 4 KiB, which is
+//! visible as a jump in the DTCT between 4 KiB and 8 KiB (Figs. 8/9) and as
+//! a bandwidth dip around 8 KiB (Fig. 15).
+//!
+//! [`CostModel::inject`] spins for the modelled duration; it is called from
+//! the [`crate::mpisim`] transport on every message/RMA transfer, equally
+//! for raw-MPI and DART traffic, so the *difference* between the two — the
+//! paper's metric — remains the genuine software overhead of the DART layer.
+
+use super::Tier;
+use std::time::{Duration, Instant};
+
+/// Cray MPICH eager protocol variants (paper §V-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// No intermediate copy; message ≤ 4 KiB.
+    EagerE0,
+    /// Data copied into internal MPI buffers on both sides; message > 4 KiB.
+    EagerE1,
+}
+
+/// Linear cost parameters for one placement tier.
+#[derive(Debug, Clone, Copy)]
+pub struct TierCost {
+    /// Base one-way latency in nanoseconds.
+    pub latency_ns: f64,
+    /// Sustained bandwidth in bytes per nanosecond (= GB/s).
+    pub bytes_per_ns: f64,
+}
+
+impl TierCost {
+    /// Pure linear transfer time for `bytes`.
+    #[inline]
+    pub fn transfer_ns(&self, bytes: usize) -> f64 {
+        self.latency_ns + bytes as f64 / self.bytes_per_ns
+    }
+}
+
+/// Tiered network cost model with the E0/E1 eager-protocol switch.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-tier linear cost (indexed by [`Tier`] order: intra-NUMA,
+    /// inter-NUMA, inter-node).
+    pub tiers: [TierCost; 3],
+    /// Messages strictly larger than this use protocol E1 (paper: 4 KiB).
+    pub eager_e0_limit: usize,
+    /// Extra fixed cost of entering the E1 path (buffer management, both
+    /// sides), nanoseconds.
+    pub e1_latency_ns: f64,
+    /// Copy bandwidth of the E1 bounce buffers, bytes/ns; the copy is paid
+    /// twice (send side + receive side).
+    pub e1_copy_bytes_per_ns: f64,
+    /// Global multiplier on injected time. `0.0` disables injection (used by
+    /// unit tests and by pure-software-overhead measurements).
+    pub scale: f64,
+}
+
+impl CostModel {
+    /// Calibration that reproduces the *shape* of the Hermit measurements:
+    /// sub-microsecond intra-node latencies, ~1.5 µs inter-node, a visible
+    /// jump at the 4 KiB → 8 KiB transition, and single-digit GB/s
+    /// bandwidth, ordered intra-NUMA > inter-NUMA > inter-node.
+    pub fn hermit() -> Self {
+        CostModel {
+            tiers: [
+                // intra-NUMA: shared L3 / local memory controller
+                TierCost { latency_ns: 350.0, bytes_per_ns: 10.0 },
+                // inter-NUMA: HyperTransport hop between dies/sockets
+                TierCost { latency_ns: 750.0, bytes_per_ns: 8.0 },
+                // inter-node: Gemini interconnect
+                TierCost { latency_ns: 1400.0, bytes_per_ns: 5.5 },
+            ],
+            eager_e0_limit: 4 * 1024,
+            e1_latency_ns: 900.0,
+            e1_copy_bytes_per_ns: 9.0,
+            scale: 1.0,
+        }
+    }
+
+    /// A model that injects nothing — transfers cost only the real memcpy.
+    /// Used by unit tests and by overhead-isolation benches.
+    pub fn zero() -> Self {
+        let mut m = Self::hermit();
+        m.scale = 0.0;
+        m
+    }
+
+    /// Which eager protocol a message of `bytes` uses.
+    #[inline]
+    pub fn protocol(&self, bytes: usize) -> Protocol {
+        if bytes > self.eager_e0_limit {
+            Protocol::EagerE1
+        } else {
+            Protocol::EagerE0
+        }
+    }
+
+    /// Modelled wire time for a `bytes`-sized transfer on `tier`, in ns
+    /// (before the global `scale` factor).
+    pub fn transfer_ns(&self, tier: Tier, bytes: usize) -> f64 {
+        let t = self.tiers[tier as usize].transfer_ns(bytes);
+        match self.protocol(bytes) {
+            Protocol::EagerE0 => t,
+            Protocol::EagerE1 => {
+                // Copy through internal buffers on both sides.
+                t + self.e1_latency_ns + 2.0 * bytes as f64 / self.e1_copy_bytes_per_ns
+            }
+        }
+    }
+
+    /// Spin for the modelled duration of a transfer. No-op when `scale == 0`.
+    #[inline]
+    pub fn inject(&self, tier: Tier, bytes: usize) {
+        if self.scale <= 0.0 {
+            return;
+        }
+        let ns = self.transfer_ns(tier, bytes) * self.scale;
+        spin_for(Duration::from_nanos(ns as u64));
+    }
+}
+
+/// Wait with nanosecond-ish precision. `thread::sleep` has ~50 µs
+/// granularity on Linux, far above the sub-µs latencies we model, so short
+/// waits spin (the paper's MPI does the same while polling the NIC).
+/// Longer waits yield the CPU between polls: the simulation timeshares
+/// many rank-threads over few (possibly one) physical cores, and a pure
+/// spin would stall every other rank for a full scheduler quantum.
+#[inline]
+pub fn spin_for(d: Duration) {
+    const SPIN_ONLY: Duration = Duration::from_micros(5);
+    let start = Instant::now();
+    loop {
+        let e = start.elapsed();
+        if e >= d {
+            return;
+        }
+        if d - e > SPIN_ONLY {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_switches_at_4k() {
+        let m = CostModel::hermit();
+        assert_eq!(m.protocol(4096), Protocol::EagerE0);
+        assert_eq!(m.protocol(4097), Protocol::EagerE1);
+        assert_eq!(m.protocol(1), Protocol::EagerE0);
+    }
+
+    #[test]
+    fn e1_jump_is_visible() {
+        // The modelled DTCT must jump by more than the pure linear growth
+        // between 4 KiB and 8 KiB — this is the paper's Figs 8/9 feature.
+        let m = CostModel::hermit();
+        for tier in Tier::ALL {
+            let t4 = m.transfer_ns(tier, 4096);
+            let t8 = m.transfer_ns(tier, 8192);
+            let linear_growth = 4096.0 / m.tiers[tier as usize].bytes_per_ns;
+            assert!(
+                t8 - t4 > linear_growth + m.e1_latency_ns * 0.9,
+                "no E1 jump on {tier}: t4={t4} t8={t8}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiers_are_ordered() {
+        let m = CostModel::hermit();
+        for bytes in [1usize, 512, 65536, 1 << 21] {
+            let t = |tier| m.transfer_ns(tier, bytes);
+            assert!(t(Tier::IntraNuma) < t(Tier::InterNuma));
+            assert!(t(Tier::InterNuma) < t(Tier::InterNode));
+        }
+    }
+
+    #[test]
+    fn zero_model_injects_nothing() {
+        let m = CostModel::zero();
+        let start = Instant::now();
+        for _ in 0..1000 {
+            m.inject(Tier::InterNode, 1 << 21);
+        }
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn spin_for_has_reasonable_precision() {
+        let d = Duration::from_micros(200);
+        let start = Instant::now();
+        spin_for(d);
+        let e = start.elapsed();
+        assert!(e >= d);
+        assert!(e < d * 4, "spin overshoot: {e:?}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Cluster topology and network cost model.
+//!
+//! The paper's testbed is "Hermit", a Cray XE6 at HLRS: every node has two
+//! AMD Opteron 6276 (Interlagos) sockets, each socket two Orochi dies, each
+//! die one NUMA domain of 8 cores — i.e. **4 NUMA domains × 8 cores = 32
+//! cores per node** (paper Fig. 7) — connected by Cray's Gemini network.
+//!
+//! We do not have that machine, so this module reproduces the *structure*
+//! the evaluation depends on: a hierarchical topology in which every pair of
+//! processing units falls into one of three placement tiers
+//! ([`Tier::IntraNuma`], [`Tier::InterNuma`], [`Tier::InterNode`]), and a
+//! [`cost::CostModel`] that injects tier- and size-dependent transfer costs
+//! into the [`crate::mpisim`] transport, including the Cray MPICH eager
+//! E0→E1 protocol switch at 4 KiB that produces the characteristic jump in
+//! the paper's figures 8/9 and the bandwidth dip in figure 15.
+
+pub mod cost;
+pub mod pinning;
+
+pub use cost::{CostModel, Protocol, TierCost};
+pub use pinning::{pin_current_thread, PinPolicy};
+
+use std::fmt;
+
+/// Hierarchical machine topology: `nodes × numa_per_node × cores_per_numa`.
+///
+/// Units (ranks) are placed onto core coordinates by a [`PinPolicy`]; the
+/// topology then classifies any pair of units into a communication [`Tier`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of compute nodes in the cluster.
+    pub nodes: usize,
+    /// NUMA domains per node (Hermit: 4).
+    pub numa_per_node: usize,
+    /// Cores per NUMA domain (Hermit: 8).
+    pub cores_per_numa: usize,
+}
+
+impl Topology {
+    /// The paper's Cray XE6 "Hermit" node structure (Fig. 7), with a
+    /// configurable node count.
+    pub fn hermit(nodes: usize) -> Self {
+        Topology { nodes, numa_per_node: 4, cores_per_numa: 8 }
+    }
+
+    /// A single shared-memory node with one NUMA domain — the degenerate
+    /// topology used by unit tests that do not care about placement.
+    pub fn flat(cores: usize) -> Self {
+        Topology { nodes: 1, numa_per_node: 1, cores_per_numa: cores }
+    }
+
+    /// Total cores in the cluster.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.numa_per_node * self.cores_per_numa
+    }
+
+    /// Cores per node.
+    pub fn cores_per_node(&self) -> usize {
+        self.numa_per_node * self.cores_per_numa
+    }
+
+    /// Decompose a flat core index into a coordinate.
+    pub fn coord_of(&self, core_index: usize) -> CoreCoord {
+        debug_assert!(core_index < self.total_cores(), "core index out of range");
+        let per_node = self.cores_per_node();
+        let node = core_index / per_node;
+        let within = core_index % per_node;
+        CoreCoord { node, numa: within / self.cores_per_numa, core: within % self.cores_per_numa }
+    }
+
+    /// Flatten a coordinate back to a core index.
+    pub fn index_of(&self, c: CoreCoord) -> usize {
+        c.node * self.cores_per_node() + c.numa * self.cores_per_numa + c.core
+    }
+
+    /// Classify the communication tier between two placed units.
+    pub fn tier(&self, a: CoreCoord, b: CoreCoord) -> Tier {
+        if a.node != b.node {
+            Tier::InterNode
+        } else if a.numa != b.numa {
+            Tier::InterNuma
+        } else {
+            Tier::IntraNuma
+        }
+    }
+}
+
+/// Coordinate of one physical core: `(node, numa domain, core within domain)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CoreCoord {
+    pub node: usize,
+    pub numa: usize,
+    pub core: usize,
+}
+
+impl fmt::Display for CoreCoord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}:d{}:c{}", self.node, self.numa, self.core)
+    }
+}
+
+/// Relative placement of two communication partners — the paper's three
+/// benchmark configurations (§V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    /// Both units on the same NUMA domain.
+    IntraNuma,
+    /// Same node, distinct NUMA domains (distinct processors in the paper).
+    InterNuma,
+    /// Distinct nodes (over the interconnect).
+    InterNode,
+}
+
+impl Tier {
+    /// All tiers, in the order the paper's figures present them.
+    pub const ALL: [Tier; 3] = [Tier::IntraNuma, Tier::InterNuma, Tier::InterNode];
+
+    /// Short label used by the bench harness output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Tier::IntraNuma => "intra-NUMA",
+            Tier::InterNuma => "inter-NUMA",
+            Tier::InterNode => "inter-node",
+        }
+    }
+}
+
+impl fmt::Display for Tier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A full placement: one core coordinate per unit, plus the topology that
+/// interprets it. Produced by a [`PinPolicy`].
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub topology: Topology,
+    coords: Vec<CoreCoord>,
+}
+
+impl Placement {
+    /// Place `units` units according to `policy`.
+    pub fn new(topology: Topology, units: usize, policy: &PinPolicy) -> Self {
+        let coords = policy.place(&topology, units);
+        Placement { topology, coords }
+    }
+
+    /// Number of placed units.
+    pub fn units(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Coordinate of `unit`.
+    pub fn coord(&self, unit: usize) -> CoreCoord {
+        self.coords[unit]
+    }
+
+    /// Communication tier between two units.
+    pub fn tier(&self, a: usize, b: usize) -> Tier {
+        self.topology.tier(self.coords[a], self.coords[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hermit_matches_fig7() {
+        let t = Topology::hermit(2);
+        assert_eq!(t.cores_per_node(), 32);
+        assert_eq!(t.total_cores(), 64);
+    }
+
+    #[test]
+    fn coord_roundtrip() {
+        let t = Topology::hermit(3);
+        for i in 0..t.total_cores() {
+            assert_eq!(t.index_of(t.coord_of(i)), i);
+        }
+    }
+
+    #[test]
+    fn tier_classification() {
+        let t = Topology::hermit(2);
+        let a = t.coord_of(0); // node 0, numa 0, core 0
+        let b = t.coord_of(1); // node 0, numa 0, core 1
+        let c = t.coord_of(8); // node 0, numa 1, core 0
+        let d = t.coord_of(32); // node 1
+        assert_eq!(t.tier(a, b), Tier::IntraNuma);
+        assert_eq!(t.tier(a, c), Tier::InterNuma);
+        assert_eq!(t.tier(a, d), Tier::InterNode);
+        assert_eq!(t.tier(a, a), Tier::IntraNuma);
+    }
+
+    #[test]
+    fn flat_topology_is_single_numa() {
+        let t = Topology::flat(16);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(t.tier(t.coord_of(i), t.coord_of(j)), Tier::IntraNuma);
+            }
+        }
+    }
+}

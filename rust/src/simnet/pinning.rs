@@ -1,0 +1,151 @@
+//! Unit → core placement policies, plus best-effort real OS pinning.
+//!
+//! The paper pins every processing unit to a physical core and constrains
+//! memory to the local NUMA domain (§V-A). Our units are threads; the
+//! placement policy decides which *modelled* core each unit occupies (which
+//! determines the cost tier of every communication pair), and
+//! [`pin_current_thread`] additionally pins the OS thread to a real core so
+//! that measurements are not polluted by migration.
+
+use super::{CoreCoord, Topology};
+
+/// How units are laid out onto the modelled topology.
+#[derive(Debug, Clone)]
+pub enum PinPolicy {
+    /// Fill cores in order: unit *i* → core *i* (NUMA domain fills up before
+    /// the next one is used). This is the paper's intra-NUMA configuration
+    /// for small unit counts.
+    Block,
+    /// Round-robin over NUMA domains: consecutive units land on different
+    /// NUMA domains of the same node, then different nodes.
+    ScatterNuma,
+    /// One unit per node: consecutive units land on different nodes (the
+    /// inter-node configuration).
+    ScatterNode,
+    /// Explicit coordinates, one per unit.
+    Custom(Vec<CoreCoord>),
+}
+
+impl PinPolicy {
+    /// Compute the coordinate of every unit under this policy.
+    ///
+    /// Placement wraps modulo the topology size, so oversubscription is
+    /// allowed (two units may share a modelled core).
+    pub fn place(&self, topo: &Topology, units: usize) -> Vec<CoreCoord> {
+        match self {
+            PinPolicy::Block => (0..units).map(|u| topo.coord_of(u % topo.total_cores())).collect(),
+            PinPolicy::ScatterNuma => {
+                let domains = topo.nodes * topo.numa_per_node;
+                (0..units)
+                    .map(|u| {
+                        let domain = u % domains;
+                        let core = (u / domains) % topo.cores_per_numa;
+                        CoreCoord {
+                            node: domain / topo.numa_per_node,
+                            numa: domain % topo.numa_per_node,
+                            core,
+                        }
+                    })
+                    .collect()
+            }
+            PinPolicy::ScatterNode => (0..units)
+                .map(|u| {
+                    let node = u % topo.nodes;
+                    let within = (u / topo.nodes) % topo.cores_per_node();
+                    CoreCoord {
+                        node,
+                        numa: within / topo.cores_per_numa,
+                        core: within % topo.cores_per_numa,
+                    }
+                })
+                .collect(),
+            PinPolicy::Custom(coords) => {
+                assert!(
+                    coords.len() >= units,
+                    "Custom placement has {} coords for {units} units",
+                    coords.len()
+                );
+                coords[..units].to_vec()
+            }
+        }
+    }
+}
+
+/// Pin the calling OS thread to `cpu % available_cpus`. Best effort: returns
+/// `false` (and leaves affinity unchanged) if the syscall fails or the
+/// platform is not Linux.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN);
+        if ncpu <= 0 {
+            return false;
+        }
+        let cpu = cpu % ncpu as usize;
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::Tier;
+
+    #[test]
+    fn block_fills_numa_first() {
+        let t = Topology::hermit(2);
+        let coords = PinPolicy::Block.place(&t, 10);
+        // first 8 units share NUMA 0 of node 0
+        for c in &coords[..8] {
+            assert_eq!((c.node, c.numa), (0, 0));
+        }
+        assert_eq!((coords[8].node, coords[8].numa), (0, 1));
+    }
+
+    #[test]
+    fn scatter_numa_pairs_are_inter_numa() {
+        let t = Topology::hermit(2);
+        let coords = PinPolicy::ScatterNuma.place(&t, 4);
+        assert_eq!(t.tier(coords[0], coords[1]), Tier::InterNuma);
+        assert_eq!(coords[0].node, coords[1].node);
+    }
+
+    #[test]
+    fn scatter_node_pairs_are_inter_node() {
+        let t = Topology::hermit(2);
+        let coords = PinPolicy::ScatterNode.place(&t, 4);
+        assert_eq!(t.tier(coords[0], coords[1]), Tier::InterNode);
+        // unit 2 wraps back to node 0
+        assert_eq!(coords[2].node, 0);
+        assert_ne!(coords[0], coords[2]);
+    }
+
+    #[test]
+    fn custom_placement_is_verbatim() {
+        let t = Topology::hermit(1);
+        let cs = vec![t.coord_of(3), t.coord_of(17)];
+        let placed = PinPolicy::Custom(cs.clone()).place(&t, 2);
+        assert_eq!(placed, cs);
+    }
+
+    #[test]
+    fn oversubscription_wraps() {
+        let t = Topology::flat(2);
+        let coords = PinPolicy::Block.place(&t, 5);
+        assert_eq!(coords[0], coords[2]);
+        assert_eq!(coords[0], coords[4]);
+    }
+
+    #[test]
+    fn real_pinning_is_best_effort() {
+        // Must not panic regardless of environment.
+        let _ = pin_current_thread(0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal property-based testing support (the `proptest` crate is not
+//! available offline, so the suite brings its own).
+//!
+//! Deterministic splitmix64 generator + a `forall` runner that reports the
+//! failing seed so any counterexample is reproducible with
+//! `Rng::new(seed)`.
+
+pub mod prop {
+    /// splitmix64 — tiny, fast, deterministic.
+    #[derive(Debug, Clone)]
+    pub struct Rng(u64);
+
+    impl Rng {
+        pub fn new(seed: u64) -> Self {
+            Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+        }
+
+        pub fn next_u64(&mut self) -> u64 {
+            self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = self.0;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+
+        /// Uniform in `[0, n)`. `n` must be > 0.
+        pub fn below(&mut self, n: usize) -> usize {
+            (self.next_u64() % n as u64) as usize
+        }
+
+        /// Uniform in `[lo, hi)`.
+        pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+            lo + self.below(hi - lo)
+        }
+
+        pub fn bool(&mut self) -> bool {
+            self.next_u64() & 1 == 1
+        }
+
+        /// Pick one element of a slice.
+        pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+            &xs[self.below(xs.len())]
+        }
+
+        /// A random byte vector of length `len`.
+        pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+            (0..len).map(|_| self.next_u64() as u8).collect()
+        }
+
+        /// A random subset (as sorted unique values) of `0..n`.
+        pub fn subset(&mut self, n: usize) -> Vec<usize> {
+            let mut v: Vec<usize> = (0..n).filter(|_| self.bool()).collect();
+            if v.is_empty() && n > 0 {
+                v.push(self.below(n));
+            }
+            v
+        }
+    }
+
+    /// Run `test` on `cases` generated inputs; panic with the seed and
+    /// case index on the first failure.
+    ///
+    /// ```no_run
+    /// use dart::testing::prop::{forall, Rng};
+    /// forall("sum-commutes", 100, |rng| (rng.below(10), rng.below(10)),
+    ///        |&(a, b)| (a + b == b + a).then_some(()).ok_or("sum".into()));
+    /// ```
+    pub fn forall<T: std::fmt::Debug>(
+        name: &str,
+        cases: usize,
+        gen: impl Fn(&mut Rng) -> T,
+        test: impl Fn(&T) -> Result<(), String>,
+    ) {
+        let base_seed = 0xDA27_0001u64;
+        for i in 0..cases {
+            let seed = base_seed.wrapping_add(i as u64);
+            let mut rng = Rng::new(seed);
+            let input = gen(&mut rng);
+            if let Err(msg) = test(&input) {
+                panic!(
+                    "property {name:?} failed at case {i} (seed {seed:#x}):\n  input: {input:?}\n  {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+            let x = r.range(5, 9);
+            assert!((5..9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("add-commutes", 200, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn subset_is_sorted_unique() {
+        let mut r = Rng::new(9);
+        for _ in 0..100 {
+            let s = r.subset(20);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

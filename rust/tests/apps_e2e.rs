@@ -1,0 +1,177 @@
+//! End-to-end application tests: the full three-layer stack (DART one-sided
+//! communication + AOT JAX/Pallas artifacts on PJRT) against
+//! single-threaded references. Requires `make artifacts`.
+
+use dart::apps::matmul::{self, SummaConfig};
+use dart::apps::stencil::{self, StencilConfig};
+use dart::dart::{run, DartConfig};
+use dart::runtime::{artifacts_dir, Engine};
+use std::sync::Mutex;
+
+fn have_artifacts() -> bool {
+    let dir = if artifacts_dir().exists() { artifacts_dir() } else { "../artifacts".into() };
+    if !dir.exists() {
+        panic!("artifacts/ not found — run `make artifacts` before `cargo test`");
+    }
+    std::env::set_var("DART_ARTIFACTS", &dir);
+    true
+}
+
+#[test]
+fn stencil_two_units_matches_reference() {
+    assert!(have_artifacts());
+    let cfg = StencilConfig::block32(25);
+    let report = Mutex::new(None);
+    run(DartConfig::with_units(2), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = stencil::run_distributed(env, &engine, &cfg).expect("run");
+        if env.myid() == 0 {
+            *report.lock().unwrap() = Some(r);
+        }
+    })
+    .unwrap();
+    let r = report.into_inner().unwrap().unwrap();
+    let (ref_grid, ref_res) = stencil::run_reference(2 * 32, 32, 25, 0.25);
+    let ref_sum: f64 = ref_grid.iter().map(|&v| v as f64).sum();
+    let rel = (r.global_checksum - ref_sum).abs() / ref_sum.abs().max(1e-12);
+    assert!(rel < 1e-5, "checksum {} vs {ref_sum}", r.global_checksum);
+    // residual curve decreasing + matches reference at every step
+    assert_eq!(r.residuals.len(), 25);
+    for (i, (d, rr)) in r.residuals.iter().zip(&ref_res).enumerate() {
+        let rel = (d - rr).abs() / rr.max(1e-12);
+        assert!(rel < 1e-3, "step {i}: {d} vs {rr}");
+    }
+    assert!(r.residuals.last().unwrap() < &r.residuals[0]);
+}
+
+#[test]
+fn stencil_four_units_block32() {
+    assert!(have_artifacts());
+    let cfg = StencilConfig::block32(10);
+    let report = Mutex::new(None);
+    run(DartConfig::with_units(4), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = stencil::run_distributed(env, &engine, &cfg).expect("run");
+        if env.myid() == 0 {
+            *report.lock().unwrap() = Some(r);
+        }
+    })
+    .unwrap();
+    let r = report.into_inner().unwrap().unwrap();
+    let (ref_grid, _) = stencil::run_reference(4 * 32, 32, 10, 0.25);
+    let ref_sum: f64 = ref_grid.iter().map(|&v| v as f64).sum();
+    let rel = (r.global_checksum - ref_sum).abs() / ref_sum.abs().max(1e-12);
+    assert!(rel < 1e-5);
+}
+
+#[test]
+fn stencil_single_unit_degenerate() {
+    // One unit: no halo traffic at all; must still match the reference.
+    assert!(have_artifacts());
+    let cfg = StencilConfig::block32(8);
+    let report = Mutex::new(None);
+    run(DartConfig::with_units(1), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = stencil::run_distributed(env, &engine, &cfg).expect("run");
+        *report.lock().unwrap() = Some(r);
+    })
+    .unwrap();
+    let r = report.into_inner().unwrap().unwrap();
+    let (ref_grid, _) = stencil::run_reference(32, 32, 8, 0.25);
+    let ref_sum: f64 = ref_grid.iter().map(|&v| v as f64).sum();
+    assert!((r.global_checksum - ref_sum).abs() / ref_sum.abs().max(1e-12) < 1e-5);
+}
+
+#[test]
+fn summa_three_units_matches_reference() {
+    assert!(have_artifacts());
+    let cfg = SummaConfig::block64();
+    let blocks = Mutex::new(vec![Vec::new(); 3]);
+    run(DartConfig::with_units(3), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = matmul::run_distributed(env, &engine, &cfg).expect("run");
+        blocks.lock().unwrap()[env.team_myid(cfg.team).unwrap()] = r.c_local;
+    })
+    .unwrap();
+    let c_dist: Vec<f32> = blocks.into_inner().unwrap().concat();
+    let c_ref = matmul::reference(3, cfg.mb, cfg.kb, cfg.nb);
+    assert_eq!(c_dist.len(), c_ref.len());
+    for (i, (d, r)) in c_dist.iter().zip(&c_ref).enumerate() {
+        assert!((d - r).abs() < 1e-3, "C[{i}]: {d} vs {r}");
+    }
+}
+
+#[test]
+fn summa_under_hermit_cost_model() {
+    // Same numerics with network costs injected (placement must not change
+    // results, only timing).
+    assert!(have_artifacts());
+    let cfg = SummaConfig::block64();
+    let norm = Mutex::new(0f64);
+    run(DartConfig::hermit(2, 2), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = matmul::run_distributed(env, &engine, &cfg).expect("run");
+        if env.myid() == 0 {
+            *norm.lock().unwrap() = r.global_norm;
+        }
+    })
+    .unwrap();
+    let c_ref = matmul::reference(2, cfg.mb, cfg.kb, cfg.nb);
+    let ref_norm = c_ref.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    let got = norm.into_inner().unwrap();
+    assert!((got - ref_norm).abs() / ref_norm < 1e-5, "{got} vs {ref_norm}");
+}
+
+#[test]
+fn stencil2d_matches_reference() {
+    // 2×2 unit grid, 32×32 blocks: row halos (contiguous gets) + column
+    // halos (strided gets) + Pallas sweep, vs the sequential reference.
+    assert!(have_artifacts());
+    let cfg = dart::apps::stencil2d::Stencil2dConfig::block32(2, 2, 12);
+    let report = Mutex::new(None);
+    run(DartConfig::with_units(4), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = dart::apps::stencil2d::run_distributed(env, &engine, &cfg).expect("run");
+        if env.myid() == 0 {
+            *report.lock().unwrap() = Some(r);
+        }
+    })
+    .unwrap();
+    let r = report.into_inner().unwrap().unwrap();
+    let want = dart::apps::stencil2d::reference_checksum(&cfg);
+    let rel = (r.global_checksum - want).abs() / want.abs().max(1e-12);
+    assert!(rel < 1e-5, "2D checksum {} vs {want}", r.global_checksum);
+    assert!(r.residuals.last().unwrap() < &r.residuals[0], "not converging");
+}
+
+#[test]
+fn stencil2d_wide_unit_grid() {
+    // Asymmetric 3×1 decomposition: only column halos are exercised.
+    assert!(have_artifacts());
+    let cfg = dart::apps::stencil2d::Stencil2dConfig::block32(3, 1, 8);
+    let report = Mutex::new(None);
+    run(DartConfig::with_units(3), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = dart::apps::stencil2d::run_distributed(env, &engine, &cfg).expect("run");
+        if env.myid() == 0 {
+            *report.lock().unwrap() = Some(r);
+        }
+    })
+    .unwrap();
+    let r = report.into_inner().unwrap().unwrap();
+    let want = dart::apps::stencil2d::reference_checksum(&cfg);
+    let rel = (r.global_checksum - want).abs() / want.abs().max(1e-12);
+    assert!(rel < 1e-5, "3×1 checksum {} vs {want}", r.global_checksum);
+}
+
+#[test]
+fn stencil2d_rejects_bad_grid() {
+    assert!(have_artifacts());
+    let cfg = dart::apps::stencil2d::Stencil2dConfig::block32(2, 2, 1);
+    run(DartConfig::with_units(3), |env| {
+        let engine = Engine::new().expect("engine");
+        let r = dart::apps::stencil2d::run_distributed(env, &engine, &cfg);
+        assert!(r.is_err(), "2×2 grid on 3 units must fail");
+    })
+    .unwrap();
+}

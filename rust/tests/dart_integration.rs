@@ -1,0 +1,303 @@
+//! Cross-module DART integration scenarios: overlapping teams, allocator
+//! churn under real windows, config variants, and failure paths.
+
+use dart::dart::{run, DartConfig, DartErr, DartGroup, GlobalPtr, DART_TEAM_ALL};
+use dart::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+fn cfg(units: usize) -> DartConfig {
+    DartConfig::with_units(units).with_pools(1 << 16, 1 << 17)
+}
+
+#[test]
+fn overlapping_teams_concurrent_traffic() {
+    // Teams {0,1,2} and {2,3,4} share unit 2; traffic on both teams in the
+    // same phase must stay isolated (separate pools + windows).
+    run(cfg(5), |env| {
+        let t_low = env.team_create(DART_TEAM_ALL, &DartGroup::from_units(vec![0, 1, 2])).unwrap();
+        let t_high = env.team_create(DART_TEAM_ALL, &DartGroup::from_units(vec![2, 3, 4])).unwrap();
+        let me = env.myid();
+
+        let mut gs = Vec::new();
+        if let Some(t) = t_low {
+            let g = env.team_memalloc_aligned(t, 64).unwrap();
+            let r = env.team_myid(t).unwrap();
+            let next = env.team_unit_l2g(t, (r + 1) % 3).unwrap();
+            env.put_blocking(g.with_unit(next), &[0xA0; 8]).unwrap();
+            gs.push((t, g));
+        }
+        if let Some(t) = t_high {
+            let g = env.team_memalloc_aligned(t, 64).unwrap();
+            let r = env.team_myid(t).unwrap();
+            let next = env.team_unit_l2g(t, (r + 1) % 3).unwrap();
+            env.put_blocking(g.with_unit(next), &[0xB; 8]).unwrap();
+            gs.push((t, g));
+        }
+        for (t, _) in &gs {
+            env.barrier(*t).unwrap();
+        }
+        // Unit 2 is in both teams and must see both values, in the right
+        // allocations.
+        if me == 2 {
+            assert_eq!(gs.len(), 2);
+            for (i, (_, g)) in gs.iter().enumerate() {
+                let mut buf = [0u8; 8];
+                env.get_blocking(g.with_unit(2), &mut buf).unwrap();
+                let want = if i == 0 { 0xA0 } else { 0xB };
+                assert_eq!(buf, [want; 8]);
+            }
+        }
+        for (t, g) in gs {
+            env.barrier(t).unwrap();
+            env.team_memfree(t, g).unwrap();
+            env.team_destroy(t).unwrap();
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn non_collective_alloc_churn_with_traffic() {
+    // Alloc/free cycles with live cross-unit puts between them: the
+    // free-list must recycle offsets without corrupting live allocations.
+    run(cfg(2), |env| {
+        let me = env.myid();
+        let mut live: Vec<(GlobalPtr, u8)> = Vec::new();
+        for round in 0..10u8 {
+            let g = env.memalloc(128).unwrap();
+            env.local_write(g, &[round; 128]).unwrap();
+            live.push((g, round));
+            if round % 3 == 2 {
+                let (old, _) = live.remove(0);
+                env.memfree(old).unwrap();
+            }
+            // Survivors intact?
+            for (g, tag) in &live {
+                let mut buf = [0u8; 128];
+                env.local_read(*g, &mut buf).unwrap();
+                assert_eq!(buf, [*tag; 128], "round {round}");
+            }
+        }
+        // Cross-unit read of the peer's newest allocation (exchange
+        // pointers through the world allocation).
+        let ex = env.team_memalloc_aligned(DART_TEAM_ALL, 16).unwrap();
+        let newest = live.last().unwrap().0;
+        env.put_blocking(
+            ex.with_unit(me).add(0),
+            &newest.to_bits().to_ne_bytes(),
+        )
+        .unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let peer = (me + 1) % 2;
+        let mut bits = [0u8; 16];
+        env.get_blocking(ex.with_unit(peer), &mut bits).unwrap();
+        let peer_g = GlobalPtr::from_bits(u128::from_ne_bytes(bits));
+        let mut buf = [0u8; 128];
+        env.get_blocking(peer_g, &mut buf).unwrap();
+        assert_eq!(buf, [live.last().unwrap().1; 128]);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, ex).unwrap();
+        for (g, _) in live {
+            env.memfree(g).unwrap();
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn indexed_teamlist_variant_full_suite() {
+    // The ablation-A2 configuration must behave identically.
+    let mut c = cfg(4);
+    c.indexed_teamlist = true;
+    run(c, |env| {
+        let grp = DartGroup::from_units(vec![0, 2]);
+        let t = env.team_create(DART_TEAM_ALL, &grp).unwrap();
+        if let Some(t) = t {
+            let g = env.team_memalloc_aligned(t, 32).unwrap();
+            let r = env.team_myid(t).unwrap();
+            env.put_blocking(g.with_unit(env.myid()), &[r as u8 + 1; 4]).unwrap();
+            env.barrier(t).unwrap();
+            let other = env.team_unit_l2g(t, (r + 1) % 2).unwrap();
+            let mut buf = [0u8; 4];
+            env.get_blocking(g.with_unit(other), &mut buf).unwrap();
+            assert_eq!(buf, [((r + 1) % 2) as u8 + 1; 4]);
+            env.barrier(t).unwrap();
+            env.team_memfree(t, g).unwrap();
+            env.team_destroy(t).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn pool_exhaustion_reports_oom_and_recovers() {
+    run(cfg(2), |env| {
+        // team pool is 128 KiB; exhaust it.
+        let a = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 16).unwrap();
+        let b = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 16).unwrap();
+        match env.team_memalloc_aligned(DART_TEAM_ALL, 8) {
+            Err(DartErr::OutOfMemory { .. }) => {}
+            other => panic!("expected OOM, got {other:?}"),
+        }
+        env.team_memfree(DART_TEAM_ALL, b).unwrap();
+        let c = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 12).unwrap();
+        env.team_memfree(DART_TEAM_ALL, c).unwrap();
+        env.team_memfree(DART_TEAM_ALL, a).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn accumulate_across_teams() {
+    run(cfg(4), |env| {
+        let evens = env.team_create(DART_TEAM_ALL, &DartGroup::from_units(vec![0, 2])).unwrap();
+        // World-level counter accumulated by everyone, team-level by evens.
+        let wc = env.team_memalloc_aligned(DART_TEAM_ALL, 8).unwrap();
+        env.accumulate(wc.with_unit(0), &[1i64], MpiOp::Sum).unwrap();
+        if let Some(t) = evens {
+            let tc = env.team_memalloc_aligned(t, 8).unwrap();
+            let owner = env.team_unit_l2g(t, 0).unwrap();
+            env.accumulate(tc.with_unit(owner), &[10i64], MpiOp::Sum).unwrap();
+            env.barrier(t).unwrap();
+            if env.team_myid(t).unwrap() == 0 {
+                let mut v = [0i64];
+                env.get_blocking_typed(tc.with_unit(owner), &mut v).unwrap();
+                assert_eq!(v[0], 20);
+            }
+            env.barrier(t).unwrap();
+            env.team_memfree(t, tc).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            let mut v = [0i64];
+            env.get_blocking_typed(wc.with_unit(0), &mut v).unwrap();
+            assert_eq!(v[0], 4);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, wc).unwrap();
+        if let Some(t) = evens {
+            env.team_destroy(t).unwrap();
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn locks_on_subteams() {
+    // A lock on a sub-team synchronizes only its members; outsiders make
+    // progress freely.
+    let outside_progress = AtomicUsize::new(0);
+    run(cfg(4), |env| {
+        let grp = DartGroup::from_units(vec![1, 3]);
+        let t = env.team_create(DART_TEAM_ALL, &grp).unwrap();
+        if let Some(t) = t {
+            let lock = env.lock_init(t).unwrap();
+            let counter = env.team_memalloc_aligned(t, 8).unwrap();
+            let owner = env.team_unit_l2g(t, 0).unwrap();
+            for _ in 0..20 {
+                env.lock_acquire(&lock).unwrap();
+                let mut v = [0i64];
+                env.get_blocking_typed(counter.with_unit(owner), &mut v).unwrap();
+                v[0] += 1;
+                env.put_blocking_typed(counter.with_unit(owner), &v).unwrap();
+                env.lock_release(&lock).unwrap();
+            }
+            env.barrier(t).unwrap();
+            if env.team_myid(t).unwrap() == 0 {
+                let mut v = [0i64];
+                env.get_blocking_typed(counter.with_unit(owner), &mut v).unwrap();
+                assert_eq!(v[0], 40);
+            }
+            env.barrier(t).unwrap();
+            env.lock_free(lock).unwrap();
+            env.team_memfree(t, counter).unwrap();
+        } else {
+            outside_progress.fetch_add(1, Ordering::SeqCst);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if let Some(t) = t {
+            env.team_destroy(t).unwrap();
+        }
+    })
+    .unwrap();
+    assert_eq!(outside_progress.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn collectives_typed_roundtrips() {
+    run(cfg(4), |env| {
+        // reduce to a non-zero root
+        let mine = [env.myid() as f64, 1.0];
+        let mut out = [0f64; 2];
+        env.reduce(DART_TEAM_ALL, &mine, &mut out, MpiOp::Sum, 2).unwrap();
+        if env.team_myid(DART_TEAM_ALL).unwrap() == 2 {
+            assert_eq!(out, [6.0, 4.0]);
+        }
+        // scatter from root 1
+        let send: Vec<u8> = if env.myid() == 1 { (0..8).collect() } else { vec![] };
+        let mut mine2 = [0u8; 2];
+        env.scatter(DART_TEAM_ALL, &send, &mut mine2, 1).unwrap();
+        assert_eq!(mine2, [2 * env.myid() as u8, 2 * env.myid() as u8 + 1]);
+        // alltoall
+        let me = env.myid() as u8;
+        let send3: Vec<u8> = (0..4).flat_map(|j| [me, j]).collect();
+        let mut recv3 = vec![0u8; 8];
+        env.alltoall(DART_TEAM_ALL, &send3, &mut recv3, 2).unwrap();
+        for src in 0..4 {
+            assert_eq!(&recv3[src * 2..src * 2 + 2], &[src as u8, me]);
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn hermit_cost_model_full_stack() {
+    // The whole DART stack under the calibrated cost model: correctness is
+    // unchanged, and inter-node blocking puts are slower than intra-NUMA.
+    let times = Mutex::new(Vec::new());
+    run(DartConfig::hermit(2, 2).with_pools(1 << 14, 1 << 14), |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 4096).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            let buf = [1u8; 256];
+            let mut best = f64::INFINITY;
+            for _ in 0..30 {
+                let t = std::time::Instant::now();
+                env.put_blocking(g.with_unit(1), &buf).unwrap();
+                best = best.min(t.elapsed().as_nanos() as f64);
+            }
+            times.lock().unwrap().push(best);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    let intra = times.into_inner().unwrap()[0];
+    // intra-NUMA baseline ≈ 350ns modelled latency; must be visible.
+    assert!(intra > 250.0, "cost model not applied: {intra}ns");
+}
+
+#[test]
+fn group_api_and_team_round_trip_every_subset() {
+    // For a 4-unit world, EVERY non-empty subset forms a working team.
+    run(cfg(4), |env| {
+        for mask in 1u32..16 {
+            let members: Vec<i32> = (0..4).filter(|u| mask & (1 << u) != 0).collect();
+            let grp = DartGroup::from_units(members.clone());
+            let t = env.team_create(DART_TEAM_ALL, &grp).unwrap();
+            if members.contains(&env.myid()) {
+                let t = t.unwrap();
+                assert_eq!(env.team_size(t).unwrap(), members.len());
+                let g = env.team_get_group(t).unwrap();
+                assert_eq!(g.members(), &members[..]);
+                env.barrier(t).unwrap();
+                env.team_destroy(t).unwrap();
+            } else {
+                assert!(t.is_none());
+            }
+        }
+    })
+    .unwrap();
+}

@@ -1,0 +1,358 @@
+//! Stress and semantics tests of the MPI-3 substrate under concurrency —
+//! the behaviours DART's correctness rests on.
+
+use dart::mpisim::{
+    as_bytes, as_bytes_mut, Group, LockKind, MpiOp, MpiType, RmaRequest, Win, World, WorldConfig,
+    ANY_SOURCE,
+};
+use dart::simnet::{CostModel, PinPolicy, Topology};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[test]
+fn p2p_flood_many_to_one_any_source() {
+    // 7 senders × 50 tagged messages funneled into rank 0 via ANY_SOURCE;
+    // per-pair ordering must hold even under interleaving.
+    World::run(WorldConfig::local(8), |mpi| {
+        let c = mpi.comm_world();
+        if c.rank() == 0 {
+            let mut last_seen = vec![-1i64; 8];
+            for _ in 0..7 * 50 {
+                let (data, st) = c.recv_vec(ANY_SOURCE, 3).unwrap();
+                let seq = i64::from_ne_bytes(data.try_into().unwrap());
+                assert!(seq > last_seen[st.source], "overtaking from {}", st.source);
+                last_seen[st.source] = seq;
+            }
+        } else {
+            for seq in 0..50i64 {
+                c.send(&seq.to_ne_bytes(), 0, 3).unwrap();
+            }
+        }
+    });
+}
+
+#[test]
+fn collective_storm_interleaved_kinds() {
+    // A long fixed program of mixed collectives on two communicators;
+    // any tag/context leakage between them deadlocks or corrupts.
+    World::run(WorldConfig::local(6), |mpi| {
+        let world = mpi.comm_world();
+        let sub = world.split(Some((mpi.world_rank() % 2) as i32), 0).unwrap().unwrap();
+        for round in 0..30u64 {
+            world.barrier().unwrap();
+            let mut v = [round * 10 + 1];
+            sub.bcast(as_bytes_mut(&mut v), 0).unwrap();
+            assert_eq!(v[0], round * 10 + 1);
+            let mine = [mpi.world_rank() as u64];
+            let mut sum = [0u64];
+            sub.allreduce(as_bytes(&mine), as_bytes_mut(&mut sum), MpiOp::Sum, MpiType::U64)
+                .unwrap();
+            let expect: u64 = (0..6u64).filter(|r| *r as usize % 2 == mpi.world_rank() % 2).sum();
+            assert_eq!(sum[0], expect);
+            let mut all = [0u64; 6];
+            world.allgather(as_bytes(&mine), as_bytes_mut(&mut all)).unwrap();
+            assert_eq!(all, [0, 1, 2, 3, 4, 5]);
+        }
+    });
+}
+
+#[test]
+fn window_concurrent_disjoint_puts() {
+    // Every rank owns a distinct stripe of every segment: all-to-all puts
+    // with no conflicts must all land.
+    const N: usize = 6;
+    World::run(WorldConfig::local(N), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, N * 8).unwrap();
+        win.lock_all().unwrap();
+        let me = c.rank() as u64;
+        for target in 0..N {
+            let val = (me << 32) | target as u64;
+            win.put(&val.to_ne_bytes(), target, c.rank() * 8).unwrap();
+        }
+        win.flush_all().unwrap();
+        c.barrier().unwrap();
+        let mut mine = vec![0u64; N];
+        win.read_local(0, as_bytes_mut(&mut mine)).unwrap();
+        for (writer, &v) in mine.iter().enumerate() {
+            assert_eq!(v, ((writer as u64) << 32) | me, "stripe from {writer}");
+        }
+        win.unlock_all().unwrap();
+        c.barrier().unwrap();
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn rma_request_waitall_bulk() {
+    World::run(WorldConfig::local(2), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 1 << 16).unwrap();
+        win.lock_all().unwrap();
+        if c.rank() == 0 {
+            let mut reqs = Vec::new();
+            for i in 0..512u64 {
+                let r = win.rput(&i.to_ne_bytes(), 1, (i as usize) * 8).unwrap();
+                reqs.push(r);
+            }
+            assert!(reqs.len() == 512);
+            RmaRequest::waitall(reqs);
+        }
+        c.barrier().unwrap();
+        if c.rank() == 1 {
+            let mut all = vec![0u64; 512];
+            win.read_local(0, as_bytes_mut(&mut all)).unwrap();
+            for (i, &v) in all.iter().enumerate() {
+                assert_eq!(v, i as u64);
+            }
+        }
+        win.unlock_all().unwrap();
+        c.barrier().unwrap();
+    });
+}
+
+#[test]
+fn atomics_mixed_fetch_ops() {
+    // Concurrent Sum/Band/Bor fetch-ops against one counter must linearize:
+    // with only Sum(+1) from N ranks × K times, final == N*K, and every
+    // fetched value is unique in [0, N*K).
+    const N: usize = 6;
+    const K: usize = 40;
+    let seen = Mutex::new(vec![false; N * K]);
+    World::run(WorldConfig::local(N), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 8).unwrap();
+        win.lock_all().unwrap();
+        for _ in 0..K {
+            let old = win.fetch_and_op_with(1i64, 0, 0, MpiOp::Sum).unwrap();
+            let mut s = seen.lock().unwrap();
+            assert!(!s[old as usize], "duplicate ticket {old}");
+            s[old as usize] = true;
+        }
+        c.barrier().unwrap();
+        if c.rank() == 0 {
+            let mut v = [0i64];
+            win.read_local(0, as_bytes_mut(&mut v)).unwrap();
+            assert_eq!(v[0], (N * K) as i64);
+        }
+        win.unlock_all().unwrap();
+        c.barrier().unwrap();
+    });
+    assert!(seen.into_inner().unwrap().iter().all(|&b| b));
+}
+
+#[test]
+fn exclusive_lock_blocks_shared_and_vice_versa() {
+    use std::sync::atomic::AtomicI32;
+    let in_exclusive = AtomicI32::new(0);
+    World::run(WorldConfig::local(4), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 8).unwrap();
+        for _ in 0..25 {
+            if c.rank() % 2 == 0 {
+                win.lock(LockKind::Exclusive, 0).unwrap();
+                let v = in_exclusive.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(v, 0, "two holders inside exclusive epoch");
+                in_exclusive.fetch_sub(1, Ordering::SeqCst);
+                win.unlock(0).unwrap();
+            } else {
+                win.lock(LockKind::Shared, 0).unwrap();
+                assert_eq!(in_exclusive.load(Ordering::SeqCst), 0, "shared overlaps exclusive");
+                win.unlock(0).unwrap();
+            }
+        }
+        c.barrier().unwrap();
+        win.free().unwrap();
+    });
+}
+
+#[test]
+fn comm_create_excludes_non_members_traffic() {
+    World::run(WorldConfig::local(4), |mpi| {
+        let world = mpi.comm_world();
+        let g = Group::new(vec![1, 2]);
+        let sub = world.create_from_group(&g).unwrap();
+        // Members talk on sub; outsiders blast world with the same tag.
+        if let Some(sub) = sub {
+            if sub.rank() == 0 {
+                sub.send(b"inner", 1, 5).unwrap();
+            } else {
+                let (m, _) = sub.recv_vec(0, 5).unwrap();
+                assert_eq!(m, b"inner");
+            }
+        } else {
+            // rank 0 sends a decoy world message with the same tag to rank 2
+            if world.rank() == 0 {
+                world.send(b"decoy", 2, 5).unwrap();
+            }
+        }
+        world.barrier().unwrap();
+        // The decoy must still be in rank 2's world mailbox (not consumed
+        // by the sub-communicator recv).
+        if world.rank() == 2 {
+            let (m, _) = world.recv_vec(0, 5).unwrap();
+            assert_eq!(m, b"decoy");
+        }
+    });
+}
+
+#[test]
+fn cost_model_shapes_latency_tiers() {
+    // With the Hermit cost model, a blocking transfer inter-node must take
+    // measurably longer than intra-NUMA (the simnet substitution doing its
+    // job inside the full MPI stack).
+    let lat = |pin: PinPolicy| -> f64 {
+        let out = Mutex::new(0f64);
+        let cfg = WorldConfig {
+            nranks: 2,
+            topology: Topology::hermit(2),
+            pin,
+            cost: CostModel::hermit(),
+            pin_os_threads: false,
+        };
+        World::run(cfg, |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate(&c, 4096).unwrap();
+            win.lock_all().unwrap();
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let buf = [7u8; 512];
+                let mut best = f64::INFINITY;
+                for _ in 0..50 {
+                    let t = std::time::Instant::now();
+                    win.put(&buf, 1, 0).unwrap();
+                    win.flush(1).unwrap();
+                    best = best.min(t.elapsed().as_nanos() as f64);
+                }
+                *out.lock().unwrap() = best;
+            }
+            c.barrier().unwrap();
+            win.unlock_all().unwrap();
+        });
+        out.into_inner().unwrap()
+    };
+    let intra = lat(PinPolicy::Block);
+    let inter_numa = lat(PinPolicy::ScatterNuma);
+    let inter_node = lat(PinPolicy::ScatterNode);
+    assert!(intra < inter_numa, "intra {intra} !< inter-NUMA {inter_numa}");
+    assert!(inter_numa < inter_node, "inter-NUMA {inter_numa} !< inter-node {inter_node}");
+}
+
+#[test]
+fn e1_protocol_jump_is_measurable() {
+    // DTCT(8 KiB) must exceed DTCT(4 KiB) by clearly more than the pure
+    // linear bandwidth term — the Figs 8/9 jump.
+    let out = Mutex::new((0f64, 0f64));
+    World::run(WorldConfig::hermit(2, 1), |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 1 << 14).unwrap();
+        win.lock_all().unwrap();
+        c.barrier().unwrap();
+        if c.rank() == 0 {
+            let mut best4 = f64::INFINITY;
+            let mut best8 = f64::INFINITY;
+            let b4 = vec![1u8; 4096];
+            let b8 = vec![1u8; 8192];
+            for _ in 0..50 {
+                let t = std::time::Instant::now();
+                win.put(&b4, 1, 0).unwrap();
+                win.flush(1).unwrap();
+                best4 = best4.min(t.elapsed().as_nanos() as f64);
+                let t = std::time::Instant::now();
+                win.put(&b8, 1, 0).unwrap();
+                win.flush(1).unwrap();
+                best8 = best8.min(t.elapsed().as_nanos() as f64);
+            }
+            *out.lock().unwrap() = (best4, best8);
+        }
+        c.barrier().unwrap();
+        win.unlock_all().unwrap();
+    });
+    let (t4, t8) = out.into_inner().unwrap();
+    // Linear growth alone would be ~4096/10 ≈ 410 ns; the E1 switch adds
+    // ~900 ns + double copy ≈ 2700 ns. Require at least 3× the linear term.
+    assert!(t8 - t4 > 1200.0, "no E1 jump: t4={t4} t8={t8}");
+}
+
+#[test]
+fn nonblocking_channel_overlap_beats_serial_latency() {
+    // 32 rputs drained by one waitall must finish well below 32 sequential
+    // blocking DTCTs — the virtual-time channel models pipelining: only
+    // the serialization term occupies the channel; the wire latency (the
+    // dominant term for small messages) is paid once, not per op. Use the
+    // inter-node tier (1.4 µs latency) so the modelled effect dominates
+    // the software cost even in unoptimized builds.
+    let out = Mutex::new((0f64, 0f64));
+    let mut cfg = WorldConfig::hermit(2, 2);
+    cfg.pin = PinPolicy::ScatterNode;
+    World::run(cfg, |mpi| {
+        let c = mpi.comm_world();
+        let win = Win::allocate(&c, 1 << 16).unwrap();
+        win.lock_all().unwrap();
+        c.barrier().unwrap();
+        if c.rank() == 0 {
+            let buf = vec![3u8; 1024];
+            // serial blocking (best of 3 to shed scheduler noise)
+            let mut serial = f64::INFINITY;
+            let mut overlapped = f64::INFINITY;
+            for _ in 0..3 {
+                let t = std::time::Instant::now();
+                for _ in 0..32 {
+                    win.put(&buf, 1, 0).unwrap();
+                    win.flush(1).unwrap();
+                }
+                serial = serial.min(t.elapsed().as_nanos() as f64);
+                let t = std::time::Instant::now();
+                let reqs: Vec<_> = (0..32).map(|_| win.rput(&buf, 1, 0).unwrap()).collect();
+                RmaRequest::waitall(reqs);
+                overlapped = overlapped.min(t.elapsed().as_nanos() as f64);
+            }
+            *out.lock().unwrap() = (serial, overlapped);
+        }
+        c.barrier().unwrap();
+        win.unlock_all().unwrap();
+    });
+    let (serial, overlapped) = out.into_inner().unwrap();
+    assert!(
+        overlapped < serial * 0.7,
+        "no overlap benefit: serial={serial} overlapped={overlapped}"
+    );
+}
+
+#[test]
+fn window_free_then_reallocate_many_cycles() {
+    World::run(WorldConfig::local(3), |mpi| {
+        let c = mpi.comm_world();
+        for cycle in 0..20u8 {
+            let win = Win::allocate(&c, 256).unwrap();
+            win.lock_all().unwrap();
+            let next = (c.rank() + 1) % 3;
+            win.put(&[cycle; 16], next, 0).unwrap();
+            win.flush(next).unwrap();
+            c.barrier().unwrap();
+            let mut got = [0u8; 16];
+            win.read_local(0, &mut got).unwrap();
+            assert_eq!(got, [cycle; 16]);
+            win.unlock_all().unwrap();
+            win.free().unwrap();
+        }
+    });
+}
+
+#[test]
+fn oversubscribed_world_still_correct() {
+    // More ranks than modelled cores (and far more than physical cores):
+    // correctness must be placement-independent.
+    let sum = AtomicU64::new(0);
+    let mut cfg = WorldConfig::local(12);
+    cfg.topology = Topology::flat(4);
+    World::run(cfg, |mpi| {
+        let c = mpi.comm_world();
+        let mine = [mpi.world_rank() as u64];
+        let mut out = [0u64];
+        c.allreduce(as_bytes(&mine), as_bytes_mut(&mut out), MpiOp::Sum, MpiType::U64).unwrap();
+        assert_eq!(out[0], 66);
+        sum.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(sum.load(Ordering::SeqCst), 12);
+}

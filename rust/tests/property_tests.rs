@@ -1,0 +1,493 @@
+//! Property-based tests over the runtime's core invariants, using the
+//! in-repo `dart::testing::prop` framework (seeded, reproducible).
+
+use dart::dart::group::DartGroup;
+use dart::dart::translation::{FreeListAllocator, DART_ALIGN};
+use dart::dart::{DartConfig, GlobalPtr, DART_TEAM_ALL};
+use dart::mpisim::Group as MpiGroup;
+use dart::testing::prop::{forall, Rng};
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// DART groups: sortedness + set semantics under random op sequences
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum GroupOp {
+    Add(i32),
+    Del(i32),
+    UnionWith(Vec<i32>),
+    IntersectWith(Vec<i32>),
+}
+
+fn gen_group_ops(rng: &mut Rng) -> Vec<GroupOp> {
+    let n_ops = rng.range(1, 40);
+    (0..n_ops)
+        .map(|_| match rng.below(4) {
+            0 => GroupOp::Add(rng.below(32) as i32),
+            1 => GroupOp::Del(rng.below(32) as i32),
+            2 => GroupOp::UnionWith(rng.subset(32).into_iter().map(|u| u as i32).collect()),
+            _ => GroupOp::IntersectWith(rng.subset(32).into_iter().map(|u| u as i32).collect()),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_group_matches_set_model_and_stays_sorted() {
+    let world = MpiGroup::new((0..32).collect());
+    forall("group-set-model", 300, gen_group_ops, |ops| {
+        let mut g = DartGroup::new();
+        let mut model: BTreeSet<i32> = BTreeSet::new();
+        for op in ops {
+            match op {
+                GroupOp::Add(u) => {
+                    g.addmember(*u, &world).map_err(|e| e.to_string())?;
+                    model.insert(*u);
+                }
+                GroupOp::Del(u) => {
+                    g.delmember(*u);
+                    model.remove(u);
+                }
+                GroupOp::UnionWith(us) => {
+                    g = DartGroup::union(&g, &DartGroup::from_units(us.clone()));
+                    model.extend(us.iter().copied());
+                }
+                GroupOp::IntersectWith(us) => {
+                    g = DartGroup::intersect(&g, &DartGroup::from_units(us.clone()));
+                    model = model.intersection(&us.iter().copied().collect()).copied().collect();
+                }
+            }
+            if !g.is_sorted_invariant() {
+                return Err(format!("group lost sortedness: {:?}", g.members()));
+            }
+        }
+        let got: Vec<i32> = g.members().to_vec();
+        let want: Vec<i32> = model.into_iter().collect();
+        if got != want {
+            return Err(format!("set model mismatch: got {got:?}, want {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_union_commutes_and_mpi_union_does_not_sort() {
+    forall(
+        "union-commutes",
+        300,
+        |rng| {
+            let a: Vec<i32> = rng.subset(24).into_iter().map(|u| u as i32).collect();
+            let b: Vec<i32> = rng.subset(24).into_iter().map(|u| u as i32).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let ga = DartGroup::from_units(a.clone());
+            let gb = DartGroup::from_units(b.clone());
+            let u1 = DartGroup::union(&ga, &gb);
+            let u2 = DartGroup::union(&gb, &ga);
+            if u1 != u2 {
+                return Err(format!("DART union not commutative: {u1:?} vs {u2:?}"));
+            }
+            if !u1.is_sorted_invariant() {
+                return Err("union output unsorted".into());
+            }
+            // DART splits are a partition.
+            let parts = u1.split(3).map_err(|e| e.to_string())?;
+            let rejoined = parts.iter().fold(DartGroup::new(), |acc, p| DartGroup::union(&acc, p));
+            if rejoined != u1 {
+                return Err("split/union not a partition".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Free-list allocator: model-based alloc/free with invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocator_never_overlaps_and_coalesces() {
+    forall(
+        "allocator-model",
+        200,
+        |rng| {
+            let n_ops = rng.range(1, 60);
+            (0..n_ops)
+                .map(|_| (rng.bool(), rng.range(1, 600) as u64))
+                .collect::<Vec<(bool, u64)>>()
+        },
+        |ops| {
+            let mut a = FreeListAllocator::new(4096);
+            let mut live: Vec<(u64, u64)> = Vec::new(); // (base, rounded len)
+            for &(is_alloc, len) in ops {
+                if is_alloc || live.is_empty() {
+                    if let Ok(base) = a.alloc(len) {
+                        let rounded = len.div_ceil(DART_ALIGN) * DART_ALIGN;
+                        if base % DART_ALIGN != 0 {
+                            return Err(format!("unaligned base {base}"));
+                        }
+                        // no overlap with anything live
+                        for &(b, l) in &live {
+                            if base < b + l && b < base + rounded {
+                                return Err(format!(
+                                    "overlap: new [{base},{}) with [{b},{})",
+                                    base + rounded,
+                                    b + l
+                                ));
+                            }
+                        }
+                        if base + rounded > 4096 {
+                            return Err("allocation beyond pool".into());
+                        }
+                        live.push((base, rounded));
+                    }
+                } else {
+                    let idx = (len as usize) % live.len();
+                    let (base, _) = live.swap_remove(idx);
+                    a.free(base).map_err(|e| e.to_string())?;
+                }
+                if !a.check_invariants() {
+                    return Err("allocator invariants broken".into());
+                }
+            }
+            // Free everything → a full-size alloc must succeed (full
+            // coalescing).
+            for (base, _) in live.drain(..) {
+                a.free(base).map_err(|e| e.to_string())?;
+            }
+            a.alloc(4096).map_err(|_| "full coalescing failed".to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocator_deterministic_replicas() {
+    // The aligned-allocation property: two members running the same
+    // collective sequence get identical offsets.
+    forall(
+        "allocator-determinism",
+        200,
+        |rng| {
+            let n_ops = rng.range(1, 50);
+            (0..n_ops).map(|_| (rng.below(4) != 0, rng.range(1, 300) as u64)).collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut a = FreeListAllocator::new(1 << 14);
+            let mut b = FreeListAllocator::new(1 << 14);
+            let mut live = Vec::new();
+            for &(is_alloc, len) in ops {
+                if is_alloc || live.is_empty() {
+                    let ra = a.alloc(len);
+                    let rb = b.alloc(len);
+                    match (ra, rb) {
+                        (Ok(x), Ok(y)) if x == y => live.push(x),
+                        (Err(_), Err(_)) => {}
+                        other => return Err(format!("replicas diverged: {other:?}")),
+                    }
+                } else {
+                    let idx = (len as usize) % live.len();
+                    let base = live.swap_remove(idx);
+                    a.free(base).map_err(|e| e.to_string())?;
+                    b.free(base).map_err(|e| e.to_string())?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Global pointers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gptr_bits_roundtrip() {
+    forall(
+        "gptr-roundtrip",
+        1000,
+        |rng| GlobalPtr {
+            unitid: rng.next_u64() as i32,
+            segid: rng.next_u64() as i16,
+            flags: rng.next_u64() as u16,
+            offset: rng.next_u64(),
+        },
+        |g| {
+            let back = GlobalPtr::from_bits(g.to_bits());
+            if back != *g {
+                return Err(format!("roundtrip: {g:?} → {back:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// MPI group semantics vs DART expectations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_mpi_translate_ranks_consistent() {
+    forall(
+        "translate-ranks",
+        300,
+        |rng| {
+            let g1: Vec<usize> = rng.subset(16);
+            let g2: Vec<usize> = rng.subset(16);
+            (g1, g2)
+        },
+        |(m1, m2)| {
+            let g1 = MpiGroup::new(m1.clone());
+            let g2 = MpiGroup::new(m2.clone());
+            let all: Vec<usize> = (0..g1.size()).collect();
+            let tr = g1.translate_ranks(&all, &g2).map_err(|e| e.to_string())?;
+            for (r1, t) in all.iter().zip(&tr) {
+                let world = m1[*r1];
+                match t {
+                    Some(r2) => {
+                        if m2[*r2] != world {
+                            return Err(format!("translate maps {world} to {}", m2[*r2]));
+                        }
+                    }
+                    None => {
+                        if m2.contains(&world) {
+                            return Err(format!("missed member {world}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end DART property: random symmetric put/get traffic vs a model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_put_get_traffic_matches_model() {
+    // Random rounds of all-units-write / barrier / all-units-read over a
+    // shared symmetric allocation must behave like a plain array model.
+    forall(
+        "pgas-traffic",
+        12,
+        |rng| {
+            let units = rng.range(2, 5);
+            let rounds = rng.range(1, 5);
+            let seed = rng.next_u64();
+            (units, rounds, seed)
+        },
+        |&(units, rounds, seed)| {
+            let failed = Mutex::new(None::<String>);
+            dart::dart::run(
+                DartConfig::with_units(units).with_pools(1 << 14, 1 << 14),
+                |env| {
+                    let slots = env.size();
+                    let g = env.team_memalloc_aligned(DART_TEAM_ALL, (slots * 8) as u64).unwrap();
+                    // model[u][s] mirrors unit u's slot s.
+                    let mut model = vec![vec![0u64; slots]; slots];
+                    let mut rng = Rng::new(seed);
+                    for round in 0..rounds {
+                        // Every unit writes one value into one slot of one
+                        // target — the SAME schedule on every unit (SPMD),
+                        // but only my own writes are issued by me.
+                        for writer in 0..slots {
+                            let target = rng.below(slots);
+                            let slot = writer; // slot = writer ⇒ no write conflicts
+                            let val = rng.next_u64() ^ (round as u64) << 32;
+                            model[target][slot] = val;
+                            if writer == env.myid() as usize {
+                                let dst = g.with_unit(target as i32).add((slot * 8) as u64);
+                                env.put_blocking(dst, &val.to_ne_bytes()).unwrap();
+                            }
+                        }
+                        env.barrier(DART_TEAM_ALL).unwrap();
+                        // Every unit audits one random target.
+                        let audit = rng.below(slots);
+                        let mut got = vec![0u64; slots];
+                        env.get_blocking(
+                            g.with_unit(audit as i32),
+                            dart::mpisim::as_bytes_mut(&mut got),
+                        )
+                        .unwrap();
+                        if got != model[audit] {
+                            *failed.lock().unwrap() = Some(format!(
+                                "unit {} round {round}: target {audit} holds {got:?}, want {:?}",
+                                env.myid(),
+                                model[audit]
+                            ));
+                        }
+                        env.barrier(DART_TEAM_ALL).unwrap();
+                    }
+                    env.team_memfree(DART_TEAM_ALL, g).unwrap();
+                },
+            )
+            .unwrap();
+            match failed.into_inner().unwrap() {
+                Some(msg) => Err(msg),
+                None => Ok(()),
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// mpisim collectives vs plain-array models, random shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_collectives_match_models() {
+    use dart::mpisim::{as_bytes, as_bytes_mut, MpiOp, MpiType, World, WorldConfig};
+    forall(
+        "collectives-model",
+        15,
+        |rng| {
+            let units = rng.range(1, 7);
+            let elems = rng.range(1, 33);
+            let seed = rng.next_u64();
+            (units, elems, seed)
+        },
+        |&(units, elems, seed)| {
+            let failed = Mutex::new(None::<String>);
+            World::run(WorldConfig::local(units), |mpi| {
+                let c = mpi.comm_world();
+                let mut rng = Rng::new(seed ^ 0xC011);
+                // Same pseudo-random matrix on every rank (SPMD).
+                let data: Vec<Vec<i64>> = (0..units)
+                    .map(|_| (0..elems).map(|_| rng.next_u64() as i64 % 1000).collect())
+                    .collect();
+                let mine = &data[c.rank()];
+
+                // allreduce(sum) == column sums
+                let mut sum = vec![0i64; elems];
+                c.allreduce(as_bytes(mine), as_bytes_mut(&mut sum), MpiOp::Sum, MpiType::I64)
+                    .unwrap();
+                let want: Vec<i64> =
+                    (0..elems).map(|j| data.iter().map(|r| r[j]).sum()).collect();
+                if sum != want {
+                    *failed.lock().unwrap() = Some(format!("allreduce: {sum:?} != {want:?}"));
+                }
+
+                // allgather == concatenation in rank order
+                let mut all = vec![0i64; units * elems];
+                c.allgather(as_bytes(mine), as_bytes_mut(&mut all)).unwrap();
+                let flat: Vec<i64> = data.iter().flatten().copied().collect();
+                if all != flat {
+                    *failed.lock().unwrap() = Some("allgather mismatch".into());
+                }
+
+                // scan(max) == running column max over ranks 0..=me
+                let mut scanned = vec![0i64; elems];
+                c.scan(as_bytes(mine), as_bytes_mut(&mut scanned), MpiOp::Max, MpiType::I64)
+                    .unwrap();
+                let want: Vec<i64> = (0..elems)
+                    .map(|j| data[..=c.rank()].iter().map(|r| r[j]).max().unwrap())
+                    .collect();
+                if scanned != want {
+                    *failed.lock().unwrap() = Some("scan mismatch".into());
+                }
+
+                // bcast from a random (but SPMD-agreed) root
+                let root = (seed as usize) % units;
+                let mut b = if c.rank() == root { data[root].clone() } else { vec![0; elems] };
+                c.bcast(as_bytes_mut(&mut b), root).unwrap();
+                if b != data[root] {
+                    *failed.lock().unwrap() = Some("bcast mismatch".into());
+                }
+            });
+            match failed.into_inner().unwrap() {
+                Some(m) => Err(m),
+                None => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_alltoall_is_transpose() {
+    use dart::mpisim::{World, WorldConfig};
+    forall(
+        "alltoall-transpose",
+        10,
+        |rng| (rng.range(1, 7), rng.range(1, 9)),
+        |&(units, chunk)| {
+            let failed = Mutex::new(None::<String>);
+            World::run(WorldConfig::local(units), |mpi| {
+                let c = mpi.comm_world();
+                let me = c.rank() as u8;
+                let send: Vec<u8> =
+                    (0..units).flat_map(|j| vec![me ^ j as u8; chunk]).collect();
+                let mut recv = vec![0u8; units * chunk];
+                c.alltoall(&send, &mut recv, chunk).unwrap();
+                for src in 0..units {
+                    let want = vec![src as u8 ^ me; chunk];
+                    if &recv[src * chunk..(src + 1) * chunk] != want.as_slice() {
+                        *failed.lock().unwrap() =
+                            Some(format!("rank {me}: chunk from {src} wrong"));
+                    }
+                }
+            });
+            match failed.into_inner().unwrap() {
+                Some(m) => Err(m),
+                None => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_team_create_destroy_sequences_preserve_registry() {
+    // Random create/destroy interleavings: live teams always resolvable,
+    // destroyed teams never, ids strictly increasing.
+    forall(
+        "team-lifecycle",
+        10,
+        |rng| (rng.range(2, 5), rng.next_u64()),
+        |&(units, seed)| {
+            let failed = Mutex::new(None::<String>);
+            dart::dart::run(
+                DartConfig::with_units(units).with_pools(1 << 14, 1 << 14),
+                |env| {
+                    let mut rng = Rng::new(seed);
+                    let grp = env.group_all();
+                    let mut live = Vec::new();
+                    let mut max_id = DART_TEAM_ALL;
+                    for _ in 0..12 {
+                        // Same SPMD decision everywhere.
+                        if rng.bool() || live.is_empty() {
+                            let t = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
+                            if t <= max_id {
+                                *failed.lock().unwrap() =
+                                    Some(format!("id {t} not increasing (max {max_id})"));
+                            }
+                            max_id = t;
+                            live.push(t);
+                        } else {
+                            let idx = rng.below(live.len());
+                            let t = live.swap_remove(idx);
+                            env.team_destroy(t).unwrap();
+                            if env.team_myid(t).is_ok() {
+                                *failed.lock().unwrap() =
+                                    Some(format!("destroyed team {t} still resolves"));
+                            }
+                        }
+                        for &t in &live {
+                            if env.team_size(t).is_err() {
+                                *failed.lock().unwrap() =
+                                    Some(format!("live team {t} does not resolve"));
+                            }
+                        }
+                    }
+                },
+            )
+            .unwrap();
+            match failed.into_inner().unwrap() {
+                Some(msg) => Err(msg),
+                None => Ok(()),
+            }
+        },
+    );
+}

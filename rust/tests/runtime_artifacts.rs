@@ -1,0 +1,126 @@
+//! Integration: the Rust PJRT executor runs the real AOT artifacts and the
+//! numerics match the Python reference computations.
+//!
+//! Requires `make artifacts` to have run (the Makefile orders this before
+//! `cargo test`).
+
+use dart::runtime::{artifacts_dir, Engine};
+
+fn engine() -> Engine {
+    // Tests run from the workspace root; fall back to ../artifacts when
+    // invoked from a subdirectory.
+    let dir = if artifacts_dir().exists() { artifacts_dir() } else { "../artifacts".into() };
+    assert!(
+        dir.exists(),
+        "artifacts/ not found — run `make artifacts` before `cargo test`"
+    );
+    Engine::with_dir(dir).expect("PJRT CPU client")
+}
+
+/// CPU reference of the 5-point stencil step (mirrors ref.py).
+fn stencil_ref(padded: &[f32], hp: usize, wp: usize, alpha: f32) -> (Vec<f32>, f32) {
+    let (h, w) = (hp - 2, wp - 2);
+    let at = |i: usize, j: usize| padded[i * wp + j];
+    let mut out = vec![0f32; h * w];
+    let mut residual = 0f64;
+    for i in 0..h {
+        for j in 0..w {
+            let c = at(i + 1, j + 1);
+            let v = c + alpha * (at(i, j + 1) + at(i + 2, j + 1) + at(i + 1, j) + at(i + 1, j + 2)
+                - 4.0 * c);
+            out[i * w + j] = v;
+            residual += ((v - c) as f64).powi(2);
+        }
+    }
+    (out, residual as f32)
+}
+
+#[test]
+fn discovery_sees_catalog() {
+    let e = engine();
+    let names = e.available().unwrap();
+    assert!(names.iter().any(|n| n == "stencil_f32_64x64"), "catalog missing: {names:?}");
+    assert!(names.iter().any(|n| n == "summa_f32_128x128x128"));
+}
+
+#[test]
+fn stencil_artifact_matches_reference() {
+    let e = engine();
+    let exe = e.load("stencil_f32_32x32").unwrap();
+    assert_eq!(exe.artifact().inputs[0].dims, vec![34, 34]);
+
+    // Deterministic pseudo-random field.
+    let mut x = 123456789u64;
+    let mut rnd = || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((x >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+    };
+    let padded: Vec<f32> = (0..34 * 34).map(|_| rnd()).collect();
+
+    let outs = exe.run_f32(&[&padded]).unwrap();
+    assert_eq!(outs.len(), 2);
+    let (want, want_res) = stencil_ref(&padded, 34, 34, 0.25);
+    assert_eq!(outs[0].len(), 32 * 32);
+    for (g, w) in outs[0].iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4, "stencil mismatch: {g} vs {w}");
+    }
+    let res = outs[1][0];
+    assert!((res - want_res).abs() / want_res.max(1e-6) < 1e-3, "residual {res} vs {want_res}");
+}
+
+#[test]
+fn stencil_fixed_point_has_zero_residual() {
+    let e = engine();
+    let exe = e.load("stencil_f32_32x32").unwrap();
+    let padded = vec![2.5f32; 34 * 34];
+    let outs = exe.run_f32(&[&padded]).unwrap();
+    assert!(outs[0].iter().all(|&v| (v - 2.5).abs() < 1e-6));
+    assert!(outs[1][0].abs() < 1e-10);
+}
+
+#[test]
+fn summa_artifact_accumulates_product() {
+    let e = engine();
+    let exe = e.load("summa_f32_64x64x64").unwrap();
+    let n = 64usize;
+    // C = I, A = diag(2), B = ones ⇒ C + A@B = 1 + 2 everywhere on diag...
+    // use simple structured matrices with a closed form: A = row-index
+    // matrix? Keep it simple: A = I*2, B = ones → A@B = 2*ones.
+    let mut c = vec![0f32; n * n];
+    for i in 0..n {
+        c[i * n + i] = 1.0;
+    }
+    let mut a = vec![0f32; n * n];
+    for i in 0..n {
+        a[i * n + i] = 2.0;
+    }
+    let b = vec![1f32; n * n];
+    let outs = exe.run_f32(&[&c, &a, &b]).unwrap();
+    assert_eq!(outs.len(), 1);
+    for i in 0..n {
+        for j in 0..n {
+            let want = 2.0 + if i == j { 1.0 } else { 0.0 };
+            let got = outs[0][i * n + j];
+            assert!((got - want).abs() < 1e-5, "C[{i},{j}] = {got}, want {want}");
+        }
+    }
+}
+
+#[test]
+fn shape_validation_beats_pjrt_abort() {
+    let e = engine();
+    let exe = e.load("stencil_f32_32x32").unwrap();
+    let too_small = vec![0f32; 10];
+    let err = exe.run_f32(&[&too_small]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "got: {err}");
+    let err = exe.run_f32(&[]).unwrap_err();
+    assert!(matches!(err, dart::runtime::RuntimeErr::Shape { .. }));
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let e = engine();
+    let a = e.load("stencil_f32_32x32").unwrap();
+    let b = e.load("stencil_f32_32x32").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
