@@ -1,0 +1,26 @@
+# DART-MPI reproduction — build orchestration.
+#
+# `artifacts/` ships with the repo: the `.meta` sidecars drive the native
+# executor (rust/src/runtime/mod.rs), so the Rust stack builds and tests
+# offline. `make artifacts` regenerates real HLO text from the JAX/Pallas
+# sources when a JAX-capable Python is available.
+
+.PHONY: all build test bench artifacts clean
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	DART_BENCH_QUICK=1 cargo bench
+
+artifacts:
+	cd python && (python3 -m compile.aot --out-dir ../artifacts || \
+		echo "JAX unavailable — keeping the committed .meta catalog (native executor)")
+
+clean:
+	cargo clean

@@ -16,7 +16,7 @@ use dart::runtime::Engine;
 use std::sync::Mutex;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let cfg = SummaConfig::block64();
     let (m, k, n) = (cfg.mb * units, cfg.kb * units, cfg.nb);

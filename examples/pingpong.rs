@@ -18,7 +18,7 @@ use std::time::Instant;
 
 const REPS: usize = 200;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== DART vs MPI pingpong (blocking put DTCT / non-blocking put DTIT) ==");
     for (tier, pin) in [
         (Tier::IntraNuma, PinPolicy::Block),

@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 const CAP: u64 = 16; // ring capacity (slots)
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let per_prod: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(100);
     assert!(units >= 2, "need at least one producer and the consumer");
@@ -85,8 +85,7 @@ fn main() -> anyhow::Result<()> {
         env.barrier(DART_TEAM_ALL).unwrap();
         env.lock_free(lock).unwrap();
         env.team_memfree(DART_TEAM_ALL, ring).unwrap();
-    })
-    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    })?;
 
     let produced = produced_sum.load(Ordering::SeqCst);
     let consumed = consumed_sum.load(Ordering::SeqCst);

@@ -13,7 +13,7 @@ use dart::dart::{run, DartConfig, DartGroup, DART_TEAM_ALL};
 use dart::mpisim::MpiOp;
 use std::sync::Mutex;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     println!("== DART quickstart: {units} units ==");
     let log = Mutex::new(Vec::<String>::new());

@@ -17,7 +17,7 @@ use dart::runtime::Engine;
 use std::sync::Mutex;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(8);
     let steps: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(200);
     let cfg = StencilConfig::block64(steps);

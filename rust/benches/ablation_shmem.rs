@@ -51,9 +51,7 @@ fn main() {
             .zip(&regular)
             .map(|(&(s, sh), &(_, rg))| (s, sh, rg))
             .collect();
-        // table prints (size, DART=shmem, MPI=regular): relabel below
-        println!("\n-- {tier} (left column = shmem windows, right = regular) --");
-        print_comparison_table(&format!("A4 — {tier}"), "ns", &rows);
+        print_comparison_table(&format!("A4 — {tier}"), "ns", ("shmem", "regular"), &rows);
         let speedup_small: f64 = rows
             .iter()
             .filter(|&&(s, _, _)| s <= 4096)

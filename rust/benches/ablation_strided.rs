@@ -1,0 +1,93 @@
+//! Ablation A5 — strided (column-halo-shaped) transfers: the engine's
+//! single-request **vector** path vs the per-block loop it replaced.
+//!
+//! The access shape is a boundary column of a row-major `f32` grid:
+//! `count` blocks of 8 bytes, one per row, `stride` = 64 bytes. The
+//! vector path ([`dart::dart::DartEnv::get_strided`]) moves the whole
+//! pattern as one RMA request with one protocol handshake; the per-block
+//! baseline issues `count` independent requests (what
+//! `put_strided`/`get_strided` did before the engine refactor, and what
+//! `stencil2d` paid per column halo per iteration).
+//!
+//! Expected shape: the two paths pay the same bandwidth term, so the gap
+//! is `(count − 1)` per-message overheads — growing linearly with the
+//! block count and widest on the inter-node tier, where per-message costs
+//! are most expensive in the calibrated model.
+
+use dart::bench_util::{paper_placements, print_comparison_table, Samples};
+use dart::dart::{run, DartConfig, DartHandle, DART_TEAM_ALL};
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+const BLOCK: usize = 8; // bytes per block (one f64-sized grid element)
+const STRIDE: u64 = 64; // bytes between remote block starts (row pitch)
+const REPS: usize = 64;
+
+fn block_counts() -> Vec<usize> {
+    vec![1, 2, 4, 8, 16, 32, 64, 128, 256]
+}
+
+/// Median completion time of a `count`-block strided get, per path.
+fn measure(pin: PinPolicy, vector_path: bool, counts: &[usize]) -> Vec<(usize, f64)> {
+    let rows = Mutex::new(Vec::new());
+    let cfg = DartConfig::hermit(2, 2).with_pin(pin);
+    run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 1 << 16).unwrap();
+        let target = g.with_unit(1);
+        for &count in counts {
+            let mut dst = vec![0u8; count * BLOCK];
+            env.barrier(DART_TEAM_ALL).unwrap();
+            if env.myid() == 0 {
+                let mut s = Samples::new();
+                for _ in 0..REPS {
+                    let t = Instant::now();
+                    if vector_path {
+                        let h = env
+                            .get_strided(target, &mut dst, count, BLOCK, STRIDE)
+                            .unwrap();
+                        env.wait(h).unwrap();
+                    } else {
+                        // The pre-engine formulation: one request per block.
+                        let mut handles: Vec<DartHandle> = Vec::with_capacity(count);
+                        for (i, chunk) in dst.chunks_exact_mut(BLOCK).enumerate() {
+                            handles.push(
+                                env.get(target.add(i as u64 * STRIDE), chunk).unwrap(),
+                            );
+                        }
+                        env.waitall(handles).unwrap();
+                    }
+                    s.push(t.elapsed().as_nanos() as f64);
+                }
+                rows.lock().unwrap().push((count, s.median()));
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    rows.into_inner().unwrap()
+}
+
+fn main() {
+    println!("==== Ablation A5 — strided column transfers: vector vs per-block ====");
+    println!(
+        "(blocking strided get of N × {BLOCK} B blocks, stride {STRIDE} B; median of {REPS} reps; \
+         table x-axis = block count)"
+    );
+    let counts = block_counts();
+    for (tier, pin) in paper_placements() {
+        let vector = measure(pin.clone(), true, &counts);
+        let blocks = measure(pin, false, &counts);
+        let rows: Vec<(usize, f64, f64)> = vector
+            .iter()
+            .zip(&blocks)
+            .map(|(&(n, v), &(_, b))| (n, v, b))
+            .collect();
+        print_comparison_table(&format!("A5 — {tier}"), "ns", ("vector", "per-block"), &rows);
+        let wins = rows.iter().filter(|&&(n, v, b)| n >= 4 && v < b).count();
+        let total = rows.iter().filter(|&&(n, _, _)| n >= 4).count();
+        println!("vector faster at {wins}/{total} sizes ≥ 4 blocks  [{tier}]");
+    }
+    println!("\nExpected: vector ≤ per-block everywhere, gap ∝ block count (one handshake vs N).");
+}

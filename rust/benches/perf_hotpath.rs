@@ -5,6 +5,12 @@
 //! check, bounds check) with the network cost model DISABLED, against the
 //! raw mpisim window ops. The delta is the pure DART-layer software
 //! overhead — the quantity the whole §V evaluation is about.
+//!
+//! The engine's segment cache is measured in both states (on/off) so the
+//! cached-resolution win is tracked per run. Results are printed AND
+//! written to `BENCH_hotpath.json` (op latencies + request counts from
+//! [`dart::dart::Metrics`]) so the perf trajectory is machine-readable
+//! from this PR onward.
 
 use dart::bench_util::{fmt_ns, Samples};
 use dart::dart::{run, DartConfig, DART_TEAM_ALL};
@@ -15,9 +21,26 @@ use std::time::Instant;
 
 const REPS: usize = 20_000;
 
-fn dart_side(collective: bool) -> (f64, f64, f64) {
-    let out = Mutex::new((0f64, 0f64, 0f64));
-    let cfg = DartConfig::with_units(2).with_cost(CostModel::zero()).with_pools(1 << 16, 1 << 16);
+/// One measured configuration: median ns per op + operation counters.
+#[derive(Clone, Default)]
+struct Shot {
+    put_blocking_ns: f64,
+    get_blocking_ns: f64,
+    put_dtit_ns: f64,
+    puts: u64,
+    gets: u64,
+    puts_blocking: u64,
+    gets_blocking: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+fn dart_side(collective: bool, segment_cache: bool) -> Shot {
+    let out = Mutex::new(Shot::default());
+    let cfg = DartConfig::with_units(2)
+        .with_cost(CostModel::zero())
+        .with_pools(1 << 16, 1 << 16)
+        .with_segment_cache(segment_cache);
     run(cfg, |env| {
         let gptr = if collective {
             env.team_memalloc_aligned(DART_TEAM_ALL, 4096).unwrap().with_unit(1)
@@ -61,7 +84,17 @@ fn dart_side(collective: bool) -> (f64, f64, f64) {
                 s_nb.push(t.elapsed().as_nanos() as f64 / 1000.0);
                 env.waitall(handles).unwrap();
             }
-            *out.lock().unwrap() = (s_put.median(), s_get.median(), s_nb.median());
+            *out.lock().unwrap() = Shot {
+                put_blocking_ns: s_put.median(),
+                get_blocking_ns: s_get.median(),
+                put_dtit_ns: s_nb.median(),
+                puts: env.metrics.puts.get(),
+                gets: env.metrics.gets.get(),
+                puts_blocking: env.metrics.puts_blocking.get(),
+                gets_blocking: env.metrics.gets_blocking.get(),
+                cache_hits: env.metrics.cache_hits.get(),
+                cache_misses: env.metrics.cache_misses.get(),
+            };
         }
         env.barrier(DART_TEAM_ALL).unwrap();
     })
@@ -69,8 +102,8 @@ fn dart_side(collective: bool) -> (f64, f64, f64) {
     out.into_inner().unwrap()
 }
 
-fn mpi_side() -> (f64, f64, f64) {
-    let out = Mutex::new((0f64, 0f64, 0f64));
+fn mpi_side() -> Shot {
+    let out = Mutex::new(Shot::default());
     World::run(WorldConfig::local(2), |mpi| {
         let c = mpi.comm_world();
         let win = Win::allocate(&c, 4096).unwrap();
@@ -107,7 +140,13 @@ fn mpi_side() -> (f64, f64, f64) {
                 s_nb.push(t.elapsed().as_nanos() as f64 / 1000.0);
                 RmaRequest::waitall(reqs);
             }
-            *out.lock().unwrap() = (s_put.median(), s_get.median(), s_nb.median());
+            let mut o = out.lock().unwrap();
+            o.put_blocking_ns = s_put.median();
+            o.get_blocking_ns = s_get.median();
+            o.put_dtit_ns = s_nb.median();
+            o.puts = REPS as u64;
+            o.puts_blocking = REPS as u64;
+            o.gets_blocking = REPS as u64;
         }
         c.barrier().unwrap();
         win.unlock_all().unwrap();
@@ -115,35 +154,71 @@ fn mpi_side() -> (f64, f64, f64) {
     out.into_inner().unwrap()
 }
 
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"put_blocking_ns\":{:.1},\"get_blocking_ns\":{:.1},\"put_dtit_ns\":{:.1},\
+         \"requests\":{{\"puts\":{},\"gets\":{},\"puts_blocking\":{},\"gets_blocking\":{}}},\
+         \"segment_cache\":{{\"hits\":{},\"misses\":{}}}}}",
+        s.put_blocking_ns,
+        s.get_blocking_ns,
+        s.put_dtit_ns,
+        s.puts,
+        s.gets,
+        s.puts_blocking,
+        s.gets_blocking,
+        s.cache_hits,
+        s.cache_misses
+    )
+}
+
 fn main() {
     println!("==== §Perf — DART one-sided hot path (8-byte ops, zero-cost network) ====");
-    let (mp, mg, mn) = mpi_side();
-    let (cp, cg, cn) = dart_side(true);
-    let (np, ng, nn) = dart_side(false);
-    println!("\n{:>28} {:>12} {:>12} {:>12}", "", "put_blocking", "get_blocking", "put (DTIT)");
-    println!("{:>28} {:>12} {:>12} {:>12}", "raw mpisim", fmt_ns(mp), fmt_ns(mg), fmt_ns(mn));
+    let mpi = mpi_side();
+    let coll = dart_side(true, true);
+    let coll_nocache = dart_side(true, false);
+    let nc = dart_side(false, true);
+    let row = |name: &str, s: &Shot| {
+        println!(
+            "{:>30} {:>12} {:>12} {:>12}",
+            name,
+            fmt_ns(s.put_blocking_ns),
+            fmt_ns(s.get_blocking_ns),
+            fmt_ns(s.put_dtit_ns)
+        );
+    };
+    println!("\n{:>30} {:>12} {:>12} {:>12}", "", "put_blocking", "get_blocking", "put (DTIT)");
+    row("raw mpisim", &mpi);
+    row("DART coll gptr (cached)", &coll);
+    row("DART coll gptr (cache off)", &coll_nocache);
+    row("DART non-collective gptr", &nc);
     println!(
-        "{:>28} {:>12} {:>12} {:>12}",
-        "DART (collective gptr)",
-        fmt_ns(cp),
-        fmt_ns(cg),
-        fmt_ns(cn)
+        "\nDART-layer overhead vs raw MPI: cached {:+.0}/{:+.0}/{:+.0} ns, \
+         cache-off {:+.0}/{:+.0}/{:+.0} ns, non-collective {:+.0}/{:+.0}/{:+.0} ns",
+        coll.put_blocking_ns - mpi.put_blocking_ns,
+        coll.get_blocking_ns - mpi.get_blocking_ns,
+        coll.put_dtit_ns - mpi.put_dtit_ns,
+        coll_nocache.put_blocking_ns - mpi.put_blocking_ns,
+        coll_nocache.get_blocking_ns - mpi.get_blocking_ns,
+        coll_nocache.put_dtit_ns - mpi.put_dtit_ns,
+        nc.put_blocking_ns - mpi.put_blocking_ns,
+        nc.get_blocking_ns - mpi.get_blocking_ns,
+        nc.put_dtit_ns - mpi.put_dtit_ns,
     );
     println!(
-        "{:>28} {:>12} {:>12} {:>12}",
-        "DART (non-collective gptr)",
-        fmt_ns(np),
-        fmt_ns(ng),
-        fmt_ns(nn)
-    );
-    println!(
-        "\nDART-layer overhead: collective {:+.0}/{:+.0}/{:+.0} ns, non-collective {:+.0}/{:+.0}/{:+.0} ns",
-        cp - mp,
-        cg - mg,
-        cn - mn,
-        np - mp,
-        ng - mg,
-        nn - mn
+        "segment cache: {} hits / {} misses over the collective run",
+        coll.cache_hits, coll.cache_misses
     );
     println!("(paper: ~0 ns blocking, 80–130 ns non-blocking on 2.3 GHz Interlagos)");
+
+    let json = format!(
+        "{{\"bench\":\"perf_hotpath\",\"reps\":{REPS},\"unit\":\"ns_per_op\",\"results\":{{\
+         \"mpi_raw\":{},\"dart_collective_cached\":{},\"dart_collective_nocache\":{},\
+         \"dart_non_collective\":{}}}}}",
+        json_shot(&mpi),
+        json_shot(&coll),
+        json_shot(&coll_nocache),
+        json_shot(&nc)
+    );
+    std::fs::write("BENCH_hotpath.json", format!("{json}\n")).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json");
 }

@@ -7,6 +7,11 @@
 //! formulation: the owner does not participate (no bcast) — and
 //! accumulates `C_u += A_u[:, panel p] @ B_panel` with the AOT
 //! `summa_f32_*` artifact (L1 Pallas GEMM tile inside an L2 JAX step).
+//!
+//! Panel fetches run on the engine's batched-flush API
+//! ([`crate::dart::DartEnv::get_async`] +
+//! [`crate::dart::DartEnv::flush`]): panel `p+1` streams in while panel
+//! `p` computes, overlapping communication with the GEMM.
 
 use crate::dart::{DartEnv, DartErr, DartResult, TeamId};
 use crate::mpisim::{as_bytes, as_bytes_mut};
@@ -87,22 +92,35 @@ pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &SummaConfig) -> Dar
 
     let mut c_local = vec![0f32; mb * nb];
     let mut b_panel = vec![0f32; kb * nb];
+    let mut b_next = vec![0f32; kb * nb];
     let mut a_panel = vec![0f32; mb * kb];
+    // Panel pipeline on the engine's batched-flush API: fetch panel `p+1`
+    // in deferred-completion mode while panel `p` computes, and pay the
+    // remote-completion wait (`dart_flush`) only right before the data is
+    // consumed. The owner still never participates (pure PGAS).
+    let owner_of = |panel: usize| env.team_unit_l2g(team, panel);
+    env.get_blocking(b_grid.with_unit(owner_of(0)?), as_bytes_mut(&mut b_panel))?;
     for panel in 0..p {
-        // One-sided fetch of B's panel from its owner (self-get for mine —
-        // the uniform PGAS access path).
-        let owner = env.team_unit_l2g(team, panel)?;
-        env.get_blocking(b_grid.with_unit(owner), as_bytes_mut(&mut b_panel))?;
+        // Prefetch the next panel before computing on the current one.
+        if panel + 1 < p {
+            let next_owner = owner_of(panel + 1)?;
+            env.get_async(b_grid.with_unit(next_owner), as_bytes_mut(&mut b_next))?;
+        }
         // Slice my A columns for this panel.
         for r in 0..mb {
             let src = &a_local[r * k_total + panel * kb..r * k_total + (panel + 1) * kb];
             a_panel[r * kb..(r + 1) * kb].copy_from_slice(src);
         }
-        // C += A_panel @ B_panel on the PJRT engine.
+        // C += A_panel @ B_panel on the compute engine.
         let outs = exe
             .run_f32(&[&c_local, &a_panel, &b_panel])
             .map_err(|e| DartErr::Invalid(format!("artifact execution: {e}")))?;
         c_local.copy_from_slice(&outs[0]);
+        if panel + 1 < p {
+            // Complete the prefetch, then rotate the buffers.
+            env.flush(b_grid.with_unit(owner_of(panel + 1)?))?;
+            std::mem::swap(&mut b_panel, &mut b_next);
+        }
     }
 
     let local_sq: f64 = c_local.iter().map(|&v| (v as f64) * (v as f64)).sum();

@@ -3,11 +3,16 @@
 //! Unlike [`crate::apps::stencil`] (1D row decomposition, contiguous row
 //! halos only), this variant tiles the global grid over a `px × py` unit
 //! grid, so every step exchanges **row halos** (contiguous one-sided gets
-//! from the north/south neighbours) *and* **column halos** (strided
-//! one-sided gets from the west/east neighbours —
-//! [`crate::dart::DartEnv::get_strided`], one 4-byte block per row of the
-//! neighbour's boundary column). A 5-point stencil needs no corner cells,
-//! so the four halo edges suffice.
+//! from the north/south neighbours) *and* **column halos** (vector-typed
+//! strided gets from the west/east neighbours —
+//! [`crate::dart::DartEnv::get_strided_async`], the whole boundary column
+//! as ONE RMA operation). A 5-point stencil needs no corner cells, so the
+//! four halo edges suffice.
+//!
+//! The exchange runs on the engine's batched-flush path: every neighbour
+//! costs exactly one deferred-completion operation, and a single
+//! [`crate::dart::DartEnv::flush_all`] on the grid's segment completes
+//! the whole phase (asserted per-op by `rust/tests/engine_tests.rs`).
 //!
 //! The local sweep runs the same AOT Pallas artifact as the 1D app; the
 //! result is verified against the sequential reference over the full
@@ -111,48 +116,45 @@ pub fn run_distributed(
     let mut residuals = Vec::with_capacity(cfg.steps);
 
     for _ in 0..cfg.steps {
-        // --- halo exchange: 2 contiguous + 2 strided one-sided gets.
-        let mut handles = Vec::with_capacity(4);
+        // --- halo exchange: one RMA operation per neighbour (contiguous
+        // gets for row halos, single vector-typed gets for column halos),
+        // all in deferred-completion mode; ONE flush completes the phase.
         match neighbor(0, -1)? {
-            Some(u) => handles.push(
-                // north neighbour's LAST row
-                env.get(grid.with_unit(u).add((b as u64 - 1) * row_bytes), as_bytes_mut(&mut north))?,
-            ),
+            // north neighbour's LAST row
+            Some(u) => env.get_async(
+                grid.with_unit(u).add((b as u64 - 1) * row_bytes),
+                as_bytes_mut(&mut north),
+            )?,
             None => north.fill(0.0),
         }
         match neighbor(0, 1)? {
-            Some(u) => handles.push(env.get(grid.with_unit(u), as_bytes_mut(&mut south))?),
+            Some(u) => env.get_async(grid.with_unit(u), as_bytes_mut(&mut south))?,
             None => south.fill(0.0),
         }
         match neighbor(-1, 0)? {
-            Some(u) => {
-                // west neighbour's LAST column: one f32 per row, stride = row
-                let hs = env.get_strided(
-                    grid.with_unit(u).add((b as u64 - 1) * 4),
-                    as_bytes_mut(&mut west),
-                    b,
-                    4,
-                    row_bytes,
-                )?;
-                handles.extend(hs);
-            }
+            // west neighbour's LAST column: one f32 per row, stride = row —
+            // a single vector-typed transfer, not b block transfers.
+            Some(u) => env.get_strided_async(
+                grid.with_unit(u).add((b as u64 - 1) * 4),
+                as_bytes_mut(&mut west),
+                b,
+                4,
+                row_bytes,
+            )?,
             None => west.fill(0.0),
         }
         match neighbor(1, 0)? {
-            Some(u) => {
-                // east neighbour's FIRST column
-                let hs = env.get_strided(
-                    grid.with_unit(u),
-                    as_bytes_mut(&mut east),
-                    b,
-                    4,
-                    row_bytes,
-                )?;
-                handles.extend(hs);
-            }
+            // east neighbour's FIRST column
+            Some(u) => env.get_strided_async(
+                grid.with_unit(u),
+                as_bytes_mut(&mut east),
+                b,
+                4,
+                row_bytes,
+            )?,
             None => east.fill(0.0),
         }
-        env.waitall(handles)?;
+        env.flush_all(grid)?;
 
         // --- assemble padded block (corners unused by the 5-point sweep).
         let wp = b + 2;

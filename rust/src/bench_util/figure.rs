@@ -325,7 +325,12 @@ pub fn run_figure(fig: Figure) {
         let mpi = measure_mpi(fig, pin, &sizes);
         let rows: Vec<(usize, f64, f64)> =
             dart.iter().zip(&mpi).map(|(&(s, d), &(_, m))| (s, d, m)).collect();
-        print_comparison_table(&format!("{} — {}", fig.title(), tier), fig.unit(), &rows);
+        print_comparison_table(
+            &format!("{} — {}", fig.title(), tier),
+            fig.unit(),
+            ("DART", "MPI"),
+            &rows,
+        );
         if !fig.is_bandwidth() {
             let (c, sd) = fit_constant_overhead(&dart, &mpi);
             println!(

@@ -157,22 +157,26 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
-/// Print one figure-style table: per size, DART vs MPI medians and delta.
+/// Print one figure-style table: per size, two series and their delta.
+/// `labels` names the two series — `("DART", "MPI")` for the paper
+/// figures, but ablations compare other pairs (e.g. shmem vs regular
+/// windows, vector vs per-block strided transfers).
 pub fn print_comparison_table(
     title: &str,
     unit: &str,
-    rows: &[(usize, f64, f64)], // (size, dart, mpi)
+    labels: (&str, &str),
+    rows: &[(usize, f64, f64)], // (size, series_a, series_b)
 ) {
     println!("\n### {title}");
     println!(
         "{:>10} {:>16} {:>16} {:>12}",
         "bytes",
-        format!("DART ({unit})"),
-        format!("MPI ({unit})"),
+        format!("{} ({unit})", labels.0),
+        format!("{} ({unit})", labels.1),
         "delta"
     );
-    for &(size, d, m) in rows {
-        println!("{:>10} {:>16.1} {:>16.1} {:>12.1}", size, d, m, d - m);
+    for &(size, a, b) in rows {
+        println!("{:>10} {:>16.1} {:>16.1} {:>12.1}", size, a, b, a - b);
     }
 }
 

@@ -41,6 +41,12 @@ pub struct DartConfig {
     /// team places its tail on member `i % team_size` instead of always
     /// unit 0, avoiding congestion when many locks live on one team.
     pub balanced_lock_tails: bool,
+    /// Enable the communication engine's segment-resolution cache
+    /// ([`crate::dart::engine`]): the §IV-B4 dereference chain (teamlist
+    /// scan, unit translation, translation-table search) is memoized per
+    /// `(team, unit, allocation)` instead of recomputed on every one-sided
+    /// operation. On by default; disable for the hot-path ablation.
+    pub segment_cache: bool,
 }
 
 impl DartConfig {
@@ -59,6 +65,7 @@ impl DartConfig {
             indexed_teamlist: false,
             shmem_windows: false,
             balanced_lock_tails: false,
+            segment_cache: true,
         }
     }
 
@@ -105,6 +112,13 @@ impl DartConfig {
     #[must_use]
     pub fn with_balanced_lock_tails(mut self, on: bool) -> Self {
         self.balanced_lock_tails = on;
+        self
+    }
+
+    /// Toggle the engine's segment-resolution cache (hot-path ablation).
+    #[must_use]
+    pub fn with_segment_cache(mut self, on: bool) -> Self {
+        self.segment_cache = on;
         self
     }
 }

@@ -47,6 +47,12 @@ pub struct Metrics {
     pub collectives: Counter,
     /// Lock acquisitions.
     pub lock_acquires: Counter,
+    /// Explicit flush calls (`dart_flush`/`dart_flush_all`).
+    pub flushes: Counter,
+    /// Segment-cache hits on the §IV-B4 dereference chain.
+    pub cache_hits: Counter,
+    /// Segment-cache misses (full registry + translation-table walk).
+    pub cache_misses: Counter,
 }
 
 impl Metrics {
@@ -59,7 +65,8 @@ impl fmt::Display for Metrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={}",
+            "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
+             flushes={} cache_hit={} cache_miss={}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -67,7 +74,10 @@ impl fmt::Display for Metrics {
             self.bytes.get(),
             self.allocs.get(),
             self.collectives.get(),
-            self.lock_acquires.get()
+            self.lock_acquires.get(),
+            self.flushes.get(),
+            self.cache_hits.get(),
+            self.cache_misses.get()
         )
     }
 }

@@ -29,6 +29,7 @@
 
 pub mod collectives;
 pub mod config;
+pub mod engine;
 pub mod gptr;
 pub mod group;
 pub mod lock;
@@ -49,37 +50,66 @@ pub use onesided::DartHandle;
 
 use crate::mpisim::{Mpi, MpiErr, Win, World, WorldConfig};
 use crate::simnet::Placement;
+use engine::SegmentCache;
 use std::cell::RefCell;
+use std::fmt;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicI32, Ordering};
 use std::sync::Arc;
 use team::{TeamEntry, TeamRegistry};
-use thiserror::Error;
 use translation::FreeListAllocator;
 
 /// Errors surfaced by the DART API.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum DartErr {
-    #[error("MPI substrate error: {0}")]
-    Mpi(#[from] MpiErr),
-    #[error("invalid unit id {0}")]
+    Mpi(MpiErr),
     InvalidUnit(UnitId),
-    #[error("unknown or destroyed team {0}")]
     UnknownTeam(TeamId),
-    #[error("unit {unit} is not a member of team {team}")]
     NotInTeam { unit: UnitId, team: TeamId },
-    #[error("teamlist is full ({0} slots) — raise DartConfig::teamlist_size")]
     TeamListFull(usize),
-    #[error("team id space exhausted (ids are never reused)")]
     TeamIdOverflow,
-    #[error("global memory pool exhausted: requested {requested} bytes of {pool}")]
     OutOfMemory { requested: u64, pool: u64 },
-    #[error("invalid global pointer: {0}")]
     InvalidGptr(String),
-    #[error("lock misuse: {0}")]
     LockMisuse(String),
-    #[error("{0}")]
     Invalid(String),
+}
+
+impl fmt::Display for DartErr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DartErr::Mpi(e) => write!(f, "MPI substrate error: {e}"),
+            DartErr::InvalidUnit(u) => write!(f, "invalid unit id {u}"),
+            DartErr::UnknownTeam(t) => write!(f, "unknown or destroyed team {t}"),
+            DartErr::NotInTeam { unit, team } => {
+                write!(f, "unit {unit} is not a member of team {team}")
+            }
+            DartErr::TeamListFull(n) => {
+                write!(f, "teamlist is full ({n} slots) — raise DartConfig::teamlist_size")
+            }
+            DartErr::TeamIdOverflow => write!(f, "team id space exhausted (ids are never reused)"),
+            DartErr::OutOfMemory { requested, pool } => {
+                write!(f, "global memory pool exhausted: requested {requested} bytes of {pool}")
+            }
+            DartErr::InvalidGptr(msg) => write!(f, "invalid global pointer: {msg}"),
+            DartErr::LockMisuse(msg) => write!(f, "lock misuse: {msg}"),
+            DartErr::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DartErr {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DartErr::Mpi(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<MpiErr> for DartErr {
+    fn from(e: MpiErr) -> Self {
+        DartErr::Mpi(e)
+    }
 }
 
 /// DART result alias.
@@ -112,6 +142,12 @@ pub struct DartEnv {
     config: DartConfig,
     shared: Arc<DartShared>,
     state: RefCell<EnvState>,
+    /// The communication engine's segment-resolution cache (§Perf): the
+    /// §IV-B4 dereference chain is computed once per segment and memoized
+    /// here, bypassing the registry scan + translation-table search on
+    /// every subsequent one-sided operation. Invalidated by
+    /// [`DartEnv::team_memfree`] / [`DartEnv::team_destroy`].
+    pub(crate) seg_cache: RefCell<SegmentCache>,
     /// Hot-path operation counters.
     pub metrics: Metrics,
 }
@@ -178,17 +214,16 @@ impl DartEnv {
         let myid = mpi.world_rank() as UnitId;
         let size = mpi.world_size();
         let nc_alloc = FreeListAllocator::new(config.non_collective_pool as u64);
+        let world_win = Rc::new(world_win);
+        let seg_cache = RefCell::new(SegmentCache::new(world_win.clone(), config.segment_cache));
         Ok(DartEnv {
             mpi,
             myid,
             size,
             config,
             shared,
-            state: RefCell::new(EnvState {
-                registry,
-                world_win: Rc::new(world_win),
-                nc_alloc,
-            }),
+            state: RefCell::new(EnvState { registry, world_win, nc_alloc }),
+            seg_cache,
             metrics: Metrics::new(),
         })
     }
@@ -300,6 +335,9 @@ impl DartEnv {
             return Err(DartErr::Invalid("cannot destroy DART_TEAM_ALL".into()));
         }
         let mut entry = self.state.borrow_mut().registry.remove(team)?;
+        // Drop the engine's cached window handles for this team before the
+        // exclusive-ownership check below.
+        self.seg_cache.borrow_mut().invalidate_team(team);
         for e in entry.table.drain() {
             e.win.unlock_all()?;
             match Rc::try_unwrap(e.win) {
@@ -426,13 +464,17 @@ impl DartEnv {
                 "team_memfree({team}) of non-matching pointer {gptr}"
             )));
         }
-        let entry_win = {
+        let (entry_win, base) = {
             let mut st = self.state.borrow_mut();
             let entry = st.registry.get_mut(team)?;
             let e = entry.table.remove(gptr.offset)?;
             entry.alloc.free(e.base)?;
-            e.win
+            (e.win, e.base)
         };
+        // Drop the engine's cached resolutions of this allocation: they
+        // hold an `Rc` of its window (the exclusive-ownership check below
+        // would fail), and a later allocation may reuse this pool offset.
+        self.seg_cache.borrow_mut().invalidate_segment(team, base);
         entry_win.unlock_all()?;
         match Rc::try_unwrap(entry_win) {
             Ok(w) => Ok(w.free()?),
@@ -451,65 +493,35 @@ impl DartEnv {
     // Internal plumbing shared with onesided/collectives/lock
     // ------------------------------------------------------------------
 
-    /// Dereference a global pointer (§IV-B4): resolve the window, the
-    /// MPI-relative target rank, and the window displacement.
-    ///
-    /// Non-collective pointers resolve against the world window with the
-    /// absolute unit as the target — "trivially dereferenced without the
-    /// unit translations". Collective pointers translate the absolute unit
-    /// to its team rank and look the window up in the translation table.
-    #[inline]
-    pub(crate) fn deref_gptr(&self, gptr: GlobalPtr) -> DartResult<(Rc<Win>, usize, u64)> {
-        if gptr.is_null() {
-            return Err(DartErr::InvalidGptr("null pointer dereference".into()));
-        }
-        let st = self.state.borrow();
-        if !gptr.is_collective() {
-            if gptr.unitid as usize >= self.size {
-                return Err(DartErr::InvalidUnit(gptr.unitid));
-            }
-            return Ok((st.world_win.clone(), gptr.unitid as usize, gptr.offset));
-        }
-        let entry = st.registry.get(gptr.segid)?;
-        let target = entry
-            .rank_of_unit(gptr.unitid)
-            .ok_or(DartErr::NotInTeam { unit: gptr.unitid, team: gptr.segid })?;
-        let (win, disp) = entry
-            .table
-            .lookup(gptr.offset)
-            .ok_or_else(|| DartErr::InvalidGptr(format!("{gptr} not in any allocation")))?;
-        Ok((win.clone(), target, disp))
-    }
+    // `deref_gptr` and `with_win` — the §IV-B4 dereference chain behind
+    // every one-sided operation — now live in [`engine`], where they are
+    // memoized by the segment cache. Only the registry slow path stays
+    // here, next to the state it walks.
 
-    /// Borrow-scoped dereference: run `f` with the resolved window while
-    /// the registry borrow is held — the hot-path variant of
-    /// [`DartEnv::deref_gptr`] (§Perf: saves the `Rc` clone + drop per
-    /// one-sided operation).
-    #[inline]
-    pub(crate) fn with_win<R>(
+    /// The §IV-B4 slow path: resolve a *collective* pointer through the
+    /// team registry and translation table, returning the covering
+    /// allocation extent so the engine can memoize it.
+    pub(crate) fn resolve_collective_slow(
         &self,
         gptr: GlobalPtr,
-        f: impl FnOnce(&Win, usize, u64) -> DartResult<R>,
-    ) -> DartResult<R> {
-        if gptr.is_null() {
-            return Err(DartErr::InvalidGptr("null pointer dereference".into()));
-        }
+    ) -> DartResult<engine::Resolution> {
         let st = self.state.borrow();
-        if !gptr.is_collective() {
-            if gptr.unitid as usize >= self.size {
-                return Err(DartErr::InvalidUnit(gptr.unitid));
-            }
-            return f(&st.world_win, gptr.unitid as usize, gptr.offset);
-        }
         let entry = st.registry.get(gptr.segid)?;
         let target = entry
             .rank_of_unit(gptr.unitid)
             .ok_or(DartErr::NotInTeam { unit: gptr.unitid, team: gptr.segid })?;
-        let (win, disp) = entry
+        let e = entry
             .table
-            .lookup(gptr.offset)
+            .lookup_entry(gptr.offset)
             .ok_or_else(|| DartErr::InvalidGptr(format!("{gptr} not in any allocation")))?;
-        f(win, target, disp)
+        Ok(engine::Resolution {
+            segid: gptr.segid,
+            unitid: gptr.unitid,
+            base: e.base,
+            len: e.len,
+            target,
+            win: e.win.clone(),
+        })
     }
 
     /// The communicator of a team (for collectives and the lock).

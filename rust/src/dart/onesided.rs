@@ -9,6 +9,13 @@
 //! 4. the MPI request-based RMA call, inside the eagerly-opened shared
 //!    passive-target epoch (so no epoch calls appear here).
 //!
+//! Steps 1–3 are memoized by the communication engine's segment cache
+//! ([`crate::dart::engine`]); the chain is walked in full only on the
+//! first operation against a `(team, unit, allocation)` triple. The
+//! engine also provides the deferred-completion variants
+//! (`put_async`/`get_async` + `flush`/`flush_all`) of the handle-based
+//! operations below.
+//!
 //! *Blocking* operations "do not return until the data transfers complete
 //! both at the origin locally and at the target remotely" — put/get +
 //! flush. *Non-blocking* operations return a [`DartHandle`] for
@@ -128,6 +135,9 @@ impl DartEnv {
     ///
     /// This is the access shape of a *column* halo in a row-major grid —
     /// the complement of the contiguous row halo the stencil app uses.
+    /// The engine moves the whole pattern as **one** vector-typed RMA
+    /// operation ([`crate::mpisim::Win::rput_vector`]) behind a single
+    /// handle — one protocol handshake and one request, not `count`.
     pub fn put_strided(
         &self,
         gptr: GlobalPtr,
@@ -135,29 +145,14 @@ impl DartEnv {
         count: usize,
         block: usize,
         stride: u64,
-    ) -> DartResult<Vec<DartHandle>> {
-        if src.len() != count * block {
-            return Err(super::DartErr::Invalid(format!(
-                "strided put: buffer {} bytes != {count} × {block}",
-                src.len()
-            )));
-        }
-        if (stride as usize) < block {
-            return Err(super::DartErr::Invalid("stride smaller than block".into()));
-        }
-        let (win, target, disp) = self.deref_gptr(gptr)?;
-        let mut handles = Vec::with_capacity(count);
-        for i in 0..count {
-            let req = win.rput(
-                &src[i * block..(i + 1) * block],
-                target,
-                (disp + i as u64 * stride) as usize,
-            )?;
-            handles.push(DartHandle::new(req));
-        }
-        self.metrics.puts.add(count as u64);
+    ) -> DartResult<DartHandle> {
+        let ty = super::engine::strided_type(src.len(), count, block, stride)?;
+        let req = self.with_win(gptr, |win, target, disp| {
+            Ok(win.rput_vector(src, target, disp as usize, &ty)?)
+        })?;
+        self.metrics.puts.bump();
         self.metrics.bytes.add(src.len() as u64);
-        Ok(handles)
+        Ok(DartHandle::new(req))
     }
 
     /// Strided non-blocking get: the mirror of [`DartEnv::put_strided`].
@@ -168,25 +163,14 @@ impl DartEnv {
         count: usize,
         block: usize,
         stride: u64,
-    ) -> DartResult<Vec<DartHandle>> {
-        if dst.len() != count * block {
-            return Err(super::DartErr::Invalid(format!(
-                "strided get: buffer {} bytes != {count} × {block}",
-                dst.len()
-            )));
-        }
-        if (stride as usize) < block {
-            return Err(super::DartErr::Invalid("stride smaller than block".into()));
-        }
-        let (win, target, disp) = self.deref_gptr(gptr)?;
-        let mut handles = Vec::with_capacity(count);
-        for (i, chunk) in dst.chunks_exact_mut(block).enumerate() {
-            let req = win.rget(chunk, target, (disp + i as u64 * stride) as usize)?;
-            handles.push(DartHandle::new(req));
-        }
-        self.metrics.gets.add(count as u64);
-        self.metrics.bytes.add((count * block) as u64);
-        Ok(handles)
+    ) -> DartResult<DartHandle> {
+        let ty = super::engine::strided_type(dst.len(), count, block, stride)?;
+        let req = self.with_win(gptr, |win, target, disp| {
+            Ok(win.rget_vector(dst, target, disp as usize, &ty)?)
+        })?;
+        self.metrics.gets.bump();
+        self.metrics.bytes.add(dst.len() as u64);
+        Ok(DartHandle::new(req))
     }
 
     // ------------------------------------------------------------------

@@ -512,9 +512,10 @@ fn strided_put_get_column_exchange() {
         env.barrier(DART_TEAM_ALL).unwrap();
         if env.myid() == 0 {
             let col: Vec<u8> = (10..18).collect();
-            // column 3 of a row-major 8×8: offset 3, stride 8, block 1
-            let hs = env.put_strided(g.with_unit(1).add(3), &col, 8, 1, 8).unwrap();
-            env.waitall(hs).unwrap();
+            // column 3 of a row-major 8×8: offset 3, stride 8, block 1 —
+            // one vector-typed request for the whole column.
+            let h = env.put_strided(g.with_unit(1).add(3), &col, 8, 1, 8).unwrap();
+            env.wait(h).unwrap();
         }
         env.barrier(DART_TEAM_ALL).unwrap();
         if env.myid() == 1 {
@@ -528,8 +529,8 @@ fn strided_put_get_column_exchange() {
         env.barrier(DART_TEAM_ALL).unwrap();
         if env.myid() == 0 {
             let mut col = [0u8; 8];
-            let hs = env.get_strided(g.with_unit(1).add(3), &mut col, 8, 1, 8).unwrap();
-            env.waitall(hs).unwrap();
+            let h = env.get_strided(g.with_unit(1).add(3), &mut col, 8, 1, 8).unwrap();
+            env.wait(h).unwrap();
             assert_eq!(col, [10, 11, 12, 13, 14, 15, 16, 17]);
         }
         env.barrier(DART_TEAM_ALL).unwrap();

@@ -60,9 +60,18 @@ impl TranslationTable {
     /// window-relative displacement. This is on the one-sided hot path.
     #[inline]
     pub fn lookup(&self, offset: u64) -> Option<(&Rc<Win>, u64)> {
+        self.lookup_entry(offset).map(|e| (&e.win, offset - e.base))
+    }
+
+    /// Like [`TranslationTable::lookup`] but returns the full covering
+    /// entry — the engine's segment cache memoizes its `[base, base+len)`
+    /// extent so later offsets into the same allocation hit without a
+    /// table search.
+    #[inline]
+    pub fn lookup_entry(&self, offset: u64) -> Option<&TransEntry> {
         let pos = self.entries.partition_point(|e| e.base <= offset);
         let e = &self.entries[pos.checked_sub(1)?];
-        (offset < e.base + e.len).then(|| (&e.win, offset - e.base))
+        (offset < e.base + e.len).then_some(e)
     }
 
     /// Remove the allocation starting exactly at `base`, returning its

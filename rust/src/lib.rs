@@ -16,10 +16,14 @@
 //! - [`dart`] — the paper's contribution: the DART PGAS runtime API
 //!   (teams/groups, global memory with 128-bit global pointers, one-sided
 //!   blocking/non-blocking put/get, collectives, and MCS queue locks) mapped
-//!   onto MPI-3 RMA.
-//! - [`runtime`] — a PJRT/XLA executor that loads AOT-compiled JAX/Pallas
-//!   compute kernels (HLO text artifacts) so PGAS applications can run their
-//!   local compute step without Python on the request path.
+//!   onto MPI-3 RMA — with a unified communication engine
+//!   ([`dart::engine`]) that caches segment resolution, moves strided
+//!   patterns as single vector-typed requests, and batches remote
+//!   completion behind explicit flushes.
+//! - [`runtime`] — an executor for AOT-compiled JAX/Pallas compute
+//!   artifacts so PGAS applications can run their local compute step
+//!   without Python on the request path (native backend offline; the API
+//!   is PJRT-shaped so the XLA client can be swapped back in).
 //! - [`apps`] — PGAS mini-applications (distributed stencil, SUMMA matmul)
 //!   used by the examples and the end-to-end tests.
 //! - [`bench_util`] — the measurement harness that regenerates the paper's

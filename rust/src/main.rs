@@ -18,6 +18,9 @@ use dart::runtime::{artifacts_dir, Artifact, Engine};
 use dart::simnet::Topology;
 use std::sync::Mutex;
 
+/// CLI result alias (the crate is dependency-free; no `anyhow` offline).
+type CliResult<T> = Result<T, Box<dyn std::error::Error>>;
+
 fn parse_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
 }
@@ -26,7 +29,7 @@ fn parse_opt(args: &[String], name: &str) -> Option<usize> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).and_then(|v| v.parse().ok())
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> CliResult<()> {
     println!("DART-MPI reproduction — PGAS runtime on an MPI-3 RMA substrate");
     let t = Topology::hermit(2);
     println!("\nmodelled topology (per node, Cray XE6 'Hermit', paper Fig. 7):");
@@ -53,7 +56,7 @@ fn cmd_info() -> anyhow::Result<()> {
     match Artifact::discover(&dir) {
         Ok(names) if !names.is_empty() => {
             for n in names {
-                let a = Artifact::load(&dir, &n).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+                let a = Artifact::load(&dir, &n)?;
                 println!("  {n:<24} {} in / {} out", a.inputs.len(), a.outputs.len());
             }
         }
@@ -62,7 +65,7 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_selftest() -> anyhow::Result<()> {
+fn cmd_selftest() -> CliResult<()> {
     print!("selftest: 4-unit PGAS roundtrip ... ");
     run(DartConfig::with_units(4), |env| {
         let g = env.team_memalloc_aligned(dart::dart::DART_TEAM_ALL, 64).unwrap();
@@ -74,27 +77,25 @@ fn cmd_selftest() -> anyhow::Result<()> {
         assert_eq!(got, [((me + 3) % 4) as u8; 8]);
         env.barrier(dart::dart::DART_TEAM_ALL).unwrap();
         env.team_memfree(dart::dart::DART_TEAM_ALL, g).unwrap();
-    })
-    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    })?;
     println!("OK");
     print!("selftest: PJRT artifact execution ... ");
-    let engine = Engine::new().map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let exe = engine.load("stencil_f32_32x32").map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    let outs =
-        exe.run_f32(&[&vec![1.0f32; 34 * 34]]).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let engine = Engine::new()?;
+    let exe = engine.load("stencil_f32_32x32")?;
+    let outs = exe.run_f32(&[&vec![1.0f32; 34 * 34]])?;
     assert!(outs[1][0].abs() < 1e-9);
     println!("OK (platform: {})", engine.platform());
     Ok(())
 }
 
-fn cmd_stencil(args: &[String]) -> anyhow::Result<()> {
+fn cmd_stencil(args: &[String]) -> CliResult<()> {
     let units = parse_opt(args, "--units").unwrap_or(4);
     let steps = parse_opt(args, "--steps").unwrap_or(100);
     let block = parse_opt(args, "--block").unwrap_or(64);
     let cfg = match block {
         32 => stencil::StencilConfig::block32(steps),
         64 => stencil::StencilConfig::block64(steps),
-        other => anyhow::bail!("--block must be 32 or 64, got {other}"),
+        other => return Err(format!("--block must be 32 or 64, got {other}").into()),
     };
     let dart_cfg = DartConfig::hermit(units, (units + 31) / 32)
         .with_shmem_windows(parse_flag(args, "--shmem"));
@@ -106,8 +107,7 @@ fn cmd_stencil(args: &[String]) -> anyhow::Result<()> {
         if env.myid() == 0 {
             *report.lock().unwrap() = Some(r);
         }
-    })
-    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    })?;
     let r = report.into_inner().unwrap().unwrap();
     println!(
         "final residual {:.6e}, checksum {:.6}",
@@ -117,7 +117,7 @@ fn cmd_stencil(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_matmul(args: &[String]) -> anyhow::Result<()> {
+fn cmd_matmul(args: &[String]) -> CliResult<()> {
     let units = parse_opt(args, "--units").unwrap_or(4);
     let cfg = matmul::SummaConfig::block64();
     let dart_cfg = DartConfig::hermit(units, (units + 31) / 32)
@@ -135,13 +135,12 @@ fn cmd_matmul(args: &[String]) -> anyhow::Result<()> {
         if env.myid() == 0 {
             *norm.lock().unwrap() = r.global_norm;
         }
-    })
-    .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    })?;
     println!("global ||C||_F = {:.6}", norm.into_inner().unwrap());
     Ok(())
 }
 
-fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
+fn cmd_bench(args: &[String]) -> CliResult<()> {
     let which = args.first().map(String::as_str).unwrap_or("all");
     let figs: Vec<(&str, Figure)> = vec![
         ("fig8", Figure::DtctBlockingPut),
@@ -161,12 +160,12 @@ fn cmd_bench(args: &[String]) -> anyhow::Result<()> {
         }
     }
     if !ran {
-        anyhow::bail!("unknown figure {which:?} (use fig8..fig15 or all)");
+        return Err(format!("unknown figure {which:?} (use fig8..fig15 or all)").into());
     }
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("info") => cmd_info(),

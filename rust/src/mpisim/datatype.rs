@@ -94,6 +94,65 @@ impl HasMpiType for f64 {
     const MPI_TYPE: MpiType = MpiType::F64;
 }
 
+/// An `MPI_Type_vector`-style strided datatype: `count` blocks of `block`
+/// bytes, consecutive blocks `stride` bytes apart at the *remote* side.
+/// The origin buffer is always packed (`count × block` contiguous bytes).
+///
+/// This is the access shape of a column halo in a row-major grid. Moving
+/// it through [`crate::mpisim::Win::rput_vector`] /
+/// [`crate::mpisim::Win::rget_vector`] costs **one** protocol handshake —
+/// the way Cray MPICH packs non-contiguous transfers into a single
+/// message — instead of one per block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorType {
+    count: usize,
+    block: usize,
+    stride: usize,
+}
+
+impl VectorType {
+    /// Build a vector type. `stride ≥ block` (blocks may not overlap;
+    /// `stride == block` degenerates to a contiguous transfer).
+    pub fn new(count: usize, block: usize, stride: usize) -> MpiResult<VectorType> {
+        if stride < block {
+            return Err(MpiErr::Invalid(format!(
+                "vector type: stride {stride} smaller than block {block}"
+            )));
+        }
+        Ok(VectorType { count, block, stride })
+    }
+
+    /// Number of blocks.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Block length in bytes.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Remote distance between block starts in bytes.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Bytes actually transferred (`count × block` — the packed size).
+    pub fn packed_len(&self) -> usize {
+        self.count * self.block
+    }
+
+    /// Remote footprint: distance from the first block's first byte to the
+    /// last block's last byte.
+    pub fn extent(&self) -> usize {
+        if self.count == 0 {
+            0
+        } else {
+            (self.count - 1) * self.stride + self.block
+        }
+    }
+}
+
 /// Predefined reduction / accumulate operations (MPI_SUM, MPI_REPLACE, ...).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MpiOp {
@@ -277,5 +336,25 @@ mod tests {
         let mut acc = [250u8];
         reduce_bytes(MpiOp::Sum, MpiType::U8, &mut acc, &[10u8]).unwrap();
         assert_eq!(acc, [4]); // wraps, does not panic
+    }
+
+    #[test]
+    fn vector_type_geometry() {
+        let v = VectorType::new(8, 4, 32).unwrap();
+        assert_eq!(v.packed_len(), 32);
+        assert_eq!(v.extent(), 7 * 32 + 4);
+        // contiguous degenerate case
+        let c = VectorType::new(3, 16, 16).unwrap();
+        assert_eq!(c.packed_len(), 48);
+        assert_eq!(c.extent(), 48);
+        // empty
+        let e = VectorType::new(0, 8, 64).unwrap();
+        assert_eq!(e.packed_len(), 0);
+        assert_eq!(e.extent(), 0);
+    }
+
+    #[test]
+    fn vector_type_rejects_overlapping_blocks() {
+        assert!(matches!(VectorType::new(4, 8, 7), Err(MpiErr::Invalid(_))));
     }
 }

@@ -1,40 +1,72 @@
 //! Error type for the MPI-3 substrate.
+//!
+//! `Display`/`Error` are hand-implemented: the build environment is offline
+//! and the crate is dependency-free (no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by [`crate::mpisim`] operations.
 ///
 /// Real MPI aborts by default; we return errors so the test suite can probe
 /// misuse (e.g. RMA outside an access epoch) without killing the process.
-#[derive(Debug, Error, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MpiErr {
-    #[error("rank {0} out of range (communicator size {1})")]
     RankOutOfRange(usize, usize),
-    #[error("window displacement {disp}..{} out of range (segment size {size})", disp + len)]
     DispOutOfRange { disp: usize, len: usize, size: usize },
-    #[error("RMA call outside an access epoch (win {win}, target {target})")]
     NoEpoch { win: u64, target: usize },
-    #[error("epoch already held (win {win}, target {target})")]
     EpochAlreadyHeld { win: u64, target: usize },
-    #[error("unlock without matching lock (win {win}, target {target})")]
     NoMatchingLock { win: u64, target: usize },
-    #[error("window {0} is not known (freed or never created)")]
     UnknownWindow(u64),
-    #[error("buffer size mismatch: local {local} bytes vs remote {remote} bytes")]
     SizeMismatch { local: usize, remote: usize },
-    #[error("type size mismatch: op on {type_size}-byte type, buffer of {buf} bytes")]
     TypeMismatch { type_size: usize, buf: usize },
-    #[error("group rank translation failed: rank {0} not in group")]
     NotInGroup(usize),
-    #[error("communicator is empty for this rank (MPI_COMM_NULL)")]
     NullComm,
-    #[error("request already consumed")]
     RequestConsumed,
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("world finalized")]
     Finalized,
 }
+
+impl fmt::Display for MpiErr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpiErr::RankOutOfRange(rank, size) => {
+                write!(f, "rank {rank} out of range (communicator size {size})")
+            }
+            MpiErr::DispOutOfRange { disp, len, size } => write!(
+                f,
+                "window displacement {disp}..{} out of range (segment size {size})",
+                disp + len
+            ),
+            MpiErr::NoEpoch { win, target } => {
+                write!(f, "RMA call outside an access epoch (win {win}, target {target})")
+            }
+            MpiErr::EpochAlreadyHeld { win, target } => {
+                write!(f, "epoch already held (win {win}, target {target})")
+            }
+            MpiErr::NoMatchingLock { win, target } => {
+                write!(f, "unlock without matching lock (win {win}, target {target})")
+            }
+            MpiErr::UnknownWindow(id) => {
+                write!(f, "window {id} is not known (freed or never created)")
+            }
+            MpiErr::SizeMismatch { local, remote } => {
+                write!(f, "buffer size mismatch: local {local} bytes vs remote {remote} bytes")
+            }
+            MpiErr::TypeMismatch { type_size, buf } => {
+                write!(f, "type size mismatch: op on {type_size}-byte type, buffer of {buf} bytes")
+            }
+            MpiErr::NotInGroup(rank) => {
+                write!(f, "group rank translation failed: rank {rank} not in group")
+            }
+            MpiErr::NullComm => write!(f, "communicator is empty for this rank (MPI_COMM_NULL)"),
+            MpiErr::RequestConsumed => write!(f, "request already consumed"),
+            MpiErr::Invalid(msg) => write!(f, "invalid argument: {msg}"),
+            MpiErr::Finalized => write!(f, "world finalized"),
+        }
+    }
+}
+
+impl std::error::Error for MpiErr {}
 
 /// Substrate result alias.
 pub type MpiResult<T> = Result<T, MpiErr>;

@@ -42,7 +42,7 @@ pub mod window;
 
 pub use comm::Comm;
 pub use dynwin::DynWin;
-pub use datatype::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, MpiType, Pod};
+pub use datatype::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, MpiType, Pod, VectorType};
 pub use error::{MpiErr, MpiResult};
 pub use group::Group;
 pub use p2p::{Status, ANY_SOURCE, ANY_TAG};
@@ -153,7 +153,10 @@ impl WorldState {
         }
         let tier = self.tier(src, dst);
         let tc = &self.cost.tiers[tier as usize];
-        let mut serialize_ns = bytes as f64 / tc.bytes_per_ns;
+        // Per-message protocol overhead + bandwidth term occupy the
+        // channel; the tier's base latency pipelines (added below, after
+        // the serialization slot).
+        let mut serialize_ns = self.cost.msg_overhead_ns + bytes as f64 / tc.bytes_per_ns;
         if bytes > self.cost.eager_e0_limit {
             serialize_ns += self.cost.e1_latency_ns + 2.0 * bytes as f64 / self.cost.e1_copy_bytes_per_ns;
         }

