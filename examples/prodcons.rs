@@ -12,8 +12,20 @@
 //! allocation; `units − 1` producers push tagged items under the DART MCS
 //! lock; unit 0 consumes. Every access is a one-sided put/get on global
 //! pointers — no message passing in the application code.
+//!
+//! **This is the repo's canonical overlap example.** The consumer does
+//! *not* busy-wait on the tail with repeated blocking gets (the original
+//! formulation — one full network round-trip per poll, all latency-bound).
+//! Instead it keeps exactly one *nonblocking* get of the tail in flight
+//! (`dart_get` → handle) and overlaps useful work with it: while the
+//! probe flies, it drains the items it already knows about with blocking
+//! slot gets, publishes the new head, and only then completes the probe
+//! with the `test` API (`DartEnv::test` — nonblocking, returns the handle
+//! back while in flight). Between tests it yields a cooperative
+//! `progress_poll` tick to the asynchronous progress engine (the launch
+//! uses `ProgressMode::Polling`), so deferred work retires in the gaps.
 
-use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dart::{run, DartConfig, ProgressMode, DART_TEAM_ALL};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 const CAP: u64 = 16; // ring capacity (slots)
@@ -28,7 +40,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let consumed_sum = AtomicU64::new(0);
     let produced_sum = AtomicU64::new(0);
 
-    run(DartConfig::with_units(units), |env| {
+    run(DartConfig::with_units(units).with_progress_mode(ProgressMode::Polling), |env| {
         // Layout in unit 0's segment: [head, tail, slot0..slot15] as u64.
         let ring = env.team_memalloc_aligned(DART_TEAM_ALL, (2 + CAP) * 8).unwrap();
         let r0 = ring.with_unit(0);
@@ -45,19 +57,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         };
 
         if env.myid() == 0 {
-            // Consumer: drain n_items.
+            // Consumer: drain n_items with ONE nonblocking tail probe in
+            // flight at a time, overlapped with draining known items.
             let mut sum = 0u64;
-            let mut h = 0u64;
+            let mut h = 0u64; // my head cursor
+            let mut published = 0u64; // head value producers can see
+            let mut known_tail = 0u64; // last observed tail
+            let mut tbuf = [0u8; 8];
+            let mut probe = env.get(tail, &mut tbuf).unwrap();
             while h < n_items {
-                let t = read_u64(tail);
-                while h < t {
+                // Overlap: consume everything already known while the
+                // probe is in flight.
+                while h < known_tail {
                     sum = sum.wrapping_add(read_u64(slot(h)));
                     h += 1;
                 }
-                // publish the new head so producers can reuse slots
-                env.put_blocking(head, &h.to_ne_bytes()).unwrap();
-                std::thread::yield_now();
+                if h > published {
+                    // Publish the advanced head so producers reuse slots
+                    // (only when it moved — no blocking put per poll).
+                    env.put_blocking(head, &h.to_ne_bytes()).unwrap();
+                    published = h;
+                }
+                // Complete (or keep flying) the probe via the test API.
+                match env.test(probe) {
+                    Ok(()) => {
+                        known_tail = u64::from_ne_bytes(tbuf);
+                        probe = env.get(tail, &mut tbuf).unwrap();
+                    }
+                    Err(inflight) => {
+                        probe = inflight;
+                        env.progress_poll();
+                        std::thread::yield_now();
+                    }
+                }
             }
+            env.wait(probe).unwrap();
             consumed_sum.store(sum, Ordering::SeqCst);
         } else {
             // Producer: push `per_prod` tagged items under the lock.
@@ -68,8 +102,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 loop {
                     env.lock_acquire(&lock).unwrap();
                     let t = read_u64(tail);
-                    let h = read_u64(head);
-                    if t - h < CAP {
+                    let hd = read_u64(head);
+                    if t - hd < CAP {
                         // room: write the item, then advance the tail
                         env.put_blocking(slot(t), &item.to_ne_bytes()).unwrap();
                         env.put_blocking(tail, &(t + 1).to_ne_bytes()).unwrap();

@@ -1,0 +1,196 @@
+//! §Async progress — communication/computation overlap across progress
+//! modes and placements.
+//!
+//! The follow-up paper's question (Zhou & Gracia, "Asynchronous progress
+//! design for a MPI-based PGAS one-sided communication system"): who pays
+//! for completion? Two measured scenarios per `(progress mode, placement)`
+//! configuration, 2 units each:
+//!
+//! - **RMA phase**: unit 0 issues a batch of deferred-completion puts
+//!   (`put_async`), "computes" for a fixed window (spinning, with
+//!   cooperative polls in `Polling` mode), then pays `flush_all`. The
+//!   engine-retired share of the traffic is the *overlap efficiency*
+//!   (`overlap_bytes / async_bytes` from [`dart::dart::Metrics`]): `0` in
+//!   `Caller` mode by construction, `→1` when the engine retires the whole
+//!   batch in the background.
+//! - **Collective phase**: both units run a pipelined nonblocking
+//!   allreduce (`allreduce_async`) across the same compute window and the
+//!   *wait* is timed. In `Caller` mode the reduction + fan-out transfer
+//!   only start inside the wait; in `Thread`/`Polling` modes they ran
+//!   during the compute window, so the wait shrinks toward zero.
+//!
+//! Results print as a table and land in `BENCH_overlap.json`, including
+//! the cost side of the ablation: total engine wakeups and the modelled
+//! nanoseconds charged for them (`progress_tick_ns`).
+
+use dart::bench_util::{fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, ProgressMode, DART_TEAM_ALL};
+use dart::mpisim::MpiOp;
+use dart::simnet::cost::spin_for;
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One measured configuration.
+#[derive(Clone, Default)]
+struct Shot {
+    mode: &'static str,
+    placement: &'static str,
+    /// RMA phase: bytes issued as deferred-completion puts.
+    async_bytes: u64,
+    /// RMA phase: bytes retired by the progress engine (overlap achieved).
+    overlap_bytes: u64,
+    /// RMA phase: median ns spent inside `flush_all`.
+    flush_ns: f64,
+    /// Collective phase: median ns spent inside the allreduce wait.
+    coll_wait_ns: f64,
+    /// Engine wakeups over the whole launch (thread + polls).
+    engine_ticks: u64,
+    /// Modelled ns charged for those wakeups.
+    tick_ns_charged: u64,
+}
+
+impl Shot {
+    fn overlap_efficiency(&self) -> f64 {
+        if self.async_bytes == 0 {
+            0.0
+        } else {
+            self.overlap_bytes as f64 / self.async_bytes as f64
+        }
+    }
+}
+
+/// Spin for `window`, polling the engine roughly every `poll_every` when
+/// in `Polling` mode (other modes just spin — that is the point).
+fn compute_window(env: &dart::dart::DartEnv, mode: ProgressMode, window: Duration) {
+    let start = Instant::now();
+    let slice = Duration::from_micros(20);
+    while start.elapsed() < window {
+        spin_for(slice.min(window.saturating_sub(start.elapsed())));
+        if mode == ProgressMode::Polling {
+            env.progress_poll();
+        }
+    }
+}
+
+fn measure(mode: ProgressMode, placement: &'static str, pin: PinPolicy, reps: usize) -> Shot {
+    const PUTS: usize = 24;
+    const PUT_BYTES: usize = 16 << 10; // 16 KiB, E1 regime
+    const WINDOW: Duration = Duration::from_micros(400);
+    let out = Mutex::new(Shot::default());
+    let cfg = DartConfig::hermit(2, 2)
+        .with_pin(pin)
+        .with_pools(1 << 16, 1 << 20)
+        .with_progress_mode(mode);
+    run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, (PUTS * PUT_BYTES) as u64).unwrap();
+        let src = vec![0xA5u8; PUT_BYTES];
+        env.barrier(DART_TEAM_ALL).unwrap();
+
+        // --- RMA phase (unit 0 drives; unit 1 is the passive target).
+        let mut flush = Samples::new();
+        for _ in 0..reps {
+            if env.myid() == 0 {
+                for i in 0..PUTS {
+                    env.put_async(g.with_unit(1).add((i * PUT_BYTES) as u64), &src).unwrap();
+                }
+                compute_window(env, mode, WINDOW);
+                let t = Instant::now();
+                env.flush_all(g).unwrap();
+                flush.push(t.elapsed().as_nanos() as f64);
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+
+        // --- collective phase (both units participate).
+        let mut coll = Samples::new();
+        let mine = vec![env.myid() as f64 + 1.0; 1024];
+        let mut reduced = vec![0f64; 1024];
+        for _ in 0..reps {
+            let h = env
+                .allreduce_async(DART_TEAM_ALL, &mine, &mut reduced, MpiOp::Sum)
+                .unwrap();
+            compute_window(env, mode, WINDOW);
+            let t = Instant::now();
+            env.coll_wait(h).unwrap();
+            coll.push(t.elapsed().as_nanos() as f64);
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+
+        if env.myid() == 0 {
+            *out.lock().unwrap() = Shot {
+                mode: mode.label(),
+                placement,
+                async_bytes: (reps * PUTS * PUT_BYTES) as u64,
+                overlap_bytes: env.metrics.overlap_bytes.get(),
+                flush_ns: flush.median(),
+                coll_wait_ns: coll.median(),
+                engine_ticks: env.engine_ticks(),
+                tick_ns_charged: env.engine_tick_ns_charged(),
+            };
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"mode\":\"{}\",\"placement\":\"{}\",\"async_bytes\":{},\"overlap_bytes\":{},\
+         \"overlap_efficiency\":{:.4},\"flush_ns\":{:.1},\"coll_wait_ns\":{:.1},\
+         \"engine_ticks\":{},\"tick_ns_charged\":{}}}",
+        s.mode,
+        s.placement,
+        s.async_bytes,
+        s.overlap_bytes,
+        s.overlap_efficiency(),
+        s.flush_ns,
+        s.coll_wait_ns,
+        s.engine_ticks,
+        s.tick_ns_charged
+    )
+}
+
+fn main() {
+    let reps = if quick_mode() { 6 } else { 40 };
+    println!("==== §Async progress — overlap across progress modes × placements ====");
+    let placements: [(&'static str, PinPolicy); 2] =
+        [("intra-numa", PinPolicy::Block), ("inter-node", PinPolicy::ScatterNode)];
+    let modes = [ProgressMode::Caller, ProgressMode::Polling, ProgressMode::Thread];
+    let mut shots = Vec::new();
+    for (pname, pin) in placements.iter() {
+        for &mode in &modes {
+            shots.push(measure(mode, *pname, pin.clone(), reps));
+        }
+    }
+    println!(
+        "\n{:>10} {:>11} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "mode", "placement", "overlap", "flush", "coll wait", "ticks", "tick ns charged"
+    );
+    for s in &shots {
+        println!(
+            "{:>10} {:>11} {:>9.0}% {:>12} {:>12} {:>12} {:>14}",
+            s.mode,
+            s.placement,
+            s.overlap_efficiency() * 100.0,
+            fmt_ns(s.flush_ns),
+            fmt_ns(s.coll_wait_ns),
+            s.engine_ticks,
+            s.tick_ns_charged
+        );
+    }
+    println!(
+        "\n(expected shape: caller = 0% overlap and the largest collective wait; \
+         thread ≈ full overlap at the highest tick charge; polling in between)"
+    );
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_overlap\",\"reps\":{reps},\"put_bytes\":16384,\"puts_per_rep\":24,\
+         \"compute_window_us\":400,\"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_overlap.json", format!("{json}\n")).expect("write BENCH_overlap.json");
+    println!("\nwrote BENCH_overlap.json");
+}

@@ -1,20 +1,24 @@
-//! Distributed SUMMA matrix multiply over the DART PGAS.
+//! Distributed SUMMA matrix multiply over the DART runtime.
 //!
 //! `C = A @ B` with `A (M×K)` row-distributed, `B (K×N)` row-distributed
 //! (one K-panel per unit) and `C (M×N)` row-distributed. SUMMA iterates
-//! over K-panels: at step `p`, every unit *one-sidedly gets* panel `p` of
-//! `B` from its owner's segment of the collective allocation — a pure PGAS
-//! formulation: the owner does not participate (no bcast) — and
-//! accumulates `C_u += A_u[:, panel p] @ B_panel` with the AOT
-//! `summa_f32_*` artifact (L1 Pallas GEMM tile inside an L2 JAX step).
+//! over K-panels: at step `p`, the owner of panel `p` **broadcasts** it to
+//! the team — the textbook SUMMA formulation — and every unit accumulates
+//! `C_u += A_u[:, panel p] @ B_panel` with the AOT `summa_f32_*` artifact
+//! (L1 Pallas GEMM tile inside an L2 JAX step).
 //!
-//! Panel fetches run on the engine's batched-flush API
-//! ([`crate::dart::DartEnv::get_async`] +
-//! [`crate::dart::DartEnv::flush`]): panel `p+1` streams in while panel
-//! `p` computes, overlapping communication with the GEMM.
+//! **Pipelined broadcasts** (the asynchronous-progress rewiring): the
+//! broadcast of panel `p+1` is a *nonblocking* collective
+//! ([`crate::dart::DartEnv::bcast_async`] → `MPI_Ibcast`) initiated
+//! before the GEMM on panel `p` starts, and completed
+//! ([`crate::dart::DartEnv::coll_wait`]) only when the next panel is
+//! consumed. Under `Thread`/`Polling` progress modes the broadcast's
+//! schedule advances *while the GEMM runs*; in `Caller` mode it advances
+//! only inside the wait — the measurable difference the `perf_overlap`
+//! bench and the progress-mode ablation are about.
 
 use crate::dart::{DartEnv, DartErr, DartResult, TeamId};
-use crate::mpisim::{as_bytes, as_bytes_mut};
+use crate::mpisim::as_bytes_mut;
 use crate::runtime::Engine;
 
 /// Parameters of a distributed SUMMA run. With `P` units the global
@@ -29,6 +33,7 @@ pub struct SummaConfig {
     pub nb: usize,
     /// Artifact name (e.g. `summa_f32_64x64x64`).
     pub artifact: String,
+    /// Team the multiply is collective over.
     pub team: TeamId,
 }
 
@@ -54,12 +59,13 @@ pub struct SummaReport {
     pub global_norm: f64,
 }
 
-/// Deterministic test matrices: `A[i,j] = sin(i−j)·0.1`, `B[i,j] =
-/// cos(i+j)·0.1` (global indices) — dense, structured, reproducible.
+/// Deterministic test matrices: `A[i,j] = sin((i−j)/20)·0.1` (global
+/// indices) — dense, structured, reproducible.
 pub fn a_entry(i: usize, j: usize) -> f32 {
     ((i as f32 - j as f32) * 0.05).sin() * 0.1
 }
 
+/// `B[i,j] = cos((i+j)/20)·0.1` — the matching deterministic B matrix.
 pub fn b_entry(i: usize, j: usize) -> f32 {
     ((i + j) as f32 * 0.05).cos() * 0.1
 }
@@ -76,15 +82,9 @@ pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &SummaConfig) -> Dar
         .load(&cfg.artifact)
         .map_err(|e| DartErr::Invalid(format!("artifact {}: {e}", cfg.artifact)))?;
 
-    // B is PGAS-resident: one aligned collective allocation, unit u's
-    // segment holds K-panel u (kb × nb, row-major).
-    let b_panel_bytes = (kb * nb * 4) as u64;
-    let b_grid = env.team_memalloc_aligned(team, b_panel_bytes)?;
-    let my_b: Vec<f32> =
-        (0..kb * nb).map(|i| b_entry(me * kb + i / nb, i % nb)).collect();
-    env.local_write(b_grid.with_unit(env.team_unit_l2g(team, me)?), as_bytes(&my_b))?;
-
-    // A row-block lives in ordinary local memory (no one else reads it).
+    // My K-panel of B (kb × nb, row-major) and my A row-block live in
+    // ordinary local memory; panels travel by (pipelined) broadcast.
+    let my_b: Vec<f32> = (0..kb * nb).map(|i| b_entry(me * kb + i / nb, i % nb)).collect();
     let a_local: Vec<f32> =
         (0..mb * k_total).map(|i| a_entry(me * mb + i / k_total, i % k_total)).collect();
 
@@ -94,18 +94,24 @@ pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &SummaConfig) -> Dar
     let mut b_panel = vec![0f32; kb * nb];
     let mut b_next = vec![0f32; kb * nb];
     let mut a_panel = vec![0f32; mb * kb];
-    // Panel pipeline on the engine's batched-flush API: fetch panel `p+1`
-    // in deferred-completion mode while panel `p` computes, and pay the
-    // remote-completion wait (`dart_flush`) only right before the data is
-    // consumed. The owner still never participates (pure PGAS).
-    let owner_of = |panel: usize| env.team_unit_l2g(team, panel);
-    env.get_blocking(b_grid.with_unit(owner_of(0)?), as_bytes_mut(&mut b_panel))?;
+    // Prologue: panel 0 arrives by blocking broadcast (nothing to overlap
+    // with yet). Panel `q` is owned by team rank `q`.
+    if me == 0 {
+        b_panel.copy_from_slice(&my_b);
+    }
+    env.bcast(team, as_bytes_mut(&mut b_panel), 0)?;
     for panel in 0..p {
-        // Prefetch the next panel before computing on the current one.
-        if panel + 1 < p {
-            let next_owner = owner_of(panel + 1)?;
-            env.get_async(b_grid.with_unit(next_owner), as_bytes_mut(&mut b_next))?;
-        }
+        // Pipeline: initiate the nonblocking broadcast of panel `panel+1`
+        // before computing on `panel`; the schedule advances while the
+        // GEMM runs (Thread/Polling progress modes).
+        let next_bcast = if panel + 1 < p {
+            if me == panel + 1 {
+                b_next.copy_from_slice(&my_b);
+            }
+            Some(env.bcast_async(team, as_bytes_mut(&mut b_next), panel + 1)?)
+        } else {
+            None
+        };
         // Slice my A columns for this panel.
         for r in 0..mb {
             let src = &a_local[r * k_total + panel * kb..r * k_total + (panel + 1) * kb];
@@ -116,9 +122,9 @@ pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &SummaConfig) -> Dar
             .run_f32(&[&c_local, &a_panel, &b_panel])
             .map_err(|e| DartErr::Invalid(format!("artifact execution: {e}")))?;
         c_local.copy_from_slice(&outs[0]);
-        if panel + 1 < p {
-            // Complete the prefetch, then rotate the buffers.
-            env.flush(b_grid.with_unit(owner_of(panel + 1)?))?;
+        if let Some(h) = next_bcast {
+            // Complete the pipelined broadcast, then rotate the buffers.
+            env.coll_wait(h)?;
             std::mem::swap(&mut b_panel, &mut b_next);
         }
     }
@@ -127,7 +133,6 @@ pub fn run_distributed(env: &DartEnv, engine: &Engine, cfg: &SummaConfig) -> Dar
     let mut global_sq = [0f64];
     env.allreduce(team, &[local_sq], &mut global_sq, crate::mpisim::MpiOp::Sum)?;
     env.barrier(team)?;
-    env.team_memfree(team, b_grid)?;
     Ok(SummaReport { c_local, global_norm: global_sq[0].sqrt() })
 }
 

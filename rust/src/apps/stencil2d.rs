@@ -14,6 +14,18 @@
 //! [`crate::dart::DartEnv::flush_all`] on the grid's segment completes
 //! the whole phase (asserted per-op by `rust/tests/engine_tests.rs`).
 //!
+//! **Overlap structure** (the asynchronous-progress rewiring): the halo
+//! transfers are *initiated* first, then the padded block's interior —
+//! which depends only on local data — is assembled while they fly, with a
+//! cooperative [`crate::dart::DartEnv::progress_poll`] between the copy
+//! and the flush so the engine can retire the transfers before the flush
+//! ever has to wait (`Polling`/`Thread` progress modes; in `Caller` mode
+//! the poll is a no-op and the flush pays for completion, which is the
+//! ablation baseline). The per-step residual reduction is a *nonblocking*
+//! allreduce ([`crate::dart::DartEnv::allreduce_async`]) overlapped with
+//! publishing the new block. Achieved overlap is visible in
+//! [`crate::dart::Metrics::overlap_bytes`].
+//!
 //! The local sweep runs the same AOT Pallas artifact as the 1D app; the
 //! result is verified against the sequential reference over the full
 //! `py·B × px·B` grid.
@@ -33,8 +45,11 @@ pub struct Stencil2dConfig {
     pub py: usize,
     /// Per-unit block edge (artifact input is `(block+2)²`).
     pub block: usize,
+    /// Number of sweep steps.
     pub steps: usize,
+    /// Artifact name (e.g. `stencil_f32_32x32`).
     pub artifact: String,
+    /// Team the run is collective over.
     pub team: TeamId,
 }
 
@@ -55,7 +70,9 @@ impl Stencil2dConfig {
 /// Result (per unit; `residuals`/`global_checksum` identical everywhere).
 #[derive(Debug, Clone)]
 pub struct Stencil2dReport {
+    /// Global residual after each step.
     pub residuals: Vec<f64>,
+    /// Sum of the final global grid.
     pub global_checksum: f64,
 }
 
@@ -154,30 +171,47 @@ pub fn run_distributed(
             )?,
             None => east.fill(0.0),
         }
-        env.flush_all(grid)?;
-
-        // --- assemble padded block (corners unused by the 5-point sweep).
+        // --- overlap: the padded interior depends only on local data, so
+        // assemble it while the halo transfers fly, then give the progress
+        // engine one cooperative tick before paying the flush.
         let wp = b + 2;
         padded.fill(0.0);
+        for r in 0..b {
+            padded[(r + 1) * wp + 1..(r + 1) * wp + 1 + b]
+                .copy_from_slice(&local[r * b..(r + 1) * b]);
+        }
+        env.progress_poll();
+        env.flush_all(grid)?;
+
+        // --- halo edges now that the transfers have landed (corners are
+        // unused by the 5-point sweep).
         padded[1..1 + b].copy_from_slice(&north);
         for r in 0..b {
             padded[(r + 1) * wp] = west[r];
-            padded[(r + 1) * wp + 1..(r + 1) * wp + 1 + b]
-                .copy_from_slice(&local[r * b..(r + 1) * b]);
             padded[(r + 1) * wp + 1 + b] = east[r];
         }
         padded[(b + 1) * wp + 1..(b + 1) * wp + 1 + b].copy_from_slice(&south);
 
-        // --- local sweep on PJRT + residual reduction.
+        // --- local sweep on PJRT + nonblocking residual reduction,
+        // overlapped with publishing the new block to the segment.
         let outs = exe
             .run_f32(&[&padded])
             .map_err(|e| DartErr::Invalid(format!("artifact execution: {e}")))?;
         local.copy_from_slice(&outs[0]);
         let mut global_res = [0f64];
-        env.allreduce(team, &[outs[1][0] as f64], &mut global_res, MpiOp::Sum)?;
-        residuals.push(global_res[0]);
+        let res_h = env.allreduce_async(team, &[outs[1][0] as f64], &mut global_res, MpiOp::Sum)?;
+        // The blocking allreduce this replaces doubled as the barrier that
+        // kept a fast unit from overwriting its published block while a
+        // slow neighbour was still halo-reading it; with the reduction now
+        // asynchronous, that ordering needs an explicit barrier before the
+        // write (and the usual one after, so the publication is visible
+        // before the next step's gets). The in-flight allreduce overlaps
+        // both barriers and the write itself.
+        env.barrier(team)?;
         env.local_write(my_block, as_bytes(&local))?;
         env.barrier(team)?;
+        env.coll_wait(res_h)?;
+        residuals.push(global_res[0]);
     }
 
     let local_sum: f64 = local.iter().map(|&v| v as f64).sum();

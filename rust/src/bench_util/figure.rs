@@ -46,6 +46,7 @@ pub enum Figure {
 }
 
 impl Figure {
+    /// The paper figure's title.
     pub fn title(&self) -> &'static str {
         match self {
             Figure::DtctBlockingPut => "Fig. 8 — DTCT of the Blocking Put Operation",
@@ -59,6 +60,7 @@ impl Figure {
         }
     }
 
+    /// Bandwidth figure (12–15) vs latency figure (8–11)?
     pub fn is_bandwidth(&self) -> bool {
         matches!(
             self,

@@ -18,22 +18,27 @@ pub struct Samples {
 }
 
 impl Samples {
+    /// Empty sample set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn push(&mut self, v: f64) {
         self.vals.push(v);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.vals.len()
     }
 
+    /// No samples yet?
     pub fn is_empty(&self) -> bool {
         self.vals.is_empty()
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.vals.is_empty() {
             return f64::NAN;
@@ -51,6 +56,7 @@ impl Samples {
             .sqrt()
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.vals.iter().copied().fold(f64::INFINITY, f64::min)
     }
@@ -66,6 +72,7 @@ impl Samples {
         s[idx.min(s.len() - 1)]
     }
 
+    /// Median (50th percentile).
     pub fn median(&self) -> f64 {
         self.percentile(50.0)
     }

@@ -1,4 +1,5 @@
-//! DART collective communication (§III, §IV-B5).
+//! DART collective communication (§III, §IV-B5) — blocking and
+//! nonblocking.
 //!
 //! "The semantics of DART collective routines are the same as that of MPI.
 //! Therefore, we can implement the DART collective interfaces
@@ -7,12 +8,38 @@
 //! communicator based on the given teamID." — which is exactly what every
 //! function here does: teamlist lookup, then delegate.
 //!
+//! The **nonblocking** family ([`DartEnv::barrier_async`],
+//! [`DartEnv::bcast_async`], [`DartEnv::allgather_async`],
+//! [`DartEnv::allreduce_async`]) delegates the same way to the substrate's
+//! `MPI_I*` state machines ([`crate::mpisim::icoll`]) and returns a
+//! [`DartCollHandle`] completed through the `coll_test`/`coll_test_all` /
+//! `coll_wait`/`coll_wait_all` family — the collective mirror of the
+//! one-sided `test`/`wait` handles. In `Thread`/`Polling` progress modes
+//! the collective advances in the background while the unit computes.
+//!
 //! Roots are given as *team-relative* ranks (like MPI); use
 //! [`crate::dart::DartEnv::team_unit_g2l`] to translate an absolute unit.
 
 use super::gptr::TeamId;
 use super::{DartEnv, DartResult};
-use crate::mpisim::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, Pod};
+use crate::mpisim::{as_bytes, as_bytes_mut, CollRequest, HasMpiType, MpiOp, Pod};
+
+/// Completion handle of a nonblocking DART collective (the collective
+/// analogue of [`super::DartHandle`]).
+///
+/// Wraps the substrate's [`CollRequest`]; output buffers stay mutably
+/// borrowed until completion, so misuse is a compile error. Complete via
+/// [`DartEnv::coll_wait`] / poll via [`DartEnv::coll_test`].
+pub struct DartCollHandle<'buf> {
+    req: Option<CollRequest<'buf>>,
+}
+
+impl DartCollHandle<'_> {
+    /// An already-completed handle (degenerate cases).
+    pub fn completed() -> Self {
+        DartCollHandle { req: None }
+    }
+}
 
 impl DartEnv {
     /// `dart_barrier(team)`.
@@ -92,5 +119,115 @@ impl DartEnv {
     /// Typed bcast convenience.
     pub fn bcast_typed<T: Pod>(&self, team: TeamId, buf: &mut [T], root: usize) -> DartResult<()> {
         self.bcast(team, as_bytes_mut(buf), root)
+    }
+
+    // ------------------------------------------------------------------
+    // Nonblocking collectives (dart_barrier_async / dart_bcast_async / …)
+    // ------------------------------------------------------------------
+
+    /// Shared initiation bookkeeping of the nonblocking family.
+    fn coll_async_init(&self) {
+        self.metrics.collectives.bump();
+        self.metrics.coll_phases.bump();
+    }
+
+    /// `dart_barrier_async(team)`: the handle completes only once *every*
+    /// member of `team` has entered the barrier.
+    pub fn barrier_async(&self, team: TeamId) -> DartResult<DartCollHandle<'static>> {
+        let comm = self.team_comm(team)?;
+        self.coll_async_init();
+        Ok(DartCollHandle { req: Some(comm.ibarrier()?) })
+    }
+
+    /// `dart_bcast_async`: nonblocking [`DartEnv::bcast`]. `buf` is the
+    /// payload at `root` (staged at initiation) and the output elsewhere,
+    /// borrowed until the handle completes; the delivered bytes are
+    /// identical to what the blocking bcast would deliver.
+    pub fn bcast_async<'b>(
+        &self,
+        team: TeamId,
+        buf: &'b mut [u8],
+        root: usize,
+    ) -> DartResult<DartCollHandle<'b>> {
+        let comm = self.team_comm(team)?;
+        self.coll_async_init();
+        Ok(DartCollHandle { req: Some(comm.ibcast(buf, root)?) })
+    }
+
+    /// `dart_allgather_async`: nonblocking [`DartEnv::allgather`].
+    pub fn allgather_async<'b>(
+        &self,
+        team: TeamId,
+        send: &[u8],
+        recv: &'b mut [u8],
+    ) -> DartResult<DartCollHandle<'b>> {
+        let comm = self.team_comm(team)?;
+        self.coll_async_init();
+        Ok(DartCollHandle { req: Some(comm.iallgather(send, recv)?) })
+    }
+
+    /// `dart_allreduce_async` (typed): nonblocking [`DartEnv::allreduce`].
+    /// In `Thread` mode the element-wise reduction itself runs on the
+    /// background progress thread while this unit computes.
+    pub fn allreduce_async<'b, T: HasMpiType>(
+        &self,
+        team: TeamId,
+        send: &[T],
+        recv: &'b mut [T],
+        op: MpiOp,
+    ) -> DartResult<DartCollHandle<'b>> {
+        let comm = self.team_comm(team)?;
+        self.coll_async_init();
+        Ok(DartCollHandle {
+            req: Some(comm.iallreduce(as_bytes(send), as_bytes_mut(recv), op, T::MPI_TYPE)?),
+        })
+    }
+
+    /// `dart_test` for collective handles: drive one progress step (on
+    /// this collective only — `Polling` mode ticks the whole engine at
+    /// *initiation* points and explicit [`DartEnv::progress_poll`] calls,
+    /// not per completion test) and report completion. The completing call
+    /// copies the staged result into the output buffer and releases the
+    /// borrow.
+    pub fn coll_test(&self, handle: &mut DartCollHandle<'_>) -> bool {
+        let done = match handle.req.as_mut() {
+            None => return true,
+            Some(req) => req.test(),
+        };
+        if done {
+            // Drop the request (releasing the output-buffer borrow) and
+            // record the completion phase exactly once.
+            handle.req = None;
+            self.metrics.coll_phases.bump();
+            self.sync_progress_metrics();
+        }
+        done
+    }
+
+    /// `dart_testall` for collective handles.
+    pub fn coll_test_all(&self, handles: &mut [DartCollHandle<'_>]) -> bool {
+        let mut all = true;
+        for h in handles.iter_mut() {
+            if !self.coll_test(h) {
+                all = false;
+            }
+        }
+        all
+    }
+
+    /// `dart_wait` for collective handles: block until complete.
+    pub fn coll_wait(&self, mut handle: DartCollHandle<'_>) -> DartResult<()> {
+        while !self.coll_test(&mut handle) {
+            std::thread::yield_now();
+        }
+        Ok(())
+    }
+
+    /// `dart_waitall` for collective handles.
+    pub fn coll_wait_all(&self, handles: Vec<DartCollHandle<'_>>) -> DartResult<()> {
+        for h in handles {
+            self.coll_wait(h)?;
+        }
+        Ok(())
     }
 }

@@ -1,5 +1,6 @@
 //! DART runtime configuration.
 
+use crate::mpisim::ProgressMode;
 use crate::simnet::{CostModel, PinPolicy, Topology};
 
 /// Configuration for a DART SPMD launch ([`crate::dart::run`]).
@@ -47,6 +48,14 @@ pub struct DartConfig {
     /// `(team, unit, allocation)` instead of recomputed on every one-sided
     /// operation. On by default; disable for the hot-path ablation.
     pub segment_cache: bool,
+    /// Who drives asynchronous communication progress (the follow-up
+    /// paper's design axis): `Caller` (progress only inside completion
+    /// calls — the MPI default), `Thread` (a dedicated background progress
+    /// thread per launch), or `Polling` (cooperative ticks at initiation
+    /// points plus explicit [`crate::dart::DartEnv::progress_poll`] calls).
+    /// Each engine wakeup is charged
+    /// [`crate::simnet::CostModel::progress_tick_ns`].
+    pub progress_mode: ProgressMode,
 }
 
 impl DartConfig {
@@ -66,6 +75,7 @@ impl DartConfig {
             shmem_windows: false,
             balanced_lock_tails: false,
             segment_cache: true,
+            progress_mode: ProgressMode::Caller,
         }
     }
 
@@ -119,6 +129,13 @@ impl DartConfig {
     #[must_use]
     pub fn with_segment_cache(mut self, on: bool) -> Self {
         self.segment_cache = on;
+        self
+    }
+
+    /// Builder-style override of the asynchronous-progress mode.
+    #[must_use]
+    pub fn with_progress_mode(mut self, mode: ProgressMode) -> Self {
+        self.progress_mode = mode;
         self
     }
 }

@@ -27,11 +27,21 @@
 //!   outstanding per target / per segment in one call. This decouples
 //!   operation issue from completion so transfers batch and overlap
 //!   (cf. arXiv:1609.08574).
+//!
+//! Deferred operations are additionally registered with the substrate's
+//! **asynchronous progress engine** ([`crate::mpisim::progress`]): in
+//! `Thread` and `Polling` modes the engine retires them in the background
+//! — an async put can reach remote completion with *zero* explicit flushes
+//! — and the retired work is mirrored into [`super::Metrics`] as
+//! overlap-achieved operations/bytes. A flush still gives the usual
+//! completion guarantee in every mode; what the mode changes is who paid
+//! for completion, which is exactly what the `perf_overlap` bench measures.
 
 use super::gptr::{GlobalPtr, TeamId, UnitId};
 use super::{DartEnv, DartErr, DartResult};
-use crate::mpisim::{VectorType, Win};
+use crate::mpisim::{ProgressMode, VectorType, Win};
 use std::rc::Rc;
+use std::time::Instant;
 
 /// One memoized §IV-B4 resolution: the window, MPI-relative target rank
 /// and covering allocation extent of a collective global pointer.
@@ -220,9 +230,15 @@ impl DartEnv {
     /// return immediately, without allocating a completion handle. Remote
     /// completion is deferred to the next [`DartEnv::flush`] /
     /// [`DartEnv::flush_all`] covering the target — so a phase of many
-    /// puts pays one completion call per target instead of one per op.
+    /// puts pays one completion call per target instead of one per op —
+    /// or, in `Thread`/`Polling` progress modes, to the engine retiring it
+    /// in the background.
     pub fn put_async(&self, gptr: GlobalPtr, src: &[u8]) -> DartResult<()> {
-        self.with_win(gptr, |win, target, disp| Ok(win.put(src, target, disp as usize)?))?;
+        self.poll_if_polling();
+        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
+            Ok((win.put(src, target, disp as usize)?, win.id(), target))
+        })?;
+        self.register_async(src.len() as u64, at, win_id, target);
         self.metrics.puts.bump();
         self.metrics.bytes.add(src.len() as u64);
         Ok(())
@@ -231,7 +247,11 @@ impl DartEnv {
     /// `dart_get` in deferred-completion mode: `dst` may not be read until
     /// a flush covering the target completes.
     pub fn get_async(&self, gptr: GlobalPtr, dst: &mut [u8]) -> DartResult<()> {
-        self.with_win(gptr, |win, target, disp| Ok(win.get(dst, target, disp as usize)?))?;
+        self.poll_if_polling();
+        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
+            Ok((win.get(dst, target, disp as usize)?, win.id(), target))
+        })?;
+        self.register_async(dst.len() as u64, at, win_id, target);
         self.metrics.gets.bump();
         self.metrics.bytes.add(dst.len() as u64);
         Ok(())
@@ -247,10 +267,12 @@ impl DartEnv {
         block: usize,
         stride: u64,
     ) -> DartResult<()> {
+        self.poll_if_polling();
         let ty = strided_type(src.len(), count, block, stride)?;
-        self.with_win(gptr, |win, target, disp| {
-            Ok(win.put_vector(src, target, disp as usize, &ty)?)
+        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
+            Ok((win.put_vector(src, target, disp as usize, &ty)?, win.id(), target))
         })?;
+        self.register_async(src.len() as u64, at, win_id, target);
         self.metrics.puts.bump();
         self.metrics.bytes.add(src.len() as u64);
         Ok(())
@@ -266,10 +288,12 @@ impl DartEnv {
         block: usize,
         stride: u64,
     ) -> DartResult<()> {
+        self.poll_if_polling();
         let ty = strided_type(dst.len(), count, block, stride)?;
-        self.with_win(gptr, |win, target, disp| {
-            Ok(win.get_vector(dst, target, disp as usize, &ty)?)
+        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
+            Ok((win.get_vector(dst, target, disp as usize, &ty)?, win.id(), target))
         })?;
+        self.register_async(dst.len() as u64, at, win_id, target);
         self.metrics.gets.bump();
         self.metrics.bytes.add(dst.len() as u64);
         Ok(())
@@ -279,8 +303,15 @@ impl DartEnv {
     /// operation *to the unit behind `gptr`* (on its segment's window) has
     /// completed remotely.
     pub fn flush(&self, gptr: GlobalPtr) -> DartResult<()> {
-        self.with_win(gptr, |win, target, _| Ok(win.flush(target)?))?;
-        self.metrics.flushes.bump();
+        // Snapshot engine retirement *before* waiting: anything the engine
+        // retires while this flush blocks was paid for by the caller and
+        // earns no overlap credit.
+        let pre = self.mpi().state().progress_retired_of(self.myid() as usize);
+        let (win_id, target) = self.with_win(gptr, |win, target, _| {
+            win.flush(target)?;
+            Ok((win.id(), target))
+        })?;
+        self.drain_after_flush(pre, win_id, Some(target));
         Ok(())
     }
 
@@ -288,8 +319,106 @@ impl DartEnv {
     /// operation on `gptr`'s segment window — to *any* target — has
     /// completed remotely. One call completes a whole halo-exchange phase.
     pub fn flush_all(&self, gptr: GlobalPtr) -> DartResult<()> {
-        self.with_win(gptr, |win, _, _| Ok(win.flush_all()?))?;
-        self.metrics.flushes.bump();
+        let pre = self.mpi().state().progress_retired_of(self.myid() as usize);
+        let win_id = self.with_win(gptr, |win, _, _| {
+            win.flush_all()?;
+            Ok(win.id())
+        })?;
+        self.drain_after_flush(pre, win_id, None);
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // The asynchronous progress engine's DART surface
+    // ------------------------------------------------------------------
+
+    /// Register a deferred-completion op with the progress engine.
+    #[inline]
+    fn register_async(&self, bytes: u64, complete_at: Instant, win: u64, target: usize) {
+        self.mpi()
+            .state()
+            .progress_register_rma(self.myid() as usize, bytes, complete_at, win, target);
+    }
+
+    /// Opportunistic cooperative tick at operation-initiation points
+    /// (`Polling` mode only): give the engine a chance to retire *earlier*
+    /// operations before this one is registered.
+    #[inline]
+    pub(crate) fn poll_if_polling(&self) {
+        if self.config().progress_mode == ProgressMode::Polling {
+            self.progress_poll();
+        }
+    }
+
+    /// Flush bookkeeping: the wait is over, so every covered entry of mine
+    /// whose completion instant has passed is done — drop it *without*
+    /// overlap credit (the caller paid for it). Overlap credit is mirrored
+    /// only up to `pre`, the retirement snapshot taken before the flush
+    /// began: work the engine happened to retire *while the caller was
+    /// blocked waiting* is not overlap either.
+    fn drain_after_flush(&self, pre: (u64, u64), win: u64, target: Option<usize>) {
+        let me = self.myid() as usize;
+        self.mpi().state().progress_drain_completed(me, win, target);
+        self.metrics.flushes.bump();
+        let (seen_ops, seen_bytes) = self.progress_seen.get();
+        self.metrics.overlap_ops.add(pre.0 - seen_ops);
+        self.metrics.overlap_bytes.add(pre.1 - seen_bytes);
+        // Advance the seen-counters past anything retired during the wait
+        // so no later sync point credits it.
+        let post = self.mpi().state().progress_retired_of(me);
+        self.progress_seen.set(post);
+    }
+
+    /// One explicit cooperative progress tick: retire pending deferred
+    /// operations engine-wide and advance nonblocking collectives. Returns
+    /// the number of RMA operations retired. A no-op in `Caller` mode —
+    /// the whole point of that mode is that nobody ticks.
+    ///
+    /// Applications insert this between communication initiation and
+    /// independent computation (see `apps::stencil2d`); each tick is
+    /// charged [`crate::simnet::CostModel::progress_tick_ns`].
+    pub fn progress_poll(&self) -> usize {
+        if self.config().progress_mode == ProgressMode::Caller {
+            return 0;
+        }
+        let retired = self.mpi().state().progress_tick();
+        self.metrics.progress_ticks.bump();
+        self.sync_progress_metrics();
+        retired
+    }
+
+    /// Number of this unit's deferred-completion operations still
+    /// registered with the progress engine (not yet retired by it, nor
+    /// drained by a flush). Reaches zero without any flush in `Thread`
+    /// mode — the "zero explicit flushes" property the follow-up paper is
+    /// about.
+    pub fn async_pending(&self) -> usize {
+        let pending = self.mpi().state().progress_pending_of(self.myid() as usize);
+        self.sync_progress_metrics();
+        pending
+    }
+
+    /// Total engine wakeups in this launch (background thread + all units'
+    /// polls). World-global; for per-unit poll counts see
+    /// [`super::Metrics::progress_ticks`].
+    pub fn engine_ticks(&self) -> u64 {
+        self.mpi().state().progress_ticks_total()
+    }
+
+    /// Total modelled nanoseconds charged for engine wakeups in this
+    /// launch (world-global) — the cost side of the progress-mode ablation.
+    pub fn engine_tick_ns_charged(&self) -> u64 {
+        self.mpi().state().progress_tick_ns_charged()
+    }
+
+    /// Mirror the engine's retirement counters for this unit into
+    /// [`super::Metrics::overlap_ops`]/[`super::Metrics::overlap_bytes`].
+    /// Called from every progress-related sync point.
+    pub(crate) fn sync_progress_metrics(&self) {
+        let (ops, bytes) = self.mpi().state().progress_retired_of(self.myid() as usize);
+        let (seen_ops, seen_bytes) = self.progress_seen.get();
+        self.metrics.overlap_ops.add(ops - seen_ops);
+        self.metrics.overlap_bytes.add(bytes - seen_bytes);
+        self.progress_seen.set((ops, bytes));
     }
 }

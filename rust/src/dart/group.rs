@@ -113,6 +113,7 @@ impl DartGroup {
         self.members.len()
     }
 
+    /// No members?
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }

@@ -12,16 +12,19 @@ use std::fmt;
 pub struct Counter(Cell<u64>);
 
 impl Counter {
+    /// Increment by one.
     #[inline]
     pub fn bump(&self) {
         self.0.set(self.0.get() + 1);
     }
 
+    /// Increment by `n`.
     #[inline]
     pub fn add(&self, n: u64) {
         self.0.set(self.0.get() + n);
     }
 
+    /// Current value.
     #[inline]
     pub fn get(&self) -> u64 {
         self.0.get()
@@ -53,9 +56,23 @@ pub struct Metrics {
     pub cache_hits: Counter,
     /// Segment-cache misses (full registry + translation-table walk).
     pub cache_misses: Counter,
+    /// Progress-engine ticks driven by this unit's cooperative polls
+    /// (`Polling` mode; background-thread ticks are world-global — see
+    /// [`crate::dart::DartEnv::engine_ticks`]).
+    pub progress_ticks: Counter,
+    /// Deferred one-sided operations retired by the progress engine —
+    /// completed in the background with zero caller time.
+    pub overlap_ops: Counter,
+    /// Bytes of deferred one-sided traffic retired by the progress engine
+    /// (the "overlap achieved" number the `perf_overlap` bench reports).
+    pub overlap_bytes: Counter,
+    /// Nonblocking-collective phase transitions observed by this unit
+    /// (one per initiation, one per completion).
+    pub coll_phases: Counter,
 }
 
 impl Metrics {
+    /// Fresh all-zero counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -66,7 +83,8 @@ impl fmt::Display for Metrics {
         write!(
             f,
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
-             flushes={} cache_hit={} cache_miss={}",
+             flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
+             coll_phases={}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -77,7 +95,11 @@ impl fmt::Display for Metrics {
             self.lock_acquires.get(),
             self.flushes.get(),
             self.cache_hits.get(),
-            self.cache_misses.get()
+            self.cache_misses.get(),
+            self.progress_ticks.get(),
+            self.overlap_ops.get(),
+            self.overlap_bytes.get(),
+            self.coll_phases.get()
         )
     }
 }

@@ -13,7 +13,13 @@
 //! 4. **Global memory management** — [`DartEnv::memalloc`] /
 //!    [`DartEnv::team_memalloc_aligned`] and the 128-bit [`GlobalPtr`].
 //! 5. **Communication** — one-sided blocking/non-blocking put/get with
-//!    handles ([`onesided`]) and team collectives ([`collectives`]).
+//!    handles ([`onesided`]), team collectives — blocking and nonblocking
+//!    (`barrier_async`/`bcast_async`/… returning [`DartCollHandle`]) —
+//!    ([`collectives`]), and the asynchronous progress engine
+//!    ([`ProgressMode`], [`DartEnv::progress_poll`]) that retires deferred
+//!    one-sided operations and advances nonblocking collectives in the
+//!    background, making communication/computation overlap real rather
+//!    than nominal (Zhou & Gracia's follow-up asynchronous-progress work).
 //!
 //! ## How the semantic gaps are bridged (paper §IV-B)
 //!
@@ -41,6 +47,7 @@ pub mod translation;
 #[cfg(test)]
 mod tests;
 
+pub use collectives::DartCollHandle;
 pub use config::DartConfig;
 pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE};
 pub use group::DartGroup;
@@ -48,10 +55,15 @@ pub use lock::DartLock;
 pub use metrics::Metrics;
 pub use onesided::DartHandle;
 
+/// Re-export: the progress-mode knob lives in the substrate
+/// ([`crate::mpisim::progress`]) but is configured through
+/// [`DartConfig::progress_mode`].
+pub use crate::mpisim::ProgressMode;
+
 use crate::mpisim::{Mpi, MpiErr, Win, World, WorldConfig};
 use crate::simnet::Placement;
 use engine::SegmentCache;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::fmt;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicI32, Ordering};
@@ -62,15 +74,35 @@ use translation::FreeListAllocator;
 /// Errors surfaced by the DART API.
 #[derive(Debug)]
 pub enum DartErr {
+    /// An error propagated up from the MPI substrate.
     Mpi(MpiErr),
+    /// A unit id outside `0..dart_size()`.
     InvalidUnit(UnitId),
+    /// The team id is unknown on this unit (never created, or destroyed).
     UnknownTeam(TeamId),
-    NotInTeam { unit: UnitId, team: TeamId },
+    /// The unit is not a member of the team it addressed.
+    NotInTeam {
+        /// The absolute unit id that was looked up.
+        unit: UnitId,
+        /// The team it is not a member of.
+        team: TeamId,
+    },
+    /// Every `teamlist` slot is occupied (capacity in the payload).
     TeamListFull(usize),
+    /// The never-reused team id space is exhausted (§IV-B2).
     TeamIdOverflow,
-    OutOfMemory { requested: u64, pool: u64 },
+    /// A global memory pool could not satisfy an allocation.
+    OutOfMemory {
+        /// Bytes requested.
+        requested: u64,
+        /// Pool capacity.
+        pool: u64,
+    },
+    /// A malformed or dangling global pointer was dereferenced.
     InvalidGptr(String),
+    /// A DART lock was used outside its contract (§IV-B6).
     LockMisuse(String),
+    /// Any other invalid argument or state.
     Invalid(String),
 }
 
@@ -148,6 +180,10 @@ pub struct DartEnv {
     /// every subsequent one-sided operation. Invalidated by
     /// [`DartEnv::team_memfree`] / [`DartEnv::team_destroy`].
     pub(crate) seg_cache: RefCell<SegmentCache>,
+    /// Progress-engine bookkeeping: the `(ops, bytes)` retirement counters
+    /// already mirrored into [`Metrics`] (see
+    /// [`DartEnv::progress_poll`] and the flush family).
+    pub(crate) progress_seen: Cell<(u64, u64)>,
     /// Hot-path operation counters.
     pub metrics: Metrics,
 }
@@ -173,6 +209,7 @@ where
         pin: cfg.pin.clone(),
         cost: cfg.cost,
         pin_os_threads: cfg.pin_os_threads,
+        progress: cfg.progress_mode,
     };
     World::run(world_cfg, move |mpi| {
         let env = DartEnv::init(mpi, cfg.clone(), shared.clone()).expect("dart_init failed");
@@ -224,6 +261,7 @@ impl DartEnv {
             shared,
             state: RefCell::new(EnvState { registry, world_win, nc_alloc }),
             seg_cache,
+            progress_seen: Cell::new((0, 0)),
             metrics: Metrics::new(),
         })
     }
@@ -263,7 +301,6 @@ impl DartEnv {
         &self.config
     }
 
-    #[allow(dead_code)]
     pub(crate) fn mpi(&self) -> &Mpi {
         &self.mpi
     }

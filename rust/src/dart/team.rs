@@ -21,6 +21,7 @@ use std::rc::Rc;
 
 /// Per-unit state of one team this unit belongs to.
 pub struct TeamEntry {
+    /// The never-reused team id this slot currently holds.
     pub team_id: TeamId,
     /// The communicator realizing the team (`teams[teamID]` in the paper).
     pub comm: Comm,
@@ -42,6 +43,7 @@ pub struct TeamEntry {
 }
 
 impl TeamEntry {
+    /// Fresh team state around an established communicator and pool.
     pub fn new(team_id: TeamId, comm: Comm, pool: Rc<Win>, pool_size: u64) -> Self {
         let unit_map =
             comm.rank_table().iter().enumerate().map(|(r, &w)| (w as i32, r)).collect();
@@ -74,6 +76,7 @@ pub struct TeamRegistry {
 }
 
 impl TeamRegistry {
+    /// Empty registry with `capacity` teamlist slots.
     pub fn new(capacity: usize, indexed: bool) -> Self {
         TeamRegistry {
             teamlist: vec![-1; capacity],
@@ -147,6 +150,7 @@ impl TeamRegistry {
         self.teamlist.iter().filter(|&&t| t != -1).count()
     }
 
+    /// No live teams?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -13,8 +13,11 @@ use std::rc::Rc;
 /// One collective allocation: `[base, base+len)` of the team pool, exposed
 /// through `win`.
 pub struct TransEntry {
+    /// Pool-relative start of the allocation.
     pub base: u64,
+    /// Allocation length in bytes.
     pub len: u64,
+    /// The allocation's RMA window.
     pub win: Rc<Win>,
 }
 
@@ -26,6 +29,7 @@ pub struct TranslationTable {
 }
 
 impl TranslationTable {
+    /// Empty table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -88,6 +92,7 @@ impl TranslationTable {
         self.entries.len()
     }
 
+    /// No live allocations?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -131,6 +136,7 @@ pub struct FreeListAllocator {
 pub const DART_ALIGN: u64 = 8;
 
 impl FreeListAllocator {
+    /// Allocator over `size` bytes, initially one free extent.
     pub fn new(size: u64) -> Self {
         FreeListAllocator {
             size,

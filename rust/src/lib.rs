@@ -10,16 +10,19 @@
 //!   testbed and its Gemini interconnect.
 //! - [`mpisim`] — an MPI-3 subset implemented over OS threads and shared
 //!   memory: communicators, groups, two-sided p2p, RMA windows with
-//!   passive-target synchronization, request-based RMA, atomics and
-//!   collectives. This is the communication substrate DART is built on,
-//!   playing the role Cray MPICH played in the paper.
+//!   passive-target synchronization, request-based RMA, atomics,
+//!   collectives — blocking and nonblocking ([`mpisim::icoll`]) — and an
+//!   asynchronous progress engine ([`mpisim::progress`]). This is the
+//!   communication substrate DART is built on, playing the role Cray
+//!   MPICH played in the paper.
 //! - [`dart`] — the paper's contribution: the DART PGAS runtime API
 //!   (teams/groups, global memory with 128-bit global pointers, one-sided
 //!   blocking/non-blocking put/get, collectives, and MCS queue locks) mapped
 //!   onto MPI-3 RMA — with a unified communication engine
 //!   ([`dart::engine`]) that caches segment resolution, moves strided
-//!   patterns as single vector-typed requests, and batches remote
-//!   completion behind explicit flushes.
+//!   patterns as single vector-typed requests, batches remote completion
+//!   behind explicit flushes, and retires deferred work in the background
+//!   through the progress engine ([`dart::ProgressMode`]).
 //! - [`runtime`] — an executor for AOT-compiled JAX/Pallas compute
 //!   artifacts so PGAS applications can run their local compute step
 //!   without Python on the request path (native backend offline; the API
@@ -44,6 +47,8 @@
 //!     env.barrier(DART_TEAM_ALL).unwrap();
 //! }).unwrap();
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod apps;
 pub mod bench_util;

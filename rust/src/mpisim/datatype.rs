@@ -41,6 +41,7 @@ pub fn as_bytes_mut<T: Pod>(s: &mut [T]) -> &mut [u8] {
 /// The element datatypes understood by the reduction machinery
 /// (a subset of MPI's predefined datatypes, enough for DART).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[allow(missing_docs)] // self-describing width/signedness tags
 pub enum MpiType {
     U8,
     I16,
@@ -66,6 +67,7 @@ impl MpiType {
 
 /// Trait connecting Rust element types to their [`MpiType`] tag.
 pub trait HasMpiType: Pod {
+    /// The wire datatype tag of `Self`.
     const MPI_TYPE: MpiType;
 }
 
@@ -156,9 +158,13 @@ impl VectorType {
 /// Predefined reduction / accumulate operations (MPI_SUM, MPI_REPLACE, ...).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MpiOp {
+    /// Element-wise sum (wrapping for integers, like MPI in practice).
     Sum,
+    /// Element-wise product.
     Prod,
+    /// Element-wise minimum.
     Min,
+    /// Element-wise maximum.
     Max,
     /// Bitwise AND (integer types only).
     Band,

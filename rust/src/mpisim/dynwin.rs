@@ -204,9 +204,10 @@ impl DynWin {
 }
 
 /// Process-global side table used only during `DynWin::create` rendezvous.
+/// (`std::sync::OnceLock` — the crate is dependency-free, no `once_cell`.)
 fn dyn_side_table() -> &'static Mutex<std::collections::HashMap<u64, Arc<DynState>>> {
-    use once_cell::sync::OnceCell;
-    static TABLE: OnceCell<Mutex<std::collections::HashMap<u64, Arc<DynState>>>> = OnceCell::new();
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Mutex<std::collections::HashMap<u64, Arc<DynState>>>> = OnceLock::new();
     TABLE.get_or_init(|| Mutex::new(std::collections::HashMap::new()))
 }
 

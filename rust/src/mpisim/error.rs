@@ -11,18 +11,63 @@ use std::fmt;
 /// misuse (e.g. RMA outside an access epoch) without killing the process.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MpiErr {
+    /// A rank outside the communicator: `(rank, communicator size)`.
     RankOutOfRange(usize, usize),
-    DispOutOfRange { disp: usize, len: usize, size: usize },
-    NoEpoch { win: u64, target: usize },
-    EpochAlreadyHeld { win: u64, target: usize },
-    NoMatchingLock { win: u64, target: usize },
+    /// A window access past the target segment's end.
+    DispOutOfRange {
+        /// Byte displacement of the access.
+        disp: usize,
+        /// Length of the access.
+        len: usize,
+        /// Size of the target's exposed segment.
+        size: usize,
+    },
+    /// An RMA call outside any passive-target access epoch.
+    NoEpoch {
+        /// Window id.
+        win: u64,
+        /// Target rank.
+        target: usize,
+    },
+    /// `MPI_Win_lock` while an epoch on the target is already held.
+    EpochAlreadyHeld {
+        /// Window id.
+        win: u64,
+        /// Target rank.
+        target: usize,
+    },
+    /// `MPI_Win_unlock` without a matching lock.
+    NoMatchingLock {
+        /// Window id.
+        win: u64,
+        /// Target rank.
+        target: usize,
+    },
+    /// A window id that was freed or never created.
     UnknownWindow(u64),
-    SizeMismatch { local: usize, remote: usize },
-    TypeMismatch { type_size: usize, buf: usize },
+    /// Mismatched buffer sizes between the two sides of an operation.
+    SizeMismatch {
+        /// Local buffer size in bytes.
+        local: usize,
+        /// Expected/remote size in bytes.
+        remote: usize,
+    },
+    /// A buffer whose length is not a multiple of the element size.
+    TypeMismatch {
+        /// Element size of the datatype.
+        type_size: usize,
+        /// Offending buffer length.
+        buf: usize,
+    },
+    /// A group rank translation for a process not in the group.
     NotInGroup(usize),
+    /// The communicator is `MPI_COMM_NULL` for this rank.
     NullComm,
+    /// A completion call on an already-consumed request.
     RequestConsumed,
+    /// Any other invalid argument.
     Invalid(String),
+    /// An operation after the world finalized.
     Finalized,
 }
 

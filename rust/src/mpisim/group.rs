@@ -44,6 +44,7 @@ impl Group {
         self.members.len()
     }
 
+    /// Is this `MPI_GROUP_EMPTY`?
     pub fn is_empty(&self) -> bool {
         self.members.is_empty()
     }

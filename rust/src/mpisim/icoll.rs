@@ -1,0 +1,518 @@
+//! Nonblocking collectives (`MPI_Ibarrier`/`MPI_Ibcast`/`MPI_Iallgather`/
+//! `MPI_Iallreduce`) as progress-engine state machines.
+//!
+//! MPI-3 turns collectives into *schedules*: an initiation call posts the
+//! rank's participation and returns a request; the schedule advances
+//! whenever the library makes progress, and the request completes once the
+//! rank's part of the schedule is done. This module implements that model
+//! over shared state so that *any* agent — the calling rank inside
+//! `test`/`wait` ([`crate::mpisim::ProgressMode::Caller`]), a background
+//! thread ([`crate::mpisim::ProgressMode::Thread`]) or a cooperative poll
+//! ([`crate::mpisim::ProgressMode::Polling`]) — can advance it:
+//!
+//! - every initiation enqueues the rank's **contribution** into a shared
+//!   `CollState` (crate-internal) keyed by `(communicator context,
+//!   collective sequence number)` — the same matching rule the blocking
+//!   collectives use, so
+//!   blocking and nonblocking calls interleave safely as long as all ranks
+//!   issue collectives in the same order (an MPI requirement);
+//! - when the state machine's inputs are complete (all ranks arrived, or
+//!   the root posted for a bcast), the next progress step performs the
+//!   **combining work** (gather assembly, reduction) and books the
+//!   fan-out transfers on the virtual-time channel model — this is the
+//!   work that a busy compute loop cannot do for itself, and exactly what
+//!   the asynchronous progress engine exists to run in the background;
+//! - each rank's [`CollRequest`] completes once its modelled transfer
+//!   instant has passed; completion copies the staged result into the
+//!   rank's output buffer (held by `&mut` borrow for the request's
+//!   lifetime, so the MPI don't-touch-the-buffer rule is compiler-checked).
+//!
+//! The cost model is deliberately coarse — a barrier costs one zero-byte
+//! notification hop, a bcast one root→rank transfer, allgather/allreduce
+//! one neighbour-sized transfer per rank — matching the substrate's
+//! "measure the *difference*, not the absolute" philosophy.
+
+use super::comm::Comm;
+use super::datatype::{reduce_bytes, MpiOp, MpiType};
+use super::error::{MpiErr, MpiResult};
+use super::WorldState;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which collective a [`CollState`] implements, with its static parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CollKind {
+    /// `MPI_Ibarrier`.
+    Barrier,
+    /// `MPI_Ibcast` from comm-relative `root`.
+    Bcast { root: usize },
+    /// `MPI_Iallgather` with equal per-rank contributions of `chunk` bytes.
+    Allgather { chunk: usize },
+    /// `MPI_Iallreduce` over `chunk`-byte buffers of `ty` elements.
+    Allreduce { chunk: usize, op: MpiOp, ty: MpiType },
+}
+
+/// Shared state machine of one in-flight nonblocking collective.
+pub(crate) struct CollState {
+    kind: CollKind,
+    n: usize,
+    /// Comm rank → world rank (for channel bookings).
+    ranks: Vec<usize>,
+    inner: Mutex<CollInner>,
+}
+
+struct CollInner {
+    /// Per-rank staged input (`None` until that rank initiates).
+    contributions: Vec<Option<Vec<u8>>>,
+    arrived: Vec<bool>,
+    arrived_count: usize,
+    /// Comm rank of the most recent arrival (models the notifier).
+    last_arrival: usize,
+    /// Staged output, set by the combining step (empty marker for barrier).
+    result: Option<Vec<u8>>,
+    /// Per-rank modelled completion instant, stamped with the result.
+    complete_at: Vec<Option<Instant>>,
+    /// Ranks that have observed completion (state is dropped at `n`).
+    finished: usize,
+}
+
+impl CollState {
+    fn new(kind: CollKind, n: usize, ranks: Vec<usize>) -> Self {
+        CollState {
+            kind,
+            n,
+            ranks,
+            inner: Mutex::new(CollInner {
+                contributions: (0..n).map(|_| None).collect(),
+                arrived: vec![false; n],
+                arrived_count: 0,
+                last_arrival: 0,
+                result: None,
+                complete_at: vec![None; n],
+                finished: 0,
+            }),
+        }
+    }
+
+    fn kind(&self) -> CollKind {
+        self.kind
+    }
+
+    /// Record rank `me`'s initiation (with its staged contribution).
+    ///
+    /// Deliberately does **not** run a progress step: initiation only
+    /// posts the schedule. The combining work happens in whoever advances
+    /// next — a background tick, a poll, or a caller-side `test`/`wait` —
+    /// which is precisely the observable difference between the progress
+    /// modes (in `Caller` mode, a collective initiated before a compute
+    /// phase makes zero headway until the compute phase ends).
+    fn arrive(&self, me: usize, contribution: Option<Vec<u8>>) -> MpiResult<()> {
+        {
+            let mut inn = self.inner.lock().unwrap();
+            if inn.arrived[me] {
+                return Err(MpiErr::Invalid(
+                    "rank initiated the same nonblocking collective twice".into(),
+                ));
+            }
+            if let CollKind::Allgather { chunk } | CollKind::Allreduce { chunk, .. } = self.kind {
+                let got = contribution.as_ref().map_or(0, |c| c.len());
+                if got != chunk {
+                    return Err(MpiErr::SizeMismatch { local: got, remote: chunk });
+                }
+            }
+            inn.arrived[me] = true;
+            inn.arrived_count += 1;
+            inn.last_arrival = me;
+            match self.kind {
+                CollKind::Bcast { root } if me == root => {
+                    // The root is locally complete as soon as its payload
+                    // is staged (its buffer is input, never written).
+                    inn.result = contribution;
+                    inn.complete_at[me] = Some(Instant::now());
+                }
+                _ => inn.contributions[me] = contribution,
+            }
+        }
+        Ok(())
+    }
+
+    /// One progress step: if the state machine's inputs are complete, do
+    /// the combining work and stamp per-rank completion instants. Safe to
+    /// call from any thread, any number of times (transitions are guarded).
+    pub(crate) fn advance(&self, world: &WorldState) {
+        let mut inn = self.inner.lock().unwrap();
+        match self.kind {
+            CollKind::Barrier => {
+                if inn.arrived_count == self.n && inn.result.is_none() {
+                    inn.result = Some(Vec::new());
+                    let last = self.ranks[inn.last_arrival];
+                    for r in 0..self.n {
+                        let at = world.book_transfer(last, self.ranks[r], 0);
+                        inn.complete_at[r] = Some(at);
+                    }
+                }
+            }
+            CollKind::Bcast { root } => {
+                if let Some(len) = inn.result.as_ref().map(|d| d.len()) {
+                    for r in 0..self.n {
+                        if r != root && inn.arrived[r] && inn.complete_at[r].is_none() {
+                            let at = world.book_transfer(self.ranks[root], self.ranks[r], len);
+                            inn.complete_at[r] = Some(at);
+                        }
+                    }
+                }
+            }
+            CollKind::Allgather { chunk } => {
+                if inn.arrived_count == self.n && inn.result.is_none() {
+                    let mut out = Vec::with_capacity(self.n * chunk);
+                    for c in &inn.contributions {
+                        out.extend_from_slice(c.as_ref().expect("all ranks contributed"));
+                    }
+                    inn.result = Some(out);
+                    let gathered = chunk * self.n.saturating_sub(1);
+                    for r in 0..self.n {
+                        let src = self.ranks[(r + 1) % self.n];
+                        let at = world.book_transfer(src, self.ranks[r], gathered);
+                        inn.complete_at[r] = Some(at);
+                    }
+                }
+            }
+            CollKind::Allreduce { chunk, op, ty } => {
+                if inn.arrived_count == self.n && inn.result.is_none() {
+                    let mut acc = inn.contributions[0].clone().expect("rank 0 contributed");
+                    for c in &inn.contributions[1..] {
+                        // Lengths and element size were validated at
+                        // initiation, so this cannot fail.
+                        reduce_bytes(op, ty, &mut acc, c.as_ref().expect("contributed"))
+                            .expect("validated at initiation");
+                    }
+                    inn.result = Some(acc);
+                    for r in 0..self.n {
+                        let src = self.ranks[(r + 1) % self.n];
+                        let at = world.book_transfer(src, self.ranks[r], chunk);
+                        inn.complete_at[r] = Some(at);
+                    }
+                }
+            }
+        }
+    }
+
+    /// If rank `me`'s schedule has completed, copy the staged result into
+    /// `dst` (taken out of the option) and count the rank finished.
+    /// Returns `None` while incomplete, else `Some(all_ranks_finished)`.
+    fn try_complete(&self, me: usize, dst: &mut Option<&mut [u8]>) -> Option<bool> {
+        let mut inn = self.inner.lock().unwrap();
+        match inn.complete_at[me] {
+            Some(t) if Instant::now() >= t => {}
+            _ => return None,
+        }
+        if let Some(d) = dst.take() {
+            let res = inn.result.as_ref().expect("result staged before completion stamp");
+            assert_eq!(
+                d.len(),
+                res.len(),
+                "nonblocking-collective output buffer length mismatch"
+            );
+            d.copy_from_slice(res);
+        }
+        inn.finished += 1;
+        Some(inn.finished == self.n)
+    }
+}
+
+/// Completion handle of a nonblocking collective (`MPI_Request` of the
+/// `MPI_I*` family).
+///
+/// Holds the rank's output buffer by `&mut` borrow until completion, so the
+/// MPI rule that the buffer may not be touched while the collective is in
+/// flight is enforced by the compiler. Complete with [`CollRequest::wait`]
+/// or poll with [`CollRequest::test`]; dropping an incomplete request
+/// leaks the collective's shared state for the lifetime of the world (MPI
+/// makes abandoning an active request erroneous — don't).
+pub struct CollRequest<'buf> {
+    world: Arc<WorldState>,
+    st: Arc<CollState>,
+    key: u64,
+    my_rank: usize,
+    dst: Option<&'buf mut [u8]>,
+    done: bool,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl<'buf> CollRequest<'buf> {
+    /// `MPI_Test`: drive one caller-side progress step and report whether
+    /// this rank's part of the collective has completed. On the completing
+    /// call the staged result is copied into the output buffer.
+    pub fn test(&mut self) -> bool {
+        if self.done {
+            return true;
+        }
+        // Progress is legal inside any MPI call — this is what makes the
+        // Caller mode work at all.
+        self.st.advance(&self.world);
+        if let Some(all_finished) = self.st.try_complete(self.my_rank, &mut self.dst) {
+            self.done = true;
+            if all_finished {
+                self.world.progress.colls.lock().unwrap().remove(&self.key);
+            }
+        }
+        self.done
+    }
+
+    /// `MPI_Wait`: block (spin-yield) until the collective completes for
+    /// this rank.
+    pub fn wait(mut self) {
+        while !self.test() {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Has completion already been observed (without driving progress)?
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
+impl Comm {
+    /// Post one rank's initiation: find or create the shared state for
+    /// this `(context, seq)` slot, verify the call matches, and arrive.
+    fn icoll_start(
+        &self,
+        kind: CollKind,
+        contribution: Option<Vec<u8>>,
+    ) -> MpiResult<(Arc<CollState>, u64)> {
+        let seq = self.coll_seq.fetch_add(1, Ordering::Relaxed);
+        let key = ((self.context() as u64) << 32) | seq as u64;
+        let st = {
+            let mut map = self.world().progress.colls.lock().unwrap();
+            map.entry(key)
+                .or_insert_with(|| {
+                    Arc::new(CollState::new(kind, self.size(), self.rank_table().to_vec()))
+                })
+                .clone()
+        };
+        if st.kind() != kind {
+            return Err(MpiErr::Invalid(format!(
+                "mismatched nonblocking collective at the same sequence point: \
+                 {:?} vs {:?} (all ranks must issue collectives in the same order)",
+                st.kind(),
+                kind
+            )));
+        }
+        st.arrive(self.rank(), contribution)?;
+        Ok((st, key))
+    }
+
+    fn icoll_request<'buf>(
+        &self,
+        st: Arc<CollState>,
+        key: u64,
+        dst: Option<&'buf mut [u8]>,
+    ) -> CollRequest<'buf> {
+        CollRequest {
+            world: self.world().clone(),
+            st,
+            key,
+            my_rank: self.rank(),
+            dst,
+            done: false,
+            _not_send: std::marker::PhantomData,
+        }
+    }
+
+    /// `MPI_Ibarrier`: the request completes only after *every* rank of the
+    /// communicator has entered the barrier.
+    pub fn ibarrier(&self) -> MpiResult<CollRequest<'static>> {
+        let (st, key) = self.icoll_start(CollKind::Barrier, None)?;
+        Ok(self.icoll_request(st, key, None))
+    }
+
+    /// `MPI_Ibcast`: `buf` is the payload at `root` (staged at initiation,
+    /// so the root's request completes immediately) and the output buffer
+    /// everywhere else (filled at completion, byte-for-byte identical to
+    /// what [`Comm::bcast`] would deliver).
+    ///
+    /// A non-root buffer whose length differs from the root's payload is a
+    /// program error (MPI: erroneous); it cannot be detected at initiation
+    /// — the payload size is unknown until the root posts — so it panics
+    /// at the completing `test`/`wait` instead of returning an error.
+    pub fn ibcast<'buf>(&self, buf: &'buf mut [u8], root: usize) -> MpiResult<CollRequest<'buf>> {
+        if root >= self.size() {
+            return Err(MpiErr::RankOutOfRange(root, self.size()));
+        }
+        let me = self.rank();
+        let contribution = (me == root).then(|| buf.to_vec());
+        let (st, key) = self.icoll_start(CollKind::Bcast { root }, contribution)?;
+        let dst = if me == root { None } else { Some(buf) };
+        Ok(self.icoll_request(st, key, dst))
+    }
+
+    /// `MPI_Iallgather` (equal contribution sizes): at completion `recv`
+    /// (length `size() × send.len()`) holds every rank's contribution in
+    /// rank order.
+    pub fn iallgather<'buf>(
+        &self,
+        send: &[u8],
+        recv: &'buf mut [u8],
+    ) -> MpiResult<CollRequest<'buf>> {
+        let want = self.size() * send.len();
+        if recv.len() != want {
+            return Err(MpiErr::SizeMismatch { local: recv.len(), remote: want });
+        }
+        let (st, key) =
+            self.icoll_start(CollKind::Allgather { chunk: send.len() }, Some(send.to_vec()))?;
+        Ok(self.icoll_request(st, key, Some(recv)))
+    }
+
+    /// `MPI_Iallreduce`: element-wise `(op, ty)` reduction of every rank's
+    /// `send` into every rank's `recv` (same length). The reduction itself
+    /// runs as progress work — in Thread mode, on the background thread.
+    pub fn iallreduce<'buf>(
+        &self,
+        send: &[u8],
+        recv: &'buf mut [u8],
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<CollRequest<'buf>> {
+        if recv.len() != send.len() {
+            return Err(MpiErr::SizeMismatch { local: recv.len(), remote: send.len() });
+        }
+        if send.len() % ty.size() != 0 {
+            return Err(MpiErr::TypeMismatch { type_size: ty.size(), buf: send.len() });
+        }
+        let (st, key) = self.icoll_start(
+            CollKind::Allreduce { chunk: send.len(), op, ty },
+            Some(send.to_vec()),
+        )?;
+        Ok(self.icoll_request(st, key, Some(recv)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::datatype::{as_bytes, as_bytes_mut};
+    use crate::mpisim::{ProgressMode, World, WorldConfig};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::atomic::Ordering as AOrd;
+    use std::time::Duration;
+
+    #[test]
+    fn ibarrier_gates_on_last_rank() {
+        let released = AtomicBool::new(false);
+        World::run(WorldConfig::local(3), |mpi| {
+            let c = mpi.comm_world();
+            if c.rank() == 2 {
+                std::thread::sleep(Duration::from_millis(20));
+                released.store(true, AOrd::SeqCst);
+                c.ibarrier().unwrap().wait();
+            } else {
+                let mut req = c.ibarrier().unwrap();
+                while !released.load(AOrd::SeqCst) {
+                    assert!(!req.test(), "ibarrier completed before all ranks entered");
+                    std::thread::yield_now();
+                }
+                req.wait();
+            }
+        });
+    }
+
+    #[test]
+    fn ibcast_matches_blocking_bcast() {
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            for root in 0..4 {
+                let pattern: Vec<u8> = (0..32).map(|i| (i * 7 + root) as u8).collect();
+                let mut blocking = if c.rank() == root { pattern.clone() } else { vec![0; 32] };
+                c.bcast(&mut blocking, root).unwrap();
+                let mut nb = if c.rank() == root { pattern.clone() } else { vec![0; 32] };
+                c.ibcast(&mut nb, root).unwrap().wait();
+                assert_eq!(nb, blocking, "root {root}");
+            }
+        });
+    }
+
+    #[test]
+    fn iallgather_in_rank_order() {
+        World::run(WorldConfig::local(5), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [c.rank() as u8; 3];
+            let mut all = [0u8; 15];
+            c.iallgather(&mine, &mut all).unwrap().wait();
+            for r in 0..5 {
+                assert_eq!(&all[r * 3..(r + 1) * 3], &[r as u8; 3]);
+            }
+        });
+    }
+
+    #[test]
+    fn iallreduce_sums_like_blocking() {
+        World::run(WorldConfig::local(6), |mpi| {
+            let c = mpi.comm_world();
+            let mine = [c.rank() as i64, 1];
+            let mut nb = [0i64; 2];
+            c.iallreduce(as_bytes(&mine), as_bytes_mut(&mut nb), MpiOp::Sum, MpiType::I64)
+                .unwrap()
+                .wait();
+            assert_eq!(nb, [15, 6]); // 0+..+5, 6×1
+        });
+    }
+
+    #[test]
+    fn two_overlapping_nonblocking_collectives() {
+        World::run(WorldConfig::local(3), |mpi| {
+            let c = mpi.comm_world();
+            let mut b1 = if c.rank() == 0 { [11u8; 8] } else { [0u8; 8] };
+            let mut b2 = if c.rank() == 1 { [22u8; 8] } else { [0u8; 8] };
+            // Initiate both before completing either; same order everywhere.
+            let r1 = c.ibcast(&mut b1, 0).unwrap();
+            let r2 = c.ibcast(&mut b2, 1).unwrap();
+            r2.wait();
+            r1.wait();
+            assert_eq!(b1, [11u8; 8]);
+            assert_eq!(b2, [22u8; 8]);
+        });
+    }
+
+    #[test]
+    fn thread_mode_advances_without_caller_progress() {
+        let mut cfg = WorldConfig::hermit(2, 1);
+        cfg.progress = ProgressMode::Thread;
+        World::run(cfg, |mpi| {
+            let c = mpi.comm_world();
+            let mine = [mpi.world_rank() as i64 + 1];
+            let mut out = [0i64];
+            let mut req = c
+                .iallreduce(as_bytes(&mine), as_bytes_mut(&mut out), MpiOp::Sum, MpiType::I64)
+                .unwrap();
+            // Compute (sleep) without touching the library; the background
+            // thread performs the reduction meanwhile. `is_done` stays
+            // honest (no caller-side progress), `test` observes the result.
+            std::thread::sleep(Duration::from_millis(10));
+            assert!(!req.is_done());
+            while !req.test() {
+                std::thread::yield_now();
+            }
+            assert_eq!(out, [3]);
+        });
+    }
+
+    #[test]
+    fn size_mismatches_are_rejected() {
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let mut small = [0u8; 4];
+            assert!(matches!(
+                c.iallgather(&[1u8; 4], &mut small),
+                Err(MpiErr::SizeMismatch { .. })
+            ));
+            // Both ranks must fail identically to stay in lock-step.
+            let mut odd = [0u8; 6];
+            assert!(matches!(
+                c.iallreduce(&[0u8; 6], &mut odd, MpiOp::Sum, MpiType::I32),
+                Err(MpiErr::TypeMismatch { .. })
+            ));
+        });
+    }
+}

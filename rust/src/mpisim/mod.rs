@@ -21,7 +21,11 @@
 //!   **rput/rget**, **flush**, and the MPI-3 atomics **fetch_and_op** /
 //!   **compare_and_swap** ([`window`]);
 //! - the **RMA unified memory model** (§IV-A): public and private copies
-//!   coincide because ranks share one address space.
+//!   coincide because ranks share one address space;
+//! - **nonblocking collectives** (`ibarrier`/`ibcast`/`iallgather`/
+//!   `iallreduce`) as progress-engine state machines ([`icoll`]), and the
+//!   **asynchronous progress engine** itself ([`progress`]) with its
+//!   Caller/Thread/Polling modes ([`ProgressMode`]).
 //!
 //! Network behaviour is injected by [`crate::simnet::CostModel`] through a
 //! virtual-time channel model ([`WorldState::book_transfer`]): every
@@ -36,7 +40,9 @@ pub mod dynwin;
 pub mod datatype;
 pub mod error;
 pub mod group;
+pub mod icoll;
 pub mod p2p;
+pub mod progress;
 pub mod request;
 pub mod window;
 
@@ -45,7 +51,9 @@ pub use dynwin::DynWin;
 pub use datatype::{as_bytes, as_bytes_mut, HasMpiType, MpiOp, MpiType, Pod, VectorType};
 pub use error::{MpiErr, MpiResult};
 pub use group::Group;
+pub use icoll::CollRequest;
 pub use p2p::{Status, ANY_SOURCE, ANY_TAG};
+pub use progress::ProgressMode;
 pub use request::{RecvRequest, RmaRequest, SendRequest};
 pub use window::{LockKind, Win};
 
@@ -68,6 +76,10 @@ pub struct WorldConfig {
     pub cost: CostModel,
     /// Also pin the OS threads to real cores (best effort).
     pub pin_os_threads: bool,
+    /// Who drives asynchronous communication progress (see
+    /// [`progress::ProgressMode`]); `Thread` spawns one background service
+    /// thread per [`World::run`].
+    pub progress: ProgressMode,
 }
 
 impl WorldConfig {
@@ -80,6 +92,7 @@ impl WorldConfig {
             pin: PinPolicy::Block,
             cost: CostModel::zero(),
             pin_os_threads: false,
+            progress: ProgressMode::Caller,
         }
     }
 
@@ -92,6 +105,7 @@ impl WorldConfig {
             pin: PinPolicy::Block,
             cost: CostModel::hermit(),
             pin_os_threads: false,
+            progress: ProgressMode::Caller,
         }
     }
 }
@@ -107,6 +121,8 @@ pub struct WorldState {
     pub(crate) next_context_id: AtomicU32,
     /// Directed-pair virtual-time channels, indexed `src * nranks + dst`.
     channels: Vec<Mutex<Channel>>,
+    /// Asynchronous progress engine state (see [`progress`]).
+    pub(crate) progress: progress::ProgressShared,
     pub(crate) finalized: AtomicBool,
 }
 
@@ -128,6 +144,7 @@ impl WorldState {
             next_win_id: AtomicU64::new(1),
             next_context_id: AtomicU32::new(1),
             channels: (0..cfg.nranks * cfg.nranks).map(|_| Mutex::new(Channel::default())).collect(),
+            progress: progress::ProgressShared::new(cfg.nranks),
             finalized: AtomicBool::new(false),
         })
     }
@@ -226,12 +243,23 @@ impl Mpi {
 pub struct World;
 
 impl World {
+    /// Run one simulated MPI world: spawn `cfg.nranks` rank threads, run
+    /// `f(mpi)` on each, join them all. In
+    /// [`ProgressMode::Thread`] an additional background
+    /// progress-service thread runs for the duration of the world (stopped
+    /// and joined on exit, including on panic unwind).
     pub fn run<F>(cfg: WorldConfig, f: F)
     where
         F: Fn(Mpi) + Send + Sync,
     {
         assert!(cfg.nranks > 0, "world must have at least one rank");
         let state = WorldState::new(&cfg);
+        // Thread-mode asynchronous progress: start the service before the
+        // ranks; the guard stops it when dropped (also during unwind).
+        let _progress_guard = match cfg.progress {
+            ProgressMode::Thread => Some(progress::ProgressThreadGuard::spawn(state.clone())),
+            _ => None,
+        };
         let f = Arc::new(f);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(cfg.nranks);

@@ -414,30 +414,46 @@ impl Win {
         Ok(())
     }
 
+    /// Queue a not-yet-flushed operation's completion instant. When the
+    /// list has grown past a handful of entries, first prune those already
+    /// in the past — flushes would not wait on them anyway — so workloads
+    /// that rely on the progress engine instead of explicit flushes (the
+    /// Thread-mode zero-flush pattern) cannot grow it without bound.
+    fn push_pending(&self, target: usize, at: Instant) {
+        let mut p = self.pending.borrow_mut();
+        if p.len() >= 64 {
+            let now = Instant::now();
+            p.retain(|&(_, a)| a > now);
+        }
+        p.push((target, at));
+    }
+
     // ------------------------------------------------------------------
     // One-sided communication
     // ------------------------------------------------------------------
 
     /// `MPI_Put`: transfer `origin` into `target`'s segment at byte
     /// displacement `disp`. Completes locally immediately (eager); remote
-    /// completion at the next `flush`/`unlock`.
-    pub fn put(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<()> {
+    /// completion at the next `flush`/`unlock`. Returns the modelled
+    /// wire-completion instant (progress-engine bookkeeping/diagnostics).
+    pub fn put(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<Instant> {
         self.assert_epoch(target)?;
         let dst = self.state.check_range(target, disp, origin.len())?;
         unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
         let at = self.book(target, origin.len());
-        self.pending.borrow_mut().push((target, at));
-        Ok(())
+        self.push_pending(target, at);
+        Ok(at)
     }
 
-    /// `MPI_Get`: transfer from `target`'s segment into `dest`.
-    pub fn get(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<()> {
+    /// `MPI_Get`: transfer from `target`'s segment into `dest`. Returns
+    /// the modelled wire-completion instant.
+    pub fn get(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<Instant> {
         self.assert_epoch(target)?;
         let src = self.state.check_range(target, disp, dest.len())?;
         unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
         let at = self.book(target, dest.len());
-        self.pending.borrow_mut().push((target, at));
-        Ok(())
+        self.push_pending(target, at);
+        Ok(at)
     }
 
     /// Fused put + flush of that one operation (§Perf): semantically
@@ -544,30 +560,32 @@ impl Win {
     }
 
     /// Vector put (`MPI_Put` with an `MPI_Type_vector` target datatype).
-    /// Remote completion at the next `flush`/`unlock`.
+    /// Remote completion at the next `flush`/`unlock`. Returns the modelled
+    /// wire-completion instant of the single underlying message.
     pub fn put_vector(
         &self,
         origin: &[u8],
         target: usize,
         disp: usize,
         ty: &VectorType,
-    ) -> MpiResult<()> {
+    ) -> MpiResult<Instant> {
         let at = self.vector_scatter(origin, target, disp, ty)?;
-        self.pending.borrow_mut().push((target, at));
-        Ok(())
+        self.push_pending(target, at);
+        Ok(at)
     }
 
     /// Vector get: gather `count` remote blocks into the packed `dest`.
+    /// Returns the modelled wire-completion instant.
     pub fn get_vector(
         &self,
         dest: &mut [u8],
         target: usize,
         disp: usize,
         ty: &VectorType,
-    ) -> MpiResult<()> {
+    ) -> MpiResult<Instant> {
         let at = self.vector_gather(dest, target, disp, ty)?;
-        self.pending.borrow_mut().push((target, at));
-        Ok(())
+        self.push_pending(target, at);
+        Ok(at)
     }
 
     /// Request-based vector put (`MPI_Rput` + vector datatype): like
@@ -614,7 +632,7 @@ impl Win {
             reduce_bytes(op, ty, dst_slice, origin)?;
         }
         let at = self.book(target, origin.len());
-        self.pending.borrow_mut().push((target, at));
+        self.push_pending(target, at);
         Ok(())
     }
 
@@ -1154,6 +1172,7 @@ mod tests {
                 pin: PinPolicy::ScatterNuma, // inter-NUMA, same node
                 cost: crate::simnet::CostModel::hermit(),
                 pin_os_threads: false,
+                progress: crate::mpisim::ProgressMode::Caller,
             };
             World::run(cfg, |mpi| {
                 let c = mpi.comm_world();
@@ -1199,6 +1218,7 @@ mod tests {
             pin: PinPolicy::ScatterNode,
             cost: crate::simnet::CostModel::hermit(),
             pin_os_threads: false,
+            progress: crate::mpisim::ProgressMode::Caller,
         };
         World::run(cfg, |mpi| {
             let c = mpi.comm_world();

@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 
 /// Element type of an artifact tensor (only what the catalog uses).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // self-describing dtype tags
 pub enum DType {
     F32,
     F64,
@@ -48,7 +49,9 @@ impl DType {
 /// Shape+dtype of one artifact input or output.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Dimensions (empty = scalar).
     pub dims: Vec<usize>,
 }
 
@@ -62,9 +65,13 @@ impl TensorSpec {
 /// One discovered artifact: HLO path plus its I/O signature.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// Artifact name (the file stem).
     pub name: String,
+    /// Path of the HLO-text file.
     pub hlo_path: PathBuf,
+    /// Input signatures, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output signatures, in return order.
     pub outputs: Vec<TensorSpec>,
 }
 

@@ -33,9 +33,19 @@ use std::rc::Rc;
 pub enum RuntimeErr {
     /// Backend failure (unsupported artifact signature, execution error).
     Backend(String),
+    /// A missing artifact file (`.hlo.txt` or `.meta`).
     Missing(String),
+    /// A malformed `.meta` sidecar.
     Meta(String),
-    Shape { name: String, expected: usize, got: usize },
+    /// An input buffer that does not match the artifact's signature.
+    Shape {
+        /// Artifact name.
+        name: String,
+        /// Expected element count (or input arity).
+        expected: usize,
+        /// What the caller supplied.
+        got: usize,
+    },
 }
 
 impl fmt::Display for RuntimeErr {

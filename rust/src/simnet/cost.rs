@@ -63,6 +63,15 @@ pub struct CostModel {
     /// back-to-back block transfers: the bandwidth term is identical, but
     /// the per-message overhead is paid once instead of `n` times.
     pub msg_overhead_ns: f64,
+    /// CPU cost of one asynchronous-progress wakeup: every tick of the
+    /// progress engine ([`crate::mpisim::ProgressMode`]) — a dedicated
+    /// progress thread's wakeup or a caller's cooperative poll — charges
+    /// this many nanoseconds, modelling the cycles the service steals from
+    /// computation (cf. Zhou & Gracia, "Asynchronous progress design for a
+    /// MPI-based PGAS one-sided communication system"). This is what makes
+    /// the Caller-vs-Thread-vs-Polling ablation a real trade-off: more
+    /// wakeups buy more overlap but cost more stolen CPU time.
+    pub progress_tick_ns: f64,
     /// Global multiplier on injected time. `0.0` disables injection (used by
     /// unit tests and by pure-software-overhead measurements).
     pub scale: f64,
@@ -87,6 +96,7 @@ impl CostModel {
             e1_latency_ns: 900.0,
             e1_copy_bytes_per_ns: 9.0,
             msg_overhead_ns: 60.0,
+            progress_tick_ns: 120.0,
             scale: 1.0,
         }
     }

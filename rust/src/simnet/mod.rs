@@ -88,8 +88,11 @@ impl Topology {
 /// Coordinate of one physical core: `(node, numa domain, core within domain)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CoreCoord {
+    /// Node index within the cluster.
     pub node: usize,
+    /// NUMA-domain index within the node.
     pub numa: usize,
+    /// Core index within the NUMA domain.
     pub core: usize,
 }
 
@@ -135,6 +138,7 @@ impl fmt::Display for Tier {
 /// interprets it. Produced by a [`PinPolicy`].
 #[derive(Debug, Clone)]
 pub struct Placement {
+    /// The topology the coordinates are relative to.
     pub topology: Topology,
     coords: Vec<CoreCoord>,
 }

@@ -5,16 +5,20 @@
 //! failing seed so any counterexample is reproducible with
 //! `Rng::new(seed)`.
 
+/// Property-based testing primitives: a deterministic RNG and the
+/// [`prop::forall`] runner.
 pub mod prop {
     /// splitmix64 — tiny, fast, deterministic.
     #[derive(Debug, Clone)]
     pub struct Rng(u64);
 
     impl Rng {
+        /// Seeded generator; the same seed replays the same sequence.
         pub fn new(seed: u64) -> Self {
             Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
         }
 
+        /// Next raw 64-bit draw.
         pub fn next_u64(&mut self) -> u64 {
             self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
             let mut z = self.0;
@@ -33,6 +37,7 @@ pub mod prop {
             lo + self.below(hi - lo)
         }
 
+        /// A fair coin flip.
         pub fn bool(&mut self) -> bool {
             self.next_u64() & 1 == 1
         }

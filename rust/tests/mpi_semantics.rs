@@ -209,6 +209,7 @@ fn cost_model_shapes_latency_tiers() {
             pin,
             cost: CostModel::hermit(),
             pin_os_threads: false,
+            progress: dart::mpisim::ProgressMode::Caller,
         };
         World::run(cfg, |mpi| {
             let c = mpi.comm_world();

@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's docs (offline: local targets only).
+
+Usage: python3 scripts/check_links.py README.md docs/*.md
+
+For every inline markdown link `[text](target)`:
+- `http(s)://`, `mailto:` and bare-anchor (`#...`) targets are skipped
+  (the CI environment is treated as offline);
+- every other target is resolved relative to the file containing it
+  (dropping any `#fragment`) and must exist.
+
+Exits nonzero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links, skipping images is unnecessary (their paths must exist too).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # Strip fenced code blocks: they hold example output, not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for match in LINK_RE.finditer(text):
+        target = match.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    errors = []
+    for arg in argv[1:]:
+        md = Path(arg)
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(argv) - 1} file(s): all local links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
