@@ -1,0 +1,167 @@
+//! §dash — pattern redistribution bandwidth and operation coalescing.
+//!
+//! The `dash` layer's claim: a bulk redistribution between two
+//! distribution patterns issues **runs**, not elements — a
+//! BLOCKED → BLOCKCYCLIC(b) copy of `n` elements costs `~n/b` one-sided
+//! operations, a BLOCKED → BLOCKED copy `~1` per unit, while
+//! BLOCKED → CYCLIC is the adversarial floor (run length 1, one op per
+//! element). This bench measures `dash::algorithms::copy` from a BLOCKED
+//! `Array<f64>` into each destination pattern, reading the issued-run and
+//! byte counts from `Metrics::{dash_coalesced_runs, dash_redist_bytes}`
+//! and the engine-retired share from `Metrics::overlap_bytes`.
+//!
+//! Results print as a table and land in `BENCH_dash.json`
+//! (`scripts/check_bench_json.py` validates the schema in CI).
+
+use dart::bench_util::{bandwidth_mb_s, fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::{algorithms, Array, Pattern};
+use dart::mpisim::MpiOp;
+use std::sync::Mutex;
+use std::time::Instant;
+
+const UNITS: usize = 4;
+
+/// One measured configuration.
+#[derive(Clone, Default)]
+struct Shot {
+    pattern: &'static str,
+    n: usize,
+    /// One-sided ops issued per copy (team-wide).
+    coalesced_runs: u64,
+    /// Bytes moved per copy (team-wide) — `n × 8` by construction.
+    redist_bytes: u64,
+    /// Bytes the progress engine retired in the background.
+    overlap_bytes: u64,
+    /// Median wall-clock ns of one whole copy (including its barriers).
+    copy_ns: f64,
+}
+
+impl Shot {
+    fn bandwidth(&self) -> f64 {
+        bandwidth_mb_s(self.redist_bytes as usize, self.copy_ns)
+    }
+
+    fn ops_per_element(&self) -> f64 {
+        self.coalesced_runs as f64 / self.n as f64
+    }
+}
+
+/// Destination pattern under test, keyed by a stable label.
+fn dst_pattern(label: &str, n: usize, p: usize) -> Pattern {
+    match label {
+        "blocked" => Pattern::blocked(n, p).unwrap(),
+        "cyclic" => Pattern::cyclic(n, p).unwrap(),
+        "blockcyclic16" => Pattern::block_cyclic(n, p, 16).unwrap(),
+        "blockcyclic256" => Pattern::block_cyclic(n, p, 256).unwrap(),
+        // 64-row matrix view, 32×16 tiles over a 2×2 unit grid.
+        "tiled" => Pattern::tiled(64, n / 64, 32, 16, 2, 2).unwrap(),
+        other => panic!("unknown pattern label {other}"),
+    }
+}
+
+fn measure(label: &'static str, n: usize, reps: usize) -> Shot {
+    let out = Mutex::new(Shot::default());
+    let cfg = DartConfig::hermit(UNITS, 2);
+    run(cfg, |env| {
+        let src: Array<'_, f64> =
+            Array::new(env, DART_TEAM_ALL, Pattern::blocked(n, env.size()).unwrap()).unwrap();
+        let dst: Array<'_, f64> =
+            Array::new(env, DART_TEAM_ALL, dst_pattern(label, n, env.size())).unwrap();
+        algorithms::transform(&src, |g, _| g as f64 * 1.5 + 0.25).unwrap();
+
+        let runs0 = env.metrics.dash_coalesced_runs.get();
+        let bytes0 = env.metrics.dash_redist_bytes.get();
+        let overlap0 = env.metrics.overlap_bytes.get();
+        let mut times = Samples::new();
+        for _ in 0..reps {
+            let t = Instant::now();
+            algorithms::copy(&src, &dst).unwrap();
+            times.push(t.elapsed().as_nanos() as f64);
+        }
+        // Spot-check the redistribution (full bit-exactness is asserted
+        // by rust/tests/dash_tests.rs).
+        for g in [0usize, 1, n / 2, n - 1] {
+            let got = dst.get(g).unwrap();
+            assert_eq!(got, g as f64 * 1.5 + 0.25, "redistribution corrupted element {g}");
+        }
+        let mine = [
+            env.metrics.dash_coalesced_runs.get() - runs0,
+            env.metrics.dash_redist_bytes.get() - bytes0,
+            env.metrics.overlap_bytes.get() - overlap0,
+        ];
+        let mut team = [0u64; 3];
+        env.allreduce(DART_TEAM_ALL, &mine, &mut team, MpiOp::Sum).unwrap();
+        if env.myid() == 0 {
+            *out.lock().unwrap() = Shot {
+                pattern: label,
+                n,
+                coalesced_runs: team[0] / reps as u64,
+                redist_bytes: team[1] / reps as u64,
+                overlap_bytes: team[2] / reps as u64,
+                copy_ns: times.median(),
+            };
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        dst.free().unwrap();
+        src.free().unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"pattern\":\"{}\",\"n\":{},\"coalesced_runs\":{},\"redist_bytes\":{},\
+         \"overlap_bytes\":{},\"copy_ns\":{:.1},\"bandwidth_mb_s\":{:.1},\
+         \"ops_per_element\":{:.4}}}",
+        s.pattern,
+        s.n,
+        s.coalesced_runs,
+        s.redist_bytes,
+        s.overlap_bytes,
+        s.copy_ns,
+        s.bandwidth(),
+        s.ops_per_element()
+    )
+}
+
+fn main() {
+    let (reps, sizes): (usize, Vec<usize>) =
+        if quick_mode() { (3, vec![4096]) } else { (10, vec![16384, 65536]) };
+    let patterns = ["blocked", "cyclic", "blockcyclic16", "blockcyclic256", "tiled"];
+    println!("==== §dash — BLOCKED→X redistribution, {UNITS} units ====");
+    let mut shots = Vec::new();
+    for &n in &sizes {
+        for label in patterns {
+            shots.push(measure(label, n, reps));
+        }
+    }
+    println!(
+        "\n{:>16} {:>9} {:>10} {:>12} {:>12} {:>12}",
+        "dst pattern", "elems", "runs", "ops/elem", "copy", "MB/s"
+    );
+    for s in &shots {
+        println!(
+            "{:>16} {:>9} {:>10} {:>12.4} {:>12} {:>12.0}",
+            s.pattern,
+            s.n,
+            s.coalesced_runs,
+            s.ops_per_element(),
+            fmt_ns(s.copy_ns),
+            s.bandwidth()
+        );
+    }
+    println!(
+        "\n(expected shape: cyclic ≈ 1 op/element — the un-coalescible floor; \
+         blockcyclic ≈ 1/b; blocked ≈ p ops total)"
+    );
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_dash\",\"units\":{UNITS},\"reps\":{reps},\"elem_bytes\":8,\
+         \"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_dash.json", format!("{json}\n")).expect("write BENCH_dash.json");
+    println!("\nwrote BENCH_dash.json");
+}

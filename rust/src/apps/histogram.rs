@@ -1,0 +1,114 @@
+//! Distributed histogram — the `dash` layer's canonical workload.
+//!
+//! Every unit draws a deterministic stream of samples and bins them into
+//! a **cyclic-distributed** [`crate::dash::Array`]`<u64>` (cyclic because
+//! real histograms are skewed: round-robin bins spread the hot bins over
+//! the team instead of concentrating them on one owner).
+//!
+//! Accumulation is **lock-free** in the classic reduction shape: each
+//! unit fills a private full-width partial, ONE `allreduce` combines
+//! them, and each unit then writes only *its own* bins of the reduced
+//! result through the owner-computes local view — zero one-sided traffic
+//! and zero lock acquisitions, versus `bins × units` remote atomic
+//! `accumulate`s for the naive PGAS formulation.
+//!
+//! The final counts are verified with the owner-computes algorithms:
+//! [`crate::dash::algorithms::sum`] must equal the total sample count and
+//! [`crate::dash::algorithms::max_element`] picks the modal bin, both
+//! replicated on every unit.
+
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId, DART_TEAM_ALL};
+use crate::dash::{algorithms, Array};
+use crate::testing::prop::Rng;
+
+/// Parameters of a distributed histogram run.
+#[derive(Debug, Clone)]
+pub struct HistogramConfig {
+    /// Number of histogram bins (cyclic-distributed over the team).
+    pub bins: usize,
+    /// Samples drawn per unit.
+    pub items_per_unit: usize,
+    /// Stream seed (unit `u` draws from `seed ^ u`).
+    pub seed: u64,
+    /// Team the run is collective over.
+    pub team: TeamId,
+}
+
+impl HistogramConfig {
+    /// A small default configuration over `DART_TEAM_ALL`.
+    pub fn quick(bins: usize, items_per_unit: usize) -> Self {
+        HistogramConfig { bins, items_per_unit, seed: 0x9215_0CAB, team: DART_TEAM_ALL }
+    }
+}
+
+/// Result of a run (identical on every unit).
+#[derive(Debug, Clone)]
+pub struct HistogramReport {
+    /// Total samples counted across the team (= `units × items_per_unit`).
+    pub total: u64,
+    /// `(bin index, count)` of the fullest bin (ties → lowest index).
+    pub modal_bin: (usize, u64),
+    /// Order-independent checksum `Σ bin_index · count`.
+    pub checksum: u64,
+}
+
+/// The bin a sample value falls into.
+#[inline]
+fn bin_of(value: u64, bins: usize) -> usize {
+    (value % bins as u64) as usize
+}
+
+/// Sequential reference: the full histogram every unit's streams produce
+/// (deterministic, so any rank — or a test — can replay it).
+pub fn reference_counts(units: usize, cfg: &HistogramConfig) -> Vec<u64> {
+    let mut counts = vec![0u64; cfg.bins];
+    for u in 0..units {
+        let mut rng = Rng::new(cfg.seed ^ u as u64);
+        for _ in 0..cfg.items_per_unit {
+            counts[bin_of(rng.next_u64(), cfg.bins)] += 1;
+        }
+    }
+    counts
+}
+
+/// Run the distributed histogram. Collective over `cfg.team`.
+pub fn run_distributed(env: &DartEnv, cfg: &HistogramConfig) -> DartResult<HistogramReport> {
+    if cfg.bins == 0 || cfg.items_per_unit == 0 {
+        return Err(DartErr::Invalid("histogram needs bins > 0 and items > 0".into()));
+    }
+    let team = cfg.team;
+    let me = env.team_myid(team)?;
+    let hist: Array<'_, u64> = Array::cyclic(env, team, cfg.bins)?;
+
+    // --- lock-free accumulation: private partial, one allreduce.
+    let mut partial = vec![0u64; cfg.bins];
+    let mut rng = Rng::new(cfg.seed ^ me as u64);
+    for _ in 0..cfg.items_per_unit {
+        partial[bin_of(rng.next_u64(), cfg.bins)] += 1;
+    }
+    let mut reduced = vec![0u64; cfg.bins];
+    env.allreduce(team, &partial, &mut reduced, crate::mpisim::MpiOp::Sum)?;
+
+    // --- owner-computes publication: each unit writes only its own bins.
+    let pat = *hist.pattern();
+    hist.with_local(|local| {
+        for (l, slot) in local.iter_mut().enumerate() {
+            *slot = reduced[pat.local_to_global(me, l)];
+        }
+    })?;
+    env.barrier(team)?;
+
+    // --- verification through the algorithms layer (replicated results).
+    let total = algorithms::sum(&hist)?;
+    let modal_bin = algorithms::max_element(&hist)?;
+    let local = hist.read_local()?;
+    let my_weighted: u64 =
+        local.iter().enumerate().map(|(l, c)| pat.local_to_global(me, l) as u64 * c).sum();
+    let mut weighted = [0u64];
+    env.allreduce(team, &[my_weighted], &mut weighted, crate::mpisim::MpiOp::Sum)?;
+    let checksum = weighted[0];
+
+    env.barrier(team)?;
+    hist.free()?;
+    Ok(HistogramReport { total, modal_bin, checksum })
+}

@@ -5,6 +5,7 @@
 //! as the end-to-end proof that the three layers compose: DART one-sided
 //! communication (L3) around AOT JAX/Pallas compute artifacts (L2/L1).
 
+pub mod histogram;
 pub mod matmul;
 pub mod stencil;
 pub mod stencil2d;

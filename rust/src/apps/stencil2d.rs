@@ -1,18 +1,24 @@
-//! 2D-decomposed distributed stencil: the strided-transfer consumer.
+//! 2D-decomposed distributed stencil on the `dash` layer.
 //!
 //! Unlike [`crate::apps::stencil`] (1D row decomposition, contiguous row
 //! halos only), this variant tiles the global grid over a `px × py` unit
-//! grid, so every step exchanges **row halos** (contiguous one-sided gets
-//! from the north/south neighbours) *and* **column halos** (vector-typed
-//! strided gets from the west/east neighbours —
-//! [`crate::dart::DartEnv::get_strided_async`], the whole boundary column
-//! as ONE RMA operation). A 5-point stencil needs no corner cells, so the
-//! four halo edges suffice.
+//! grid. Since the `dash` port, all block bookkeeping — allocation
+//! sizing, gptr arithmetic, neighbour offset math — lives in a
+//! [`crate::dash::Matrix`] with a TILED [`crate::dash::Pattern`] (one
+//! `b × b` tile per unit): the app asks for *global* coordinates and the
+//! pattern's index maps do the rest.
 //!
-//! The exchange runs on the engine's batched-flush path: every neighbour
-//! costs exactly one deferred-completion operation, and a single
-//! [`crate::dart::DartEnv::flush_all`] on the grid's segment completes
-//! the whole phase (asserted per-op by `rust/tests/engine_tests.rs`).
+//! Every step exchanges **row halos**
+//! ([`crate::dash::Matrix::get_row_async`] — one contiguous one-sided get
+//! from the north/south neighbours) *and* **column halos**
+//! ([`crate::dash::Matrix::get_col_async`] — the whole boundary column of
+//! the west/east neighbours as ONE vector-typed strided get). A 5-point
+//! stencil needs no corner cells, so the four halo edges suffice.
+//!
+//! The exchange still runs on the engine's batched-flush path: every
+//! neighbour costs exactly one deferred-completion operation and a single
+//! [`crate::dash::Matrix::flush`] completes the phase (asserted per-op by
+//! `rust/tests/engine_tests.rs`).
 //!
 //! **Overlap structure** (the asynchronous-progress rewiring): the halo
 //! transfers are *initiated* first, then the padded block's interior —
@@ -32,7 +38,8 @@
 
 use super::stencil::{initial_value, run_reference};
 use crate::dart::{DartEnv, DartErr, DartResult, TeamId, DART_TEAM_ALL};
-use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use crate::dash::Matrix;
+use crate::mpisim::MpiOp;
 use crate::runtime::Engine;
 
 /// Parameters of a 2D-decomposed run. Requires `px · py == team size` and
@@ -107,24 +114,19 @@ pub fn run_distributed(
         )));
     }
 
-    // One aligned allocation: my segment = my b×b block, row-major f32.
-    let grid = env.team_memalloc_aligned(team, (b * b * 4) as u64)?;
-    let my_block = grid.with_unit(env.team_unit_l2g(team, me)?);
+    // The distributed grid: a TILED matrix with one b×b tile per unit on
+    // a py×px unit grid — team rank `uy·px + ux` is exactly the pattern's
+    // unit-grid position, so the old hand-rolled neighbour/offset math
+    // reduces to global coordinates.
+    let grid: Matrix<'_, f32> =
+        Matrix::new(env, team, rows_total, cols_total, b, b, cfg.py, cfg.px)?;
+    debug_assert_eq!((grid.local_rows(), grid.local_cols()), (b, b));
     let mut local: Vec<f32> = (0..b * b)
         .map(|i| initial_value(row0 + i / b, col0 + i % b, rows_total, cols_total))
         .collect();
-    env.local_write(my_block, as_bytes(&local))?;
+    grid.write_local(&local)?;
     env.barrier(team)?;
 
-    let neighbor = |dx: isize, dy: isize| -> DartResult<Option<i32>> {
-        let (nx, ny) = (ux as isize + dx, uy as isize + dy);
-        if nx < 0 || ny < 0 || nx >= cfg.px as isize || ny >= cfg.py as isize {
-            return Ok(None);
-        }
-        Ok(Some(env.team_unit_l2g(team, ny as usize * cfg.px + nx as usize)?))
-    };
-
-    let row_bytes = (b * 4) as u64;
     let mut north = vec![0f32; b];
     let mut south = vec![0f32; b];
     let mut west = vec![0f32; b];
@@ -134,42 +136,27 @@ pub fn run_distributed(
 
     for _ in 0..cfg.steps {
         // --- halo exchange: one RMA operation per neighbour (contiguous
-        // gets for row halos, single vector-typed gets for column halos),
-        // all in deferred-completion mode; ONE flush completes the phase.
-        match neighbor(0, -1)? {
-            // north neighbour's LAST row
-            Some(u) => env.get_async(
-                grid.with_unit(u).add((b as u64 - 1) * row_bytes),
-                as_bytes_mut(&mut north),
-            )?,
-            None => north.fill(0.0),
+        // row gets, single vector-typed column gets), all in
+        // deferred-completion mode; ONE flush completes the phase.
+        if uy > 0 {
+            grid.get_row_async(row0 - 1, col0, &mut north)?; // north's LAST row
+        } else {
+            north.fill(0.0);
         }
-        match neighbor(0, 1)? {
-            Some(u) => env.get_async(grid.with_unit(u), as_bytes_mut(&mut south))?,
-            None => south.fill(0.0),
+        if uy + 1 < cfg.py {
+            grid.get_row_async(row0 + b, col0, &mut south)?;
+        } else {
+            south.fill(0.0);
         }
-        match neighbor(-1, 0)? {
-            // west neighbour's LAST column: one f32 per row, stride = row —
-            // a single vector-typed transfer, not b block transfers.
-            Some(u) => env.get_strided_async(
-                grid.with_unit(u).add((b as u64 - 1) * 4),
-                as_bytes_mut(&mut west),
-                b,
-                4,
-                row_bytes,
-            )?,
-            None => west.fill(0.0),
+        if ux > 0 {
+            grid.get_col_async(row0, col0 - 1, &mut west)?; // west's LAST column
+        } else {
+            west.fill(0.0);
         }
-        match neighbor(1, 0)? {
-            // east neighbour's FIRST column
-            Some(u) => env.get_strided_async(
-                grid.with_unit(u),
-                as_bytes_mut(&mut east),
-                b,
-                4,
-                row_bytes,
-            )?,
-            None => east.fill(0.0),
+        if ux + 1 < cfg.px {
+            grid.get_col_async(row0, col0 + b, &mut east)?; // east's FIRST column
+        } else {
+            east.fill(0.0);
         }
         // --- overlap: the padded interior depends only on local data, so
         // assemble it while the halo transfers fly, then give the progress
@@ -181,7 +168,7 @@ pub fn run_distributed(
                 .copy_from_slice(&local[r * b..(r + 1) * b]);
         }
         env.progress_poll();
-        env.flush_all(grid)?;
+        grid.flush()?;
 
         // --- halo edges now that the transfers have landed (corners are
         // unused by the 5-point sweep).
@@ -208,7 +195,7 @@ pub fn run_distributed(
         // before the next step's gets). The in-flight allreduce overlaps
         // both barriers and the write itself.
         env.barrier(team)?;
-        env.local_write(my_block, as_bytes(&local))?;
+        grid.write_local(&local)?;
         env.barrier(team)?;
         env.coll_wait(res_h)?;
         residuals.push(global_res[0]);
@@ -218,7 +205,7 @@ pub fn run_distributed(
     let mut global = [0f64];
     env.allreduce(team, &[local_sum], &mut global, MpiOp::Sum)?;
     env.barrier(team)?;
-    env.team_memfree(team, grid)?;
+    grid.free()?;
     Ok(Stencil2dReport { residuals, global_checksum: global[0] })
 }
 

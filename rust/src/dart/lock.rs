@@ -121,10 +121,16 @@ impl DartEnv {
             return Err(DartErr::LockMisuse("try_acquire of a lock already held".into()));
         }
         let me = self.myid() as i64;
+        // Reset my successor cell BEFORE the tail swap (same order as
+        // `lock_acquire`): the instant the CAS below succeeds, a
+        // concurrent `lock_acquire` may read us as its predecessor and
+        // register in our cell — a reset after the swap could erase that
+        // registration and deadlock the hand-off. Before the swap nobody
+        // can name us as predecessor, so the early reset is safe.
+        let my_cell = lock.list.with_unit(self.myid());
+        self.local_write(my_cell, &NIL.to_ne_bytes())?;
         let old = self.compare_and_swap(lock.tail, NIL, me)?;
         if old == NIL {
-            let my_cell = lock.list.with_unit(self.myid());
-            self.local_write(my_cell, &NIL.to_ne_bytes())?;
             lock.held.set(true);
             self.metrics.lock_acquires.bump();
             Ok(true)
@@ -164,6 +170,17 @@ impl DartEnv {
         }
         lock.held.set(false);
         Ok(())
+    }
+
+    /// Diagnostic: the absolute unit id currently at the lock's queue
+    /// tail, or `-1` when the lock is free. One blocking one-sided read
+    /// of the tail cell — meant for tests and tooling that need to
+    /// observe queue build-up (e.g. establishing a deterministic enqueue
+    /// order), not for synchronization on the fast path.
+    pub fn lock_tail(&self, lock: &DartLock) -> DartResult<i64> {
+        let mut buf = [0u8; 8];
+        self.get_blocking(lock.tail, &mut buf)?;
+        Ok(i64::from_ne_bytes(buf))
     }
 
     /// `dart_team_lock_free`: collective over the team; the lock must be

@@ -69,6 +69,13 @@ pub struct Metrics {
     /// Nonblocking-collective phase transitions observed by this unit
     /// (one per initiation, one per completion).
     pub coll_phases: Counter,
+    /// Contiguous runs issued by the `dash` layer's bulk transfers
+    /// (`Array::copy_in`/`copy_out` and `dash::algorithms::copy`): each
+    /// run is ONE one-sided operation covering many elements, so
+    /// `dash_coalesced_runs ≪ elements moved` is the coalescing claim.
+    pub dash_coalesced_runs: Counter,
+    /// Bytes moved by `dash::algorithms::copy` redistributions.
+    pub dash_redist_bytes: Counter,
 }
 
 impl Metrics {
@@ -84,7 +91,7 @@ impl fmt::Display for Metrics {
             f,
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
-             coll_phases={}",
+             coll_phases={} dash_runs={} dash_redist={}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -99,7 +106,9 @@ impl fmt::Display for Metrics {
             self.progress_ticks.get(),
             self.overlap_ops.get(),
             self.overlap_bytes.get(),
-            self.coll_phases.get()
+            self.coll_phases.get(),
+            self.dash_coalesced_runs.get(),
+            self.dash_redist_bytes.get()
         )
     }
 }

@@ -147,6 +147,35 @@ impl From<MpiErr> for DartErr {
 /// DART result alias.
 pub type DartResult<T> = Result<T, DartErr>;
 
+/// Marker trait for element types the typed layers above the byte-level
+/// DART API ([`crate::dash`]) may store in distributed containers.
+///
+/// The DART communication API deliberately moves raw bytes (like real
+/// DART-MPI's `void*` interfaces); `Element` gathers everything a typed
+/// container needs on top of that: a [`crate::mpisim::Pod`] byte
+/// representation, an [`crate::mpisim::MpiType`] tag so reductions work
+/// ([`crate::mpisim::HasMpiType`]), ordering for `min`/`max` algorithms,
+/// arithmetic for `sum`, and a default fill value for freshly allocated
+/// global memory.
+pub trait Element:
+    crate::mpisim::HasMpiType
+    + PartialOrd
+    + Default
+    + std::fmt::Debug
+    + std::iter::Sum<Self>
+    + std::ops::Add<Output = Self>
+{
+}
+
+impl Element for u8 {}
+impl Element for i16 {}
+impl Element for i32 {}
+impl Element for u32 {}
+impl Element for i64 {}
+impl Element for u64 {}
+impl Element for f32 {}
+impl Element for f64 {}
+
 /// State shared across all units of one DART program (created before the
 /// unit threads spawn).
 struct DartShared {
@@ -470,6 +499,18 @@ impl DartEnv {
     /// whose offset is pool-relative and identical on every member
     /// (aligned + symmetric), initially pointing at the team's first
     /// member.
+    ///
+    /// Edge-case contract (asserted by `rust/tests/dart_integration.rs`):
+    ///
+    /// - `nbytes` is **per member** — it is *not* divided across the team,
+    ///   so it need not be a multiple of the team size; every member
+    ///   contributes `nbytes` rounded up to
+    ///   [`translation::DART_ALIGN`]-byte granularity, and successive
+    ///   allocations land [`translation::DART_ALIGN`]-aligned at identical
+    ///   pool offsets on every member.
+    /// - a **zero-byte** request is rejected with [`DartErr::Invalid`] on
+    ///   every member (a zero-extent window has no addressable location a
+    ///   global pointer could name).
     pub fn team_memalloc_aligned(&self, team: TeamId, nbytes: u64) -> DartResult<GlobalPtr> {
         let (base, len, pool, unit0) = {
             let mut st = self.state.borrow_mut();

@@ -1,0 +1,170 @@
+//! Owner-computes parallel algorithms over [`Array`].
+//!
+//! Every algorithm follows the DASH recipe: each unit touches **only its
+//! own partition** through the zero-network local view
+//! ([`Array::with_local`]/[`Array::read_local`]), then a single team
+//! collective combines the per-unit partials — never one one-sided
+//! operation per element. The exception is [`copy`], the redistribution
+//! path: data must move, so it moves in pattern-coalesced runs (the
+//! stress test for the [`Pattern`](super::Pattern) index maps).
+
+use super::array::Array;
+use crate::dart::{DartResult, Element};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+
+/// Set every element to `value`. Collective over the array's team.
+pub fn fill<T: Element>(arr: &Array<'_, T>, value: T) -> DartResult<()> {
+    arr.with_local(|local| local.fill(value))?;
+    arr.env().barrier(arr.team())
+}
+
+/// Replace every element `x` at global index `g` with `f(g, x)` —
+/// owner-computes, so `f` runs exactly once per element, on its owner.
+/// Collective over the array's team.
+pub fn transform<T: Element>(
+    arr: &Array<'_, T>,
+    f: impl Fn(usize, T) -> T,
+) -> DartResult<()> {
+    let pat = *arr.pattern();
+    let me = arr.myrank();
+    arr.with_local(|local| {
+        for (l, x) in local.iter_mut().enumerate() {
+            *x = f(pat.local_to_global(me, l), *x);
+        }
+    })?;
+    arr.env().barrier(arr.team())
+}
+
+/// Global element sum: local partial + one `allreduce`. Collective.
+pub fn sum<T: Element>(arr: &Array<'_, T>) -> DartResult<T> {
+    let partial: T = arr.read_local()?.into_iter().sum();
+    let mut total = [T::default()];
+    arr.env().allreduce(arr.team(), &[partial], &mut total, MpiOp::Sum)?;
+    Ok(total[0])
+}
+
+/// NaN detection through `PartialEq` (only NaN differs from itself;
+/// integers never do).
+#[allow(clippy::eq_op)]
+fn is_nan<T: PartialEq>(x: &T) -> bool {
+    x != x
+}
+
+/// Candidate selection shared by the local and cross-unit passes: prefer
+/// non-NaN over NaN, then `better`, then the smaller global index.
+fn prefer<T: Element>(
+    best: Option<(usize, T)>,
+    cand: (usize, T),
+    better: &impl Fn(&T, &T) -> bool,
+) -> Option<(usize, T)> {
+    let Some((bg, bv)) = best else {
+        return Some(cand);
+    };
+    let (g, v) = cand;
+    let take = if is_nan(&bv) {
+        !is_nan(&v)
+    } else if is_nan(&v) {
+        false
+    } else {
+        better(&v, &bv) || (v == bv && g < bg)
+    };
+    Some(if take { (g, v) } else { (bg, bv) })
+}
+
+/// Shared extremum scaffold: local scan with `better`, then an allgather
+/// of `(candidate global index, value)` per unit and a replicated
+/// reduction over the `p` candidates (ties resolve to the smallest global
+/// index on every unit identically; NaN only wins over other NaNs).
+fn extremum<T: Element>(
+    arr: &Array<'_, T>,
+    better: impl Fn(&T, &T) -> bool,
+) -> DartResult<(usize, T)> {
+    let pat = *arr.pattern();
+    let me = arr.myrank();
+    let local = arr.read_local()?;
+    let mut best: Option<(usize, T)> = None;
+    for (l, v) in local.iter().enumerate() {
+        let g = pat.local_to_global(me, l);
+        best = prefer(best, (g, *v), &better);
+    }
+    // Empty partitions send the u64::MAX sentinel every unit discards.
+    let (my_g, my_v): (u64, T) = match best {
+        Some((g, v)) => (g as u64, v),
+        None => (u64::MAX, T::default()),
+    };
+    let p = pat.nunits();
+    let mut all_g = vec![0u64; p];
+    let mut all_v = vec![T::default(); p];
+    let env = arr.env();
+    env.allgather(arr.team(), as_bytes(&[my_g]), as_bytes_mut(&mut all_g))?;
+    env.allgather(arr.team(), as_bytes(&[my_v]), as_bytes_mut(&mut all_v))?;
+    let mut winner: Option<(usize, T)> = None;
+    for (g, v) in all_g.iter().zip(&all_v) {
+        if *g == u64::MAX {
+            continue;
+        }
+        winner = prefer(winner, (*g as usize, *v), &better);
+    }
+    // Patterns are non-empty, so at least one unit contributed.
+    Ok(winner.expect("non-empty array has an extremum"))
+}
+
+/// Global minimum as `(global index, value)`; ties resolve to the
+/// smallest index. Collective; every unit returns the same answer.
+pub fn min_element<T: Element>(arr: &Array<'_, T>) -> DartResult<(usize, T)> {
+    extremum(arr, |a, b| a < b)
+}
+
+/// Global maximum as `(global index, value)` — mirror of
+/// [`min_element`].
+pub fn max_element<T: Element>(arr: &Array<'_, T>) -> DartResult<(usize, T)> {
+    extremum(arr, |a, b| a > b)
+}
+
+/// Distributed copy `src → dst`, **redistributing** between arbitrary
+/// (possibly different) patterns of the same length on the same team.
+///
+/// Owner-computes on the source side: every unit walks its own partition
+/// in source-local order ([`Pattern::block_iter`](super::Pattern::block_iter)),
+/// intersects each owned run with the destination pattern's runs, and
+/// pushes every intersection as ONE deferred-completion put — so a
+/// BLOCKED → BLOCKCYCLIC(b) redistribution issues `local_len / b`-ish
+/// operations, not `local_len`. One `flush_all` + one barrier complete
+/// the exchange. Returns the number of one-sided operations this unit
+/// issued (also in `Metrics::dash_coalesced_runs`; bytes in
+/// `Metrics::dash_redist_bytes`).
+pub fn copy<T: Element>(src: &Array<'_, T>, dst: &Array<'_, T>) -> DartResult<u64> {
+    use crate::dart::DartErr;
+    if src.len() != dst.len() {
+        return Err(DartErr::Invalid(format!(
+            "copy between arrays of different lengths ({} vs {})",
+            src.len(),
+            dst.len()
+        )));
+    }
+    if src.team() != dst.team() {
+        return Err(DartErr::Invalid("copy between arrays on different teams".into()));
+    }
+    let env = src.env();
+    // All prior writes to src must be visible before anyone reads it out.
+    env.barrier(src.team())?;
+    let local = src.read_local()?;
+    let mut ops = 0u64;
+    let mut bytes = 0u64;
+    for mine in src.pattern().block_iter(src.myrank()) {
+        for run in dst.pattern().runs(mine.global, mine.len) {
+            let off = mine.local + (run.global - mine.global);
+            let payload = as_bytes(&local[off..off + run.len]);
+            env.put_async(dst.gptr_of(run.unit, run.local), payload)?;
+            ops += 1;
+            bytes += payload.len() as u64;
+        }
+    }
+    env.metrics.dash_coalesced_runs.add(ops);
+    env.metrics.dash_redist_bytes.add(bytes);
+    if ops > 0 {
+        env.flush_all(dst.gptr)?;
+    }
+    env.barrier(src.team())?;
+    Ok(ops)
+}

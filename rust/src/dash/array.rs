@@ -1,0 +1,255 @@
+//! `Array<T>` — a typed 1-D distributed array over DART global memory.
+//!
+//! The container owns one collective aligned allocation
+//! ([`crate::dart::DartEnv::team_memalloc_aligned`]) of
+//! `max_local_extent × size_of::<T>()` bytes per member — symmetric, so
+//! any unit computes any element's global pointer locally (the paper's
+//! "advantageous property" of aligned allocations) — and a [`Pattern`]
+//! giving the element → (unit, local offset) map.
+//!
+//! Three access tiers, slowest to fastest:
+//!
+//! 1. **element** — [`Array::get`]/[`Array::put`]: one blocking one-sided
+//!    op per element; fine for setup and tests, wrong for bulk data;
+//! 2. **bulk** — [`Array::copy_in`]/[`Array::copy_out`]: the pattern's
+//!    [`Pattern::runs`] coalesce the range into maximal contiguous runs,
+//!    each moved as ONE deferred-completion engine op
+//!    (`put_async`/`get_async`), completed by a single `flush_all`;
+//!    issued-run counts land in `Metrics::dash_coalesced_runs`;
+//! 3. **owner-computes** — [`Array::read_local`]/[`Array::write_local`]/
+//!    [`Array::with_local`]: the unit's whole partition through
+//!    `local_read`/`local_write`, no network at all. This is the access
+//!    shape the owner-computes algorithms ([`super::algorithms`]) and the
+//!    locality-awareness follow-up papers are about.
+
+use super::pattern::Pattern;
+use crate::dart::gptr::{GlobalPtr, TeamId, UnitId};
+use crate::dart::{DartEnv, DartErr, DartResult, Element};
+use crate::mpisim::{as_bytes, as_bytes_mut};
+use std::marker::PhantomData;
+
+/// A typed distributed 1-D array (see module docs).
+pub struct Array<'e, T: Element> {
+    pub(crate) env: &'e DartEnv,
+    pub(crate) team: TeamId,
+    pub(crate) pattern: Pattern,
+    /// Base collective pointer of the backing allocation (team's first
+    /// member; pool-relative offset identical on every member).
+    pub(crate) gptr: GlobalPtr,
+    /// Absolute unit id of every team rank (rank-indexed).
+    pub(crate) units: Vec<UnitId>,
+    /// My team-relative rank.
+    pub(crate) myrank: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<'e, T: Element> Array<'e, T> {
+    /// Collectively allocate a distributed array laid out by `pattern`
+    /// over `team`. Every element starts as `T::default()`.
+    ///
+    /// `pattern.nunits()` must equal the team size.
+    pub fn new(env: &'e DartEnv, team: TeamId, pattern: Pattern) -> DartResult<Array<'e, T>> {
+        let p = env.team_size(team)?;
+        if pattern.nunits() != p {
+            return Err(DartErr::Invalid(format!(
+                "pattern over {} units on a {p}-member team",
+                pattern.nunits()
+            )));
+        }
+        let cap = pattern.max_local_extent().max(1);
+        let gptr = env.team_memalloc_aligned(team, (cap * std::mem::size_of::<T>()) as u64)?;
+        let units: Vec<UnitId> =
+            (0..p).map(|r| env.team_unit_l2g(team, r)).collect::<DartResult<_>>()?;
+        let myrank = env.team_myid(team)?;
+        let arr = Array { env, team, pattern, gptr, units, myrank, _elem: PhantomData };
+        // Deterministic initial contents, then a rendezvous so no unit
+        // reads a partition its owner has not initialized yet.
+        let zeros = vec![T::default(); arr.local_len()];
+        arr.write_local(&zeros)?;
+        env.barrier(team)?;
+        Ok(arr)
+    }
+
+    /// Convenience: a BLOCKED array of `n` elements over `team`.
+    pub fn blocked(env: &'e DartEnv, team: TeamId, n: usize) -> DartResult<Array<'e, T>> {
+        let p = env.team_size(team)?;
+        Array::new(env, team, Pattern::blocked(n, p)?)
+    }
+
+    /// Convenience: a CYCLIC array of `n` elements over `team`.
+    pub fn cyclic(env: &'e DartEnv, team: TeamId, n: usize) -> DartResult<Array<'e, T>> {
+        let p = env.team_size(team)?;
+        Array::new(env, team, Pattern::cyclic(n, p)?)
+    }
+
+    /// Convenience: a BLOCKCYCLIC(`block`) array of `n` elements.
+    pub fn block_cyclic(
+        env: &'e DartEnv,
+        team: TeamId,
+        n: usize,
+        block: usize,
+    ) -> DartResult<Array<'e, T>> {
+        let p = env.team_size(team)?;
+        Array::new(env, team, Pattern::block_cyclic(n, p, block)?)
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.pattern.len()
+    }
+
+    /// Arrays are never empty (patterns enforce `n ≥ 1`).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The distribution pattern.
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+
+    /// The team this array is distributed over.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// The runtime handle the array was created with.
+    pub fn env(&self) -> &'e DartEnv {
+        self.env
+    }
+
+    /// My team-relative rank.
+    pub fn myrank(&self) -> usize {
+        self.myrank
+    }
+
+    /// Number of elements stored on this unit.
+    pub fn local_len(&self) -> usize {
+        self.pattern.local_extent(self.myrank)
+    }
+
+    /// Global pointer to local offset `local` of team rank `unit`'s
+    /// partition — pure pointer arithmetic, no communication.
+    pub(crate) fn gptr_of(&self, unit: usize, local: usize) -> GlobalPtr {
+        self.gptr
+            .with_unit(self.units[unit])
+            .add((local * std::mem::size_of::<T>()) as u64)
+    }
+
+    /// Check a global range against the array bounds (the containers
+    /// report [`DartErr::Invalid`] where the raw [`Pattern`] asserts;
+    /// overflow-safe, so `start` near `usize::MAX` cannot wrap past it).
+    fn check_range(&self, start: usize, len: usize) -> DartResult<()> {
+        match start.checked_add(len) {
+            Some(end) if end <= self.len() => Ok(()),
+            _ => Err(DartErr::Invalid(format!(
+                "global range {start}+{len} out of array bounds 0..{}",
+                self.len()
+            ))),
+        }
+    }
+
+    /// Read one element (blocking one-sided get).
+    pub fn get(&self, g: usize) -> DartResult<T> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        let mut v = [T::default()];
+        self.env.get_blocking(self.gptr_of(u, l), as_bytes_mut(&mut v))?;
+        Ok(v[0])
+    }
+
+    /// Write one element (blocking one-sided put).
+    pub fn put(&self, g: usize, value: T) -> DartResult<()> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.put_blocking(self.gptr_of(u, l), as_bytes(&[value]))
+    }
+
+    /// Bulk write: scatter `src` into the global range
+    /// `[start, start + src.len())`, coalescing each maximal contiguous
+    /// run into ONE deferred-completion put, all completed by a single
+    /// `flush_all`. Returns the number of one-sided operations issued
+    /// (also added to `Metrics::dash_coalesced_runs`).
+    pub fn copy_in(&self, start: usize, src: &[T]) -> DartResult<u64> {
+        self.check_range(start, src.len())?;
+        if src.is_empty() {
+            return Ok(0);
+        }
+        let mut ops = 0u64;
+        for run in self.pattern.runs(start, src.len()) {
+            let off = run.global - start;
+            self.env
+                .put_async(self.gptr_of(run.unit, run.local), as_bytes(&src[off..off + run.len]))?;
+            ops += 1;
+        }
+        self.env.metrics.dash_coalesced_runs.add(ops);
+        self.env.flush_all(self.gptr)?;
+        Ok(ops)
+    }
+
+    /// Bulk read: gather the global range `[start, start + dst.len())`
+    /// into `dst` — the mirror of [`Array::copy_in`] over deferred gets.
+    /// Returns the number of one-sided operations issued.
+    pub fn copy_out(&self, start: usize, dst: &mut [T]) -> DartResult<u64> {
+        self.check_range(start, dst.len())?;
+        if dst.is_empty() {
+            return Ok(0);
+        }
+        let mut ops = 0u64;
+        for run in self.pattern.runs(start, dst.len()) {
+            let off = run.global - start;
+            self.env.get_async(
+                self.gptr_of(run.unit, run.local),
+                as_bytes_mut(&mut dst[off..off + run.len]),
+            )?;
+            ops += 1;
+        }
+        self.env.metrics.dash_coalesced_runs.add(ops);
+        self.env.flush_all(self.gptr)?;
+        Ok(ops)
+    }
+
+    /// Copy of this unit's partition, in local storage order (use
+    /// [`Pattern::local_to_global`] / [`Pattern::block_iter`] for the
+    /// global anchors).
+    pub fn read_local(&self) -> DartResult<Vec<T>> {
+        let mut buf = vec![T::default(); self.local_len()];
+        if !buf.is_empty() {
+            self.env.local_read(self.gptr_of(self.myrank, 0), as_bytes_mut(&mut buf))?;
+        }
+        Ok(buf)
+    }
+
+    /// Replace this unit's partition. `src.len()` must equal
+    /// [`Array::local_len`].
+    pub fn write_local(&self, src: &[T]) -> DartResult<()> {
+        if src.len() != self.local_len() {
+            return Err(DartErr::Invalid(format!(
+                "write_local of {} elements into a {}-element partition",
+                src.len(),
+                self.local_len()
+            )));
+        }
+        if src.is_empty() {
+            return Ok(());
+        }
+        self.env.local_write(self.gptr_of(self.myrank, 0), as_bytes(src))
+    }
+
+    /// The owner-computes local view: run `f` on this unit's partition
+    /// and write any mutation back. Purely local — no synchronization;
+    /// callers running SPMD phases add their own barrier.
+    pub fn with_local<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> DartResult<R> {
+        let mut buf = self.read_local()?;
+        let out = f(&mut buf);
+        self.write_local(&buf)?;
+        Ok(out)
+    }
+
+    /// Collectively free the backing global allocation. Not done in
+    /// `Drop`: freeing is a collective call that can fail, which a
+    /// destructor could neither order across units nor report.
+    pub fn free(self) -> DartResult<()> {
+        self.env.team_memfree(self.team, self.gptr)
+    }
+}

@@ -1,0 +1,187 @@
+//! `Matrix<T>` — a typed 2-D distributed matrix over a TILED pattern.
+//!
+//! A thin 2-D veneer over [`Array`]: global element `(i, j)` is the
+//! linear index `i * cols + j` of a [`Pattern::tiled`] distribution, and
+//! every unit stores its tiles as one dense row-major local matrix
+//! (`local_rows() × local_cols()`), which is exactly the block layout the
+//! stencil apps hand-rolled before this layer existed.
+//!
+//! On top of the array's element/bulk/local tiers the matrix adds the two
+//! halo access shapes of a 2-D decomposition:
+//!
+//! - [`Matrix::get_row_async`] — a row segment inside one owner tile:
+//!   ONE contiguous deferred-completion get;
+//! - [`Matrix::get_col_async`] — a column segment inside one owner tile:
+//!   ONE vector-typed strided get
+//!   ([`crate::dart::DartEnv::get_strided_async`]), not one op per row.
+//!
+//! Both are completed by a single [`Matrix::flush`] per exchange phase,
+//! preserving the engine's one-op-per-neighbour + one-flush-per-step
+//! batching that `rust/tests/engine_tests.rs` asserts for `stencil2d`.
+
+use super::array::Array;
+use super::pattern::Pattern;
+use crate::dart::gptr::TeamId;
+use crate::dart::{DartEnv, DartErr, DartResult, Element};
+use crate::mpisim::as_bytes_mut;
+
+/// A typed distributed 2-D matrix (see module docs).
+pub struct Matrix<'e, T: Element> {
+    arr: Array<'e, T>,
+    rows: usize,
+    cols: usize,
+}
+
+impl<'e, T: Element> Matrix<'e, T> {
+    /// Collectively allocate a `rows × cols` matrix tiled in
+    /// `tile_rows × tile_cols` tiles over a `pgrid_rows × pgrid_cols`
+    /// unit grid (`pgrid_rows * pgrid_cols` must equal the team size;
+    /// team rank `r` sits at unit-grid position
+    /// `(r / pgrid_cols, r % pgrid_cols)`). Elements start as
+    /// `T::default()`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        env: &'e DartEnv,
+        team: TeamId,
+        rows: usize,
+        cols: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        pgrid_rows: usize,
+        pgrid_cols: usize,
+    ) -> DartResult<Matrix<'e, T>> {
+        let pattern = Pattern::tiled(rows, cols, tile_rows, tile_cols, pgrid_rows, pgrid_cols)?;
+        Ok(Matrix { arr: Array::new(env, team, pattern)?, rows, cols })
+    }
+
+    /// Matrix height in elements.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Matrix width in elements.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The underlying distributed array (linear row-major view).
+    pub fn as_array(&self) -> &Array<'e, T> {
+        &self.arr
+    }
+
+    /// The distribution pattern.
+    pub fn pattern(&self) -> &Pattern {
+        self.arr.pattern()
+    }
+
+    /// Height of this unit's dense local matrix.
+    pub fn local_rows(&self) -> usize {
+        self.arr.pattern().tiled_local_dims(self.arr.myrank()).0
+    }
+
+    /// Width of this unit's dense local matrix.
+    pub fn local_cols(&self) -> usize {
+        self.arr.pattern().tiled_local_dims(self.arr.myrank()).1
+    }
+
+    fn linear(&self, i: usize, j: usize) -> DartResult<usize> {
+        if i >= self.rows || j >= self.cols {
+            return Err(DartErr::Invalid(format!(
+                "matrix index ({i}, {j}) out of {}×{}",
+                self.rows, self.cols
+            )));
+        }
+        Ok(i * self.cols + j)
+    }
+
+    /// Read one element (blocking one-sided get).
+    pub fn get(&self, i: usize, j: usize) -> DartResult<T> {
+        self.arr.get(self.linear(i, j)?)
+    }
+
+    /// Write one element (blocking one-sided put).
+    pub fn put(&self, i: usize, j: usize, value: T) -> DartResult<()> {
+        self.arr.put(self.linear(i, j)?, value)
+    }
+
+    /// Copy of this unit's dense `local_rows() × local_cols()` row-major
+    /// local matrix.
+    pub fn read_local(&self) -> DartResult<Vec<T>> {
+        self.arr.read_local()
+    }
+
+    /// Replace this unit's local matrix (`src.len()` must be
+    /// `local_rows() * local_cols()`).
+    pub fn write_local(&self, src: &[T]) -> DartResult<()> {
+        self.arr.write_local(src)
+    }
+
+    /// Owner-computes view of the local matrix (see
+    /// [`Array::with_local`]).
+    pub fn with_local<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> DartResult<R> {
+        self.arr.with_local(f)
+    }
+
+    /// Deferred-completion get of the row segment
+    /// `(i, j0 .. j0 + dst.len())`. The segment must lie inside one
+    /// owner's tile row (one contiguous run — the natural shape of a
+    /// north/south halo), so it is issued as ONE engine operation;
+    /// complete it with [`Matrix::flush`].
+    pub fn get_row_async(&self, i: usize, j0: usize, dst: &mut [T]) -> DartResult<()> {
+        if dst.is_empty() {
+            return Ok(());
+        }
+        let g = self.linear(i, j0)?;
+        self.linear(i, j0 + dst.len() - 1)?;
+        let (unit, local) = self.arr.pattern().global_to_local(g);
+        if self.arr.pattern().run_len(g) < dst.len() {
+            return Err(DartErr::Invalid(format!(
+                "row segment ({i}, {j0}..{}) crosses a tile boundary",
+                j0 + dst.len()
+            )));
+        }
+        self.arr.env().get_async(self.arr.gptr_of(unit, local), as_bytes_mut(dst))
+    }
+
+    /// Deferred-completion get of the column segment
+    /// `(i0 .. i0 + dst.len(), j)`. The segment must lie inside one
+    /// owner's tile column (the west/east halo shape); it moves as ONE
+    /// vector-typed strided operation with the owner's local row width as
+    /// the stride. Complete it with [`Matrix::flush`].
+    pub fn get_col_async(&self, i0: usize, j: usize, dst: &mut [T]) -> DartResult<()> {
+        if dst.is_empty() {
+            return Ok(());
+        }
+        let g0 = self.linear(i0, j)?;
+        let g1 = self.linear(i0 + dst.len() - 1, j)?;
+        let (unit, local) = self.arr.pattern().global_to_local(g0);
+        let (unit1, local1) = self.arr.pattern().global_to_local(g1);
+        let (_, w) = self.arr.pattern().tiled_local_dims(unit);
+        if unit1 != unit || local1 != local + (dst.len() - 1) * w {
+            return Err(DartErr::Invalid(format!(
+                "column segment ({i0}..{}, {j}) crosses a tile boundary",
+                i0 + dst.len()
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        self.arr.env().get_strided_async(
+            self.arr.gptr_of(unit, local),
+            as_bytes_mut(dst),
+            dst.len(),
+            size,
+            (w * size) as u64,
+        )
+    }
+
+    /// Complete every outstanding deferred operation on the matrix's
+    /// segment — one call per halo-exchange phase.
+    pub fn flush(&self) -> DartResult<()> {
+        self.arr.env().flush_all(self.arr.gptr)
+    }
+
+    /// Collectively free the backing global allocation (see
+    /// [`Array::free`]).
+    pub fn free(self) -> DartResult<()> {
+        self.arr.free()
+    }
+}

@@ -1,0 +1,39 @@
+//! `dash` — typed distributed data structures and owner-computes
+//! algorithms on top of the DART runtime.
+//!
+//! The DART-MPI paper positions DART as the substrate of the **DASH**
+//! C++ PGAS library ("DASH: A C++ PGAS Library for Distributed Data
+//! Structures and Parallel Algorithms", Fuerlinger et al.); this module
+//! is that missing top layer, built **strictly on the public `dart`
+//! API** — global memory, one-sided engine ops, collectives — with no
+//! private hooks into the runtime:
+//!
+//! - [`Pattern`] ([`pattern`]) — BLOCKED / CYCLIC / BLOCKCYCLIC(b) /
+//!   TILED (2-D) data distributions as bijective global ↔ (unit, local
+//!   offset) index maps, with contiguous-run queries for coalescing;
+//! - [`Array`]`<T>` ([`array`]) and [`Matrix`]`<T>` ([`matrix`]) —
+//!   typed containers over one symmetric
+//!   [`crate::dart::DartEnv::team_memalloc_aligned`] allocation: global
+//!   element get/put, run-coalesced bulk `copy_in`/`copy_out` on the
+//!   engine's deferred-completion path, owner-computes local views, and
+//!   the matrix's one-op halo accessors (contiguous row get, vector-typed
+//!   column get);
+//! - [`algorithms`] — owner-computes `fill`/`transform`/`sum`/
+//!   `min_element`/`max_element` plus the pattern-redistributing
+//!   [`algorithms::copy`], all combining per-unit work with one team
+//!   collective.
+//!
+//! Element types are anything implementing the byte-API marker
+//! [`crate::dart::Element`]. Operation coalescing is observable in
+//! `Metrics::dash_coalesced_runs` / `Metrics::dash_redist_bytes` and
+//! measured by the `perf_dash` bench (`BENCH_dash.json`).
+
+pub mod algorithms;
+pub mod array;
+pub mod matrix;
+pub mod pattern;
+
+pub use crate::dart::Element;
+pub use array::Array;
+pub use matrix::Matrix;
+pub use pattern::{Layout, Pattern, Run};

@@ -1,0 +1,442 @@
+//! Data-distribution patterns: bijective global ↔ (unit, local-offset)
+//! index maps.
+//!
+//! A [`Pattern`] describes how the `n` elements of a distributed container
+//! are partitioned over the `p` units of a team, in the four classic PGAS
+//! distributions of the DASH paper (Fuerlinger et al., §data distribution):
+//!
+//! - **BLOCKED** — unit `u` owns one contiguous block of
+//!   `⌈n/p⌉` elements (trailing units may own less, possibly zero);
+//! - **CYCLIC** — element `g` lives on unit `g mod p` (round-robin);
+//! - **BLOCKCYCLIC(b)** — blocks of `b` elements are dealt round-robin;
+//! - **TILED** — the 2-D distribution: a `rows × cols` matrix is cut into
+//!   `tile_rows × tile_cols` tiles dealt round-robin over a
+//!   `pgrid_rows × pgrid_cols` unit grid; each unit stores its tiles as
+//!   one **dense row-major local matrix** (ragged edge tiles supported).
+//!
+//! Every variant provides the same three total maps and their inverses:
+//! [`Pattern::global_to_local`], [`Pattern::local_to_global`] and
+//! [`Pattern::local_extent`] — together a bijection from `[0, n)` onto
+//! `⋃_u {u} × [0, local_extent(u))`, property-tested (including uneven
+//! `n % p ≠ 0` tails) by `rust/tests/dash_tests.rs`.
+//!
+//! The coalescing queries [`Pattern::run_len`], [`Pattern::runs`] and
+//! [`Pattern::block_iter`] expose the *maximal contiguous runs* of a
+//! pattern — index ranges contiguous in global space **and** in one
+//! unit's local space at once. They are what lets the containers turn an
+//! arbitrary bulk transfer into few one-sided operations instead of one
+//! per element (cf. the locality-awareness follow-up, arXiv:1609.09333).
+
+use crate::dart::{DartErr, DartResult};
+
+/// How elements are dealt to units (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// One contiguous `⌈n/p⌉`-element block per unit.
+    Blocked,
+    /// Element `g` on unit `g mod p`.
+    Cyclic,
+    /// `block`-element chunks dealt round-robin.
+    BlockCyclic {
+        /// Elements per dealt chunk.
+        block: usize,
+    },
+    /// 2-D tiles dealt round-robin over a unit grid; the linear global
+    /// index is the row-major position `i * cols + j`.
+    Tiled {
+        /// Matrix height in elements.
+        rows: usize,
+        /// Matrix width in elements.
+        cols: usize,
+        /// Tile height in elements.
+        tile_rows: usize,
+        /// Tile width in elements.
+        tile_cols: usize,
+        /// Unit-grid height (`pgrid_rows * pgrid_cols == nunits`).
+        pgrid_rows: usize,
+        /// Unit-grid width.
+        pgrid_cols: usize,
+    },
+}
+
+/// One maximal contiguous run: `len` elements starting at global index
+/// `global`, stored at `local..local+len` on team-relative unit `unit`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Run {
+    /// First global index of the run.
+    pub global: usize,
+    /// Team-relative owner rank.
+    pub unit: usize,
+    /// First local offset (in elements) on the owner.
+    pub local: usize,
+    /// Run length in elements (≥ 1).
+    pub len: usize,
+}
+
+/// A data-distribution pattern over `n` elements and `nunits` team members
+/// (cheap to copy; all queries are O(1) arithmetic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pattern {
+    n: usize,
+    nunits: usize,
+    layout: Layout,
+}
+
+/// Count of the elements in `[0, total)` that a 1-D tile-cyclic deal of
+/// `tile`-sized chunks over `pgrid` slots assigns to slot `idx` — shared
+/// by the BLOCKCYCLIC extent and both TILED axes.
+fn dealt_extent(total: usize, tile: usize, pgrid: usize, idx: usize) -> usize {
+    let ntiles = total.div_ceil(tile);
+    if idx >= ntiles {
+        return 0;
+    }
+    let owned = (ntiles - 1 - idx) / pgrid + 1;
+    let mut size = owned * tile;
+    // The globally-last chunk may be ragged; it can only be this slot's
+    // last owned chunk, so earlier owned chunks are always full.
+    if (ntiles - 1) % pgrid == idx && total % tile != 0 {
+        size -= tile - total % tile;
+    }
+    size
+}
+
+impl Pattern {
+    fn new(n: usize, nunits: usize, layout: Layout) -> DartResult<Pattern> {
+        if n == 0 {
+            return Err(DartErr::Invalid("pattern over zero elements".into()));
+        }
+        if nunits == 0 {
+            return Err(DartErr::Invalid("pattern over zero units".into()));
+        }
+        Ok(Pattern { n, nunits, layout })
+    }
+
+    /// A BLOCKED distribution of `n` elements over `nunits` units.
+    pub fn blocked(n: usize, nunits: usize) -> DartResult<Pattern> {
+        Pattern::new(n, nunits, Layout::Blocked)
+    }
+
+    /// A CYCLIC distribution of `n` elements over `nunits` units.
+    pub fn cyclic(n: usize, nunits: usize) -> DartResult<Pattern> {
+        Pattern::new(n, nunits, Layout::Cyclic)
+    }
+
+    /// A BLOCKCYCLIC(`block`) distribution of `n` elements.
+    pub fn block_cyclic(n: usize, nunits: usize, block: usize) -> DartResult<Pattern> {
+        if block == 0 {
+            return Err(DartErr::Invalid("block-cyclic with zero block".into()));
+        }
+        Pattern::new(n, nunits, Layout::BlockCyclic { block })
+    }
+
+    /// A 2-D TILED distribution of a `rows × cols` matrix in
+    /// `tile_rows × tile_cols` tiles over a `pgrid_rows × pgrid_cols`
+    /// unit grid (`nunits = pgrid_rows * pgrid_cols`).
+    pub fn tiled(
+        rows: usize,
+        cols: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        pgrid_rows: usize,
+        pgrid_cols: usize,
+    ) -> DartResult<Pattern> {
+        if tile_rows == 0 || tile_cols == 0 {
+            return Err(DartErr::Invalid("tiled pattern with zero tile extent".into()));
+        }
+        if pgrid_rows == 0 || pgrid_cols == 0 {
+            return Err(DartErr::Invalid("tiled pattern with empty unit grid".into()));
+        }
+        Pattern::new(
+            rows * cols,
+            pgrid_rows * pgrid_cols,
+            Layout::Tiled { rows, cols, tile_rows, tile_cols, pgrid_rows, pgrid_cols },
+        )
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Patterns are never empty (enforced at construction).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Number of team-relative units the pattern distributes over.
+    pub fn nunits(&self) -> usize {
+        self.nunits
+    }
+
+    /// The distribution variant.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The BLOCKED block size `⌈n/p⌉`.
+    fn blocked_size(&self) -> usize {
+        self.n.div_ceil(self.nunits)
+    }
+
+    /// Map a global index to `(team-relative unit, local element offset)`.
+    ///
+    /// # Panics
+    /// If `g >= self.len()`.
+    pub fn global_to_local(&self, g: usize) -> (usize, usize) {
+        assert!(g < self.n, "global index {g} out of range 0..{}", self.n);
+        let p = self.nunits;
+        match self.layout {
+            Layout::Blocked => {
+                let b = self.blocked_size();
+                (g / b, g % b)
+            }
+            Layout::Cyclic => (g % p, g / p),
+            Layout::BlockCyclic { block } => {
+                let chunk = g / block;
+                ((chunk % p), (chunk / p) * block + g % block)
+            }
+            Layout::Tiled { cols, tile_rows, tile_cols, pgrid_rows, pgrid_cols, .. } => {
+                let (i, j) = (g / cols, g % cols);
+                let (ur, uc) = ((i / tile_rows) % pgrid_rows, (j / tile_cols) % pgrid_cols);
+                let w = dealt_extent(cols, tile_cols, pgrid_cols, uc);
+                let lrow = (i / tile_rows / pgrid_rows) * tile_rows + i % tile_rows;
+                let lcol = (j / tile_cols / pgrid_cols) * tile_cols + j % tile_cols;
+                (ur * pgrid_cols + uc, lrow * w + lcol)
+            }
+        }
+    }
+
+    /// Inverse of [`Pattern::global_to_local`].
+    ///
+    /// # Panics
+    /// If `unit >= nunits()` or `local >= local_extent(unit)`.
+    pub fn local_to_global(&self, unit: usize, local: usize) -> usize {
+        assert!(unit < self.nunits, "unit {unit} out of range 0..{}", self.nunits);
+        assert!(
+            local < self.local_extent(unit),
+            "local offset {local} out of unit {unit}'s extent {}",
+            self.local_extent(unit)
+        );
+        let p = self.nunits;
+        match self.layout {
+            Layout::Blocked => unit * self.blocked_size() + local,
+            Layout::Cyclic => local * p + unit,
+            Layout::BlockCyclic { block } => {
+                ((local / block) * p + unit) * block + local % block
+            }
+            Layout::Tiled { cols, tile_rows, tile_cols, pgrid_rows, pgrid_cols, .. } => {
+                let (ur, uc) = (unit / pgrid_cols, unit % pgrid_cols);
+                let w = dealt_extent(cols, tile_cols, pgrid_cols, uc);
+                let (lrow, lcol) = (local / w, local % w);
+                let i = (lrow / tile_rows * pgrid_rows + ur) * tile_rows + lrow % tile_rows;
+                let j = (lcol / tile_cols * pgrid_cols + uc) * tile_cols + lcol % tile_cols;
+                i * cols + j
+            }
+        }
+    }
+
+    /// Number of elements unit `unit` owns (its local storage extent).
+    ///
+    /// # Panics
+    /// If `unit >= nunits()`.
+    pub fn local_extent(&self, unit: usize) -> usize {
+        assert!(unit < self.nunits, "unit {unit} out of range 0..{}", self.nunits);
+        match self.layout {
+            Layout::Blocked => {
+                let b = self.blocked_size();
+                let lo = unit * b;
+                if lo >= self.n {
+                    0
+                } else {
+                    b.min(self.n - lo)
+                }
+            }
+            Layout::Cyclic => {
+                if unit >= self.n {
+                    0
+                } else {
+                    (self.n - 1 - unit) / self.nunits + 1
+                }
+            }
+            Layout::BlockCyclic { block } => dealt_extent(self.n, block, self.nunits, unit),
+            Layout::Tiled { .. } => {
+                let (h, w) = self.tiled_local_dims(unit);
+                h * w
+            }
+        }
+    }
+
+    /// The largest [`Pattern::local_extent`] over all units — the
+    /// symmetric per-unit allocation size the containers use.
+    pub fn max_local_extent(&self) -> usize {
+        (0..self.nunits).map(|u| self.local_extent(u)).max().unwrap_or(0)
+    }
+
+    /// TILED only: unit `unit`'s dense local matrix dimensions
+    /// `(local rows, local cols)`.
+    ///
+    /// # Panics
+    /// If the pattern is not TILED, or `unit >= nunits()`.
+    pub fn tiled_local_dims(&self, unit: usize) -> (usize, usize) {
+        assert!(unit < self.nunits, "unit {unit} out of range 0..{}", self.nunits);
+        match self.layout {
+            Layout::Tiled { rows, cols, tile_rows, tile_cols, pgrid_rows, pgrid_cols } => {
+                let (ur, uc) = (unit / pgrid_cols, unit % pgrid_cols);
+                (
+                    dealt_extent(rows, tile_rows, pgrid_rows, ur),
+                    dealt_extent(cols, tile_cols, pgrid_cols, uc),
+                )
+            }
+            _ => panic!("tiled_local_dims on a 1-D pattern"),
+        }
+    }
+
+    /// Length of the maximal run starting at global index `g` that is
+    /// contiguous in global space, owned by one unit, and contiguous in
+    /// that unit's local storage. Always ≥ 1.
+    ///
+    /// # Panics
+    /// If `g >= self.len()`.
+    pub fn run_len(&self, g: usize) -> usize {
+        assert!(g < self.n, "global index {g} out of range 0..{}", self.n);
+        let p = self.nunits;
+        if p == 1 {
+            // One unit: local storage mirrors global order in every layout.
+            return self.n - g;
+        }
+        match self.layout {
+            Layout::Blocked => {
+                let b = self.blocked_size();
+                ((g / b + 1) * b).min(self.n) - g
+            }
+            Layout::Cyclic => 1,
+            Layout::BlockCyclic { block } => ((g / block + 1) * block).min(self.n) - g,
+            Layout::Tiled { cols, tile_cols, pgrid_cols, .. } => {
+                let j = g % cols;
+                // Runs break at tile-column boundaries (owner changes when
+                // pgrid_cols > 1) and always at the end of the matrix row.
+                let limit = if pgrid_cols == 1 { cols } else { (j / tile_cols + 1) * tile_cols };
+                limit.min(cols) - j
+            }
+        }
+    }
+
+    /// Iterate the maximal contiguous runs covering the global range
+    /// `[start, start + len)`, in ascending global order. Each element of
+    /// the range appears in exactly one [`Run`].
+    ///
+    /// # Panics
+    /// If `start + len > self.len()`.
+    pub fn runs(&self, start: usize, len: usize) -> impl Iterator<Item = Run> {
+        assert!(start + len <= self.n, "range {start}+{len} out of 0..{}", self.n);
+        let pat = *self;
+        let end = start + len;
+        let mut g = start;
+        std::iter::from_fn(move || {
+            if g >= end {
+                return None;
+            }
+            let (unit, local) = pat.global_to_local(g);
+            let len = pat.run_len(g).min(end - g);
+            let run = Run { global: g, unit, local, len };
+            g += len;
+            Some(run)
+        })
+    }
+
+    /// Iterate unit `unit`'s owned runs in **local storage order** (the
+    /// owner-computes traversal: ascending local offset, each with its
+    /// global anchor).
+    ///
+    /// # Panics
+    /// If `unit >= nunits()`.
+    pub fn block_iter(&self, unit: usize) -> impl Iterator<Item = Run> {
+        let pat = *self;
+        let extent = self.local_extent(unit);
+        let mut l = 0usize;
+        std::iter::from_fn(move || {
+            if l >= extent {
+                return None;
+            }
+            let g = pat.local_to_global(unit, l);
+            let len = pat.run_len(g).min(extent - l);
+            let run = Run { global: g, unit, local: l, len };
+            l += len;
+            Some(run)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_bijection(pat: &Pattern) {
+        let mut seen = vec![false; pat.len()];
+        let extents: Vec<usize> = (0..pat.nunits()).map(|u| pat.local_extent(u)).collect();
+        assert_eq!(extents.iter().sum::<usize>(), pat.len(), "extents must cover n");
+        for g in 0..pat.len() {
+            let (u, l) = pat.global_to_local(g);
+            assert!(u < pat.nunits());
+            assert!(l < extents[u], "g={g} → ({u},{l}) beyond extent {}", extents[u]);
+            assert_eq!(pat.local_to_global(u, l), g, "inverse broken at g={g}");
+            assert!(!seen[g]);
+            seen[g] = true;
+        }
+    }
+
+    #[test]
+    fn blocked_even_and_uneven() {
+        check_bijection(&Pattern::blocked(12, 4).unwrap());
+        check_bijection(&Pattern::blocked(13, 4).unwrap());
+        check_bijection(&Pattern::blocked(3, 5).unwrap()); // some units empty
+    }
+
+    #[test]
+    fn cyclic_and_block_cyclic() {
+        check_bijection(&Pattern::cyclic(17, 4).unwrap());
+        check_bijection(&Pattern::block_cyclic(37, 3, 4).unwrap());
+        check_bijection(&Pattern::block_cyclic(8, 4, 16).unwrap()); // one short chunk
+    }
+
+    #[test]
+    fn tiled_exact_and_ragged() {
+        check_bijection(&Pattern::tiled(8, 8, 4, 4, 2, 2).unwrap());
+        check_bijection(&Pattern::tiled(10, 14, 3, 4, 2, 2).unwrap());
+    }
+
+    #[test]
+    fn runs_partition_and_coalesce() {
+        let pat = Pattern::block_cyclic(64, 4, 8).unwrap();
+        let runs: Vec<Run> = pat.runs(0, 64).collect();
+        assert_eq!(runs.len(), 8, "64 elements in 8-element chunks → 8 runs");
+        let mut g = 0;
+        for r in &runs {
+            assert_eq!(r.global, g);
+            g += r.len;
+        }
+        assert_eq!(g, 64);
+    }
+
+    #[test]
+    fn block_iter_walks_local_order() {
+        let pat = Pattern::cyclic(10, 3).unwrap();
+        for u in 0..3 {
+            let mut l = 0;
+            for r in pat.block_iter(u) {
+                assert_eq!(r.local, l);
+                assert_eq!(pat.local_to_global(u, r.local), r.global);
+                l += r.len;
+            }
+            assert_eq!(l, pat.local_extent(u));
+        }
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        assert!(Pattern::blocked(0, 4).is_err());
+        assert!(Pattern::cyclic(8, 0).is_err());
+        assert!(Pattern::block_cyclic(8, 2, 0).is_err());
+        assert!(Pattern::tiled(4, 4, 0, 2, 2, 1).is_err());
+    }
+}

@@ -23,6 +23,12 @@
 //!   patterns as single vector-typed requests, batches remote completion
 //!   behind explicit flushes, and retires deferred work in the background
 //!   through the progress engine ([`dart::ProgressMode`]).
+//! - [`dash`] — typed distributed data structures on top of `dart` (the
+//!   layer the DASH C++ PGAS library plays in the paper's stack):
+//!   distribution [`dash::Pattern`]s (BLOCKED/CYCLIC/BLOCKCYCLIC/TILED),
+//!   [`dash::Array`]/[`dash::Matrix`] containers with run-coalesced bulk
+//!   transfers and owner-computes local views, and the
+//!   [`dash::algorithms`] family including pattern redistribution.
 //! - [`runtime`] — an executor for AOT-compiled JAX/Pallas compute
 //!   artifacts so PGAS applications can run their local compute step
 //!   without Python on the request path (native backend offline; the API
@@ -53,6 +59,7 @@
 pub mod apps;
 pub mod bench_util;
 pub mod dart;
+pub mod dash;
 pub mod mpisim;
 pub mod runtime;
 pub mod simnet;

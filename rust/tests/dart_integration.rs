@@ -301,3 +301,58 @@ fn group_api_and_team_round_trip_every_subset() {
     })
     .unwrap();
 }
+
+// ---------------------------------------------------------------------------
+// team_memalloc_aligned edge cases: the documented contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn team_memalloc_zero_bytes_is_an_error_on_every_member() {
+    run(cfg(3), |env| {
+        // A zero-extent window has no addressable location; the documented
+        // behaviour is a DartErr::Invalid on EVERY member, leaving the
+        // pool untouched.
+        match env.team_memalloc_aligned(DART_TEAM_ALL, 0) {
+            Err(DartErr::Invalid(_)) => {}
+            other => panic!("zero-byte alloc must fail with Invalid, got {other:?}"),
+        }
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8).unwrap();
+        assert_eq!(g.offset, 0, "failed zero-byte alloc must not consume pool space");
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn team_memalloc_odd_sizes_round_per_member_and_stay_symmetric() {
+    use dart::dart::translation::DART_ALIGN;
+    // 3 units, 5 and 13 bytes: neither a multiple of the team size nor of
+    // DART_ALIGN. The documented contract: `nbytes` is PER MEMBER (never
+    // divided across the team), rounded up to DART_ALIGN granularity, and
+    // the pool offset is identical on every member.
+    run(cfg(3), |env| {
+        let a = env.team_memalloc_aligned(DART_TEAM_ALL, 5).unwrap();
+        let b = env.team_memalloc_aligned(DART_TEAM_ALL, 13).unwrap();
+        assert_eq!(a.offset % DART_ALIGN, 0);
+        assert_eq!(b.offset % DART_ALIGN, 0);
+        assert_eq!(b.offset, a.offset + 8, "5 bytes must round to one 8-byte granule");
+        // Identical offsets everywhere — the aligned/symmetric property.
+        let mut offs = vec![0u64; 3];
+        env.allgather(DART_TEAM_ALL, &a.offset.to_ne_bytes(), as_bytes_mut(&mut offs))
+            .unwrap();
+        assert!(offs.iter().all(|&o| o == a.offset), "offsets diverged: {offs:?}");
+        // The rounded 16-byte extent of `b` is fully addressable on every
+        // member: write the tail bytes beyond the requested 13.
+        let peer = (env.myid() + 1) % 3;
+        env.put_blocking(b.with_unit(peer).add(8), &[0xEE; 8]).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut got = [0u8; 8];
+        env.local_read(b.with_unit(env.myid()).add(8), &mut got).unwrap();
+        assert_eq!(got, [0xEE; 8]);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, b).unwrap();
+        env.team_memfree(DART_TEAM_ALL, a).unwrap();
+    })
+    .unwrap();
+}

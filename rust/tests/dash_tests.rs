@@ -1,0 +1,416 @@
+//! Tests of the `dash` layer: pattern index-map bijectivity (property
+//! tests over every variant, uneven tails included), container access
+//! tiers, owner-computes algorithms, the histogram app, and the
+//! redistribution acceptance bar (bit-exact BLOCKED → BLOCKCYCLIC with
+//! coalescing asserted through `Metrics::dash_coalesced_runs`).
+
+use dart::apps::histogram::{self, HistogramConfig};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::{algorithms, Array, Matrix, Pattern};
+use dart::mpisim::MpiOp;
+use dart::testing::prop::{forall, Rng};
+use std::sync::Mutex;
+
+fn cfg(units: usize) -> DartConfig {
+    DartConfig::with_units(units).with_pools(1 << 16, 1 << 17)
+}
+
+// ---------------------------------------------------------------------------
+// Pattern properties: bijective maps, exact coverage, run partitions
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Shape {
+    Blocked(usize, usize),
+    Cyclic(usize, usize),
+    BlockCyclic(usize, usize, usize),
+    Tiled(usize, usize, usize, usize, usize, usize),
+}
+
+fn gen_shape(rng: &mut Rng) -> Shape {
+    match rng.below(4) {
+        // Deliberately include n < p, n % p != 0 and p == 1 tails.
+        0 => Shape::Blocked(rng.range(1, 300), rng.range(1, 9)),
+        1 => Shape::Cyclic(rng.range(1, 300), rng.range(1, 9)),
+        2 => Shape::BlockCyclic(rng.range(1, 300), rng.range(1, 9), rng.range(1, 18)),
+        _ => Shape::Tiled(
+            rng.range(1, 21),
+            rng.range(1, 21),
+            rng.range(1, 7),
+            rng.range(1, 7),
+            rng.range(1, 4),
+            rng.range(1, 4),
+        ),
+    }
+}
+
+fn build(shape: &Shape) -> Pattern {
+    match *shape {
+        Shape::Blocked(n, p) => Pattern::blocked(n, p).unwrap(),
+        Shape::Cyclic(n, p) => Pattern::cyclic(n, p).unwrap(),
+        Shape::BlockCyclic(n, p, b) => Pattern::block_cyclic(n, p, b).unwrap(),
+        Shape::Tiled(r, c, tr, tc, pr, pc) => Pattern::tiled(r, c, tr, tc, pr, pc).unwrap(),
+    }
+}
+
+#[test]
+fn prop_pattern_maps_are_bijective_and_cover_exactly_once() {
+    forall("pattern-bijective", 400, gen_shape, |shape| {
+        let pat = build(shape);
+        let (n, p) = (pat.len(), pat.nunits());
+        let extents: Vec<usize> = (0..p).map(|u| pat.local_extent(u)).collect();
+        if extents.iter().sum::<usize>() != n {
+            return Err(format!("extents {extents:?} do not sum to n={n}"));
+        }
+        if pat.max_local_extent() != extents.iter().copied().max().unwrap_or(0) {
+            return Err("max_local_extent disagrees with the extents".into());
+        }
+        let mut seen: Vec<Vec<bool>> = extents.iter().map(|&e| vec![false; e]).collect();
+        for g in 0..n {
+            let (u, l) = pat.global_to_local(g);
+            if u >= p {
+                return Err(format!("g={g} mapped to unit {u} ≥ {p}"));
+            }
+            if l >= extents[u] {
+                return Err(format!("g={g} mapped beyond unit {u}'s extent {}", extents[u]));
+            }
+            if seen[u][l] {
+                return Err(format!("slot ({u},{l}) hit twice (at g={g})"));
+            }
+            seen[u][l] = true;
+            if pat.local_to_global(u, l) != g {
+                return Err(format!("inverse broken: g={g} → ({u},{l}) → {}",
+                    pat.local_to_global(u, l)));
+            }
+        }
+        // Every slot hit exactly once ⇒ with the extent sum above this is
+        // a bijection onto [0, n).
+        if seen.iter().any(|unit| unit.iter().any(|&s| !s)) {
+            return Err("some local slot never hit".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pattern_runs_partition_any_subrange() {
+    forall("pattern-runs", 300, gen_shape, |shape| {
+        let pat = build(shape);
+        let n = pat.len();
+        // A deterministic, shape-dependent subrange (plus the full range).
+        for (start, len) in [(0, n), (n / 3, n - n / 3 - n / 5)] {
+            if len == 0 {
+                continue;
+            }
+            let mut g = start;
+            for run in pat.runs(start, len) {
+                if run.len == 0 {
+                    return Err("zero-length run".into());
+                }
+                if run.global != g {
+                    return Err(format!("runs skipped from {g} to {}", run.global));
+                }
+                for k in 0..run.len {
+                    let (u, l) = pat.global_to_local(run.global + k);
+                    if u != run.unit || l != run.local + k {
+                        return Err(format!(
+                            "run at g={} not contiguous on unit {} at element {k}",
+                            run.global, run.unit
+                        ));
+                    }
+                }
+                g += run.len;
+            }
+            if g != start + len {
+                return Err(format!("runs ended at {g}, want {}", start + len));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_iter_walks_local_storage_in_order() {
+    forall("pattern-block-iter", 300, gen_shape, |shape| {
+        let pat = build(shape);
+        for u in 0..pat.nunits() {
+            let mut l = 0;
+            for run in pat.block_iter(u) {
+                if run.unit != u || run.local != l {
+                    return Err(format!("unit {u}: local order broken at offset {l}"));
+                }
+                if pat.local_to_global(u, run.local) != run.global {
+                    return Err(format!("unit {u}: wrong global anchor at offset {l}"));
+                }
+                l += run.len;
+            }
+            if l != pat.local_extent(u) {
+                return Err(format!(
+                    "unit {u}: block_iter covered {l} of {}",
+                    pat.local_extent(u)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Containers: element access, bulk coalesced transfers, local views
+// ---------------------------------------------------------------------------
+
+#[test]
+fn array_bulk_copy_in_out_roundtrip_across_patterns() {
+    run(cfg(4), |env| {
+        let n = 103usize; // uneven on purpose
+        let pats = [
+            Pattern::blocked(n, 4).unwrap(),
+            Pattern::cyclic(n, 4).unwrap(),
+            Pattern::block_cyclic(n, 4, 8).unwrap(),
+        ];
+        for pat in pats {
+            let a: Array<'_, u64> = Array::new(env, DART_TEAM_ALL, pat).unwrap();
+            if env.myid() == 0 {
+                let data: Vec<u64> = (0..n as u64).map(|i| i * 31 + 7).collect();
+                let ops = a.copy_in(0, &data).unwrap();
+                assert!(ops >= 1);
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+            // Every unit bulk-reads a subrange...
+            let mut out = vec![0u64; 50];
+            a.copy_out(13, &mut out).unwrap();
+            for (k, v) in out.iter().enumerate() {
+                assert_eq!(*v, (13 + k) as u64 * 31 + 7);
+            }
+            // ...and spot-reads single elements.
+            assert_eq!(a.get(42).unwrap(), 42 * 31 + 7);
+            assert_eq!(a.get(n - 1).unwrap(), (n as u64 - 1) * 31 + 7);
+            // Out-of-range access is an error, not a panic.
+            assert!(a.get(n).is_err());
+            assert!(a.copy_out(n - 1, &mut [0u64; 2]).is_err());
+            env.barrier(DART_TEAM_ALL).unwrap();
+            a.free().unwrap();
+        }
+    })
+    .unwrap();
+}
+
+#[test]
+fn blocked_copy_in_is_one_op_per_unit() {
+    run(cfg(4), |env| {
+        let n = 64usize;
+        let a: Array<'_, u64> = Array::blocked(env, DART_TEAM_ALL, n).unwrap();
+        if env.myid() == 0 {
+            let data: Vec<u64> = (0..n as u64).collect();
+            let before = env.metrics.dash_coalesced_runs.get();
+            let ops = a.copy_in(0, &data).unwrap();
+            // 64 elements over 4 blocked partitions → exactly 4 runs.
+            assert_eq!(ops, 4);
+            assert_eq!(env.metrics.dash_coalesced_runs.get() - before, 4);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        a.free().unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn algorithms_fill_transform_sum_minmax_with_uneven_tails() {
+    run(cfg(4), |env| {
+        // n=5 over 4 units: blocked leaves unit 3 with an EMPTY partition.
+        let small: Array<'_, i64> = Array::blocked(env, DART_TEAM_ALL, 5).unwrap();
+        algorithms::fill(&small, 3).unwrap();
+        assert_eq!(algorithms::sum(&small).unwrap(), 15);
+        let n = 103usize;
+        let a: Array<'_, f64> = Array::block_cyclic(env, DART_TEAM_ALL, n, 8).unwrap();
+        algorithms::fill(&a, 1.0).unwrap();
+        assert_eq!(algorithms::sum(&a).unwrap(), n as f64);
+        // v(g) = (g - 60)² + g: unique minimum at g=60, maximum at g=0.
+        algorithms::transform(&a, |g, _| {
+            let d = g as f64 - 60.0;
+            d * d + g as f64
+        })
+        .unwrap();
+        let (min_at, min_v) = algorithms::min_element(&a).unwrap();
+        assert_eq!(min_at, 60);
+        assert_eq!(min_v, 60.0);
+        let (max_at, max_v) = algorithms::max_element(&a).unwrap();
+        assert_eq!(max_at, 0);
+        assert_eq!(max_v, 3600.0);
+        // NaN must never beat real values — even as the very first local
+        // element of the lowest-indexed unit (g=0), where a naive
+        // candidate scan would let it poison every comparison.
+        a.put(0, f64::NAN).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let (min_at, min_v) = algorithms::min_element(&a).unwrap();
+        assert_eq!((min_at, min_v), (60, 60.0));
+        let (max_at, max_v) = algorithms::max_element(&a).unwrap();
+        assert_eq!((max_at, max_v), (1, 3482.0)); // (1-60)² + 1
+        env.barrier(DART_TEAM_ALL).unwrap();
+        a.free().unwrap();
+        small.free().unwrap();
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Matrix on a TILED pattern: dims, element access, halo accessors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matrix_tiled_access_local_dims_and_halo_gets() {
+    run(cfg(4), |env| {
+        let (rows, cols) = (10usize, 14usize); // ragged 3×4 tiles on a 2×2 grid
+        let m: Matrix<'_, i64> = Matrix::new(env, DART_TEAM_ALL, rows, cols, 3, 4, 2, 2).unwrap();
+        let me = env.team_myid(DART_TEAM_ALL).unwrap();
+        let pat = *m.pattern();
+        m.with_local(|local| {
+            for (l, v) in local.iter_mut().enumerate() {
+                let g = pat.local_to_global(me, l);
+                *v = ((g / cols) * 100 + g % cols) as i64;
+            }
+        })
+        .unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        // Dense local matrices tile the global one exactly.
+        assert_eq!(m.local_rows() * m.local_cols(), pat.local_extent(me));
+        let cells = [(m.local_rows() * m.local_cols()) as u64];
+        let mut total = [0u64];
+        env.allreduce(DART_TEAM_ALL, &cells, &mut total, MpiOp::Sum).unwrap();
+        assert_eq!(total[0], (rows * cols) as u64);
+        // Element reads across the whole matrix, any owner.
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(m.get(i, j).unwrap(), (i * 100 + j) as i64, "at ({i},{j})");
+            }
+        }
+        // Halo shapes: a row segment inside one tile (ONE get)...
+        let mut row = vec![0i64; 4];
+        m.get_row_async(3, 4, &mut row).unwrap();
+        m.flush().unwrap();
+        assert_eq!(row, vec![304, 305, 306, 307]);
+        // ...and a column segment inside one tile (ONE strided get).
+        let mut col = vec![0i64; 3];
+        m.get_col_async(3, 5, &mut col).unwrap();
+        m.flush().unwrap();
+        assert_eq!(col, vec![305, 405, 505]);
+        // Segments crossing a tile boundary are rejected, not split.
+        let mut bad = vec![0i64; 4];
+        assert!(m.get_row_async(0, 2, &mut bad).is_err());
+        assert!(m.get_col_async(2, 5, &mut bad).is_err());
+        env.barrier(DART_TEAM_ALL).unwrap();
+        m.free().unwrap();
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Redistribution: the acceptance bar + cross-pattern stress
+// ---------------------------------------------------------------------------
+
+#[test]
+fn copy_redistributes_blocked_to_blockcyclic_bit_exactly_with_coalescing() {
+    let n = 1024usize;
+    let blk = 16usize;
+    run(cfg(4), |env| {
+        let src: Array<'_, f64> = Array::blocked(env, DART_TEAM_ALL, n).unwrap();
+        let dst: Array<'_, f64> = Array::block_cyclic(env, DART_TEAM_ALL, n, blk).unwrap();
+        // A value with a non-trivial mantissa at every index.
+        let v = |g: usize| g as f64 * 1.000000119 + 0.5;
+        algorithms::transform(&src, |g, _| v(g)).unwrap();
+        let runs0 = env.metrics.dash_coalesced_runs.get();
+        let bytes0 = env.metrics.dash_redist_bytes.get();
+        let ops = algorithms::copy(&src, &dst).unwrap();
+        let issued = env.metrics.dash_coalesced_runs.get() - runs0;
+        assert_eq!(ops, issued, "returned op count must match the metric");
+        // Coalescing: my 256-element blocked partition moves in 16-element
+        // destination runs → 16 operations, NOT 256.
+        assert_eq!(issued, (n / 4 / blk) as u64);
+        assert_eq!(env.metrics.dash_redist_bytes.get() - bytes0, (n / 4 * 8) as u64);
+        // Team-wide: fewer one-sided ops than elements (the acceptance bar).
+        let mut team_ops = [0u64];
+        env.allreduce(DART_TEAM_ALL, &[issued], &mut team_ops, MpiOp::Sum).unwrap();
+        assert_eq!(team_ops[0], (n / blk) as u64);
+        assert!(team_ops[0] < n as u64);
+        // Bit-exact: every unit audits its own destination partition.
+        let me = env.team_myid(DART_TEAM_ALL).unwrap();
+        let local = dst.read_local().unwrap();
+        for (l, got) in local.iter().enumerate() {
+            let g = dst.pattern().local_to_global(me, l);
+            assert_eq!(got.to_bits(), v(g).to_bits(), "element {g} not bit-exact");
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        dst.free().unwrap();
+        src.free().unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn copy_redistributes_across_every_pattern_pair() {
+    run(cfg(4), |env| {
+        let (rows, cols) = (12usize, 16usize);
+        let n = rows * cols;
+        let mk = |which: usize| -> Pattern {
+            match which {
+                0 => Pattern::blocked(n, 4).unwrap(),
+                1 => Pattern::cyclic(n, 4).unwrap(),
+                2 => Pattern::block_cyclic(n, 4, 8).unwrap(),
+                _ => Pattern::tiled(rows, cols, 5, 6, 2, 2).unwrap(), // ragged tiles
+            }
+        };
+        let v = |g: usize| (g as u32).wrapping_mul(2_654_435_761).wrapping_add(97);
+        for s in 0..4 {
+            for d in 0..4 {
+                let src: Array<'_, u32> = Array::new(env, DART_TEAM_ALL, mk(s)).unwrap();
+                let dst: Array<'_, u32> = Array::new(env, DART_TEAM_ALL, mk(d)).unwrap();
+                algorithms::transform(&src, |g, _| v(g)).unwrap();
+                algorithms::copy(&src, &dst).unwrap();
+                let me = env.team_myid(DART_TEAM_ALL).unwrap();
+                let local = dst.read_local().unwrap();
+                for (l, got) in local.iter().enumerate() {
+                    let g = dst.pattern().local_to_global(me, l);
+                    assert_eq!(*got, v(g), "pair {s}→{d}, element {g}");
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+                dst.free().unwrap();
+                src.free().unwrap();
+            }
+        }
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// The histogram app end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_counts_match_sequential_reference() {
+    let units = 4;
+    let hcfg = HistogramConfig::quick(97, 500);
+    let reports = Mutex::new(Vec::new());
+    let hc = hcfg.clone();
+    run(cfg(units), |env| {
+        let r = histogram::run_distributed(env, &hc).unwrap();
+        reports.lock().unwrap().push(r);
+    })
+    .unwrap();
+    let want = histogram::reference_counts(units, &hcfg);
+    let want_total: u64 = want.iter().sum();
+    assert_eq!(want_total, (units * 500) as u64);
+    let want_checksum: u64 = want.iter().enumerate().map(|(i, c)| i as u64 * c).sum();
+    let mut want_modal = (0usize, want[0]);
+    for (i, &c) in want.iter().enumerate() {
+        if c > want_modal.1 {
+            want_modal = (i, c);
+        }
+    }
+    let reports = reports.into_inner().unwrap();
+    assert_eq!(reports.len(), units);
+    for r in reports {
+        assert_eq!(r.total, want_total);
+        assert_eq!(r.checksum, want_checksum);
+        assert_eq!(r.modal_bin, want_modal);
+    }
+}

@@ -1,0 +1,256 @@
+//! Tests of the MCS queue lock (§IV-B6) under real contention:
+//! mutual exclusion of `lock_acquire`, `lock_try_acquire` semantics while
+//! the lock is held and fought over, and the FIFO hand-off order of the
+//! queue (release-order fairness).
+
+use dart::dart::{run, DartConfig, GlobalPtr, DART_TEAM_ALL};
+use dart::mpisim::MpiOp;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn cfg(units: usize) -> DartConfig {
+    DartConfig::with_units(units).with_pools(1 << 16, 1 << 16)
+}
+
+/// Allocate `slots` u64 cells on unit 0's non-collective partition,
+/// initialized to `init`, and broadcast the pointer to the team.
+fn shared_cells(env: &dart::dart::DartEnv, slots: usize, init: u64) -> GlobalPtr {
+    let mut bits = [0u8; 16];
+    if env.myid() == 0 {
+        let g = env.memalloc((slots * 8) as u64).unwrap();
+        for s in 0..slots {
+            env.local_write(g.add((s * 8) as u64), &init.to_ne_bytes()).unwrap();
+        }
+        bits = g.to_bits().to_ne_bytes();
+    }
+    env.bcast(DART_TEAM_ALL, &mut bits, 0).unwrap();
+    GlobalPtr::from_bits(u128::from_ne_bytes(bits))
+}
+
+fn free_shared(env: &dart::dart::DartEnv, g: GlobalPtr) {
+    env.barrier(DART_TEAM_ALL).unwrap();
+    if env.myid() == 0 {
+        env.memfree(g).unwrap();
+    }
+}
+
+#[test]
+fn contended_acquire_preserves_mutual_exclusion() {
+    const ITERS: usize = 25;
+    const UNITS: usize = 4;
+    run(cfg(UNITS), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        let counter = shared_cells(env, 1, 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        // Unsynchronized read-modify-write on a shared cell: only mutual
+        // exclusion makes the final count exact.
+        for _ in 0..ITERS {
+            env.lock_acquire(&lock).unwrap();
+            let mut cur = [0u8; 8];
+            env.get_blocking(counter, &mut cur).unwrap();
+            let next = u64::from_ne_bytes(cur) + 1;
+            env.put_blocking(counter, &next.to_ne_bytes()).unwrap();
+            env.lock_release(&lock).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut fin = [0u8; 8];
+        env.get_blocking(counter, &mut fin).unwrap();
+        assert_eq!(u64::from_ne_bytes(fin), (UNITS * ITERS) as u64, "lost updates");
+        free_shared(env, counter);
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn try_acquire_fails_while_held_without_enqueueing() {
+    run(cfg(3), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            assert!(env.lock_try_acquire(&lock).unwrap());
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() != 0 {
+            // Held elsewhere: must fail immediately, NOT queue us.
+            assert!(!env.lock_try_acquire(&lock).unwrap());
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            // Nobody queued behind the try_acquire failures, so this
+            // release must not block on a phantom successor.
+            env.lock_release(&lock).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 1 {
+            assert!(env.lock_try_acquire(&lock).unwrap(), "freed lock must be takeable");
+            env.lock_release(&lock).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn try_acquire_under_contention_admits_one_holder_at_a_time() {
+    const ROUNDS: usize = 30;
+    run(cfg(4), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        // `occupant` holds the id of whoever is inside the critical
+        // section, u64::MAX when empty.
+        let occupant = shared_cells(env, 1, u64::MAX);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut wins = 0u64;
+        for _ in 0..ROUNDS {
+            if env.lock_try_acquire(&lock).unwrap() {
+                let mut cur = [0u8; 8];
+                env.get_blocking(occupant, &mut cur).unwrap();
+                assert_eq!(
+                    u64::from_ne_bytes(cur),
+                    u64::MAX,
+                    "acquired the lock but the critical section was occupied"
+                );
+                env.put_blocking(occupant, &(env.myid() as u64).to_ne_bytes()).unwrap();
+                std::thread::sleep(Duration::from_micros(200));
+                let mut chk = [0u8; 8];
+                env.get_blocking(occupant, &mut chk).unwrap();
+                assert_eq!(
+                    u64::from_ne_bytes(chk),
+                    env.myid() as u64,
+                    "another unit entered the critical section while I held the lock"
+                );
+                env.put_blocking(occupant, &u64::MAX.to_ne_bytes()).unwrap();
+                env.lock_release(&lock).unwrap();
+                wins += 1;
+            }
+            std::thread::yield_now();
+        }
+        let mut total = [0u64];
+        env.allreduce(DART_TEAM_ALL, &[wins], &mut total, MpiOp::Sum).unwrap();
+        assert!(total[0] >= 1, "nobody ever won a contended try_acquire");
+        free_shared(env, occupant);
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn mixed_acquire_and_try_acquire_contention_stays_consistent() {
+    // Blocking acquirers and try-acquirers interleave on the same lock:
+    // exercises the try_acquire CAS racing against lock_acquire's
+    // tail-swap + predecessor registration (the successor cell must be
+    // reset BEFORE the tail swap or a registration can be lost and the
+    // hand-off deadlocks). The shared counter catches lost updates.
+    const ITERS: usize = 20;
+    run(cfg(4), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        let counter = shared_cells(env, 1, 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let blocking = env.myid() % 2 == 0;
+        let mut updates = 0u64;
+        for _ in 0..ITERS {
+            let entered = if blocking {
+                env.lock_acquire(&lock).unwrap();
+                true
+            } else {
+                env.lock_try_acquire(&lock).unwrap()
+            };
+            if entered {
+                let mut cur = [0u8; 8];
+                env.get_blocking(counter, &mut cur).unwrap();
+                let next = u64::from_ne_bytes(cur) + 1;
+                env.put_blocking(counter, &next.to_ne_bytes()).unwrap();
+                env.lock_release(&lock).unwrap();
+                updates += 1;
+            }
+            std::thread::yield_now();
+        }
+        let mut total = [0u64];
+        env.allreduce(DART_TEAM_ALL, &[updates], &mut total, MpiOp::Sum).unwrap();
+        let mut fin = [0u8; 8];
+        env.get_blocking(counter, &mut fin).unwrap();
+        assert_eq!(u64::from_ne_bytes(fin), total[0], "lost updates under mixed contention");
+        // The blocking acquirers always get through.
+        assert!(total[0] >= (2 * ITERS) as u64);
+        free_shared(env, counter);
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn release_hands_off_in_enqueue_order() {
+    // MCS fairness: waiters are served in the order they swapped
+    // themselves into the tail. Unit 0 takes the lock; each waiter spins
+    // until its predecessor is the observed queue tail before enqueueing
+    // itself, so the enqueue order is 1, 2, 3 *deterministically* (no
+    // wall-clock staggering); unit 0 releases only once unit 3 is the
+    // tail. The recorded acquisition order must match.
+    const UNITS: usize = 4;
+    let order = Mutex::new(Vec::<u64>::new());
+    run(cfg(UNITS), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        // Cell 0: next free log slot; cells 1..=3: the log itself.
+        let log = shared_cells(env, UNITS, 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let me = env.myid();
+        if me == 0 {
+            env.lock_acquire(&lock).unwrap(); // tail is now 0
+        }
+        env.barrier(DART_TEAM_ALL).unwrap(); // everyone knows 0 holds it
+        if me > 0 {
+            // Enqueue strictly after my predecessor has swapped itself in.
+            while env.lock_tail(&lock).unwrap() != (me - 1) as i64 {
+                std::thread::yield_now();
+            }
+            env.lock_acquire(&lock).unwrap();
+            let slot = env.fetch_and_op(log, 1u64, MpiOp::Sum).unwrap();
+            env.put_blocking(log.add(8 * (1 + slot)), &(me as u64).to_ne_bytes()).unwrap();
+            env.lock_release(&lock).unwrap();
+        } else {
+            // Release only once the whole queue has built up behind me.
+            while env.lock_tail(&lock).unwrap() != (UNITS - 1) as i64 {
+                std::thread::yield_now();
+            }
+            env.lock_release(&lock).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if me == 0 {
+            let mut buf = [0u8; 8 * UNITS];
+            env.get_blocking(log, &mut buf).unwrap();
+            let served: Vec<u64> = buf[8..]
+                .chunks_exact(8)
+                .map(|c| u64::from_ne_bytes(c.try_into().unwrap()))
+                .collect();
+            *order.lock().unwrap() = served;
+        }
+        free_shared(env, log);
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+    assert_eq!(
+        order.into_inner().unwrap(),
+        vec![1, 2, 3],
+        "MCS queue served waiters out of their enqueue order"
+    );
+}
+
+#[test]
+fn lock_misuse_is_reported_not_undefined() {
+    use dart::dart::DartErr;
+    run(cfg(2), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            // Release without holding.
+            assert!(matches!(env.lock_release(&lock), Err(DartErr::LockMisuse(_))));
+            env.lock_acquire(&lock).unwrap();
+            // Re-entrant acquire and try_acquire are contract violations.
+            assert!(matches!(env.lock_acquire(&lock), Err(DartErr::LockMisuse(_))));
+            assert!(matches!(env.lock_try_acquire(&lock), Err(DartErr::LockMisuse(_))));
+            env.lock_release(&lock).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.lock_free(lock).unwrap();
+    })
+    .unwrap();
+}

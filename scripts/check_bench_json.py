@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate the schema of the BENCH_*.json files the perf benches emit.
+
+Usage:
+    python3 scripts/check_bench_json.py BENCH_hotpath.json BENCH_overlap.json BENCH_dash.json
+
+Each bench writes a single JSON object with a "bench" discriminator; this
+script knows the required keys per bench and fails (exit 1) on anything
+missing, empty, or non-numeric where a number is expected — so CI catches
+a bench silently dropping a field before a perf-trajectory consumer does.
+"""
+
+import json
+import sys
+
+# bench name -> required top-level keys, result-row location, required row
+# keys (split into numeric — which must hold finite numbers — and other).
+SCHEMAS = {
+    "perf_hotpath": {
+        "top": ["bench", "reps", "unit", "results"],
+        # results is a dict of named shots
+        "rows": lambda doc: list(doc["results"].values()),
+        "numeric_keys": ["put_blocking_ns", "get_blocking_ns", "put_dtit_ns"],
+        "other_keys": ["requests", "segment_cache"],
+    },
+    "perf_overlap": {
+        "top": ["bench", "reps", "put_bytes", "puts_per_rep", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "async_bytes",
+            "overlap_bytes",
+            "overlap_efficiency",
+            "flush_ns",
+            "coll_wait_ns",
+            "engine_ticks",
+            "tick_ns_charged",
+        ],
+        "other_keys": ["mode", "placement"],
+    },
+    "perf_dash": {
+        "top": ["bench", "units", "reps", "elem_bytes", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "n",
+            "coalesced_runs",
+            "redist_bytes",
+            "overlap_bytes",
+            "copy_ns",
+            "bandwidth_mb_s",
+            "ops_per_element",
+        ],
+        "other_keys": ["pattern"],
+    },
+}
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_json: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_file(path: str) -> None:
+    try:
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except FileNotFoundError:
+        fail(f"{path}: file not found (did the bench run?)")
+    except json.JSONDecodeError as exc:
+        fail(f"{path}: invalid JSON: {exc}")
+
+    if not isinstance(doc, dict):
+        fail(f"{path}: top-level JSON value must be an object, got {type(doc).__name__}")
+
+    bench = doc.get("bench")
+    schema = SCHEMAS.get(bench)
+    if schema is None:
+        fail(f"{path}: unknown or missing bench discriminator {bench!r}")
+
+    for key in schema["top"]:
+        if key not in doc:
+            fail(f"{path}: missing top-level key {key!r}")
+
+    rows = schema["rows"](doc)
+    if not rows:
+        fail(f"{path}: empty results")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            fail(f"{path}: results[{i}] is not an object")
+        for key in schema["numeric_keys"]:
+            if key not in row:
+                fail(f"{path}: results[{i}] missing key {key!r}")
+            value = row[key]
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                fail(f"{path}: results[{i}].{key} must be a number, got {value!r}")
+            if value != value or value in (float("inf"), float("-inf")):
+                fail(f"{path}: results[{i}].{key} is not finite")
+        for key in schema["other_keys"]:
+            if key not in row:
+                fail(f"{path}: results[{i}] missing key {key!r}")
+    print(f"check_bench_json: OK: {path} ({bench}, {len(rows)} result rows)")
+
+
+def main() -> None:
+    paths = sys.argv[1:]
+    if not paths:
+        fail("no files given — pass one or more BENCH_*.json paths")
+    for path in paths:
+        check_file(path)
+
+
+if __name__ == "__main__":
+    main()
