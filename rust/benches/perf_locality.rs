@@ -1,0 +1,282 @@
+//! §Locality — flat vs hierarchical collectives, and the intra-node
+//! zero-copy engine fast path.
+//!
+//! Three measured scenarios, written to `BENCH_locality.json`:
+//!
+//! - **allreduce** — the same 8 KiB `u64` reduction with
+//!   `DartConfig::hierarchical_collectives` off (flat) and on (two-level),
+//!   on the paper's two placements: single-node (all units share a node —
+//!   the hierarchical path falls back to flat, so the two modes must tie)
+//!   and multi-node (12 units round-robin over 3 nodes — every binomial
+//!   hop of the flat tree crosses the interconnect, while the two-level
+//!   path crosses it once per node). Results are asserted bit-identical
+//!   between modes.
+//! - **histogram** — the whole `apps::histogram` mini-app under the same
+//!   mode × placement grid: the app-level win of switching its combining
+//!   allreduce to the hierarchical path.
+//! - **fastpath** — a batch of `put_async` + `flush_all` with
+//!   shared-memory windows on, `DartConfig::locality_fastpath` on vs off,
+//!   intra-node vs inter-node: on the fast path the puts complete on
+//!   issue and the flush has nothing to drain
+//!   (`Metrics::locality_fastpath_ops` counts them); inter-node traffic
+//!   is unaffected by the knob.
+
+use dart::apps::histogram::{self, HistogramConfig};
+use dart::bench_util::{fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::mpisim::MpiOp;
+use dart::simnet::{CoreCoord, PinPolicy};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured configuration (uniform row schema for the JSON).
+#[derive(Clone, Default)]
+struct Shot {
+    scenario: &'static str,
+    placement: &'static str,
+    mode: &'static str,
+    /// Units in this scenario's launch (12 for the collective scenarios,
+    /// 4 for the fastpath pair).
+    units: u64,
+    /// Timed repetitions behind this row's median (the histogram rows run
+    /// fewer reps than the top-level count — the app is a whole run).
+    reps: u64,
+    /// Median wall-clock (= modelled time under the cost model) in ns.
+    ns: f64,
+    /// `Metrics::hier_coll_intra_ops` on unit 0 over the whole run.
+    intra_ops: u64,
+    /// `Metrics::hier_coll_inter_ops` on unit 0 over the whole run.
+    inter_ops: u64,
+    /// `Metrics::locality_fastpath_ops` on unit 0 over the whole run.
+    fastpath_ops: u64,
+    /// Scenario-defined correctness checksum (must match across modes).
+    checksum: u64,
+}
+
+/// 12 units on a 3-node Hermit cluster; `multi` selects round-robin over
+/// the nodes (every power-of-two rank distance crosses nodes) vs all
+/// units block-placed on node 0.
+fn coll_cfg(multi: bool, hier: bool) -> DartConfig {
+    let pin = if multi { PinPolicy::ScatterNode } else { PinPolicy::Block };
+    DartConfig::hermit(12, 3)
+        .with_pin(pin)
+        .with_pools(1 << 16, 1 << 20)
+        .with_hierarchical_collectives(hier)
+}
+
+fn measure_allreduce(placement: &'static str, multi: bool, hier: bool, reps: usize) -> Shot {
+    const N: usize = 1024; // 8 KiB of u64 — the E1 regime
+    let out = Mutex::new(Shot::default());
+    run(coll_cfg(multi, hier), |env| {
+        let mine = vec![env.myid() as u64 + 1; N];
+        let mut red = vec![0u64; N];
+        // Warm the split cache (sub-team creation) outside the timing.
+        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+        let mut s = Samples::new();
+        for _ in 0..reps {
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let t = Instant::now();
+            env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+            s.push(t.elapsed().as_nanos() as f64);
+        }
+        if env.myid() == 0 {
+            *out.lock().unwrap() = Shot {
+                scenario: "allreduce",
+                placement,
+                mode: if hier { "hier" } else { "flat" },
+                units: 12,
+                reps: reps as u64,
+                ns: s.median(),
+                intra_ops: env.metrics.hier_coll_intra_ops.get(),
+                inter_ops: env.metrics.hier_coll_inter_ops.get(),
+                fastpath_ops: 0,
+                checksum: red[0].wrapping_mul(0x9E37_79B9).wrapping_add(red[N - 1]),
+            };
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn measure_histogram(placement: &'static str, multi: bool, hier: bool, reps: usize) -> Shot {
+    let out = Mutex::new(Shot::default());
+    run(coll_cfg(multi, hier), |env| {
+        let cfg = HistogramConfig::quick(512, 4000);
+        let mut s = Samples::new();
+        let mut checksum = 0u64;
+        for _ in 0..reps {
+            let t = Instant::now();
+            let report = histogram::run_distributed(env, &cfg).unwrap();
+            s.push(t.elapsed().as_nanos() as f64);
+            checksum = report.checksum ^ report.total ^ report.modal_bin.1;
+        }
+        if env.myid() == 0 {
+            *out.lock().unwrap() = Shot {
+                scenario: "histogram",
+                placement,
+                mode: if hier { "hier" } else { "flat" },
+                units: 12,
+                reps: reps as u64,
+                ns: s.median(),
+                intra_ops: env.metrics.hier_coll_intra_ops.get(),
+                inter_ops: env.metrics.hier_coll_inter_ops.get(),
+                fastpath_ops: 0,
+                checksum,
+            };
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn measure_fastpath(placement: &'static str, pin: PinPolicy, fastpath: bool, reps: usize) -> Shot {
+    const PUTS: usize = 32;
+    const BYTES: usize = 1024;
+    let out = Mutex::new(Shot::default());
+    let cfg = DartConfig::hermit(4, 2)
+        .with_pin(pin)
+        .with_pools(1 << 16, 1 << 20)
+        .with_shmem_windows(true)
+        .with_locality_fastpath(fastpath);
+    run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, (PUTS * BYTES) as u64).unwrap();
+        let src = vec![0x5Au8; BYTES];
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut s = Samples::new();
+        for _ in 0..reps {
+            if env.myid() == 0 {
+                // Target is always unit 2; the placement decides whether
+                // the pair shares a node (see the placements in main).
+                let t = Instant::now();
+                for i in 0..PUTS {
+                    env.put_async(g.with_unit(2).add((i * BYTES) as u64), &src).unwrap();
+                }
+                env.flush_all(g).unwrap();
+                s.push(t.elapsed().as_nanos() as f64);
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+        // Correctness: the target observes the payload either way.
+        if env.myid() == 2 {
+            let mut got = vec![0u8; BYTES];
+            env.local_read(g.with_unit(2), &mut got).unwrap();
+            assert_eq!(got, src, "fast path delivered wrong bytes");
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            let sum: u64 = src.iter().map(|&b| b as u64).sum();
+            *out.lock().unwrap() = Shot {
+                scenario: "fastpath",
+                placement,
+                mode: if fastpath { "on" } else { "off" },
+                units: 4,
+                reps: reps as u64,
+                ns: s.median(),
+                intra_ops: 0,
+                inter_ops: 0,
+                fastpath_ops: env.metrics.locality_fastpath_ops.get(),
+                checksum: sum,
+            };
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"scenario\":\"{}\",\"placement\":\"{}\",\"mode\":\"{}\",\"units\":{},\"reps\":{},\
+         \"ns\":{:.1},\"intra_ops\":{},\"inter_ops\":{},\"fastpath_ops\":{},\"checksum\":{}}}",
+        s.scenario, s.placement, s.mode, s.units, s.reps, s.ns, s.intra_ops, s.inter_ops,
+        s.fastpath_ops, s.checksum
+    )
+}
+
+fn main() {
+    let reps = if quick_mode() { 8 } else { 40 };
+    println!("==== §Locality — hierarchical collectives + intra-node fast path ====");
+    let mut shots = Vec::new();
+    for (placement, multi) in [("single-node", false), ("multi-node", true)] {
+        for hier in [false, true] {
+            shots.push(measure_allreduce(placement, multi, hier, reps));
+            shots.push(measure_histogram(placement, multi, hier, reps.min(12)));
+        }
+    }
+    // The measured pair is unit 0 → unit 2. ScatterNode on 2 nodes puts
+    // both on node 0 (intra-node); the Custom placement pins units 2,3 to
+    // node 1 so the same pair crosses the interconnect.
+    let inter_pin = PinPolicy::Custom(vec![
+        CoreCoord { node: 0, numa: 0, core: 0 },
+        CoreCoord { node: 0, numa: 0, core: 1 },
+        CoreCoord { node: 1, numa: 0, core: 0 },
+        CoreCoord { node: 1, numa: 0, core: 1 },
+    ]);
+    for (placement, pin) in [("intra-node", PinPolicy::ScatterNode), ("inter-node", inter_pin)] {
+        shots.push(measure_fastpath(placement, pin.clone(), true, reps));
+        shots.push(measure_fastpath(placement, pin, false, reps));
+    }
+
+    println!(
+        "\n{:>10} {:>12} {:>6} {:>12} {:>10} {:>10} {:>10}",
+        "scenario", "placement", "mode", "median", "intra", "inter", "fastpath"
+    );
+    for s in &shots {
+        println!(
+            "{:>10} {:>12} {:>6} {:>12} {:>10} {:>10} {:>10}",
+            s.scenario,
+            s.placement,
+            s.mode,
+            fmt_ns(s.ns),
+            s.intra_ops,
+            s.inter_ops,
+            s.fastpath_ops
+        );
+    }
+
+    // Correctness gates (deterministic — safe to assert in CI):
+    // hierarchical results must be bit-identical to flat, per scenario and
+    // placement.
+    for scenario in ["allreduce", "histogram"] {
+        for placement in ["single-node", "multi-node"] {
+            let of = |mode: &str| {
+                shots
+                    .iter()
+                    .find(|s| s.scenario == scenario && s.placement == placement && s.mode == mode)
+                    .map(|s| s.checksum)
+                    .unwrap()
+            };
+            assert_eq!(
+                of("flat"),
+                of("hier"),
+                "{scenario}/{placement}: hierarchical result differs from flat"
+            );
+        }
+    }
+
+    let flat = shots
+        .iter()
+        .find(|s| s.scenario == "allreduce" && s.placement == "multi-node" && s.mode == "flat")
+        .unwrap();
+    let hier = shots
+        .iter()
+        .find(|s| s.scenario == "allreduce" && s.placement == "multi-node" && s.mode == "hier")
+        .unwrap();
+    println!(
+        "\nmulti-node allreduce: flat {} vs hier {} → {:.2}× (expected > 1: one \
+         interconnect crossing per node instead of one per tree edge)",
+        fmt_ns(flat.ns),
+        fmt_ns(hier.ns),
+        flat.ns / hier.ns
+    );
+
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_locality\",\"units\":12,\"reps\":{reps},\"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_locality.json", format!("{json}\n")).expect("write BENCH_locality.json");
+    println!("\nwrote BENCH_locality.json");
+}

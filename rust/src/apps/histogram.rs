@@ -12,6 +12,14 @@
 //! and zero lock acquisitions, versus `bins × units` remote atomic
 //! `accumulate`s for the naive PGAS formulation.
 //!
+//! On multi-node launches with
+//! [`crate::dart::DartConfig::hierarchical_collectives`] enabled, that
+//! allreduce is the **hierarchical two-level** one: node partials combine
+//! intra-node first and cross the interconnect once per node, not once
+//! per unit — the app-level win the `perf_locality` bench measures
+//! (counts are `u64`, so the hierarchical result is bit-identical to the
+//! flat one).
+//!
 //! The final counts are verified with the owner-computes algorithms:
 //! [`crate::dash::algorithms::sum`] must equal the total sample count and
 //! [`crate::dash::algorithms::max_element`] picks the modal bin, both
@@ -87,6 +95,9 @@ pub fn run_distributed(env: &DartEnv, cfg: &HistogramConfig) -> DartResult<Histo
         partial[bin_of(rng.next_u64(), cfg.bins)] += 1;
     }
     let mut reduced = vec![0u64; cfg.bins];
+    // Rides the hierarchical two-level path on multi-node launches with
+    // `DartConfig::hierarchical_collectives` on (one interconnect crossing
+    // per node); bit-identical either way for u64 sums.
     env.allreduce(team, &partial, &mut reduced, crate::mpisim::MpiOp::Sum)?;
 
     // --- owner-computes publication: each unit writes only its own bins.

@@ -19,9 +19,26 @@
 //!
 //! Roots are given as *team-relative* ranks (like MPI); use
 //! [`crate::dart::DartEnv::team_unit_g2l`] to translate an absolute unit.
+//!
+//! ## Hierarchical (two-level) collectives
+//!
+//! With [`crate::dart::DartConfig::hierarchical_collectives`] on,
+//! [`DartEnv::allreduce`], [`DartEnv::bcast`], [`DartEnv::barrier`] and
+//! [`DartEnv::allgather`] decompose along the machine hierarchy exposed by
+//! [`crate::dart::locality`]: an **intra-node phase** over the node-local
+//! teams, a **cross-node exchange** over the leader team, and an
+//! **intra-node fan-out** — so the interconnect is crossed once per node
+//! instead of once per unit (Zhou & Gracia's locality-awareness follow-up,
+//! arXiv:1603.01536). Teams spanning a single node fall back to the flat
+//! paths unchanged, as do the remaining collectives (scatter/gather/
+//! reduce/alltoall) and the whole nonblocking family. Each executed phase
+//! is counted in [`super::Metrics::hier_coll_intra_ops`] /
+//! [`super::Metrics::hier_coll_inter_ops`], so tests can assert the
+//! decomposition rather than trust it.
 
 use super::gptr::TeamId;
-use super::{DartEnv, DartResult};
+use super::locality::{LocalityScope, LocalitySplit};
+use super::{DartEnv, DartErr, DartResult};
 use crate::mpisim::{as_bytes, as_bytes_mut, CollRequest, HasMpiType, MpiOp, Pod};
 
 /// Completion handle of a nonblocking DART collective (the collective
@@ -42,16 +59,26 @@ impl DartCollHandle<'_> {
 }
 
 impl DartEnv {
-    /// `dart_barrier(team)`.
+    /// `dart_barrier(team)`. Two-level when
+    /// [`crate::dart::DartConfig::hierarchical_collectives`] is on and the
+    /// team spans multiple nodes.
     pub fn barrier(&self, team: TeamId) -> DartResult<()> {
+        if let Some(split) = self.hier_split(team)? {
+            return self.barrier_hier(split);
+        }
         let comm = self.team_comm(team)?;
         self.metrics.collectives.bump();
         Ok(comm.barrier()?)
     }
 
     /// `dart_bcast(buf, team, root)`: `buf` is input at `root`
-    /// (team-relative), output elsewhere.
+    /// (team-relative), output elsewhere. Two-level when
+    /// [`crate::dart::DartConfig::hierarchical_collectives`] is on and the
+    /// team spans multiple nodes.
     pub fn bcast(&self, team: TeamId, buf: &mut [u8], root: usize) -> DartResult<()> {
+        if let Some(split) = self.hier_split(team)? {
+            return self.bcast_hier(team, split, buf, root);
+        }
         let comm = self.team_comm(team)?;
         self.metrics.collectives.bump();
         Ok(comm.bcast(buf, root)?)
@@ -73,8 +100,13 @@ impl DartEnv {
         Ok(comm.gather(send, recv, root)?)
     }
 
-    /// `dart_allgather`.
+    /// `dart_allgather`. Two-level when
+    /// [`crate::dart::DartConfig::hierarchical_collectives`] is on and the
+    /// team spans multiple nodes.
     pub fn allgather(&self, team: TeamId, send: &[u8], recv: &mut [u8]) -> DartResult<()> {
+        if let Some(split) = self.hier_split(team)? {
+            return self.allgather_hier(team, split, send, recv);
+        }
         let comm = self.team_comm(team)?;
         self.metrics.collectives.bump();
         Ok(comm.allgather(send, recv)?)
@@ -96,7 +128,10 @@ impl DartEnv {
         Ok(comm.reduce(as_bytes(send), recv_bytes, op, T::MPI_TYPE, root)?)
     }
 
-    /// `dart_allreduce` (typed).
+    /// `dart_allreduce` (typed). Two-level when
+    /// [`crate::dart::DartConfig::hierarchical_collectives`] is on and the
+    /// team spans multiple nodes: intra-node reduce to the node leader,
+    /// leader allreduce across nodes, intra-node fan-out.
     pub fn allreduce<T: HasMpiType>(
         &self,
         team: TeamId,
@@ -104,6 +139,9 @@ impl DartEnv {
         recv: &mut [T],
         op: MpiOp,
     ) -> DartResult<()> {
+        if let Some(split) = self.hier_split(team)? {
+            return self.allreduce_hier(split, send, recv, op);
+        }
         let comm = self.team_comm(team)?;
         self.metrics.collectives.bump();
         Ok(comm.allreduce(as_bytes(send), as_bytes_mut(recv), op, T::MPI_TYPE)?)
@@ -119,6 +157,191 @@ impl DartEnv {
     /// Typed bcast convenience.
     pub fn bcast_typed<T: Pod>(&self, team: TeamId, buf: &mut [T], root: usize) -> DartResult<()> {
         self.bcast(team, as_bytes_mut(buf), root)
+    }
+
+    // ------------------------------------------------------------------
+    // Hierarchical (two-level) decompositions
+    // ------------------------------------------------------------------
+
+    /// Should `team`'s collectives take the two-level path? Returns the
+    /// (cached, or freshly created) node-scope split when the feature is
+    /// on *and* the team spans multiple nodes; `None` means flat. The
+    /// decision is computed from launch-constant state (config +
+    /// placement + team membership), so every member reaches the same
+    /// verdict — a collective-consistency requirement.
+    fn hier_split(&self, team: TeamId) -> DartResult<Option<LocalitySplit>> {
+        if !self.config().hierarchical_collectives {
+            return Ok(None);
+        }
+        if let Some(s) = self.locality_cache.borrow().get(&(team, LocalityScope::Node)) {
+            return Ok(if s.domains > 1 { Some(*s) } else { None });
+        }
+        if self.hier_flat_teams.borrow().contains(&team) {
+            return Ok(None);
+        }
+        // One-time span probe before committing to sub-team creation:
+        // single-node teams keep the flat path, create nothing, and cache
+        // the verdict (placement and membership are launch-constant).
+        if self.team_node_span(team)? < 2 {
+            self.hier_flat_teams.borrow_mut().insert(team);
+            return Ok(None);
+        }
+        Ok(Some(self.team_split_locality(team, LocalityScope::Node)?))
+    }
+
+    /// Two-level barrier: everyone arrives within the node, the leaders
+    /// agree across nodes, the node releases.
+    fn barrier_hier(&self, split: LocalitySplit) -> DartResult<()> {
+        self.metrics.collectives.bump();
+        let local = self.team_comm(split.local)?;
+        local.barrier()?;
+        self.metrics.hier_coll_intra_ops.bump();
+        if let Some(lt) = split.leaders {
+            self.team_comm(lt)?.barrier()?;
+            self.metrics.hier_coll_inter_ops.bump();
+        }
+        local.barrier()?;
+        self.metrics.hier_coll_intra_ops.bump();
+        Ok(())
+    }
+
+    /// Two-level bcast: fan out within the root's node, cross nodes once
+    /// via the leader team, fan out within every other node.
+    fn bcast_hier(
+        &self,
+        team: TeamId,
+        split: LocalitySplit,
+        buf: &mut [u8],
+        root: usize,
+    ) -> DartResult<()> {
+        self.metrics.collectives.bump();
+        let root_abs = self.team_unit_l2g(team, root)?;
+        let root_node = self.placement().node_of(root_abs as usize);
+        let my_node = self.placement().node_of(self.myid() as usize);
+        let local = self.team_comm(split.local)?;
+        // Phase 1 (root's node only): the root fans out within its node,
+        // so its leader holds the payload for the cross-node exchange.
+        if my_node == root_node {
+            let lroot = self.team_unit_g2l(split.local, root_abs)?;
+            local.bcast(buf, lroot)?;
+            self.metrics.hier_coll_intra_ops.bump();
+        }
+        // Phase 2: leader exchange, rooted at the root node's leader.
+        if let Some(lt) = split.leaders {
+            let lcomm = self.team_comm(lt)?;
+            let lgroup = self.team_get_group(lt)?;
+            let root_leader = lgroup
+                .members()
+                .iter()
+                .copied()
+                .find(|&u| self.placement().node_of(u as usize) == root_node)
+                .ok_or_else(|| DartErr::Invalid("no leader on the bcast root's node".into()))?;
+            let lroot = self.team_unit_g2l(lt, root_leader)?;
+            lcomm.bcast(buf, lroot)?;
+            self.metrics.hier_coll_inter_ops.bump();
+        }
+        // Phase 3 (every other node): its leader — local rank 0, the
+        // node's lowest member — fans the payload out.
+        if my_node != root_node {
+            local.bcast(buf, 0)?;
+            self.metrics.hier_coll_intra_ops.bump();
+        }
+        Ok(())
+    }
+
+    /// Two-level allreduce: intra-node reduce to the node leader (local
+    /// rank 0), leader allreduce of the node partials, intra-node fan-out.
+    fn allreduce_hier<T: HasMpiType>(
+        &self,
+        split: LocalitySplit,
+        send: &[T],
+        recv: &mut [T],
+        op: MpiOp,
+    ) -> DartResult<()> {
+        self.metrics.collectives.bump();
+        let local = self.team_comm(split.local)?;
+        let recv_bytes: &mut [u8] = if local.rank() == 0 { as_bytes_mut(recv) } else { &mut [] };
+        local.reduce(as_bytes(send), recv_bytes, op, T::MPI_TYPE, 0)?;
+        self.metrics.hier_coll_intra_ops.bump();
+        if let Some(lt) = split.leaders {
+            let lcomm = self.team_comm(lt)?;
+            let partial = as_bytes(&*recv).to_vec();
+            lcomm.allreduce(&partial, as_bytes_mut(recv), op, T::MPI_TYPE)?;
+            self.metrics.hier_coll_inter_ops.bump();
+        }
+        local.bcast(as_bytes_mut(recv), 0)?;
+        self.metrics.hier_coll_intra_ops.bump();
+        Ok(())
+    }
+
+    /// Two-level allgather: intra-node gather to the leader, leader
+    /// exchange of (padded) per-node blocks, team-rank-order reassembly at
+    /// the leaders, intra-node fan-out. Handles uneven units-per-node via
+    /// padding to the largest node's contribution.
+    fn allgather_hier(
+        &self,
+        team: TeamId,
+        split: LocalitySplit,
+        send: &[u8],
+        recv: &mut [u8],
+    ) -> DartResult<()> {
+        self.metrics.collectives.bump();
+        let chunk = send.len();
+        let members = self.team_get_group(team)?.members().to_vec();
+        let n = members.len();
+        if recv.len() != n * chunk {
+            return Err(DartErr::Invalid(format!(
+                "allgather: recv is {} bytes, expected {} members × {} bytes",
+                recv.len(), n, chunk
+            )));
+        }
+        // Node of every team rank, and the nodes in order of first
+        // appearance. Members are sorted by unit id, so first-appearance
+        // order == ascending leader-unit order == leader-team rank order.
+        let node_of: Vec<usize> =
+            members.iter().map(|&u| self.placement().node_of(u as usize)).collect();
+        let mut node_order: Vec<usize> = Vec::new();
+        for &d in &node_of {
+            if !node_order.contains(&d) {
+                node_order.push(d);
+            }
+        }
+        let mut per_node = vec![0usize; node_order.len()];
+        for &d in &node_of {
+            let di = node_order.iter().position(|&x| x == d).unwrap();
+            per_node[di] += 1;
+        }
+        let cap = per_node.iter().copied().max().unwrap_or(1);
+
+        // Phase 1: intra-node gather to the leader (local rank 0); local
+        // team order == ascending team rank within the node.
+        let local = self.team_comm(split.local)?;
+        let mut node_buf = vec![0u8; if local.rank() == 0 { local.size() * chunk } else { 0 }];
+        local.gather(send, &mut node_buf, 0)?;
+        self.metrics.hier_coll_intra_ops.bump();
+
+        // Phase 2 (leaders): exchange padded per-node blocks, then rebuild
+        // the team-rank-ordered result.
+        if let Some(lt) = split.leaders {
+            let lcomm = self.team_comm(lt)?;
+            let mut padded = vec![0u8; cap * chunk];
+            padded[..node_buf.len()].copy_from_slice(&node_buf);
+            let mut all_nodes = vec![0u8; node_order.len() * cap * chunk];
+            lcomm.allgather(&padded, &mut all_nodes)?;
+            self.metrics.hier_coll_inter_ops.bump();
+            let mut within = vec![0usize; node_order.len()];
+            for r in 0..n {
+                let di = node_order.iter().position(|&x| x == node_of[r]).unwrap();
+                let src = (di * cap + within[di]) * chunk;
+                within[di] += 1;
+                recv[r * chunk..(r + 1) * chunk].copy_from_slice(&all_nodes[src..src + chunk]);
+            }
+        }
+
+        // Phase 3: intra-node fan-out of the assembled result.
+        local.bcast(recv, 0)?;
+        self.metrics.hier_coll_intra_ops.bump();
+        Ok(())
     }
 
     // ------------------------------------------------------------------

@@ -48,6 +48,24 @@ pub struct DartConfig {
     /// `(team, unit, allocation)` instead of recomputed on every one-sided
     /// operation. On by default; disable for the hot-path ablation.
     pub segment_cache: bool,
+    /// Locality-aware **two-level collectives** (Zhou & Gracia's
+    /// locality-awareness follow-up, arXiv:1603.01536): `allreduce` /
+    /// `bcast` / `barrier` / `allgather` decompose into an intra-node
+    /// phase over node-local teams, a cross-node exchange over the leader
+    /// team, and an intra-node fan-out — so a team collective crosses the
+    /// interconnect once per node instead of once per unit. Teams that
+    /// span a single node fall back to the flat paths. The decomposition
+    /// is observable through [`crate::dart::Metrics::hier_coll_intra_ops`]
+    /// / [`crate::dart::Metrics::hier_coll_inter_ops`].
+    pub hierarchical_collectives: bool,
+    /// The engine's **intra-node zero-copy fast path** (arXiv:1507.04799):
+    /// when [`DartConfig::shmem_windows`] is on and the target unit shares
+    /// the origin's node, `put_async`/`get_async` complete by direct
+    /// load/store instead of entering the deferred-completion queue —
+    /// nothing to register with the progress engine, nothing for a flush
+    /// to drain. On by default (it only activates under shmem windows);
+    /// disable for the `perf_locality` ablation.
+    pub locality_fastpath: bool,
     /// Who drives asynchronous communication progress (the follow-up
     /// paper's design axis): `Caller` (progress only inside completion
     /// calls — the MPI default), `Thread` (a dedicated background progress
@@ -75,6 +93,8 @@ impl DartConfig {
             shmem_windows: false,
             balanced_lock_tails: false,
             segment_cache: true,
+            hierarchical_collectives: false,
+            locality_fastpath: true,
             progress_mode: ProgressMode::Caller,
         }
     }
@@ -136,6 +156,21 @@ impl DartConfig {
     #[must_use]
     pub fn with_progress_mode(mut self, mode: ProgressMode) -> Self {
         self.progress_mode = mode;
+        self
+    }
+
+    /// Enable locality-aware two-level collectives.
+    #[must_use]
+    pub fn with_hierarchical_collectives(mut self, on: bool) -> Self {
+        self.hierarchical_collectives = on;
+        self
+    }
+
+    /// Toggle the engine's intra-node zero-copy fast path (only active
+    /// when [`DartConfig::shmem_windows`] is also on).
+    #[must_use]
+    pub fn with_locality_fastpath(mut self, on: bool) -> Self {
+        self.locality_fastpath = on;
         self
     }
 }

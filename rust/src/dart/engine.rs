@@ -9,7 +9,7 @@
 //! and memoizes it (cf. arXiv:1609.09333, which makes the same argument
 //! for caching locality/segment information at the runtime layer).
 //!
-//! Two pieces live here:
+//! Three pieces live here:
 //!
 //! - `SegmentCache` — a small per-unit cache of `Resolution` records
 //!   (`(team, unit, allocation) → (window, target rank, extent)`).
@@ -27,6 +27,16 @@
 //!   outstanding per target / per segment in one call. This decouples
 //!   operation issue from completion so transfers batch and overlap
 //!   (cf. arXiv:1609.08574).
+//!
+//! - **The intra-node zero-copy fast path** — with shared-memory windows
+//!   on ([`crate::dart::DartConfig::shmem_windows`]) and a same-node
+//!   target, `put_async`/`get_async` complete by direct load/store
+//!   (arXiv:1507.04799): no deferred-op queue entry, no progress-engine
+//!   registration, nothing for a flush to wait on. Counted in
+//!   [`super::Metrics::locality_fastpath_ops`]; togglable via
+//!   [`crate::dart::DartConfig::locality_fastpath`]. The strided vector
+//!   variants deliberately stay on the deferred path — their value is the
+//!   single-message packing, which the cost model books per message.
 //!
 //! Deferred operations are additionally registered with the substrate's
 //! **asynchronous progress engine** ([`crate::mpisim::progress`]): in
@@ -233,25 +243,60 @@ impl DartEnv {
     /// puts pays one completion call per target instead of one per op —
     /// or, in `Thread`/`Polling` progress modes, to the engine retiring it
     /// in the background.
+    ///
+    /// **Locality fast path** (arXiv:1507.04799): when the segment lives
+    /// in a shared-memory window ([`crate::dart::DartConfig::shmem_windows`])
+    /// and the target unit shares this unit's node, the store itself IS
+    /// the transfer — the operation completes here, enters neither the
+    /// pending list nor the progress engine, and is counted in
+    /// [`super::Metrics::locality_fastpath_ops`]. Flush semantics are
+    /// preserved trivially (there is nothing left to complete), and no
+    /// overlap credit is claimed (nothing was deferred). Disable with
+    /// [`crate::dart::DartConfig::with_locality_fastpath`]`(false)` for
+    /// the ablation.
     pub fn put_async(&self, gptr: GlobalPtr, src: &[u8]) -> DartResult<()> {
         self.poll_if_polling();
-        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
-            Ok((win.put(src, target, disp as usize)?, win.id(), target))
+        let fastpath = self.config().locality_fastpath;
+        let issued = self.with_win(gptr, |win, target, disp| {
+            if fastpath && win.is_shmem_local(target) {
+                win.store_direct(src, target, disp as usize)?;
+                Ok(None)
+            } else {
+                Ok(Some((win.put(src, target, disp as usize)?, win.id(), target)))
+            }
         })?;
-        self.register_async(src.len() as u64, at, win_id, target);
+        match issued {
+            Some((at, win_id, target)) => {
+                self.register_async(src.len() as u64, at, win_id, target)
+            }
+            None => self.metrics.locality_fastpath_ops.bump(),
+        }
         self.metrics.puts.bump();
         self.metrics.bytes.add(src.len() as u64);
         Ok(())
     }
 
     /// `dart_get` in deferred-completion mode: `dst` may not be read until
-    /// a flush covering the target completes.
+    /// a flush covering the target completes — except on the locality fast
+    /// path (shmem window + same-node target, see [`DartEnv::put_async`]),
+    /// where the load completes in place and `dst` is valid on return.
     pub fn get_async(&self, gptr: GlobalPtr, dst: &mut [u8]) -> DartResult<()> {
         self.poll_if_polling();
-        let (at, win_id, target) = self.with_win(gptr, |win, target, disp| {
-            Ok((win.get(dst, target, disp as usize)?, win.id(), target))
+        let fastpath = self.config().locality_fastpath;
+        let issued = self.with_win(gptr, |win, target, disp| {
+            if fastpath && win.is_shmem_local(target) {
+                win.load_direct(dst, target, disp as usize)?;
+                Ok(None)
+            } else {
+                Ok(Some((win.get(dst, target, disp as usize)?, win.id(), target)))
+            }
         })?;
-        self.register_async(dst.len() as u64, at, win_id, target);
+        match issued {
+            Some((at, win_id, target)) => {
+                self.register_async(dst.len() as u64, at, win_id, target)
+            }
+            None => self.metrics.locality_fastpath_ops.bump(),
+        }
         self.metrics.gets.bump();
         self.metrics.bytes.add(dst.len() as u64);
         Ok(())

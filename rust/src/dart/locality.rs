@@ -1,0 +1,226 @@
+//! The locality API: who shares my node, and teams that follow the
+//! machine hierarchy.
+//!
+//! The DART-MPI evaluation (§V) shows intra-node and inter-node transfers
+//! living in different performance regimes, and the two follow-up papers
+//! promote that observation into a runtime design principle:
+//!
+//! - *"Leveraging MPI-3 Shared-Memory Extensions for Efficient PGAS
+//!   Runtime Systems"* (Zhou et al., arXiv:1507.04799) — same-node
+//!   transfers should be zero-copy load/store through shared-memory
+//!   windows (the engine's fast path, [`crate::dart::engine`]);
+//! - *"Towards performance portability through locality-awareness"*
+//!   (Zhou & Gracia, arXiv:1603.01536) — the runtime should *expose* the
+//!   node/NUMA hierarchy so applications and the runtime itself can route
+//!   communication per locality tier.
+//!
+//! This module is that exposure for DART:
+//!
+//! - [`DartEnv::unit_locality`] — any unit's [`DomainCoord`] (node, NUMA
+//!   domain, core), derived from the modelled
+//!   [`crate::simnet::Placement`]; [`DartEnv::same_node`] answers the
+//!   question the engine's fast path asks.
+//! - [`DartEnv::team_split_locality`] — the `MPI_Comm_split_type`
+//!   analogue: split a team into **domain-local teams** (one per node, or
+//!   per NUMA domain, [`LocalityScope`]) plus a **cross-domain leader
+//!   team** holding each domain's lowest-id member. The resulting
+//!   [`LocalitySplit`] is memoized per `(team, scope)` on every member
+//!   and torn down/invalidated with [`DartEnv::team_destroy`], so
+//!   repeated splits — e.g. one per hierarchical collective
+//!   ([`crate::dart::collectives`]) — cost nothing after the first.
+//!
+//! `team_split_locality` is **collective over the team** (it creates
+//! sub-teams via [`DartEnv::team_create`]); every member must call it
+//! with the same scope, and every member receives a consistent view: the
+//! id of *its* domain-local team, and the leader team id only on leaders
+//! (everyone else sees `None`, mirroring `DART_TEAM_NULL`).
+
+use super::gptr::{TeamId, UnitId};
+use super::{DartEnv, DartErr, DartGroup, DartResult};
+use std::fmt;
+
+/// Locality coordinate of one unit in the modelled machine hierarchy:
+/// which node, which NUMA domain within the node, which core within the
+/// domain (the three tiers of the paper's Hermit testbed, Fig. 7).
+///
+/// This *is* the simnet placement coordinate — the locality API exposes
+/// the same `(node, numa, core)` triple the cost model routes by, under
+/// the name the DART surface uses for it (one coordinate type, not two
+/// to convert between).
+pub type DomainCoord = crate::simnet::CoreCoord;
+
+/// Which level of the hierarchy a locality split groups by — the DART
+/// analogue of `MPI_Comm_split_type`'s `split_type` argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LocalityScope {
+    /// One domain per **node**: members sharing a node land in the same
+    /// local team (the scope shared-memory windows and the hierarchical
+    /// collectives care about — `MPI_COMM_TYPE_SHARED`).
+    Node,
+    /// One domain per **(node, NUMA domain)** pair: the finer split for
+    /// NUMA-aware placement decisions.
+    Numa,
+}
+
+impl LocalityScope {
+    /// Both scopes, in coarse-to-fine order (used by the split-cache
+    /// teardown in [`DartEnv::team_destroy`]).
+    pub const ALL: [LocalityScope; 2] = [LocalityScope::Node, LocalityScope::Numa];
+
+    /// The domain key of a coordinate under this scope.
+    #[inline]
+    pub(crate) fn key(&self, c: DomainCoord) -> (usize, usize) {
+        match self {
+            LocalityScope::Node => (c.node, 0),
+            LocalityScope::Numa => (c.node, c.numa),
+        }
+    }
+
+    /// Short label for bench/table output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LocalityScope::Node => "node",
+            LocalityScope::Numa => "numa",
+        }
+    }
+}
+
+impl fmt::Display for LocalityScope {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Result of a [`DartEnv::team_split_locality`] call, cheap to copy and
+/// identical in shape on every member of the parent team.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LocalitySplit {
+    /// The team of all parent members sharing *my* locality domain
+    /// (always valid — every member belongs to exactly one domain).
+    pub local: TeamId,
+    /// The cross-domain leader team (one member per domain: the domain's
+    /// lowest absolute unit id). `Some` only on leaders — everyone else
+    /// gets `None`, like a `DART_TEAM_NULL` from `team_create`.
+    pub leaders: Option<TeamId>,
+    /// Am I my domain's leader? (Equivalent to `leaders.is_some()`.)
+    pub is_leader: bool,
+    /// Number of distinct domains the parent team spans; `1` means the
+    /// split is degenerate (the local team mirrors the parent and the
+    /// leader team is a singleton) and hierarchical collectives fall back
+    /// to their flat paths.
+    pub domains: usize,
+}
+
+impl DartEnv {
+    /// `dart_unit_locality`: the [`DomainCoord`] of any unit, derived from
+    /// the launch's modelled placement. Purely local — no communication.
+    pub fn unit_locality(&self, unit: UnitId) -> DartResult<DomainCoord> {
+        if unit < 0 || unit as usize >= self.size() {
+            return Err(DartErr::InvalidUnit(unit));
+        }
+        Ok(self.placement().coord(unit as usize))
+    }
+
+    /// Do two units share a node? This is exactly the condition under
+    /// which shared-memory windows make a transfer zero-copy (the engine's
+    /// locality fast path asks the same question per operation).
+    pub fn same_node(&self, a: UnitId, b: UnitId) -> DartResult<bool> {
+        Ok(self.unit_locality(a)?.node == self.unit_locality(b)?.node)
+    }
+
+    /// Number of distinct nodes a team's members span. Purely local.
+    pub fn team_node_span(&self, team: TeamId) -> DartResult<usize> {
+        let group = self.team_get_group(team)?;
+        Ok(self.placement().node_span(group.members().iter().map(|&u| u as usize)))
+    }
+
+    /// `dart_team_split_locality`: split `team` by locality domain
+    /// (`MPI_Comm_split_type`-style). **Collective over `team`.**
+    ///
+    /// Creates — or returns the cached — [`LocalitySplit`]: one sub-team
+    /// per domain the parent spans (each member learns the id of *its*
+    /// domain's team), plus a leader team of each domain's lowest member.
+    /// All sub-teams are ordinary DART teams (allocate on them, run
+    /// collectives over them, translate ranks); they are owned by the
+    /// split cache and torn down automatically when the parent team is
+    /// destroyed.
+    pub fn team_split_locality(
+        &self,
+        team: TeamId,
+        scope: LocalityScope,
+    ) -> DartResult<LocalitySplit> {
+        if let Some(s) = self.locality_cache.borrow().get(&(team, scope)) {
+            return Ok(*s);
+        }
+        let members = self.team_get_group(team)?.members().to_vec();
+        let mut keys = Vec::with_capacity(members.len());
+        for &u in &members {
+            keys.push(scope.key(self.unit_locality(u)?));
+        }
+        // Distinct domains in ascending key order — identical on every
+        // member, so the per-domain `team_create` calls below happen in
+        // the same order everywhere (a collective-consistency must).
+        let mut domains = keys.clone();
+        domains.sort_unstable();
+        domains.dedup();
+        let my_key = scope.key(self.unit_locality(self.myid())?);
+
+        let mut local: Option<TeamId> = None;
+        for d in &domains {
+            let mut units = Vec::new();
+            for (i, &u) in members.iter().enumerate() {
+                if keys[i] == *d {
+                    units.push(u);
+                }
+            }
+            let t = self.team_create(team, &DartGroup::from_units(units))?;
+            if *d == my_key {
+                local = t;
+            }
+        }
+        let local = local.ok_or(DartErr::NotInTeam { unit: self.myid(), team })?;
+
+        // Leader group: each domain's lowest member (members are sorted,
+        // so the first hit per domain is the lowest).
+        let mut leader_units = Vec::with_capacity(domains.len());
+        for d in &domains {
+            for (i, &u) in members.iter().enumerate() {
+                if keys[i] == *d {
+                    leader_units.push(u);
+                    break;
+                }
+            }
+        }
+        let leaders = self.team_create(team, &DartGroup::from_units(leader_units))?;
+
+        let split = LocalitySplit {
+            local,
+            leaders,
+            is_leader: leaders.is_some(),
+            domains: domains.len(),
+        };
+        self.locality_cache.borrow_mut().insert((team, scope), split);
+        Ok(split)
+    }
+
+    /// Number of locality splits currently cached on this unit
+    /// (diagnostics/tests — e.g. to assert cache invalidation).
+    pub fn locality_splits_cached(&self) -> usize {
+        self.locality_cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_keys_and_labels() {
+        let c = DomainCoord { node: 2, numa: 3, core: 5 };
+        assert_eq!(LocalityScope::Node.key(c), (2, 0));
+        assert_eq!(LocalityScope::Numa.key(c), (2, 3));
+        assert_eq!(LocalityScope::Node.label(), "node");
+        assert_eq!(LocalityScope::Numa.to_string(), "numa");
+        assert_eq!(c.to_string(), "n2:d3:c5");
+    }
+}

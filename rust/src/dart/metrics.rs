@@ -76,6 +76,21 @@ pub struct Metrics {
     pub dash_coalesced_runs: Counter,
     /// Bytes moved by `dash::algorithms::copy` redistributions.
     pub dash_redist_bytes: Counter,
+    /// Intra-node phases executed by hierarchical collectives (node-local
+    /// reduce/bcast/gather/barrier legs) — together with
+    /// [`Metrics::hier_coll_inter_ops`] this makes the two-level
+    /// decomposition assertable by tests.
+    pub hier_coll_intra_ops: Counter,
+    /// Leader-team (cross-node) phases executed by hierarchical
+    /// collectives. Bumped only on units that are their node's leader —
+    /// non-leaders never touch the interconnect in a hierarchical
+    /// collective.
+    pub hier_coll_inter_ops: Counter,
+    /// Deferred one-sided operations completed by the engine's intra-node
+    /// zero-copy fast path (shmem window + same-node target): the op
+    /// bypassed the deferred-completion queue entirely — no progress-engine
+    /// registration, nothing for a flush to wait on.
+    pub locality_fastpath_ops: Counter,
 }
 
 impl Metrics {
@@ -91,7 +106,7 @@ impl fmt::Display for Metrics {
             f,
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
-             coll_phases={} dash_runs={} dash_redist={}",
+             coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -108,7 +123,10 @@ impl fmt::Display for Metrics {
             self.overlap_bytes.get(),
             self.coll_phases.get(),
             self.dash_coalesced_runs.get(),
-            self.dash_redist_bytes.get()
+            self.dash_redist_bytes.get(),
+            self.hier_coll_intra_ops.get(),
+            self.hier_coll_inter_ops.get(),
+            self.locality_fastpath_ops.get()
         )
     }
 }

@@ -7,7 +7,11 @@
 //!    [`DartEnv::size`].
 //! 2. **Team and group management** — [`DartGroup`] (local, always
 //!    sorted), [`DartEnv::team_create`], [`DartEnv::team_destroy`],
-//!    [`DartEnv::team_myid`], [`DartEnv::team_size`], unit translation.
+//!    [`DartEnv::team_myid`], [`DartEnv::team_size`], unit translation —
+//!    plus the locality API ([`locality`]): [`DartEnv::unit_locality`]
+//!    and the `MPI_Comm_split_type`-style
+//!    [`DartEnv::team_split_locality`] that yields node-local teams and
+//!    a cross-node leader team (the locality-awareness follow-up work).
 //! 3. **Synchronization** — [`DartEnv::barrier`] and the MCS queue lock
 //!    ([`lock::DartLock`]).
 //! 4. **Global memory management** — [`DartEnv::memalloc`] /
@@ -38,6 +42,7 @@ pub mod config;
 pub mod engine;
 pub mod gptr;
 pub mod group;
+pub mod locality;
 pub mod lock;
 pub mod metrics;
 pub mod onesided;
@@ -51,6 +56,7 @@ pub use collectives::DartCollHandle;
 pub use config::DartConfig;
 pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE};
 pub use group::DartGroup;
+pub use locality::{DomainCoord, LocalityScope, LocalitySplit};
 pub use lock::DartLock;
 pub use metrics::Metrics;
 pub use onesided::DartHandle;
@@ -64,6 +70,7 @@ use crate::mpisim::{Mpi, MpiErr, Win, World, WorldConfig};
 use crate::simnet::Placement;
 use engine::SegmentCache;
 use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::fmt;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicI32, Ordering};
@@ -209,6 +216,17 @@ pub struct DartEnv {
     /// every subsequent one-sided operation. Invalidated by
     /// [`DartEnv::team_memfree`] / [`DartEnv::team_destroy`].
     pub(crate) seg_cache: RefCell<SegmentCache>,
+    /// Memoized locality splits (`(team, scope)` → sub-team ids): a split
+    /// is computed — and its sub-teams created — once per team and scope,
+    /// then reused by every hierarchical collective. Entries (and their
+    /// sub-teams) are torn down by [`DartEnv::team_destroy`].
+    pub(crate) locality_cache: RefCell<HashMap<(TeamId, LocalityScope), LocalitySplit>>,
+    /// Teams known to span a single node (the hierarchical-collective
+    /// *flat-fallback* verdict, cached so the span probe runs once per
+    /// team rather than on every collective). Valid for the team's whole
+    /// lifetime — placement and membership are launch-constant — and
+    /// dropped on [`DartEnv::team_destroy`].
+    pub(crate) hier_flat_teams: RefCell<std::collections::HashSet<TeamId>>,
     /// Progress-engine bookkeeping: the `(ops, bytes)` retirement counters
     /// already mirrored into [`Metrics`] (see
     /// [`DartEnv::progress_poll`] and the flush family).
@@ -290,6 +308,8 @@ impl DartEnv {
             shared,
             state: RefCell::new(EnvState { registry, world_win, nc_alloc }),
             seg_cache,
+            locality_cache: RefCell::new(HashMap::new()),
+            hier_flat_teams: RefCell::new(std::collections::HashSet::new()),
             progress_seen: Cell::new((0, 0)),
             metrics: Metrics::new(),
         })
@@ -299,8 +319,11 @@ impl DartEnv {
     fn exit(self) -> DartResult<()> {
         // A final rendezvous so no unit tears down while others still
         // communicate. Window memory is reclaimed when handles drop;
-        // epochs are released by `Win::drop`.
-        self.barrier(DART_TEAM_ALL)?;
+        // epochs are released by `Win::drop`. Deliberately the *flat*
+        // communicator barrier: routing through the hierarchical path
+        // here could lazily create the whole locality split (sub-teams +
+        // pool windows, never destroyed) purely to synchronize shutdown.
+        self.team_comm(DART_TEAM_ALL)?.barrier()?;
         Ok(())
     }
 
@@ -400,6 +423,38 @@ impl DartEnv {
         if team == DART_TEAM_ALL {
             return Err(DartErr::Invalid("cannot destroy DART_TEAM_ALL".into()));
         }
+        // Split sub-teams are owned by their parent's cached split:
+        // destroying one directly would invalidate the cache only on the
+        // *destroyed team's* members (team_destroy is collective over
+        // them, not over the parent), leaving the other parent members
+        // with a stale split and desynchronizing the next collective that
+        // consults it. Reject it — destroying the parent cascades.
+        {
+            let cache = self.locality_cache.borrow();
+            if cache.values().any(|s| s.local == team || s.leaders == Some(team)) {
+                return Err(DartErr::Invalid(format!(
+                    "team {team} is owned by a locality split — destroy its parent team \
+                     instead (the split cascades)"
+                )));
+            }
+        }
+        // Locality-split teardown (collectively consistent: every member
+        // of `team` caches the same split). Sub-teams derived *from* this
+        // team are destroyed first — leader team (its members only), then
+        // each member's domain-local team — recursing through any splits
+        // of the sub-teams themselves. The guard above never fires during
+        // this recursion: each `(team, scope)` entry is removed before its
+        // sub-teams are destroyed.
+        for scope in LocalityScope::ALL {
+            let cached = self.locality_cache.borrow_mut().remove(&(team, scope));
+            if let Some(s) = cached {
+                if let Some(lt) = s.leaders {
+                    self.team_destroy(lt)?;
+                }
+                self.team_destroy(s.local)?;
+            }
+        }
+        self.hier_flat_teams.borrow_mut().remove(&team);
         let mut entry = self.state.borrow_mut().registry.remove(team)?;
         // Drop the engine's cached window handles for this team before the
         // exclusive-ownership check below.

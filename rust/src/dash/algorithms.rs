@@ -7,6 +7,14 @@
 //! operation per element. The exception is [`copy`], the redistribution
 //! path: data must move, so it moves in pattern-coalesced runs (the
 //! stress test for the [`Pattern`](super::Pattern) index maps).
+//!
+//! The combining collectives go through the DART layer, so on multi-node
+//! launches with [`crate::dart::DartConfig::hierarchical_collectives`]
+//! enabled, [`sum`]/[`min_element`]/[`max_element`] combine their
+//! partials hierarchically (intra-node first, one interconnect crossing
+//! per node) with no change here — the dash layer inherits locality
+//! awareness from the runtime, exactly as the locality-aware follow-up
+//! papers argue it should.
 
 use super::array::Array;
 use crate::dart::{DartResult, Element};

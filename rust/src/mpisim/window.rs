@@ -742,11 +742,41 @@ impl Win {
     }
 
     // ------------------------------------------------------------------
+    // Same-node zero-copy access (shared-memory windows only)
+    // ------------------------------------------------------------------
+
+    /// Direct same-node store into `target`'s segment: the memcpy IS the
+    /// whole transfer (zero-copy), so nothing is booked on the channel
+    /// model and nothing joins the pending list — the operation is
+    /// complete, locally and remotely, on return. Callers must have
+    /// established [`Win::is_shmem_local`]`(target)`.
+    pub(crate) fn store_direct(&self, origin: &[u8], target: usize, disp: usize) -> MpiResult<()> {
+        debug_assert!(self.is_shmem_local(target), "store_direct on a non-local target");
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
+        Ok(())
+    }
+
+    /// Direct same-node load from `target`'s segment: the mirror of
+    /// [`Win::store_direct`].
+    pub(crate) fn load_direct(&self, dest: &mut [u8], target: usize, disp: usize) -> MpiResult<()> {
+        debug_assert!(self.is_shmem_local(target), "load_direct on a non-local target");
+        self.assert_epoch(target)?;
+        let src = self.state.check_range(target, disp, dest.len())?;
+        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
 
     /// Is `target` reachable by plain load/store (shared-memory window on
-    /// the same modelled node)?
+    /// the same modelled node)? This is the criterion the DART engine's
+    /// locality fast path keys on (arXiv:1507.04799: same-node peers of an
+    /// `MPI_Win_allocate_shared` window address each other's segments
+    /// directly).
     #[inline]
-    fn is_shmem_local(&self, target: usize) -> bool {
+    pub(crate) fn is_shmem_local(&self, target: usize) -> bool {
         if !self.state.shmem {
             return false;
         }
@@ -1205,6 +1235,45 @@ mod tests {
             shmem < regular / 2.0,
             "shmem window not faster: shmem={shmem}ns regular={regular}ns"
         );
+    }
+
+    #[test]
+    fn store_load_direct_roundtrip_same_node() {
+        use crate::simnet::{PinPolicy, Topology};
+        let cfg = WorldConfig {
+            nranks: 2,
+            topology: Topology::hermit(1),
+            pin: PinPolicy::ScatterNuma, // same node, distinct NUMA domains
+            cost: crate::simnet::CostModel::hermit(),
+            pin_os_threads: false,
+            progress: crate::mpisim::ProgressMode::Caller,
+        };
+        World::run(cfg, |mpi| {
+            let c = mpi.comm_world();
+            let win = Win::allocate_shared(&c, 64).unwrap();
+            win.lock_all().unwrap();
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                assert!(win.is_shmem_local(1));
+                win.store_direct(b"zerocopy", 1, 4).unwrap();
+                let mut back = [0u8; 8];
+                win.load_direct(&mut back, 1, 4).unwrap();
+                assert_eq!(&back, b"zerocopy");
+                // Out-of-range is still bounds-checked.
+                assert!(matches!(
+                    win.store_direct(&[0u8; 8], 1, 60),
+                    Err(MpiErr::DispOutOfRange { .. })
+                ));
+            }
+            c.barrier().unwrap();
+            if c.rank() == 1 {
+                let mut b = [0u8; 8];
+                win.read_local(4, &mut b).unwrap();
+                assert_eq!(&b, b"zerocopy");
+            }
+            win.unlock_all().unwrap();
+            c.barrier().unwrap();
+        });
     }
 
     #[test]

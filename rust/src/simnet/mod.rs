@@ -164,6 +164,32 @@ impl Placement {
     pub fn tier(&self, a: usize, b: usize) -> Tier {
         self.topology.tier(self.coords[a], self.coords[b])
     }
+
+    /// Node index of `unit` — the coarsest locality domain (the
+    /// locality-aware follow-up papers route communication per node).
+    pub fn node_of(&self, unit: usize) -> usize {
+        self.coords[unit].node
+    }
+
+    /// `(node, numa)` domain of `unit` — the finer locality domain.
+    pub fn numa_domain_of(&self, unit: usize) -> (usize, usize) {
+        let c = self.coords[unit];
+        (c.node, c.numa)
+    }
+
+    /// Do two units share a node? (The shmem zero-copy criterion.)
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.coords[a].node == self.coords[b].node
+    }
+
+    /// Number of distinct nodes a set of units spans. Single-node sets are
+    /// where hierarchical collectives fall back to their flat paths.
+    pub fn node_span(&self, units: impl Iterator<Item = usize>) -> usize {
+        let mut nodes: Vec<usize> = units.map(|u| self.coords[u].node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +222,19 @@ mod tests {
         assert_eq!(t.tier(a, c), Tier::InterNuma);
         assert_eq!(t.tier(a, d), Tier::InterNode);
         assert_eq!(t.tier(a, a), Tier::IntraNuma);
+    }
+
+    #[test]
+    fn placement_locality_queries() {
+        let p = Placement::new(Topology::hermit(2), 4, &PinPolicy::ScatterNode);
+        // ScatterNode: units 0,2 on node 0; units 1,3 on node 1.
+        assert_eq!(p.node_of(0), 0);
+        assert_eq!(p.node_of(1), 1);
+        assert!(p.same_node(0, 2));
+        assert!(!p.same_node(0, 1));
+        assert_eq!(p.node_span(0..4), 2);
+        assert_eq!(p.node_span([0, 2].into_iter()), 1);
+        assert_eq!(p.numa_domain_of(0), (0, 0));
     }
 
     #[test]

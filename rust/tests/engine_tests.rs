@@ -276,6 +276,121 @@ fn deferred_get_completes_at_flush() {
 }
 
 // ---------------------------------------------------------------------------
+// The intra-node zero-copy fast path (shmem windows + same-node target)
+// ---------------------------------------------------------------------------
+
+/// 4 units round-robin over 2 Hermit nodes with shared-memory windows:
+/// units 0 and 2 share node 0, units 1 and 3 share node 1.
+fn shmem_cfg() -> DartConfig {
+    DartConfig::hermit(4, 2)
+        .with_pin(dart::simnet::PinPolicy::ScatterNode)
+        .with_pools(1 << 16, 1 << 16)
+        .with_shmem_windows(true)
+}
+
+#[test]
+fn locality_fastpath_intra_node_only() {
+    run(shmem_cfg(), |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 256).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            // Intra-node target (unit 2): the puts take the fast path —
+            // complete on issue, nothing registered with the engine.
+            for i in 0..4u64 {
+                env.put_async(g.with_unit(2).add(i * 8), &[0xC0 + i as u8; 8]).unwrap();
+            }
+            assert!(env.metrics.locality_fastpath_ops.get() > 0);
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), 4);
+            assert_eq!(env.async_pending(), 0, "fast-path ops must not be queued");
+            env.flush_all(g).unwrap(); // still legal, nothing left to wait on
+
+            // Inter-node target (unit 1): the deferred path, fast-path
+            // counter untouched.
+            let before = env.metrics.locality_fastpath_ops.get();
+            env.put_async(g.with_unit(1), &[0xEE; 8]).unwrap();
+            env.flush_all(g).unwrap();
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), before);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 2 {
+            let mut got = [0u8; 8];
+            env.local_read(g.with_unit(2).add(8), &mut got).unwrap();
+            assert_eq!(got, [0xC1; 8]);
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), 0, "passive side");
+        }
+        if env.myid() == 1 {
+            let mut got = [0u8; 8];
+            env.local_read(g.with_unit(1), &mut got).unwrap();
+            assert_eq!(got, [0xEE; 8]);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn locality_fastpath_get_completes_in_place() {
+    run(shmem_cfg(), |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 64).unwrap();
+        env.local_write(g.with_unit(env.myid()), &[env.myid() as u8 + 0x30; 64]).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            // Same-node get: data valid immediately, no flush needed.
+            let mut got = [0u8; 64];
+            env.get_async(g.with_unit(2), &mut got).unwrap();
+            assert_eq!(got, [0x32; 64]);
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), 1);
+            assert_eq!(env.async_pending(), 0);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn locality_fastpath_off_keeps_deferred_semantics() {
+    run(shmem_cfg().with_locality_fastpath(false), |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 64).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            env.put_async(g.with_unit(2), &[0x77; 8]).unwrap();
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), 0, "fast path disabled");
+            env.flush_all(g).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 2 {
+            let mut got = [0u8; 8];
+            env.local_read(g.with_unit(2), &mut got).unwrap();
+            assert_eq!(got, [0x77; 8]);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn no_fastpath_without_shmem_windows() {
+    // Regular windows: same-node targets still go through the deferred
+    // path — the fast path is a shmem-window property, not a distance one.
+    let cfg = DartConfig::hermit(2, 1).with_pools(1 << 16, 1 << 16);
+    run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 64).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            env.put_async(g.with_unit(1), &[5; 8]).unwrap();
+            assert_eq!(env.metrics.locality_fastpath_ops.get(), 0);
+            env.flush_all(g).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // The acceptance bar: stencil2d's halo exchange, one request per neighbour
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,391 @@
+//! Tests of the locality-aware runtime: `unit_locality`,
+//! `team_split_locality` (caching, teardown, edge cases), the
+//! hierarchical two-level collectives, and their flat fallbacks.
+
+use dart::dart::{run, DartConfig, LocalityScope, DART_TEAM_ALL};
+use dart::mpisim::MpiOp;
+use dart::simnet::{CoreCoord, PinPolicy, Topology};
+use std::sync::Mutex;
+use std::time::Instant;
+
+fn pools(cfg: DartConfig) -> DartConfig {
+    cfg.with_pools(1 << 16, 1 << 16)
+}
+
+/// 12 units round-robin over a 3-node Hermit cluster: every power-of-two
+/// rank distance crosses nodes (2^k mod 3 != 0), so this is the placement
+/// where locality-blind trees hurt most — 4 units per node.
+fn three_node_cfg() -> DartConfig {
+    pools(DartConfig::hermit(12, 3).with_pin(PinPolicy::ScatterNode))
+}
+
+// ---------------------------------------------------------------------------
+// unit_locality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unit_locality_matches_placement() {
+    run(three_node_cfg(), |env| {
+        for u in 0..12 {
+            let c = env.unit_locality(u).unwrap();
+            assert_eq!(c.node, u as usize % 3, "unit {u} node");
+        }
+        assert!(env.same_node(0, 3).unwrap());
+        assert!(!env.same_node(0, 1).unwrap());
+        assert_eq!(env.team_node_span(DART_TEAM_ALL).unwrap(), 3);
+        assert!(env.unit_locality(-1).is_err());
+        assert!(env.unit_locality(12).is_err());
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// team_split_locality
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_groups_members_by_node() {
+    run(three_node_cfg(), |env| {
+        let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+        assert_eq!(split.domains, 3);
+        // My node-local team holds exactly the units sharing my node.
+        let my_node = env.unit_locality(env.myid()).unwrap().node;
+        let local_members = env.team_get_group(split.local).unwrap();
+        let expect: Vec<i32> = (0..12).filter(|u| *u as usize % 3 == my_node).collect();
+        assert_eq!(local_members.members(), expect.as_slice());
+        // Leaders = each node's lowest unit; only they see the team id.
+        let am_leader = env.myid() < 3;
+        assert_eq!(split.is_leader, am_leader);
+        assert_eq!(split.leaders.is_some(), am_leader);
+        if let Some(lt) = split.leaders {
+            let leaders = env.team_get_group(lt).unwrap();
+            assert_eq!(leaders.members(), &[0, 1, 2]);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn split_single_node_topology_leader_team_is_singleton() {
+    // Flat (single-node) topology: the local team mirrors the parent and
+    // the leader team is a singleton holding unit 0.
+    run(pools(DartConfig::with_units(4)), |env| {
+        let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+        assert_eq!(split.domains, 1);
+        assert_eq!(env.team_size(split.local).unwrap(), 4);
+        assert_eq!(split.is_leader, env.myid() == 0);
+        if let Some(lt) = split.leaders {
+            assert_eq!(env.myid(), 0);
+            assert_eq!(env.team_size(lt).unwrap(), 1);
+            assert_eq!(env.team_get_group(lt).unwrap().members(), &[0]);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn split_numa_scope_distinguishes_domains() {
+    // 4 units round-robin over the NUMA domains of one Hermit node.
+    let cfg = pools(DartConfig::hermit(4, 1).with_pin(PinPolicy::ScatterNuma));
+    run(cfg, |env| {
+        // Node scope: one node -> degenerate split.
+        let by_node = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+        assert_eq!(by_node.domains, 1);
+        // Numa scope: four singleton domains, everyone is a leader.
+        let by_numa = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Numa).unwrap();
+        assert_eq!(by_numa.domains, 4);
+        assert_eq!(env.team_size(by_numa.local).unwrap(), 1);
+        assert!(by_numa.is_leader);
+        let lt = by_numa.leaders.unwrap();
+        assert_eq!(env.team_size(lt).unwrap(), 4);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn split_oversubscribed_placement_wraps() {
+    // 5 units on a 2-node, 1-core-per-node machine: Block placement wraps
+    // modulo the 2 cores, so units 0,2,4 share node 0 and 1,3 share node 1.
+    let topo = Topology { nodes: 2, numa_per_node: 1, cores_per_numa: 1 };
+    let mut cfg = pools(DartConfig::with_units(5));
+    cfg.topology = topo;
+    run(cfg, |env| {
+        let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+        assert_eq!(split.domains, 2);
+        let local = env.team_get_group(split.local).unwrap();
+        if env.myid() % 2 == 0 {
+            assert_eq!(local.members(), &[0, 2, 4]);
+        } else {
+            assert_eq!(local.members(), &[1, 3]);
+        }
+        assert_eq!(split.is_leader, env.myid() < 2);
+        if let Some(lt) = split.leaders {
+            assert_eq!(env.team_get_group(lt).unwrap().members(), &[0, 1]);
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn split_is_cached_and_destroyed_with_parent() {
+    run(three_node_cfg(), |env| {
+        let baseline = env.live_teams().len();
+        let grp = env.group_all();
+        let t = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
+        let s1 = env.team_split_locality(t, LocalityScope::Node).unwrap();
+        let after_split = env.live_teams().len();
+        assert!(after_split > baseline + 1, "split must create sub-teams");
+        // Second call: served from the cache — same ids, no new teams.
+        let s2 = env.team_split_locality(t, LocalityScope::Node).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(env.live_teams().len(), after_split);
+        assert_eq!(env.locality_splits_cached(), 1);
+        // Destroying the parent cascades: sub-teams and cache entry go too.
+        env.team_destroy(t).unwrap();
+        assert_eq!(env.live_teams().len(), baseline);
+        assert_eq!(env.locality_splits_cached(), 0);
+        // A fresh team gets a fresh split (ids are never reused).
+        let t2 = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
+        let s3 = env.team_split_locality(t2, LocalityScope::Node).unwrap();
+        assert_ne!(s3.local, s1.local, "stale split id served after destroy");
+        env.team_destroy(t2).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn split_sub_teams_cannot_be_destroyed_directly() {
+    // Destroying a split-owned sub-team directly would invalidate the
+    // split cache only on that sub-team's members (team_destroy is
+    // collective over them, not the parent), so it is rejected; the
+    // parent destroy is the supported teardown and still works after the
+    // rejected attempt.
+    run(three_node_cfg(), |env| {
+        let grp = env.group_all();
+        let t = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
+        let split = env.team_split_locality(t, LocalityScope::Node).unwrap();
+        assert!(env.team_destroy(split.local).is_err(), "direct local-team destroy must fail");
+        if let Some(lt) = split.leaders {
+            assert!(env.team_destroy(lt).is_err(), "direct leader-team destroy must fail");
+        }
+        env.team_destroy(t).unwrap();
+        assert_eq!(env.locality_splits_cached(), 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical collectives: correctness + decomposition metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hier_allreduce_bit_equal_to_flat() {
+    // Integer-valued f64 contributions keep every addition exact, so the
+    // different reduction orders must agree bit for bit; u64 is exact by
+    // construction. Run the same reduction flat and hierarchical.
+    let reduce_with = |hier: bool| -> Vec<(u64, u64)> {
+        let out = Mutex::new(vec![(0u64, 0u64); 12]);
+        run(three_node_cfg().with_hierarchical_collectives(hier), |env| {
+            let me = env.myid() as usize;
+            let mine_f = vec![(me * 7 + 3) as f64; 64];
+            let mine_u = vec![(me as u64) << 20 | 0x3F; 64];
+            let mut red_f = vec![0f64; 64];
+            let mut red_u = vec![0u64; 64];
+            env.allreduce(DART_TEAM_ALL, &mine_f, &mut red_f, MpiOp::Sum).unwrap();
+            env.allreduce(DART_TEAM_ALL, &mine_u, &mut red_u, MpiOp::Sum).unwrap();
+            assert!(red_f.iter().all(|&x| x == red_f[0]));
+            out.lock().unwrap()[me] = (red_f[0].to_bits(), red_u[0]);
+        })
+        .unwrap();
+        out.into_inner().unwrap()
+    };
+    let flat = reduce_with(false);
+    let hier = reduce_with(true);
+    assert_eq!(flat, hier, "hierarchical allreduce must be bit-identical");
+    // And the value itself is the analytic sum.
+    let want: f64 = (0..12).map(|u| (u * 7 + 3) as f64).sum();
+    assert_eq!(f64::from_bits(flat[0].0), want);
+}
+
+#[test]
+fn hier_allreduce_decomposition_is_observable() {
+    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+        let mine = [env.myid() as u64];
+        let mut red = [0u64];
+        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+        assert_eq!(red[0], (0..12).sum::<u64>());
+        // Two intra-node phases (reduce + fan-out) on every unit; the
+        // leader exchange only on leaders.
+        assert_eq!(env.metrics.hier_coll_intra_ops.get(), 2);
+        let expect_inter = u64::from(env.myid() < 3);
+        assert_eq!(env.metrics.hier_coll_inter_ops.get(), expect_inter);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn hier_falls_back_flat_on_single_node() {
+    run(pools(DartConfig::with_units(4)).with_hierarchical_collectives(true), |env| {
+        let mine = [env.myid() as u64 + 1];
+        let mut red = [0u64];
+        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+        assert_eq!(red[0], 10);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut b = [0u8; 4];
+        if env.myid() == 2 {
+            b = [7; 4];
+        }
+        env.bcast(DART_TEAM_ALL, &mut b, 2).unwrap();
+        assert_eq!(b, [7; 4]);
+        // Flat paths bumped no hierarchical counters and created no teams.
+        assert_eq!(env.metrics.hier_coll_intra_ops.get(), 0);
+        assert_eq!(env.metrics.hier_coll_inter_ops.get(), 0);
+        assert_eq!(env.locality_splits_cached(), 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn hier_bcast_delivers_from_every_root() {
+    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+        for root in [0usize, 5, 11] {
+            let mut buf = [0u8; 16];
+            if env.team_myid(DART_TEAM_ALL).unwrap() == root {
+                buf = [root as u8 ^ 0xA5; 16];
+            }
+            env.bcast(DART_TEAM_ALL, &mut buf, root).unwrap();
+            assert_eq!(buf, [root as u8 ^ 0xA5; 16], "root {root}");
+        }
+        assert!(env.metrics.hier_coll_intra_ops.get() > 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}
+
+#[test]
+fn hier_allgather_matches_flat_with_uneven_nodes() {
+    // 5 units over 2 nodes (ScatterNode): nodes hold 3 and 2 units — the
+    // padding path of the hierarchical allgather.
+    let cfg = pools(DartConfig::hermit(5, 2).with_pin(PinPolicy::ScatterNode));
+    let gather_with = |hier: bool| -> Vec<Vec<u32>> {
+        let out = Mutex::new(vec![Vec::new(); 5]);
+        run(cfg.clone().with_hierarchical_collectives(hier), |env| {
+            let me = env.myid() as u32;
+            let mine = [me * 11 + 1, me * 11 + 2];
+            let mut all = [0u32; 10];
+            env.allgather(
+                DART_TEAM_ALL,
+                dart::mpisim::as_bytes(&mine),
+                dart::mpisim::as_bytes_mut(&mut all),
+            )
+            .unwrap();
+            out.lock().unwrap()[me as usize] = all.to_vec();
+        })
+        .unwrap();
+        out.into_inner().unwrap()
+    };
+    let flat = gather_with(false);
+    let hier = gather_with(true);
+    assert_eq!(flat, hier, "hierarchical allgather must match the flat result");
+    let want: Vec<u32> = (0..5u32).flat_map(|u| [u * 11 + 1, u * 11 + 2]).collect();
+    assert_eq!(flat[0], want);
+}
+
+#[test]
+fn hier_barrier_synchronizes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let phase = AtomicUsize::new(0);
+    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+        phase.fetch_add(1, Ordering::SeqCst);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        assert_eq!(phase.load(Ordering::SeqCst), 12);
+        assert!(env.metrics.hier_coll_intra_ops.get() >= 2);
+    })
+    .unwrap();
+}
+
+#[test]
+fn hier_allreduce_models_less_time_than_flat_on_multinode() {
+    // The acceptance bar: on a multi-node topology where every binomial
+    // hop crosses nodes (3-node round-robin), the two-level allreduce —
+    // one interconnect crossing per node instead of one per tree edge —
+    // completes in strictly less modelled time than the flat path.
+    let time_with = |hier: bool| -> f64 {
+        let out = Mutex::new(0f64);
+        run(three_node_cfg().with_hierarchical_collectives(hier), |env| {
+            let mine = vec![env.myid() as u64; 1024]; // 8 KiB, E1 regime
+            let mut red = vec![0u64; 1024];
+            // Warm the split cache outside the timed region.
+            env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+            let mut med = dart::bench_util::Samples::new();
+            for _ in 0..15 {
+                env.barrier(DART_TEAM_ALL).unwrap();
+                let t = Instant::now();
+                env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+                let ns = t.elapsed().as_nanos() as f64;
+                if env.myid() == 0 {
+                    med.push(ns);
+                }
+            }
+            if env.myid() == 0 {
+                *out.lock().unwrap() = med.median();
+            }
+        })
+        .unwrap();
+        out.into_inner().unwrap()
+    };
+    let flat = time_with(false);
+    let hier = time_with(true);
+    assert!(hier < flat, "hierarchical allreduce not faster: hier={hier}ns flat={flat}ns");
+}
+
+// ---------------------------------------------------------------------------
+// Custom placements keep working through the locality API
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_respects_custom_placement() {
+    // Units deliberately placed so that unit 0 is alone on node 1 and
+    // units 1..=3 share node 0 — leader order must follow unit ids, not
+    // node indices.
+    let topo = Topology::hermit(2);
+    let coords = vec![
+        CoreCoord { node: 1, numa: 0, core: 0 },
+        CoreCoord { node: 0, numa: 0, core: 0 },
+        CoreCoord { node: 0, numa: 1, core: 0 },
+        CoreCoord { node: 0, numa: 0, core: 1 },
+    ];
+    let mut cfg = pools(DartConfig::with_units(4))
+        .with_pin(PinPolicy::Custom(coords))
+        .with_hierarchical_collectives(true);
+    cfg.topology = topo;
+    run(cfg, |env| {
+        let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+        assert_eq!(split.domains, 2);
+        let local = env.team_get_group(split.local).unwrap();
+        if env.myid() == 0 {
+            assert_eq!(local.members(), &[0]);
+        } else {
+            assert_eq!(local.members(), &[1, 2, 3]);
+        }
+        // Leaders: unit 0 (node 1) and unit 1 (node 0), sorted by unit id.
+        assert_eq!(split.is_leader, env.myid() <= 1);
+        if let Some(lt) = split.leaders {
+            assert_eq!(env.team_get_group(lt).unwrap().members(), &[0, 1]);
+        }
+        // A hierarchical reduction over this placement still sums right.
+        let mut red = [0u64];
+        env.allreduce(DART_TEAM_ALL, &[1u64], &mut red, MpiOp::Sum).unwrap();
+        assert_eq!(red[0], 4);
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+}

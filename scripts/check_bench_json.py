@@ -51,6 +51,20 @@ SCHEMAS = {
         ],
         "other_keys": ["pattern"],
     },
+    "perf_locality": {
+        "top": ["bench", "units", "reps", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "reps",
+            "ns",
+            "intra_ops",
+            "inter_ops",
+            "fastpath_ops",
+            "checksum",
+        ],
+        "other_keys": ["scenario", "placement", "mode"],
+    },
 }
 
 
