@@ -1,0 +1,341 @@
+//! §Scale — thousand-unit weak scaling of the runtime itself.
+//!
+//! Weak-scaling sweep over world sizes 16 → 1024 (16 units per node),
+//! each size running the same per-unit workload — barrier + allreduce +
+//! one-sided ring put + flush — under three placements:
+//!
+//! - **flat** — single-level collectives, locality knobs off.
+//! - **hier** — two-level (node-local + leader) collectives.
+//! - **fastpath** — hier plus shared-memory windows and the intra-node
+//!   zero-copy put fast path (the ring strides by the node count, so a
+//!   unit's ring neighbour shares its node and the puts are eligible).
+//!
+//! Units are scatter-placed (round-robin over nodes), so the flat
+//! binomial/dissemination trees cross the interconnect on every
+//! small-distance hop while the hierarchical path crosses it only
+//! between node leaders.
+//!
+//! All rows run under the pooled execution mode
+//! ([`ExecMode::Pooled`]): every unit still gets an OS thread, but at
+//! most `available_parallelism` of them are runnable at once — which is
+//! what lets a 1024-unit world finish in wall-clock seconds. One extra
+//! thread-per-rank run cross-checks that pooling does not change
+//! results.
+//!
+//! Deterministic gates (asserted — safe in CI):
+//!
+//! - collective results are bit-identical across the three placements
+//!   and across both execution modes;
+//! - the lazily-populated channel table stays far below `units²`;
+//! - the hierarchical placements cross nodes far less than flat, and
+//!   the crossings saved grow with the node count;
+//! - the fastpath rows retire ring puts on issue
+//!   (`Metrics::locality_fastpath_ops > 0`), the flat rows never do.
+//!
+//! Results go to `BENCH_scale.json`. `DART_SCALE_MAX_UNITS` caps the
+//! sweep (CI sets 256); `DART_BENCH_QUICK=1` trims repetitions.
+
+use dart::bench_util::{fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, UnitId, DART_TEAM_ALL};
+use dart::mpisim::{ExecMode, MpiOp};
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The weak-scaling sweep: 16 units per node, 1 → 64 nodes.
+const SIZES: [usize; 4] = [16, 64, 256, 1024];
+/// `u64` elements per unit in the allreduce (1 KiB — the E0 regime).
+const RED: usize = 128;
+/// Ring-put payload per unit per repetition.
+const PUT_BYTES: usize = 1024;
+/// DART calls per unit per repetition (2 barriers + allreduce + put +
+/// flush) — the numerator of the aggregate ops/sec figure.
+const OPS_PER_REP: f64 = 5.0;
+
+/// One measured row of the sweep.
+#[derive(Clone, Default)]
+struct Shot {
+    units: u64,
+    nodes: u64,
+    placement: &'static str,
+    exec: &'static str,
+    reps: u64,
+    /// Aggregate DART calls per wall second across all units.
+    ops_per_sec: f64,
+    /// Median modelled time of one repetition (= wall time of the timed
+    /// region under the cost model), unit 0.
+    modelled_ns: f64,
+    /// Whole-launch wall clock (spawn + warmup + timed + teardown).
+    wall_ms: f64,
+    /// Inter-node transfers booked across the timed region (unit 0's
+    /// snapshot delta — deterministic up to barrier-tail skew).
+    node_crossings: u64,
+    /// Directed rank pairs populated in the channel table at the end.
+    active_channels: u64,
+    /// `Metrics::locality_fastpath_ops` on unit 0.
+    fastpath_ops: u64,
+    /// Collective-result checksum (must match across placements/modes).
+    checksum: u64,
+    /// Peak concurrently runnable ranks (pooled rows; 0 otherwise).
+    peak_runnable: u64,
+    /// Run-slot limit (pooled rows; 0 otherwise).
+    slot_limit: u64,
+}
+
+fn cfg(units: usize, nodes: usize, placement: &'static str, exec: ExecMode) -> DartConfig {
+    let c = DartConfig::hermit(units, nodes)
+        .with_pin(PinPolicy::ScatterNode)
+        .with_pools(1 << 16, 1 << 20)
+        .with_exec(exec, 0);
+    match placement {
+        "flat" => c,
+        "hier" => c.with_hierarchical_collectives(true),
+        "fastpath" => c
+            .with_hierarchical_collectives(true)
+            .with_shmem_windows(true)
+            .with_locality_fastpath(true),
+        other => unreachable!("unknown placement {other}"),
+    }
+}
+
+fn measure(units: usize, placement: &'static str, exec: ExecMode, reps: usize) -> Shot {
+    let nodes = (units / 16).max(1);
+    let out = Mutex::new(Shot::default());
+    let t_run = Instant::now();
+    run(cfg(units, nodes, placement, exec), |env| {
+        let n = env.size();
+        let me = env.myid() as usize;
+        // Ring neighbour at stride `nodes`: same node under scatter
+        // placement (adding the node count preserves `rank % nodes`).
+        let right = ((me + nodes) % n) as UnitId;
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, PUT_BYTES as u64).unwrap();
+        let mine = vec![me as u64 + 1; RED];
+        let mut red = vec![0u64; RED];
+        let src = vec![(me & 0xFF) as u8; PUT_BYTES];
+        // Warm the locality split (sub-team creation) and the channel
+        // table's collective pairs outside the timing.
+        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let crossings0 = env.inter_node_messages();
+        let mut s = Samples::new();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let t = Instant::now();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+            env.put_async(g.with_unit(right), &src).unwrap();
+            env.flush_all(g).unwrap();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            s.push(t.elapsed().as_nanos() as f64);
+        }
+        let timed = t0.elapsed();
+        // The ring is a permutation: exactly one writer per unit.
+        let writer = (me + n - nodes) % n;
+        let mut got = vec![0u8; PUT_BYTES];
+        env.local_read(g.with_unit(me as UnitId), &mut got).unwrap();
+        assert!(
+            got.iter().all(|&b| b == (writer & 0xFF) as u8),
+            "unit {me}: ring put delivered wrong bytes"
+        );
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if me == 0 {
+            let (limit, peak) = env.exec_gate_stats().unwrap_or((0, 0));
+            *out.lock().unwrap() = Shot {
+                units: n as u64,
+                nodes: nodes as u64,
+                placement,
+                exec: match exec {
+                    ExecMode::ThreadPerRank => "thread-per-rank",
+                    ExecMode::Pooled => "pooled",
+                },
+                reps: reps as u64,
+                ops_per_sec: reps as f64 * n as f64 * OPS_PER_REP / timed.as_secs_f64(),
+                modelled_ns: s.median(),
+                wall_ms: 0.0, // stamped by the caller around the launch
+                node_crossings: env.inter_node_messages() - crossings0,
+                active_channels: env.active_channels() as u64,
+                fastpath_ops: env.metrics.locality_fastpath_ops.get(),
+                checksum: red[0].wrapping_mul(0x9E37_79B9).wrapping_add(red[RED - 1]),
+                peak_runnable: peak as u64,
+                slot_limit: limit as u64,
+            };
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    let mut shot = out.into_inner().unwrap();
+    shot.wall_ms = t_run.elapsed().as_secs_f64() * 1e3;
+    shot
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"units\":{},\"nodes\":{},\"placement\":\"{}\",\"exec\":\"{}\",\"reps\":{},\
+         \"ops_per_sec\":{:.1},\"modelled_ns\":{:.1},\"wall_ms\":{:.3},\
+         \"node_crossings\":{},\"active_channels\":{},\"fastpath_ops\":{},\"checksum\":{},\
+         \"peak_runnable\":{},\"slot_limit\":{}}}",
+        s.units,
+        s.nodes,
+        s.placement,
+        s.exec,
+        s.reps,
+        s.ops_per_sec,
+        s.modelled_ns,
+        s.wall_ms,
+        s.node_crossings,
+        s.active_channels,
+        s.fastpath_ops,
+        s.checksum,
+        s.peak_runnable,
+        s.slot_limit
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 3 } else { 10 };
+    let max_units: usize = std::env::var("DART_SCALE_MAX_UNITS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(*SIZES.last().unwrap());
+    let sizes: Vec<usize> = SIZES.iter().copied().filter(|&u| u <= max_units).collect();
+    assert!(!sizes.is_empty(), "DART_SCALE_MAX_UNITS={max_units} leaves nothing to sweep");
+
+    println!("==== §Scale — weak scaling, 16 units/node, scatter placement ====");
+    let mut shots = Vec::new();
+    for &units in &sizes {
+        for placement in ["flat", "hier", "fastpath"] {
+            shots.push(measure(units, placement, ExecMode::Pooled, reps));
+        }
+    }
+    // Execution-mode determinism cross-check at one mid-size point.
+    let probe = sizes.iter().copied().find(|&u| u >= 64).unwrap_or(sizes[0]);
+    let tpr = measure(probe, "flat", ExecMode::ThreadPerRank, reps);
+
+    println!(
+        "\n{:>6} {:>6} {:>9} {:>12} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "units", "nodes", "placement", "ops/s", "modelled", "wall ms", "crossings", "channels",
+        "fastpath"
+    );
+    for s in shots.iter().chain(std::iter::once(&tpr)) {
+        println!(
+            "{:>6} {:>6} {:>9} {:>12.0} {:>12} {:>10.1} {:>10} {:>9} {:>9}",
+            s.units,
+            s.nodes,
+            s.placement,
+            s.ops_per_sec,
+            fmt_ns(s.modelled_ns),
+            s.wall_ms,
+            s.node_crossings,
+            s.active_channels,
+            s.fastpath_ops
+        );
+    }
+
+    let find = |units: usize, placement: &str| -> &Shot {
+        shots
+            .iter()
+            .find(|s| s.units == units as u64 && s.placement == placement)
+            .expect("row present")
+    };
+
+    // Gate 1: bit-identical collective results across placements and
+    // across execution modes.
+    for &units in &sizes {
+        let flat = find(units, "flat");
+        assert_eq!(flat.checksum, find(units, "hier").checksum, "{units}: hier result differs");
+        assert_eq!(
+            flat.checksum,
+            find(units, "fastpath").checksum,
+            "{units}: fastpath result differs"
+        );
+    }
+    assert_eq!(
+        find(probe, "flat").checksum,
+        tpr.checksum,
+        "{probe}: pooled and thread-per-rank worlds disagree"
+    );
+
+    // Gate 2: channel-table sparsity — logarithmic schedules populate
+    // O(units · log units) directed pairs, nowhere near units².
+    for s in &shots {
+        if s.units >= 256 {
+            assert!(
+                s.active_channels < s.units * 40,
+                "{} units/{}: {} active channels — channel table is not sparse",
+                s.units,
+                s.placement,
+                s.active_channels
+            );
+        }
+    }
+
+    // Gate 3: the hierarchical placements' node-crossing advantage, and
+    // its growth with node count. Snapshot skew from barrier tails is at
+    // most a few messages, far inside the 2× / 1.5× slack.
+    let multi: Vec<usize> = sizes.iter().copied().filter(|&u| u / 16 > 1).collect();
+    let mut prev_saved = 0u64;
+    for &units in &multi {
+        let flat = find(units, "flat");
+        let hier = find(units, "hier");
+        assert!(
+            2 * hier.node_crossings < flat.node_crossings,
+            "{units}: hier crossings {} not well below flat {}",
+            hier.node_crossings,
+            flat.node_crossings
+        );
+        let saved = flat.node_crossings - hier.node_crossings;
+        assert!(
+            2 * saved > 3 * prev_saved,
+            "{units}: crossings saved {saved} did not grow over {prev_saved}"
+        );
+        prev_saved = saved;
+    }
+    if let (Some(&lo), Some(&hi)) = (multi.first(), multi.last()) {
+        println!(
+            "\ncrossings saved by hier: {} at {} nodes → {} at {} nodes",
+            find(lo, "flat").node_crossings - find(lo, "hier").node_crossings,
+            lo / 16,
+            find(hi, "flat").node_crossings - find(hi, "hier").node_crossings,
+            hi / 16
+        );
+    }
+
+    // Gate 4: the intra-node ring puts ride the zero-copy fast path only
+    // when it is on.
+    for &units in &sizes {
+        assert!(find(units, "fastpath").fastpath_ops > 0, "{units}: fast path never hit");
+        assert_eq!(find(units, "flat").fastpath_ops, 0, "{units}: fast path hit with knob off");
+    }
+
+    // Gate 5: pooled rows stayed inside the run-slot bound, and quick
+    // mode meets the wall-clock budget (the acceptance criterion is
+    // < 30 s at 1024 units).
+    for s in &shots {
+        assert!(
+            s.peak_runnable <= s.slot_limit && s.slot_limit > 0,
+            "{} units: peak runnable {} vs slot limit {}",
+            s.units,
+            s.peak_runnable,
+            s.slot_limit
+        );
+        if quick {
+            assert!(
+                s.wall_ms < 30_000.0,
+                "{} units/{}: {} ms blows the quick-mode wall budget",
+                s.units,
+                s.placement,
+                s.wall_ms
+            );
+        }
+    }
+
+    let rows: Vec<String> = shots.iter().chain(std::iter::once(&tpr)).map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_scale\",\"reps\":{reps},\"max_units\":{},\"results\":[{}]}}",
+        sizes.last().unwrap(),
+        rows.join(",")
+    );
+    std::fs::write("BENCH_scale.json", format!("{json}\n")).expect("write BENCH_scale.json");
+    println!("\nwrote BENCH_scale.json");
+}

@@ -441,7 +441,7 @@ impl DartEnv {
     /// `dart_wait` for collective handles: block until complete.
     pub fn coll_wait(&self, mut handle: DartCollHandle<'_>) -> DartResult<()> {
         while !self.coll_test(&mut handle) {
-            std::thread::yield_now();
+            crate::simnet::exec::coop_yield();
         }
         Ok(())
     }

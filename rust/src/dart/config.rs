@@ -1,6 +1,6 @@
 //! DART runtime configuration.
 
-use crate::mpisim::ProgressMode;
+use crate::mpisim::{ExecMode, ProgressMode};
 use crate::simnet::{CostModel, PinPolicy, Topology};
 
 /// Configuration for a DART SPMD launch ([`crate::dart::run`]).
@@ -74,6 +74,14 @@ pub struct DartConfig {
     /// Each engine wakeup is charged
     /// [`crate::simnet::CostModel::progress_tick_ns`].
     pub progress_mode: ProgressMode,
+    /// How unit tasks are scheduled onto OS threads:
+    /// [`ExecMode::ThreadPerRank`] (default, one freely runnable thread per
+    /// unit) or [`ExecMode::Pooled`] (bounded-concurrency run-slot gate —
+    /// required for 1024+-unit worlds to complete in wall-clock seconds).
+    pub exec: ExecMode,
+    /// Bound on concurrently runnable unit threads under
+    /// [`ExecMode::Pooled`]; `0` = the machine's available parallelism.
+    pub max_os_threads: usize,
 }
 
 impl DartConfig {
@@ -96,6 +104,8 @@ impl DartConfig {
             hierarchical_collectives: false,
             locality_fastpath: true,
             progress_mode: ProgressMode::Caller,
+            exec: ExecMode::ThreadPerRank,
+            max_os_threads: 0,
         }
     }
 
@@ -171,6 +181,16 @@ impl DartConfig {
     #[must_use]
     pub fn with_locality_fastpath(mut self, on: bool) -> Self {
         self.locality_fastpath = on;
+        self
+    }
+
+    /// Builder-style override of the execution mode and its run-slot bound
+    /// (`max_os_threads = 0` = available parallelism; ignored in
+    /// thread-per-rank mode).
+    #[must_use]
+    pub fn with_exec(mut self, exec: ExecMode, max_os_threads: usize) -> Self {
+        self.exec = exec;
+        self.max_os_threads = max_os_threads;
         self
     }
 }

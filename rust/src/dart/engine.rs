@@ -11,11 +11,14 @@
 //!
 //! Three pieces live here:
 //!
-//! - `SegmentCache` — a small per-unit cache of `Resolution` records
-//!   (`(team, unit, allocation) → (window, target rank, extent)`).
-//!   Lookups are a linear scan over at most `CACHE_SLOTS` integer
-//!   comparisons — far cheaper than the registry scan + hash lookup +
-//!   binary search it replaces. Entries are dropped by
+//! - `SegmentCache` — a per-unit cache of `Resolution` records
+//!   (`(team, unit, allocation) → (window, target rank, extent)`),
+//!   sharded by `(team, unit)` key so a lookup is one hash probe plus a
+//!   short covering-extent scan — O(1) in the number of live segments,
+//!   far cheaper than the registry scan + hash lookup + binary search it
+//!   replaces, and it stays that way with hundreds of live segments.
+//!   The live-entry count is exported as the
+//!   [`super::Metrics::seg_cache_size`] gauge. Entries are dropped by
 //!   [`DartEnv::team_memfree`]/[`DartEnv::team_destroy`], which also keeps
 //!   the exclusive-ownership check at window free time honest (the cache
 //!   may not outlive the allocation's window).
@@ -50,6 +53,7 @@
 use super::gptr::{GlobalPtr, TeamId, UnitId};
 use super::{DartEnv, DartErr, DartResult};
 use crate::mpisim::{ProgressMode, VectorType, Win};
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -68,31 +72,36 @@ pub(crate) struct Resolution {
     pub win: Rc<Win>,
 }
 
-/// Cache capacity. Halo exchanges touch a handful of `(neighbour,
-/// allocation)` pairs per phase; eight slots cover every app in the repo
-/// without making the linear scan noticeable.
-pub(crate) const CACHE_SLOTS: usize = 8;
+/// Hard cap on cached resolutions. Reaching it means the application
+/// churns through allocations faster than it reuses them — flushing the
+/// whole cache (rather than tracking LRU order on the hot path) keeps the
+/// common case free and the degenerate case bounded.
+pub(crate) const CACHE_MAX_ENTRIES: usize = 4096;
 
-/// Per-unit segment-resolution cache (see module docs).
+/// Per-unit segment-resolution cache, sharded by `(team, unit)`.
+///
+/// The seed design was a fixed 8-slot array with a linear scan — fine for
+/// a handful of live segments, O(segments) once an application keeps
+/// hundreds of allocations across many teams. Keying a hash map by the
+/// gptr's `(segid, unitid)` makes the lookup O(1) in the number of live
+/// segments; the short per-key bucket (one entry per distinct allocation
+/// of that team touched toward that unit) is still scanned linearly for
+/// the covering-extent check, which no hash can answer.
 pub(crate) struct SegmentCache {
     /// The pre-reserved world window: non-collective pointers always
     /// resolve here, so the engine keeps the handle out of the `RefCell`'d
     /// registry state entirely.
     world_win: Rc<Win>,
     enabled: bool,
-    slots: Vec<Option<Resolution>>,
-    /// Round-robin eviction cursor.
-    next_evict: usize,
+    buckets: HashMap<(TeamId, UnitId), Vec<Resolution>>,
+    /// Total resolutions across all buckets (kept so the size query and
+    /// the cap check never walk the map).
+    entries: usize,
 }
 
 impl SegmentCache {
     pub(crate) fn new(world_win: Rc<Win>, enabled: bool) -> Self {
-        SegmentCache {
-            world_win,
-            enabled,
-            slots: (0..CACHE_SLOTS).map(|_| None).collect(),
-            next_evict: 0,
-        }
+        SegmentCache { world_win, enabled, buckets: HashMap::new(), entries: 0 }
     }
 
     #[inline]
@@ -100,50 +109,57 @@ impl SegmentCache {
         if !self.enabled {
             return None;
         }
-        self.slots.iter().flatten().find(|r| {
-            r.segid == gptr.segid
-                && r.unitid == gptr.unitid
-                && gptr.offset >= r.base
-                && gptr.offset - r.base < r.len
-        })
+        self.buckets
+            .get(&(gptr.segid, gptr.unitid))?
+            .iter()
+            .find(|r| gptr.offset >= r.base && gptr.offset - r.base < r.len)
     }
 
     fn insert(&mut self, r: Resolution) {
         if !self.enabled {
             return;
         }
-        if let Some(empty) = self.slots.iter_mut().find(|s| s.is_none()) {
-            *empty = Some(r);
-            return;
+        if self.entries >= CACHE_MAX_ENTRIES {
+            self.buckets.clear();
+            self.entries = 0;
         }
-        let i = self.next_evict;
-        self.next_evict = (i + 1) % self.slots.len();
-        self.slots[i] = Some(r);
+        self.buckets.entry((r.segid, r.unitid)).or_default().push(r);
+        self.entries += 1;
     }
 
     /// Drop every cached resolution of the allocation at `(team, base)` —
     /// called by `team_memfree` *before* it asserts exclusive ownership of
     /// the allocation's window, and before the pool offset can be reused.
     pub(crate) fn invalidate_segment(&mut self, team: TeamId, base: u64) {
-        for s in &mut self.slots {
-            if s.as_ref().is_some_and(|r| r.segid == team && r.base == base) {
-                *s = None;
+        let mut dropped = 0;
+        self.buckets.retain(|&(segid, _), bucket| {
+            if segid == team {
+                let before = bucket.len();
+                bucket.retain(|r| r.base != base);
+                dropped += before - bucket.len();
             }
-        }
+            !bucket.is_empty()
+        });
+        self.entries -= dropped;
     }
 
     /// Drop every cached resolution of `team` — called by `team_destroy`.
     pub(crate) fn invalidate_team(&mut self, team: TeamId) {
-        for s in &mut self.slots {
-            if s.as_ref().is_some_and(|r| r.segid == team) {
-                *s = None;
+        let mut dropped = 0;
+        self.buckets.retain(|&(segid, _), bucket| {
+            if segid == team {
+                dropped += bucket.len();
+                false
+            } else {
+                true
             }
-        }
+        });
+        self.entries -= dropped;
     }
 
-    /// Number of live cached resolutions (diagnostics/tests).
+    /// Number of live cached resolutions (the size metric and tests).
     pub(crate) fn live(&self) -> usize {
-        self.slots.iter().flatten().count()
+        self.entries
     }
 }
 
@@ -205,7 +221,12 @@ impl DartEnv {
         self.metrics.cache_misses.bump();
         let r = self.resolve_collective_slow(gptr)?;
         let out = f(&r.win, r.target, gptr.offset - r.base);
-        self.seg_cache.borrow_mut().insert(r);
+        let live = {
+            let mut cache = self.seg_cache.borrow_mut();
+            cache.insert(r);
+            cache.live()
+        };
+        self.metrics.seg_cache_size.set(live as u64);
         out
     }
 

@@ -160,8 +160,9 @@ impl DartEnv {
                     break s;
                 }
                 // The successor needs CPU time to register itself; on an
-                // oversubscribed host a pure spin would stall it.
-                std::thread::yield_now();
+                // oversubscribed host a pure spin would stall it, and
+                // under pooled execution it may even need our run slot.
+                crate::simnet::exec::coop_yield();
             };
             // Reset my cell for the next acquisition, then notify.
             self.local_write(my_cell, &NIL.to_ne_bytes())?;

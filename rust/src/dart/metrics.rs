@@ -31,6 +31,38 @@ impl Counter {
     }
 }
 
+/// A level indicator: tracks a current value and its high-water mark
+/// (counters only go up; a gauge follows a population that also shrinks,
+/// like the live segment-cache entries).
+#[derive(Default)]
+pub struct Gauge {
+    cur: Cell<u64>,
+    peak: Cell<u64>,
+}
+
+impl Gauge {
+    /// Set the current level (peak follows automatically).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.cur.set(v);
+        if v > self.peak.get() {
+            self.peak.set(v);
+        }
+    }
+
+    /// Current level.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cur.get()
+    }
+
+    /// High-water mark since creation.
+    #[inline]
+    pub fn peak(&self) -> u64 {
+        self.peak.get()
+    }
+}
+
 /// Per-unit DART operation counters.
 #[derive(Default)]
 pub struct Metrics {
@@ -91,6 +123,10 @@ pub struct Metrics {
     /// bypassed the deferred-completion queue entirely — no progress-engine
     /// registration, nothing for a flush to wait on.
     pub locality_fastpath_ops: Counter,
+    /// Live entries in the segment-resolution cache (current + peak) —
+    /// the scale satellite's visibility into cache growth across hundreds
+    /// of live segments. Updated at insert and invalidation points.
+    pub seg_cache_size: Gauge,
 }
 
 impl Metrics {
@@ -106,7 +142,8 @@ impl fmt::Display for Metrics {
             f,
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
-             coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={}",
+             coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={} \
+             seg_cache={}/{}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -126,7 +163,9 @@ impl fmt::Display for Metrics {
             self.dash_redist_bytes.get(),
             self.hier_coll_intra_ops.get(),
             self.hier_coll_inter_ops.get(),
-            self.locality_fastpath_ops.get()
+            self.locality_fastpath_ops.get(),
+            self.seg_cache_size.get(),
+            self.seg_cache_size.peak()
         )
     }
 }
@@ -146,5 +185,19 @@ mod tests {
         assert_eq!(m.gets.get(), 0);
         let s = m.to_string();
         assert!(s.contains("puts=2"));
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(5);
+        g.set(9);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(g.peak(), 9);
+        let m = Metrics::new();
+        m.seg_cache_size.set(7);
+        assert!(m.to_string().contains("seg_cache=7/7"));
     }
 }

@@ -257,6 +257,8 @@ where
         cost: cfg.cost,
         pin_os_threads: cfg.pin_os_threads,
         progress: cfg.progress_mode,
+        exec: cfg.exec,
+        max_os_threads: cfg.max_os_threads,
     };
     World::run(world_cfg, move |mpi| {
         let env = DartEnv::init(mpi, cfg.clone(), shared.clone()).expect("dart_init failed");
@@ -351,6 +353,31 @@ impl DartEnv {
     /// The launch configuration.
     pub fn config(&self) -> &DartConfig {
         &self.config
+    }
+
+    /// `(slot limit, peak concurrently runnable units)` of the pooled
+    /// execution gate, or `None` under
+    /// [`crate::mpisim::ExecMode::ThreadPerRank`] (see
+    /// [`DartConfig::with_exec`]). The scale smoke test asserts the peak
+    /// stays at or below the configured bound.
+    pub fn exec_gate_stats(&self) -> Option<(usize, usize)> {
+        self.mpi.state().exec_gate_stats()
+    }
+
+    /// World-global count of modelled transfers that crossed a node
+    /// boundary (see [`crate::mpisim::WorldState::inter_node_messages`]).
+    /// Deterministic, so the scale bench asserts the hierarchical
+    /// collectives' cross-node advantage on it rather than on wall time.
+    pub fn inter_node_messages(&self) -> u64 {
+        self.mpi.state().inter_node_messages()
+    }
+
+    /// Directed rank pairs that have communicated so far — the lazily
+    /// populated channel table's population (see
+    /// [`crate::mpisim::WorldState::active_channels`]). The scale bench
+    /// asserts this stays far below `units²` under logarithmic collectives.
+    pub fn active_channels(&self) -> usize {
+        self.mpi.state().active_channels()
     }
 
     pub(crate) fn mpi(&self) -> &Mpi {
@@ -459,6 +486,7 @@ impl DartEnv {
         // Drop the engine's cached window handles for this team before the
         // exclusive-ownership check below.
         self.seg_cache.borrow_mut().invalidate_team(team);
+        self.metrics.seg_cache_size.set(self.seg_cache.borrow().live() as u64);
         for e in entry.table.drain() {
             e.win.unlock_all()?;
             match Rc::try_unwrap(e.win) {
@@ -608,6 +636,7 @@ impl DartEnv {
         // hold an `Rc` of its window (the exclusive-ownership check below
         // would fail), and a later allocation may reuse this pool offset.
         self.seg_cache.borrow_mut().invalidate_segment(team, base);
+        self.metrics.seg_cache_size.set(self.seg_cache.borrow().live() as u64);
         entry_win.unlock_all()?;
         match Rc::try_unwrap(entry_win) {
             Ok(w) => Ok(w.free()?),

@@ -5,9 +5,13 @@
 //! (an MPI requirement); a per-communicator sequence number keeps each
 //! collective's traffic from matching any other's.
 //!
-//! Algorithms: dissemination barrier, binomial-tree bcast and reduce,
-//! linear (all)gather/scatter, pairwise alltoall, linear scan — chosen for
-//! clarity; the DART layer on top is oblivious to the algorithm.
+//! Algorithms: dissemination barrier, binomial-tree bcast/reduce/gather/
+//! scatter, Bruck allgather, staggered pairwise alltoall, linear scan
+//! (gatherv stays linear — variable sizes defeat subtree packing). All
+//! fan-in/fan-out is logarithmic in the communicator size, so no rank is
+//! ever the endpoint of O(n) messages — the property the thousand-unit
+//! weak-scaling bench depends on. The DART layer on top is oblivious to
+//! the algorithm.
 
 use super::comm::Comm;
 use super::datatype::{reduce_bytes, MpiOp, MpiType};
@@ -19,6 +23,28 @@ use std::sync::atomic::Ordering;
 /// round` so rounds never collide across calls.
 const COLL_BASE: i32 = -2;
 const MAX_ROUNDS: i32 = 64;
+
+/// Binomial-tree geometry in rotated (vrank) space, shared by bcast,
+/// reduce, gather and scatter: vrank `v`'s parent clears `v`'s lowest set
+/// bit; its children are `v | bit` for every `bit` below that lowest set
+/// bit; and its subtree covers the *contiguous* vrank interval
+/// `[v, v + lsb(v))` clipped to `n` — which is what lets gather/scatter
+/// ship whole subtrees as single contiguous slices.
+#[inline]
+fn lsb_or_top(v: usize, n: usize) -> usize {
+    if v == 0 {
+        n.next_power_of_two()
+    } else {
+        v & v.wrapping_neg()
+    }
+}
+
+/// Number of vranks in `v`'s binomial subtree (including `v`) in an
+/// `n`-rank communicator.
+#[inline]
+fn subtree_len(v: usize, n: usize) -> usize {
+    lsb_or_top(v, n).min(n - v)
+}
 
 impl Comm {
     /// Fresh tag block for one collective invocation.
@@ -82,25 +108,45 @@ impl Comm {
     /// `MPI_Gather` with equal contribution sizes: every rank sends
     /// `sendbuf`; at the root, `recvbuf` (length `size() * sendbuf.len()`)
     /// is filled in rank order. Non-roots may pass an empty `recvbuf`.
+    ///
+    /// Binomial tree in rotated vrank space: each vrank packs its subtree's
+    /// contributions (a contiguous vrank interval, so one slice) and sends
+    /// them to its parent as a single message — ⌈log2(n)⌉ fan-in at the
+    /// root instead of `n - 1`.
     pub fn gather(&self, sendbuf: &[u8], recvbuf: &mut [u8], root: usize) -> MpiResult<()> {
         let n = self.size();
         if root >= n {
             return Err(MpiErr::RankOutOfRange(root, n));
         }
+        let chunk = sendbuf.len();
+        if self.rank() == root && recvbuf.len() != n * chunk {
+            return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: n * chunk });
+        }
         let tag = self.coll_tag();
-        if self.rank() == root {
-            let chunk = sendbuf.len();
-            if recvbuf.len() != n * chunk {
-                return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: n * chunk });
-            }
-            recvbuf[root * chunk..(root + 1) * chunk].copy_from_slice(sendbuf);
-            for r in 0..n {
-                if r != root {
-                    self.recv(&mut recvbuf[r * chunk..(r + 1) * chunk], r, tag)?;
-                }
-            }
+        let vrank = (self.rank() + n - root) % n;
+        // tmp[i * chunk ..] holds vrank (vrank + i)'s contribution.
+        let sub = subtree_len(vrank, n);
+        let mut tmp = vec![0u8; sub * chunk];
+        tmp[..chunk].copy_from_slice(sendbuf);
+        // Collect children (vrank | bit, each a contiguous sub-interval).
+        let lowest = lsb_or_top(vrank, n);
+        let mut bit = 1;
+        while bit < lowest && vrank + bit < n {
+            let child_v = vrank + bit;
+            let child_sub = subtree_len(child_v, n);
+            self.recv(&mut tmp[bit * chunk..(bit + child_sub) * chunk], (child_v + root) % n, tag)?;
+            bit <<= 1;
+        }
+        if vrank != 0 {
+            let parent_v = vrank & (vrank - 1);
+            self.send_internal(&tmp, (parent_v + root) % n, tag, true)?;
         } else {
-            self.send_internal(sendbuf, root, tag, true)?;
+            // Un-rotate: vrank v's chunk belongs to comm rank (v + root) % n.
+            for v in 0..n {
+                let r = (v + root) % n;
+                recvbuf[r * chunk..(r + 1) * chunk]
+                    .copy_from_slice(&tmp[v * chunk..(v + 1) * chunk]);
+            }
         }
         Ok(())
     }
@@ -132,6 +178,11 @@ impl Comm {
     /// `MPI_Scatter` with equal chunk sizes: the root's `sendbuf` (length
     /// `size() * chunk`) is split in rank order; every rank receives its
     /// chunk into `recvbuf` (length `chunk`). Non-roots pass `&[]`.
+    ///
+    /// Binomial tree (mirror of [`Comm::gather`]): the root ships each
+    /// child its whole subtree interval in one message; interior vranks
+    /// peel off their own chunk and forward sub-intervals — the root sends
+    /// ⌈log2(n)⌉ messages instead of `n - 1`.
     pub fn scatter(&self, sendbuf: &[u8], recvbuf: &mut [u8], root: usize) -> MpiResult<()> {
         let n = self.size();
         if root >= n {
@@ -139,27 +190,76 @@ impl Comm {
         }
         let tag = self.coll_tag();
         let chunk = recvbuf.len();
-        if self.rank() == root {
+        let vrank = (self.rank() + n - root) % n;
+        let sub = subtree_len(vrank, n);
+        // tmp[i * chunk ..] is vrank (vrank + i)'s chunk.
+        let mut tmp;
+        if vrank == 0 {
             if sendbuf.len() != n * chunk {
                 return Err(MpiErr::SizeMismatch { local: sendbuf.len(), remote: n * chunk });
             }
-            for r in 0..n {
-                if r != root {
-                    self.send_internal(&sendbuf[r * chunk..(r + 1) * chunk], r, tag, true)?;
-                }
+            // Rotate comm-rank order into vrank order.
+            tmp = vec![0u8; n * chunk];
+            for v in 0..n {
+                let r = (v + root) % n;
+                tmp[v * chunk..(v + 1) * chunk]
+                    .copy_from_slice(&sendbuf[r * chunk..(r + 1) * chunk]);
             }
-            recvbuf.copy_from_slice(&sendbuf[root * chunk..(root + 1) * chunk]);
-            Ok(())
         } else {
-            self.recv(recvbuf, root, tag)?;
-            Ok(())
+            tmp = vec![0u8; sub * chunk];
+            let parent_v = vrank & (vrank - 1);
+            self.recv(&mut tmp, (parent_v + root) % n, tag)?;
         }
+        // Forward each child its contiguous subtree interval.
+        let lowest = lsb_or_top(vrank, n);
+        let mut bit = 1;
+        while bit < lowest && vrank + bit < n {
+            let child_v = vrank + bit;
+            let child_sub = subtree_len(child_v, n);
+            self.send_internal(
+                &tmp[bit * chunk..(bit + child_sub) * chunk],
+                (child_v + root) % n,
+                tag,
+                true,
+            )?;
+            bit <<= 1;
+        }
+        recvbuf.copy_from_slice(&tmp[..chunk]);
+        Ok(())
     }
 
-    /// `MPI_Allgather` (equal sizes): gather to rank 0, then bcast.
+    /// `MPI_Allgather` (equal sizes): Bruck's algorithm, ⌈log2(n)⌉ rounds
+    /// of doubling exchanges with no root bottleneck (the gather+bcast
+    /// composition it replaces funnelled all `n` chunks through rank 0
+    /// twice). After round `r`, `tmp[i]` holds rank `(me + i) % n`'s chunk
+    /// for all `i < 2^r`; a final local rotation restores rank order.
     pub fn allgather(&self, sendbuf: &[u8], recvbuf: &mut [u8]) -> MpiResult<()> {
-        self.gather(sendbuf, recvbuf, 0)?;
-        self.bcast(recvbuf, 0)
+        let n = self.size();
+        let me = self.rank();
+        let chunk = sendbuf.len();
+        if recvbuf.len() != n * chunk {
+            return Err(MpiErr::SizeMismatch { local: recvbuf.len(), remote: n * chunk });
+        }
+        let tag = self.coll_tag();
+        let mut tmp = vec![0u8; n * chunk];
+        tmp[..chunk].copy_from_slice(sendbuf);
+        let mut have = 1usize;
+        let mut round = 0;
+        while have < n {
+            let cnt = have.min(n - have);
+            let dst = (me + n - have) % n;
+            let src = (me + have) % n;
+            self.send_internal(&tmp[..cnt * chunk], dst, tag - round, true)?;
+            self.recv(&mut tmp[have * chunk..(have + cnt) * chunk], src, tag - round)?;
+            have += cnt;
+            round += 1;
+        }
+        // tmp[i] = chunk of rank (me + i) % n  →  recvbuf in rank order.
+        for r in 0..n {
+            let i = (r + n - me) % n;
+            recvbuf[r * chunk..(r + 1) * chunk].copy_from_slice(&tmp[i * chunk..(i + 1) * chunk]);
+        }
+        Ok(())
     }
 
     /// `MPI_Reduce`: element-wise `(op, ty)` reduction into the root's
@@ -227,6 +327,13 @@ impl Comm {
 
     /// `MPI_Alltoall` (equal chunk sizes): `sendbuf` holds one chunk per
     /// destination in rank order; `recvbuf` receives one chunk per source.
+    ///
+    /// Staggered pairwise rounds: in round `i` every rank sends to
+    /// `(me + i) % n` and receives from `(me - i) mod n` — each round is a
+    /// perfect permutation, so no rank ever holds `n - 1` undelivered
+    /// eager messages and no mailbox becomes a hotspot (the total message
+    /// count stays the bandwidth-optimal `n(n-1)`; alltoall is inherently
+    /// all-pairs).
     pub fn alltoall(&self, sendbuf: &[u8], recvbuf: &mut [u8], chunk: usize) -> MpiResult<()> {
         let n = self.size();
         if sendbuf.len() != n * chunk || recvbuf.len() != n * chunk {
@@ -234,26 +341,26 @@ impl Comm {
         }
         let tag = self.coll_tag();
         let me = self.rank();
-        // Eager sends buffer at the destination, so send-all then recv-all
-        // cannot deadlock.
-        for r in 0..n {
-            if r != me {
-                self.send_internal(&sendbuf[r * chunk..(r + 1) * chunk], r, tag, true)?;
-            }
-        }
         recvbuf[me * chunk..(me + 1) * chunk]
             .copy_from_slice(&sendbuf[me * chunk..(me + 1) * chunk]);
-        for r in 0..n {
-            if r != me {
-                self.recv(&mut recvbuf[r * chunk..(r + 1) * chunk], r, tag)?;
-            }
+        for i in 1..n {
+            let dst = (me + i) % n;
+            let src = (me + n - i) % n;
+            self.send_internal(&sendbuf[dst * chunk..(dst + 1) * chunk], dst, tag, true)?;
+            self.recv(&mut recvbuf[src * chunk..(src + 1) * chunk], src, tag)?;
         }
         Ok(())
     }
 
     /// `MPI_Scan` (inclusive): rank `i` receives the reduction of ranks
     /// `0..=i`. Linear chain.
-    pub fn scan(&self, sendbuf: &[u8], recvbuf: &mut [u8], op: MpiOp, ty: MpiType) -> MpiResult<()> {
+    pub fn scan(
+        &self,
+        sendbuf: &[u8],
+        recvbuf: &mut [u8],
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<()> {
         let me = self.rank();
         let tag = self.coll_tag();
         if recvbuf.len() != sendbuf.len() {

@@ -27,10 +27,13 @@
 //!   rank's output buffer (held by `&mut` borrow for the request's
 //!   lifetime, so the MPI don't-touch-the-buffer rule is compiler-checked).
 //!
-//! The cost model is deliberately coarse — a barrier costs one zero-byte
-//! notification hop, a bcast one root→rank transfer, allgather/allreduce
-//! one neighbour-sized transfer per rank — matching the substrate's
-//! "measure the *difference*, not the absolute" philosophy.
+//! The cost schedules mirror the logarithmic algorithms of the blocking
+//! collectives ([`crate::mpisim::collectives`]): a barrier books a
+//! binomial notification tree rooted at the last arrival, a bcast a
+//! binomial tree from the root, allgather/allreduce the doubling rounds of
+//! Bruck / recursive doubling — each hop booked with
+//! `book_transfer_after`, so a child's transfer cannot start before its
+//! parent's delivered and no rank is the endpoint of O(n) bookings.
 
 use super::comm::Comm;
 use super::datatype::{reduce_bytes, MpiOp, MpiType};
@@ -73,6 +76,10 @@ struct CollInner {
     result: Option<Vec<u8>>,
     /// Per-rank modelled completion instant, stamped with the result.
     complete_at: Vec<Option<Instant>>,
+    /// Has the fan-out schedule been booked on the channel model? (Guards
+    /// one-time booking for kinds whose result is staged before the
+    /// schedule can run, i.e. bcast.)
+    scheduled: bool,
     /// Ranks that have observed completion (state is dropped at `n`).
     finished: usize,
 }
@@ -90,6 +97,7 @@ impl CollState {
                 last_arrival: 0,
                 result: None,
                 complete_at: vec![None; n],
+                scheduled: false,
                 finished: 0,
             }),
         }
@@ -137,6 +145,68 @@ impl CollState {
         Ok(())
     }
 
+    /// Book a binomial-tree fan-out rooted at comm rank `root_c`: hop
+    /// `parent → child` starts no earlier than the parent's own arrival
+    /// instant, so depth accumulates logarithmically. Returns each comm
+    /// rank's modelled arrival instant.
+    fn book_binomial_tree(
+        &self,
+        world: &WorldState,
+        root_c: usize,
+        bytes: usize,
+    ) -> Vec<Instant> {
+        let n = self.n;
+        // at[v] is indexed by vrank; vrank v is comm rank (v + root_c) % n.
+        let mut at = vec![Instant::now(); n];
+        // Ascending vrank order guarantees a parent's instant is final
+        // before its (always higher-vrank) children read it.
+        for v in 0..n {
+            let lowest = if v == 0 { n.next_power_of_two() } else { v & v.wrapping_neg() };
+            let mut bit = 1;
+            while bit < lowest && v + bit < n {
+                let parent = self.ranks[(v + root_c) % n];
+                let child = self.ranks[(v + bit + root_c) % n];
+                at[v + bit] = world.book_transfer_after(parent, child, bytes, at[v]);
+                bit <<= 1;
+            }
+        }
+        // Un-rotate to comm-rank indexing.
+        let mut out = vec![Instant::now(); n];
+        for (v, t) in at.into_iter().enumerate() {
+            out[(v + root_c) % n] = t;
+        }
+        out
+    }
+
+    /// Book doubling rounds (Bruck / recursive doubling): in round `h ∈
+    /// {1, 2, 4, …}` comm rank `r` receives `per_round(h)` bytes from
+    /// `(r + h) % n`, ready when both endpoints finished the previous
+    /// round. Returns each comm rank's final-round completion instant.
+    fn book_doubling_rounds(
+        &self,
+        world: &WorldState,
+        per_round: impl Fn(usize) -> usize,
+    ) -> Vec<Instant> {
+        let n = self.n;
+        let mut at = vec![Instant::now(); n];
+        let mut have = 1usize;
+        while have < n {
+            let bytes = per_round(have);
+            // A fresh vec per round: every rank's new instant reads only
+            // the previous round's values, independent of iteration order.
+            let mut next = vec![Instant::now(); n];
+            for r in 0..n {
+                let src = (r + have) % n;
+                let ready = at[r].max(at[src]);
+                next[r] =
+                    world.book_transfer_after(self.ranks[src], self.ranks[r], bytes, ready);
+            }
+            at = next;
+            have += have.min(n - have);
+        }
+        at
+    }
+
     /// One progress step: if the state machine's inputs are complete, do
     /// the combining work and stamp per-rank completion instants. Safe to
     /// call from any thread, any number of times (transitions are guarded).
@@ -146,19 +216,26 @@ impl CollState {
             CollKind::Barrier => {
                 if inn.arrived_count == self.n && inn.result.is_none() {
                     inn.result = Some(Vec::new());
-                    let last = self.ranks[inn.last_arrival];
-                    for r in 0..self.n {
-                        let at = world.book_transfer(last, self.ranks[r], 0);
-                        inn.complete_at[r] = Some(at);
+                    // Zero-byte notification tree rooted at the last
+                    // arrival — no rank is notified by O(n) hops.
+                    let at = self.book_binomial_tree(world, inn.last_arrival, 0);
+                    for (r, t) in at.into_iter().enumerate() {
+                        inn.complete_at[r] = Some(t);
                     }
                 }
             }
             CollKind::Bcast { root } => {
-                if let Some(len) = inn.result.as_ref().map(|d| d.len()) {
-                    for r in 0..self.n {
-                        if r != root && inn.arrived[r] && inn.complete_at[r].is_none() {
-                            let at = world.book_transfer(self.ranks[root], self.ranks[r], len);
-                            inn.complete_at[r] = Some(at);
+                if inn.result.is_some() && !inn.scheduled {
+                    inn.scheduled = true;
+                    let len = inn.result.as_ref().map_or(0, |d| d.len());
+                    // Full binomial tree booked once when the root's
+                    // payload is staged; ranks arriving later find their
+                    // instant already stamped (eager delivery — same as a
+                    // message waiting in a mailbox).
+                    let at = self.book_binomial_tree(world, root, len);
+                    for (r, t) in at.into_iter().enumerate() {
+                        if r != root {
+                            inn.complete_at[r] = Some(t);
                         }
                     }
                 }
@@ -170,11 +247,12 @@ impl CollState {
                         out.extend_from_slice(c.as_ref().expect("all ranks contributed"));
                     }
                     inn.result = Some(out);
-                    let gathered = chunk * self.n.saturating_sub(1);
-                    for r in 0..self.n {
-                        let src = self.ranks[(r + 1) % self.n];
-                        let at = world.book_transfer(src, self.ranks[r], gathered);
-                        inn.complete_at[r] = Some(at);
+                    // Bruck rounds: round h moves min(h, n-h) chunks.
+                    let n = self.n;
+                    let at =
+                        self.book_doubling_rounds(world, |h| chunk * h.min(n - h));
+                    for (r, t) in at.into_iter().enumerate() {
+                        inn.complete_at[r] = Some(t);
                     }
                 }
             }
@@ -188,10 +266,10 @@ impl CollState {
                             .expect("validated at initiation");
                     }
                     inn.result = Some(acc);
-                    for r in 0..self.n {
-                        let src = self.ranks[(r + 1) % self.n];
-                        let at = world.book_transfer(src, self.ranks[r], chunk);
-                        inn.complete_at[r] = Some(at);
+                    // Recursive doubling: a chunk-sized exchange per round.
+                    let at = self.book_doubling_rounds(world, |_| chunk);
+                    for (r, t) in at.into_iter().enumerate() {
+                        inn.complete_at[r] = Some(t);
                     }
                 }
             }
@@ -264,7 +342,7 @@ impl<'buf> CollRequest<'buf> {
     /// this rank.
     pub fn wait(mut self) {
         while !self.test() {
-            std::thread::yield_now();
+            crate::simnet::exec::coop_yield();
         }
     }
 

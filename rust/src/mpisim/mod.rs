@@ -57,11 +57,37 @@ pub use progress::ProgressMode;
 pub use request::{RecvRequest, RmaRequest, SendRequest};
 pub use window::{LockKind, Win};
 
-use crate::simnet::{CostModel, PinPolicy, Placement, Tier, Topology};
+use crate::simnet::{CostModel, PinPolicy, Placement, RunGate, Tier, Topology};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+/// How rank tasks are scheduled onto OS threads (see
+/// [`crate::simnet::exec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// One freely runnable OS thread per rank — the compatibility default,
+    /// right for worlds up to a few dozen ranks.
+    #[default]
+    ThreadPerRank,
+    /// Bounded-concurrency execution: every rank still owns a (mostly
+    /// kernel-parked) carrier thread for its blocked SPMD state, but at
+    /// most [`WorldConfig::max_os_threads`] of them are runnable at any
+    /// instant. This is what makes 1024+-rank worlds complete in wall-clock
+    /// seconds instead of thrashing the scheduler.
+    Pooled,
+}
+
+impl ExecMode {
+    /// Short label used by bench output and JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::ThreadPerRank => "thread-per-rank",
+            ExecMode::Pooled => "pooled",
+        }
+    }
+}
 
 /// Configuration for a simulated MPI world.
 #[derive(Clone)]
@@ -80,6 +106,12 @@ pub struct WorldConfig {
     /// [`progress::ProgressMode`]); `Thread` spawns one background service
     /// thread per [`World::run`].
     pub progress: ProgressMode,
+    /// Rank-task scheduling mode ([`ExecMode::ThreadPerRank`] by default).
+    pub exec: ExecMode,
+    /// Bound on concurrently *runnable* rank threads in
+    /// [`ExecMode::Pooled`]; `0` means the machine's available parallelism.
+    /// Ignored in thread-per-rank mode.
+    pub max_os_threads: usize,
 }
 
 impl WorldConfig {
@@ -93,6 +125,8 @@ impl WorldConfig {
             cost: CostModel::zero(),
             pin_os_threads: false,
             progress: ProgressMode::Caller,
+            exec: ExecMode::ThreadPerRank,
+            max_os_threads: 0,
         }
     }
 
@@ -106,9 +140,25 @@ impl WorldConfig {
             cost: CostModel::hermit(),
             pin_os_threads: false,
             progress: ProgressMode::Caller,
+            exec: ExecMode::ThreadPerRank,
+            max_os_threads: 0,
+        }
+    }
+
+    /// The effective run-slot bound: `max_os_threads`, defaulting to the
+    /// machine's available parallelism when 0.
+    pub fn effective_max_os_threads(&self) -> usize {
+        if self.max_os_threads > 0 {
+            self.max_os_threads
+        } else {
+            std::thread::available_parallelism().map_or(4, |n| n.get())
         }
     }
 }
+
+/// Lock shards of the lazily-populated channel table: enough to keep
+/// contention negligible, few enough that an idle world costs nothing.
+const CHANNEL_SHARDS: usize = 64;
 
 /// Globally shared world state (one per [`World::run`] call).
 pub struct WorldState {
@@ -119,22 +169,30 @@ pub struct WorldState {
     pub(crate) windows: RwLock<HashMap<u64, Arc<window::WinState>>>,
     pub(crate) next_win_id: AtomicU64,
     pub(crate) next_context_id: AtomicU32,
-    /// Directed-pair virtual-time channels, indexed `src * nranks + dst`.
-    channels: Vec<Mutex<Channel>>,
+    /// Directed-pair virtual-time channels, keyed `src * nranks + dst` and
+    /// populated on first use — memory is O(active pairs), not O(nranks²),
+    /// which is what lets 4096-rank worlds exist at all. The value is the
+    /// instant until which the pair's serialization stage is occupied.
+    channels: Vec<Mutex<HashMap<u64, Instant>>>,
+    /// Run-slot gate of the pooled execution mode (`None` in
+    /// thread-per-rank mode).
+    exec_gate: Option<Arc<RunGate>>,
+    /// Modelled transfers whose endpoints sit on different nodes — the
+    /// interconnect-crossing count the scale bench uses to show the
+    /// hierarchical collectives' shrinking cross-node footprint.
+    inter_node_msgs: AtomicU64,
     /// Asynchronous progress engine state (see [`progress`]).
     pub(crate) progress: progress::ProgressShared,
     pub(crate) finalized: AtomicBool,
 }
 
-#[derive(Default)]
-struct Channel {
-    /// Instant until which the channel's serialization stage is occupied.
-    busy_until: Option<Instant>,
-}
-
 impl WorldState {
     fn new(cfg: &WorldConfig) -> Arc<Self> {
         let placement = Placement::new(cfg.topology, cfg.nranks, &cfg.pin);
+        let exec_gate = match cfg.exec {
+            ExecMode::ThreadPerRank => None,
+            ExecMode::Pooled => Some(Arc::new(RunGate::new(cfg.effective_max_os_threads()))),
+        };
         Arc::new(WorldState {
             nranks: cfg.nranks,
             placement,
@@ -143,7 +201,9 @@ impl WorldState {
             windows: RwLock::new(HashMap::new()),
             next_win_id: AtomicU64::new(1),
             next_context_id: AtomicU32::new(1),
-            channels: (0..cfg.nranks * cfg.nranks).map(|_| Mutex::new(Channel::default())).collect(),
+            channels: (0..CHANNEL_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            exec_gate,
+            inter_node_msgs: AtomicU64::new(0),
             progress: progress::ProgressShared::new(cfg.nranks),
             finalized: AtomicBool::new(false),
         })
@@ -155,6 +215,34 @@ impl WorldState {
         self.placement.tier(src, dst)
     }
 
+    /// Shard index of a directed-pair channel key (Fibonacci hash: the
+    /// keys are dense small integers, so the multiply spreads adjacent
+    /// pairs across shards).
+    #[inline]
+    fn channel_shard(key: u64) -> usize {
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize % CHANNEL_SHARDS
+    }
+
+    /// Number of directed rank pairs that have ever communicated — the
+    /// channel table's population (diagnostics; the scale test asserts it
+    /// stays far below `nranks²` under logarithmic collectives).
+    pub fn active_channels(&self) -> usize {
+        self.channels.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// `(slot limit, peak concurrently runnable ranks)` of the pooled
+    /// execution gate, or `None` in thread-per-rank mode. The peak is what
+    /// the scale smoke test asserts stays at or below the configured bound.
+    pub fn exec_gate_stats(&self) -> Option<(usize, usize)> {
+        self.exec_gate.as_ref().map(|g| (g.limit(), g.peak_active()))
+    }
+
+    /// Total modelled transfers that crossed a node boundary since launch
+    /// (diagnostics; deterministic, so the scale bench can assert on it).
+    pub fn inter_node_messages(&self) -> u64 {
+        self.inter_node_msgs.load(Ordering::Relaxed)
+    }
+
     /// Book a `bytes`-sized transfer on the `src → dst` channel and return
     /// the modelled completion instant.
     ///
@@ -164,29 +252,50 @@ impl WorldState {
     /// pipelines (it is added after the serialization slot, so overlapped
     /// transfers pay it only once in aggregate).
     pub fn book_transfer(&self, src: usize, dst: usize, bytes: usize) -> Instant {
+        self.book_transfer_after(src, dst, bytes, Instant::now())
+    }
+
+    /// [`WorldState::book_transfer`] with an earliest-start bound: the
+    /// serialization slot begins no earlier than `not_before`. This is what
+    /// lets the nonblocking-collective schedules ([`icoll`]) model
+    /// logarithmic trees — a child's hop cannot start before its parent's
+    /// hop delivered.
+    pub(crate) fn book_transfer_after(
+        &self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        not_before: Instant,
+    ) -> Instant {
         let now = Instant::now();
+        let base = if not_before > now { not_before } else { now };
         if self.cost.scale <= 0.0 || src == dst {
-            return now;
+            return base;
         }
         let tier = self.tier(src, dst);
+        if tier == Tier::InterNode {
+            self.inter_node_msgs.fetch_add(1, Ordering::Relaxed);
+        }
         let tc = &self.cost.tiers[tier as usize];
         // Per-message protocol overhead + bandwidth term occupy the
         // channel; the tier's base latency pipelines (added below, after
         // the serialization slot).
         let mut serialize_ns = self.cost.msg_overhead_ns + bytes as f64 / tc.bytes_per_ns;
         if bytes > self.cost.eager_e0_limit {
-            serialize_ns += self.cost.e1_latency_ns + 2.0 * bytes as f64 / self.cost.e1_copy_bytes_per_ns;
+            serialize_ns +=
+                self.cost.e1_latency_ns + 2.0 * bytes as f64 / self.cost.e1_copy_bytes_per_ns;
         }
         let serialize = Duration::from_nanos((serialize_ns * self.cost.scale) as u64);
         let latency = Duration::from_nanos((tc.latency_ns * self.cost.scale) as u64);
-        let mut ch = self.channels[src * self.nranks + dst].lock().unwrap();
-        let start = match ch.busy_until {
-            Some(b) if b > now => b,
-            _ => now,
+        let key = (src * self.nranks + dst) as u64;
+        let mut shard = self.channels[Self::channel_shard(key)].lock().unwrap();
+        let start = match shard.get(&key) {
+            Some(&busy) if busy > base => busy,
+            _ => base,
         };
         let done = start + serialize;
-        ch.busy_until = Some(done);
-        drop(ch);
+        shard.insert(key, done);
+        drop(shard);
         done + latency
     }
 
@@ -276,6 +385,14 @@ impl World {
                             if pin_os {
                                 crate::simnet::pin_current_thread(topo.index_of(coord));
                             }
+                            // Pooled mode: hold a run slot for the rank's
+                            // lifetime (released around kernel parks and
+                            // rotated at spin-yield points — see
+                            // `simnet::exec`). Thread-per-rank: no gate.
+                            let _slot = state
+                                .exec_gate
+                                .clone()
+                                .map(crate::simnet::exec::enter);
                             let mpi = Mpi {
                                 world: state,
                                 rank,
@@ -339,6 +456,54 @@ mod tests {
                 let a = mpi.state().book_transfer(0, 1, 1 << 16);
                 let b = mpi.state().book_transfer(0, 1, 1 << 16);
                 assert!(b > a, "second transfer must queue behind the first");
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_world_runs_all_ranks_within_bound() {
+        let mut cfg = WorldConfig::local(32);
+        cfg.exec = ExecMode::Pooled;
+        cfg.max_os_threads = 4;
+        let counter = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        World::run(cfg, |mpi| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            mpi.comm_world().barrier().unwrap();
+            if mpi.world_rank() == 0 {
+                let (limit, p) = mpi.state().exec_gate_stats().expect("pooled gate");
+                assert_eq!(limit, 4);
+                peak.store(p, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+        let p = peak.load(Ordering::SeqCst);
+        assert!(p >= 1 && p <= 4, "peak runnable {p} out of [1, 4]");
+    }
+
+    #[test]
+    fn lazy_channels_only_count_used_pairs() {
+        let mut cfg = WorldConfig::hermit(8, 1);
+        cfg.cost.scale = 1.0;
+        World::run(cfg, |mpi| {
+            if mpi.world_rank() == 0 {
+                mpi.state().book_transfer(0, 1, 64);
+                mpi.state().book_transfer(0, 1, 64);
+                mpi.state().book_transfer(2, 3, 64);
+                assert_eq!(mpi.state().active_channels(), 2);
+            }
+        });
+    }
+
+    #[test]
+    fn book_transfer_after_defers_start() {
+        let mut cfg = WorldConfig::hermit(2, 1);
+        cfg.cost.scale = 1.0;
+        World::run(cfg, |mpi| {
+            if mpi.world_rank() == 0 {
+                let future = Instant::now() + Duration::from_millis(5);
+                let t = mpi.state().book_transfer_after(0, 1, 1 << 10, future);
+                assert!(t > future, "transfer must start no earlier than not_before");
             }
         });
     }

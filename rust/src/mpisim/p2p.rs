@@ -65,18 +65,24 @@ impl Mailbox {
     /// Block until an envelope matching `(ctx, src, tag)` is available and
     /// remove it. First match in arrival order — per-pair FIFO, so delivery
     /// is non-overtaking.
+    ///
+    /// The condvar wait runs inside [`crate::simnet::exec::blocking`]: under
+    /// pooled execution a rank parked here holds no run slot, so a bounded
+    /// pool can never deadlock on unmatched receives.
     pub(crate) fn take_match(&self, ctx: u32, src: usize, tag: i32) -> Envelope {
-        let mut q = self.inner.lock().unwrap();
-        loop {
-            if let Some(pos) = q.iter().position(|e| {
-                e.ctx == ctx
-                    && (src == ANY_SOURCE || e.src == src)
-                    && (tag == ANY_TAG || e.tag == tag)
-            }) {
-                return q.remove(pos).unwrap();
+        crate::simnet::exec::blocking(|| {
+            let mut q = self.inner.lock().unwrap();
+            loop {
+                if let Some(pos) = q.iter().position(|e| {
+                    e.ctx == ctx
+                        && (src == ANY_SOURCE || e.src == src)
+                        && (tag == ANY_TAG || e.tag == tag)
+                }) {
+                    return q.remove(pos).unwrap();
+                }
+                q = self.cv.wait(q).unwrap();
             }
-            q = self.cv.wait(q).unwrap();
-        }
+        })
     }
 
     /// Non-blocking probe: true if a matching envelope is queued.

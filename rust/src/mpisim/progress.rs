@@ -71,10 +71,9 @@ impl fmt::Display for ProgressMode {
     }
 }
 
-/// One deferred-completion RMA operation awaiting retirement.
+/// One deferred-completion RMA operation awaiting retirement. Lives in its
+/// origin rank's [`RmaShard`], so the origin is implicit in the shard index.
 pub(crate) struct PendingRma {
-    /// World rank that initiated the operation.
-    origin: usize,
     /// Payload size (for the overlap-achieved byte counters).
     bytes: u64,
     /// Modelled wire-completion instant.
@@ -85,10 +84,29 @@ pub(crate) struct PendingRma {
     target: usize,
 }
 
+/// One origin rank's slice of the deferred-completion queue.
+///
+/// Sharding by origin is exact, not probabilistic: registration, flush
+/// drains and the pending-count query are all per-origin operations, so
+/// each rank only ever touches its own shard — the world-global queue lock
+/// the flat design serialized every rank on simply no longer exists.
+struct RmaShard {
+    /// This origin's pending operations.
+    queue: Mutex<Vec<PendingRma>>,
+    /// `queue.len()`, maintained outside the lock so that the hot-path
+    /// pending query ([`WorldState::progress_pending_of`]) is a relaxed
+    /// atomic load. Incremented *before* the push and decremented *after*
+    /// the removal, so a nonzero queue is never reported empty.
+    pending: AtomicU64,
+}
+
 /// Per-world shared state of the progress engine.
 pub(crate) struct ProgressShared {
-    /// Deferred-completion RMA operations not yet retired.
-    rma: Mutex<Vec<PendingRma>>,
+    /// Deferred-completion RMA operations, sharded by origin rank.
+    rma: Vec<RmaShard>,
+    /// Sum of all shards' `pending` — lets an engine tick skip the whole
+    /// registry with one load when nothing is in flight.
+    total_pending: AtomicU64,
     /// In-flight nonblocking collectives, keyed by `(context, seq)`.
     pub(crate) colls: Mutex<HashMap<u64, Arc<CollState>>>,
     /// Engine wakeups since world start (all drivers).
@@ -106,7 +124,10 @@ pub(crate) struct ProgressShared {
 impl ProgressShared {
     pub(crate) fn new(nranks: usize) -> Self {
         ProgressShared {
-            rma: Mutex::new(Vec::new()),
+            rma: (0..nranks)
+                .map(|_| RmaShard { queue: Mutex::new(Vec::new()), pending: AtomicU64::new(0) })
+                .collect(),
+            total_pending: AtomicU64::new(0),
             colls: Mutex::new(HashMap::new()),
             ticks: AtomicU64::new(0),
             tick_ns_charged: AtomicU64::new(0),
@@ -118,7 +139,9 @@ impl ProgressShared {
 }
 
 impl WorldState {
-    /// Register a deferred-completion RMA operation with the engine.
+    /// Register a deferred-completion RMA operation with the engine. Only
+    /// the origin's shard is locked; counters go up *before* the push so a
+    /// queued entry is never invisible to the pending query.
     pub(crate) fn progress_register_rma(
         &self,
         origin: usize,
@@ -127,32 +150,44 @@ impl WorldState {
         win: u64,
         target: usize,
     ) {
-        self.progress
-            .rma
-            .lock()
-            .unwrap()
-            .push(PendingRma { origin, bytes, complete_at, win, target });
+        let shard = &self.progress.rma[origin];
+        shard.pending.fetch_add(1, Ordering::Release);
+        self.progress.total_pending.fetch_add(1, Ordering::Release);
+        shard.queue.lock().unwrap().push(PendingRma { bytes, complete_at, win, target });
     }
 
     /// Number of `origin`'s registered operations not yet retired (by the
-    /// engine) or drained (by a flush).
+    /// engine) or drained (by a flush). Lock-free: one relaxed atomic load
+    /// of the origin shard's counter — this is on the `async_pending()` hot
+    /// path, which applications poll in overlap loops.
     pub fn progress_pending_of(&self, origin: usize) -> usize {
-        self.progress.rma.lock().unwrap().iter().filter(|e| e.origin == origin).count()
+        self.progress.rma[origin].pending.load(Ordering::Acquire) as usize
+    }
+
+    /// Drop `count` entries' worth of pending-counter credit for `origin`
+    /// (after removals under the shard lock).
+    fn progress_note_removed(&self, origin: usize, count: usize) {
+        if count > 0 {
+            self.progress.rma[origin].pending.fetch_sub(count as u64, Ordering::Release);
+            self.progress.total_pending.fetch_sub(count as u64, Ordering::Release);
+        }
     }
 
     /// Drop `origin`'s completed entries *covered by a flush* — on window
     /// `win`, to `target` (or any target for a flush-all). These were
     /// completed by the caller's own wait, so they earn no overlap credit;
     /// operations on other windows/targets stay registered for the engine
-    /// to retire.
+    /// to retire. Locks only the origin's shard.
     pub(crate) fn progress_drain_completed(&self, origin: usize, win: u64, target: Option<usize>) {
         let now = Instant::now();
-        self.progress.rma.lock().unwrap().retain(|e| {
-            !(e.origin == origin
-                && e.win == win
-                && target.map_or(true, |t| e.target == t)
-                && e.complete_at <= now)
+        let mut q = self.progress.rma[origin].queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|e| {
+            !(e.win == win && target.map_or(true, |t| e.target == t) && e.complete_at <= now)
         });
+        let removed = before - q.len();
+        drop(q);
+        self.progress_note_removed(origin, removed);
     }
 
     /// `(operations, bytes)` of `origin`'s work retired by the engine so
@@ -171,9 +206,10 @@ impl WorldState {
 
     /// Nothing for the engine to do right now? (No pending RMA entries and
     /// no live nonblocking collectives — lets the Thread-mode service back
-    /// off instead of burning a core ticking an empty engine.)
+    /// off instead of burning a core ticking an empty engine.) The RMA side
+    /// is one atomic load; only the collective registry takes a lock.
     pub(crate) fn progress_idle(&self) -> bool {
-        self.progress.rma.lock().unwrap().is_empty()
+        self.progress.total_pending.load(Ordering::Acquire) == 0
             && self.progress.colls.lock().unwrap().is_empty()
     }
 
@@ -189,18 +225,31 @@ impl WorldState {
     pub fn progress_tick(&self) -> usize {
         let now = Instant::now();
         let mut retired = 0usize;
-        {
-            let mut q = self.progress.rma.lock().unwrap();
-            q.retain(|e| {
-                if e.complete_at <= now {
-                    self.progress.retired_ops[e.origin].fetch_add(1, Ordering::Relaxed);
-                    self.progress.retired_bytes[e.origin].fetch_add(e.bytes, Ordering::Relaxed);
-                    retired += 1;
-                    false
-                } else {
-                    true
+        // Sharded sweep: the one-load early-out makes an idle tick free,
+        // and a busy tick only locks shards that actually hold entries —
+        // ranks registering new work contend on their own shard, never on
+        // a world-global queue lock.
+        if self.progress.total_pending.load(Ordering::Acquire) > 0 {
+            for (origin, shard) in self.progress.rma.iter().enumerate() {
+                if shard.pending.load(Ordering::Acquire) == 0 {
+                    continue;
                 }
-            });
+                let mut q = shard.queue.lock().unwrap();
+                let before = q.len();
+                q.retain(|e| {
+                    if e.complete_at <= now {
+                        self.progress.retired_ops[origin].fetch_add(1, Ordering::Relaxed);
+                        self.progress.retired_bytes[origin].fetch_add(e.bytes, Ordering::Relaxed);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                let removed = before - q.len();
+                drop(q);
+                self.progress_note_removed(origin, removed);
+                retired += removed;
+            }
         }
         // Advance collectives outside the registry lock: `advance` books
         // transfers on the channel model, and holding the map lock across
@@ -325,6 +374,27 @@ mod tests {
             assert!(st.progress_ticks_total() > 0);
         });
         // Reaching here means the guard joined the thread cleanly.
+    }
+
+    #[test]
+    fn pending_counters_are_per_origin() {
+        World::run(WorldConfig::local(3), |mpi| {
+            if mpi.world_rank() != 0 {
+                return;
+            }
+            let st = mpi.state();
+            let later = Instant::now() + Duration::from_secs(3600);
+            st.progress_register_rma(0, 1, later, 1, 1);
+            st.progress_register_rma(0, 1, later, 1, 2);
+            st.progress_register_rma(2, 1, later, 1, 0);
+            assert_eq!(st.progress_pending_of(0), 2);
+            assert_eq!(st.progress_pending_of(1), 0);
+            assert_eq!(st.progress_pending_of(2), 1);
+            // A future-dated tick retires nothing and changes no counter.
+            assert_eq!(st.progress_tick(), 0);
+            assert_eq!(st.progress_pending_of(0), 2);
+            assert_eq!(st.progress_pending_of(2), 1);
+        });
     }
 
     #[test]

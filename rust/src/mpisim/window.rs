@@ -108,22 +108,27 @@ impl TargetLock {
         TargetLock { m: Mutex::new(LockSt::default()), cv: Condvar::new() }
     }
 
+    /// Condvar waits run inside [`crate::simnet::exec::blocking`]: a rank
+    /// parked on a contended passive-target lock holds no run slot under
+    /// pooled execution, so the current holder can always run and release.
     fn acquire(&self, kind: LockKind) {
-        let mut st = self.m.lock().unwrap();
-        match kind {
-            LockKind::Shared => {
-                while st.exclusive {
-                    st = self.cv.wait(st).unwrap();
+        crate::simnet::exec::blocking(|| {
+            let mut st = self.m.lock().unwrap();
+            match kind {
+                LockKind::Shared => {
+                    while st.exclusive {
+                        st = self.cv.wait(st).unwrap();
+                    }
+                    st.shared += 1;
                 }
-                st.shared += 1;
-            }
-            LockKind::Exclusive => {
-                while st.exclusive || st.shared > 0 {
-                    st = self.cv.wait(st).unwrap();
+                LockKind::Exclusive => {
+                    while st.exclusive || st.shared > 0 {
+                        st = self.cv.wait(st).unwrap();
+                    }
+                    st.exclusive = true;
                 }
-                st.exclusive = true;
             }
-        }
+        })
     }
 
     fn release(&self, kind: LockKind) {
@@ -1203,6 +1208,8 @@ mod tests {
                 cost: crate::simnet::CostModel::hermit(),
                 pin_os_threads: false,
                 progress: crate::mpisim::ProgressMode::Caller,
+                exec: crate::mpisim::ExecMode::ThreadPerRank,
+                max_os_threads: 0,
             };
             World::run(cfg, |mpi| {
                 let c = mpi.comm_world();
@@ -1247,6 +1254,8 @@ mod tests {
             cost: crate::simnet::CostModel::hermit(),
             pin_os_threads: false,
             progress: crate::mpisim::ProgressMode::Caller,
+            exec: crate::mpisim::ExecMode::ThreadPerRank,
+            max_os_threads: 0,
         };
         World::run(cfg, |mpi| {
             let c = mpi.comm_world();
@@ -1288,6 +1297,8 @@ mod tests {
             cost: crate::simnet::CostModel::hermit(),
             pin_os_threads: false,
             progress: crate::mpisim::ProgressMode::Caller,
+            exec: crate::mpisim::ExecMode::ThreadPerRank,
+            max_os_threads: 0,
         };
         World::run(cfg, |mpi| {
             let c = mpi.comm_world();

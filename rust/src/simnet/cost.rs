@@ -148,7 +148,10 @@ impl CostModel {
 /// waits spin (the paper's MPI does the same while polling the NIC).
 /// Longer waits yield the CPU between polls: the simulation timeshares
 /// many rank-threads over few (possibly one) physical cores, and a pure
-/// spin would stall every other rank for a full scheduler quantum.
+/// spin would stall every other rank for a full scheduler quantum. Under
+/// pooled execution ([`crate::simnet::exec`]) the yield additionally hands
+/// the caller's run slot to a parked rank, so thousand-rank worlds never
+/// have more than the slot bound spinning at once.
 #[inline]
 pub fn spin_for(d: Duration) {
     const SPIN_ONLY: Duration = Duration::from_micros(5);
@@ -159,7 +162,7 @@ pub fn spin_for(d: Duration) {
             return;
         }
         if d - e > SPIN_ONLY {
-            std::thread::yield_now();
+            super::exec::coop_yield();
         } else {
             std::hint::spin_loop();
         }

@@ -1,0 +1,276 @@
+//! Bounded-concurrency execution for big simulated worlds.
+//!
+//! [`crate::mpisim::World::run`] gives every rank its own OS thread — the
+//! only shape under which arbitrary blocking SPMD closures (barriers,
+//! matched receives, flush spins) compose without a coroutine runtime. At
+//! 4–32 ranks that is free; at 1024–4096 ranks the *scheduler* becomes the
+//! bottleneck: thousands of spin-yielding threads thrash the run queue and
+//! every modelled microsecond of wait costs a full context-switch storm.
+//!
+//! The pooled execution mode bounds that. A [`RunGate`] is a counting
+//! semaphore of **run slots**: every rank thread still exists (its stack
+//! holds its blocked SPMD state — that cannot be multiplexed away), but at
+//! most `limit` of them are *runnable* at any instant; the rest are parked
+//! in the kernel on a condvar, costing no CPU. Three cooperation points
+//! keep the gate deadlock-free:
+//!
+//! - [`coop_yield`] — every spin-wait loop in the simulator routes through
+//!   this instead of `std::thread::yield_now`. If other threads are parked
+//!   waiting for a slot, the caller hands its slot over (FIFO-ish via a
+//!   reserved hand-off, so spinners cannot starve parked waiters) and
+//!   re-queues; otherwise it is a plain yield.
+//! - [`blocking`] — wraps every *kernel* block (condvar waits in the
+//!   mailbox and the passive-target lock queue): the slot is released for
+//!   the duration of the wait and re-acquired on wake-up. A thread parked
+//!   on a condvar holds no slot, so slot-holders can always run and wake
+//!   it — no circular wait through the gate is possible.
+//! - the slot itself is held only while the rank is genuinely runnable.
+//!
+//! The gate is advisory scheduling, not semantics: all rank interleavings
+//! it admits are interleavings the thread-per-rank mode could also produce,
+//! so results are bit-identical across execution modes (asserted by the
+//! scale smoke test).
+
+use std::cell::RefCell;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Counting run-slot semaphore with parked-waiter hand-off (see module
+/// docs). One per pooled [`crate::mpisim::World::run`].
+pub struct RunGate {
+    limit: usize,
+    st: Mutex<GateSt>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateSt {
+    /// Slots currently held by runnable threads.
+    active: usize,
+    /// High-water mark of `active` (what the scale smoke test asserts).
+    peak: usize,
+    /// Threads parked in `acquire`.
+    waiters: usize,
+    /// Slots released *to* a parked waiter and reserved for one: a freshly
+    /// arriving thread may not steal them, which is what prevents spinning
+    /// slot-holders from starving parked ranks.
+    handoff: usize,
+}
+
+impl RunGate {
+    /// A gate admitting at most `limit` concurrently runnable threads.
+    pub fn new(limit: usize) -> Self {
+        RunGate { limit: limit.max(1), st: Mutex::new(GateSt::default()), cv: Condvar::new() }
+    }
+
+    /// The slot bound.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// High-water mark of concurrently runnable (slot-holding) threads.
+    pub fn peak_active(&self) -> usize {
+        self.st.lock().unwrap().peak
+    }
+
+    fn acquire(&self) {
+        let mut st = self.st.lock().unwrap();
+        if st.handoff == 0 && st.active < self.limit {
+            st.active += 1;
+            st.peak = st.peak.max(st.active);
+            return;
+        }
+        st.waiters += 1;
+        loop {
+            st = self.cv.wait(st).unwrap();
+            if st.handoff > 0 {
+                st.handoff -= 1;
+                st.waiters -= 1;
+                st.active += 1;
+                st.peak = st.peak.max(st.active);
+                return;
+            }
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.active -= 1;
+        if st.waiters > st.handoff {
+            // Reserve the slot for one parked waiter and wake it.
+            st.handoff += 1;
+            self.cv.notify_one();
+        }
+    }
+
+    /// Are any threads parked waiting for a slot? (Cheap rotation check.)
+    fn has_waiters(&self) -> bool {
+        self.st.lock().unwrap().waiters > 0
+    }
+}
+
+thread_local! {
+    /// The gate of the pooled world this thread is a rank of, if any.
+    static GATE: RefCell<Option<Arc<RunGate>>> = const { RefCell::new(None) };
+}
+
+/// RAII registration of the current thread as a gated rank: installs the
+/// gate in thread-local storage and acquires a run slot; the drop releases
+/// the slot and uninstalls the gate.
+pub struct GateGuard {
+    gate: Arc<RunGate>,
+}
+
+/// Register the current thread with `gate` and acquire its first run slot.
+pub fn enter(gate: Arc<RunGate>) -> GateGuard {
+    gate.acquire();
+    GATE.with(|g| *g.borrow_mut() = Some(gate.clone()));
+    GateGuard { gate }
+}
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        GATE.with(|g| *g.borrow_mut() = None);
+        self.gate.release();
+    }
+}
+
+fn current_gate() -> Option<Arc<RunGate>> {
+    GATE.with(|g| g.borrow().clone())
+}
+
+/// Cooperative yield point for spin-wait loops. On an ungated thread
+/// (thread-per-rank mode, the progress service) this is a plain
+/// `yield_now`; on a gated rank it additionally hands the run slot to a
+/// parked waiter when one exists.
+#[inline]
+pub fn coop_yield() {
+    if let Some(gate) = current_gate() {
+        if gate.has_waiters() {
+            gate.release();
+            std::thread::yield_now();
+            gate.acquire();
+            return;
+        }
+    }
+    std::thread::yield_now();
+}
+
+/// Run `f` — a call that may park this thread in the kernel (condvar wait)
+/// — with the run slot released for the duration. Ungated threads just run
+/// `f`. Every kernel-blocking primitive of the simulator (mailbox matching,
+/// passive-target lock queues) is wrapped in this, which is what makes the
+/// gate deadlock-free: a parked thread never holds a slot.
+#[inline]
+pub fn blocking<R>(f: impl FnOnce() -> R) -> R {
+    match current_gate() {
+        None => f(),
+        Some(gate) => {
+            gate.release();
+            let r = f();
+            gate.acquire();
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn gate_bounds_concurrency() {
+        let gate = Arc::new(RunGate::new(2));
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let gate = gate.clone();
+            let live = live.clone();
+            handles.push(std::thread::spawn(move || {
+                let _g = enter(gate);
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                assert!(now <= 2, "gate admitted {now} > 2 threads");
+                std::thread::sleep(Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(gate.peak_active() <= 2);
+        assert_eq!(gate.st.lock().unwrap().active, 0);
+    }
+
+    #[test]
+    fn blocking_releases_slot() {
+        // One slot, two threads: A parks inside `blocking` on a condvar
+        // that only B (needing the slot) can signal. Without the release
+        // this deadlocks.
+        let gate = Arc::new(RunGate::new(1));
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let a = {
+            let gate = gate.clone();
+            let pair = pair.clone();
+            std::thread::spawn(move || {
+                let _g = enter(gate);
+                blocking(|| {
+                    let (m, cv) = &*pair;
+                    let mut done = m.lock().unwrap();
+                    while !*done {
+                        done = cv.wait(done).unwrap();
+                    }
+                });
+            })
+        };
+        let b = {
+            let gate = gate.clone();
+            let pair = pair.clone();
+            std::thread::spawn(move || {
+                let _g = enter(gate);
+                let (m, cv) = &*pair;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            })
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(gate.peak_active(), 1);
+    }
+
+    #[test]
+    fn coop_yield_rotates_to_waiters() {
+        // One slot: the holder spins in coop_yield; the waiter must still
+        // get the slot (hand-off beats barging).
+        let gate = Arc::new(RunGate::new(1));
+        let won = Arc::new(AtomicUsize::new(0));
+        let spinner = {
+            let gate = gate.clone();
+            let won = won.clone();
+            std::thread::spawn(move || {
+                let _g = enter(gate);
+                while won.load(Ordering::SeqCst) == 0 {
+                    coop_yield();
+                }
+            })
+        };
+        let waiter = {
+            let gate = gate.clone();
+            let won = won.clone();
+            std::thread::spawn(move || {
+                let _g = enter(gate);
+                won.store(1, Ordering::SeqCst);
+            })
+        };
+        waiter.join().unwrap();
+        spinner.join().unwrap();
+        assert_eq!(gate.peak_active(), 1);
+    }
+
+    #[test]
+    fn ungated_threads_pass_through() {
+        // No TLS gate installed: both helpers are plain calls.
+        coop_yield();
+        assert_eq!(blocking(|| 42), 42);
+    }
+}

@@ -15,9 +15,11 @@
 //! the paper's figures 8/9 and the bandwidth dip in figure 15.
 
 pub mod cost;
+pub mod exec;
 pub mod pinning;
 
 pub use cost::{CostModel, Protocol, TierCost};
+pub use exec::RunGate;
 pub use pinning::{pin_current_thread, PinPolicy};
 
 use std::fmt;

@@ -210,6 +210,8 @@ fn cost_model_shapes_latency_tiers() {
             cost: CostModel::hermit(),
             pin_os_threads: false,
             progress: dart::mpisim::ProgressMode::Caller,
+            exec: dart::mpisim::ExecMode::ThreadPerRank,
+            max_os_threads: 0,
         };
         World::run(cfg, |mpi| {
             let c = mpi.comm_world();

@@ -1,0 +1,86 @@
+//! Tier-1 scale smoke: a 256-unit world runs one barrier + allreduce +
+//! put/flush round under both execution modes, producing bit-identical
+//! results, with the pooled mode's concurrently runnable ranks bounded
+//! by the configured slot limit and the channel table staying sparse.
+
+use dart::dart::{run, DartConfig, UnitId, DART_TEAM_ALL};
+use dart::mpisim::{ExecMode, MpiOp};
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+
+const UNITS: usize = 256;
+const NODES: usize = 16;
+const RED: usize = 64;
+const PUT_BYTES: usize = 256;
+/// Slot limit for the pooled run — small enough that the bound bites
+/// (256 ranks contend for 8 slots) regardless of the host's core count.
+const SLOTS: usize = 8;
+
+/// What one round leaves behind (captured on unit 0).
+#[derive(Clone, Copy, Default, PartialEq, Debug)]
+struct Outcome {
+    red_first: u64,
+    red_last: u64,
+    ring_byte: u8,
+}
+
+fn round(exec: ExecMode) -> (Outcome, Option<(usize, usize)>, usize) {
+    let out = Mutex::new((Outcome::default(), None, 0usize));
+    let cfg = DartConfig::hermit(UNITS, NODES)
+        .with_pin(PinPolicy::ScatterNode)
+        .with_pools(1 << 14, 1 << 18)
+        .with_exec(exec, SLOTS);
+    run(cfg, |env| {
+        let n = env.size();
+        let me = env.myid() as usize;
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, PUT_BYTES as u64).unwrap();
+        let mine = vec![me as u64 + 1; RED];
+        let mut red = vec![0u64; RED];
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+        let src = vec![(me & 0xFF) as u8; PUT_BYTES];
+        let right = ((me + 1) % n) as UnitId;
+        env.put_async(g.with_unit(right), &src).unwrap();
+        env.flush_all(g).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let writer = (me + n - 1) % n;
+        let mut got = vec![0u8; PUT_BYTES];
+        env.local_read(g.with_unit(me as UnitId), &mut got).unwrap();
+        assert!(got.iter().all(|&b| b == (writer & 0xFF) as u8), "unit {me}: wrong ring bytes");
+        if me == 0 {
+            *out.lock().unwrap() = (
+                Outcome { red_first: red[0], red_last: red[RED - 1], ring_byte: got[0] },
+                env.exec_gate_stats(),
+                env.active_channels(),
+            );
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+#[test]
+fn smoke_256_units_both_exec_modes() {
+    let (per_rank, gate_tpr, _) = round(ExecMode::ThreadPerRank);
+    let (pooled, gate_pooled, channels) = round(ExecMode::Pooled);
+
+    // The allreduce over unit ids has a closed form — both modes must
+    // produce it exactly.
+    let expect = (UNITS as u64 * (UNITS as u64 + 1)) / 2;
+    assert_eq!(per_rank.red_first, expect);
+    assert_eq!(per_rank, pooled, "pooled world computed different results");
+
+    // Thread-per-rank has no gate; pooled respects its slot limit.
+    assert_eq!(gate_tpr, None);
+    let (limit, peak) = gate_pooled.expect("pooled world must expose gate stats");
+    assert_eq!(limit, SLOTS);
+    assert!(
+        (1..=SLOTS).contains(&peak),
+        "peak runnable {peak} outside [1, {SLOTS}] — the pool bound did not hold"
+    );
+
+    // Lazily-populated channels: a logarithmic round on 256 units must
+    // populate nowhere near the 65 536 eager pairs.
+    assert!(channels > 0 && channels < UNITS * UNITS / 8, "channel table not sparse: {channels}");
+}

@@ -65,6 +65,23 @@ SCHEMAS = {
         ],
         "other_keys": ["scenario", "placement", "mode"],
     },
+    "perf_scale": {
+        "top": ["bench", "reps", "max_units", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "nodes",
+            "reps",
+            "ops_per_sec",
+            "modelled_ns",
+            "wall_ms",
+            "node_crossings",
+            "active_channels",
+            "fastpath_ops",
+            "checksum",
+        ],
+        "other_keys": ["placement", "exec"],
+    },
 }
 
 
