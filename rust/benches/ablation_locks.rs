@@ -7,6 +7,14 @@
 //! waiter. The bench measures acquire+release round-trip throughput under
 //! increasing contention, plus fairness (spread of per-unit acquisition
 //! counts in a fixed time window).
+//!
+//! A second series asks the sharper question the atomics hot path poses:
+//! when the critical section is ONE shared-counter increment, what does
+//! mutual exclusion cost against doing the increment atomically at all
+//! three rungs of the ladder — MCS lock around a get/put read-modify-write,
+//! one `fetch_and_op(Sum)` round trip, and a deferred `accumulate` batch
+//! completed by a single flush? Every rung must read back the exact count
+//! `units × ops` (lock-free ≠ lossy), asserted after each run.
 
 use dart::bench_util::{fmt_ns, Samples};
 use dart::dart::{run, DartConfig, DART_TEAM_ALL};
@@ -85,6 +93,69 @@ fn bench_central_spin(units: usize) -> (f64, f64) {
     (total_ns.into_inner().unwrap().mean(), r)
 }
 
+/// The counter-increment ladder: every unit bumps one shared `u64` on
+/// unit 0 `INC_OPS` times under the given discipline; returns mean ns per
+/// increment. Each run asserts the final count is exactly
+/// `units × INC_OPS` — the lock-free rungs must not lose updates.
+fn bench_counter_inc(units: usize, discipline: &'static str) -> f64 {
+    const INC_OPS: usize = 200;
+    let total_ns = Mutex::new(Samples::new());
+    run(DartConfig::hermit(units, 1), |env| {
+        let counter = env.team_memalloc_aligned(DART_TEAM_ALL, 8).unwrap();
+        let c0 = counter.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
+        if env.team_myid(DART_TEAM_ALL).unwrap() == 0 {
+            env.local_write(c0, &0u64.to_ne_bytes()).unwrap();
+        }
+        let lock = (discipline == "mcs").then(|| env.lock_init(DART_TEAM_ALL).unwrap());
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let t = Instant::now();
+        match discipline {
+            "mcs" => {
+                let lock = lock.as_ref().unwrap();
+                for _ in 0..INC_OPS {
+                    env.lock_acquire(lock).unwrap();
+                    let mut cur = [0u8; 8];
+                    env.get_blocking(c0, &mut cur).unwrap();
+                    let next = u64::from_ne_bytes(cur) + 1;
+                    env.put_blocking(c0, &next.to_ne_bytes()).unwrap();
+                    env.lock_release(lock).unwrap();
+                }
+            }
+            "fetch_and_op" => {
+                for _ in 0..INC_OPS {
+                    env.fetch_and_op(c0, 1u64, MpiOp::Sum).unwrap();
+                }
+            }
+            _ => {
+                // Deferred accumulates: initiation is cheap, remote
+                // completion batches into ONE flush.
+                for _ in 0..INC_OPS {
+                    env.accumulate(c0, &[1u64], MpiOp::Sum).unwrap();
+                }
+                env.flush_all(c0).unwrap();
+            }
+        }
+        let ns = t.elapsed().as_nanos() as f64 / INC_OPS as f64;
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.team_myid(DART_TEAM_ALL).unwrap() == 0 {
+            let mut got = [0u8; 8];
+            env.local_read(c0, &mut got).unwrap();
+            assert_eq!(
+                u64::from_ne_bytes(got),
+                (units * INC_OPS) as u64,
+                "{discipline}: lost shared-counter increments"
+            );
+        }
+        total_ns.lock().unwrap().push(ns);
+        if let Some(lock) = lock {
+            env.lock_free(lock).unwrap();
+        }
+        env.team_memfree(DART_TEAM_ALL, counter).unwrap();
+    })
+    .unwrap();
+    total_ns.into_inner().unwrap().mean()
+}
+
 /// Fairness: per-unit acquisition counts in a fixed number of total ops.
 fn fairness_mcs(units: usize) -> (u64, u64) {
     let counts = Mutex::new(vec![0u64; units]);
@@ -123,6 +194,24 @@ fn main() {
             retries + 1.0
         );
     }
+    println!("\n==== Shared-counter increment — mutual exclusion vs doing it atomically ====");
+    println!(
+        "{:>7} {:>16} {:>18} {:>20}",
+        "units", "MCS+RMW (ns/op)", "fetch_and_op", "accumulate+1 flush"
+    );
+    for units in [2usize, 4, 8] {
+        let mcs = bench_counter_inc(units, "mcs");
+        let fao = bench_counter_inc(units, "fetch_and_op");
+        let acc = bench_counter_inc(units, "accumulate");
+        println!(
+            "{:>7} {:>16} {:>18} {:>20}",
+            units,
+            fmt_ns(mcs),
+            fmt_ns(fao),
+            fmt_ns(acc)
+        );
+    }
+
     let (lo, hi) = fairness_mcs(8);
     println!("\nMCS fairness (8 units): min/max acquisitions per unit = {lo}/{hi} (FIFO ⇒ equal)");
     println!("\nThe paper's future-work concern — all tails on unit 0 congest — is the");

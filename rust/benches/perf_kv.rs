@@ -1,0 +1,272 @@
+//! §KV — the lock-free atomics hot path under a zipfian key-value load.
+//!
+//! Drives `apps::kvstore` — millions of simulated GET/SET requests against
+//! one `dash::HashMap` — through its three write disciplines (lock-free
+//! CAS, MCS lock per bucket, owner-computes sharding) on a grid of
+//! placements and execution modes, writing `BENCH_kv.json`:
+//!
+//! - **placement** — `block` packs every unit on one node (all atomics
+//!   ride the intra-node CPU-atomic fast path) vs `scatter` round-robins
+//!   over 8 nodes (most traffic crosses the modelled interconnect);
+//! - **exec** — `thread-per-rank` vs `pooled` run-slot scheduling, which
+//!   must not change any result.
+//!
+//! Deterministic correctness gates, asserted here so CI catches atomicity
+//! regressions: all three backends (and both exec modes) produce the
+//! bit-identical final store checksum, the lock-free backend strictly
+//! outruns the MCS-lock backend on the contended mix, and block placement
+//! actually exercises the fast path (`atomic_fastpath_ops > 0`).
+
+use dart::apps::kvstore::{run_kv, KvBackend, KvConfig};
+use dart::bench_util::{fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::mpisim::ExecMode;
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured configuration (uniform row schema for the JSON).
+#[derive(Clone, Default)]
+struct Shot {
+    backend: &'static str,
+    placement: &'static str,
+    exec: &'static str,
+    units: u64,
+    /// Total operations per repetition (team-wide).
+    ops: u64,
+    /// Median throughput over the repetitions.
+    ops_per_sec: f64,
+    /// Modelled per-op latency percentiles (worst unit).
+    p50_ns: f64,
+    p95_ns: f64,
+    p99_ns: f64,
+    /// Lost CAS slot claims (team total, lock-free backend contention).
+    cas_retries: u64,
+    /// Runtime atomic ops issued during the run (team total).
+    atomic_ops: u64,
+    /// Atomics completed on the CPU-atomic fast path (team total).
+    fastpath_ops: u64,
+    /// Final store content checksum — the cross-backend oracle.
+    checksum: u64,
+    /// Median repetition wall-clock in ms.
+    wall_ms: f64,
+}
+
+fn cfg(units: usize, placement: &'static str, exec: ExecMode) -> DartConfig {
+    let (nodes, pin) = match placement {
+        "block" => (1, PinPolicy::Block),
+        _ => (8, PinPolicy::ScatterNode),
+    };
+    DartConfig::hermit(units, nodes)
+        .with_pin(pin)
+        .with_pools(1 << 16, 1 << 21)
+        .with_shmem_windows(true)
+        .with_exec(exec, 0)
+}
+
+fn kv_cfg(units: usize, quick: bool) -> KvConfig {
+    // Load factor stays ≤ 1/8 of total slots: keys ≤ capacity / 8.
+    let (keys, ops_per_unit) = if quick {
+        (256, 512)
+    } else if units >= 256 {
+        (4096, 4096)
+    } else {
+        (4096, 8192)
+    };
+    KvConfig {
+        keys,
+        ops_per_unit,
+        get_percent: 75,
+        zipf_exponent: 0.99,
+        seed: 0x5EED_CAFE ^ units as u64,
+        slots_per_unit: ((keys * 8).div_ceil(units)).max(64),
+        locks: 64,
+        flush_every: 32,
+        team: DART_TEAM_ALL,
+    }
+}
+
+fn exec_label(exec: ExecMode) -> &'static str {
+    match exec {
+        ExecMode::ThreadPerRank => "thread-per-rank",
+        ExecMode::Pooled => "pooled",
+    }
+}
+
+fn measure(
+    units: usize,
+    placement: &'static str,
+    exec: ExecMode,
+    backend: KvBackend,
+    reps: usize,
+) -> Shot {
+    let kv = kv_cfg(units, quick_mode());
+    let out = Mutex::new(Shot::default());
+    run(cfg(units, placement, exec), |env| {
+        let mut s = Samples::new();
+        let mut shot = Shot::default();
+        for rep in 0..reps {
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let t = Instant::now();
+            let report = run_kv(env, &kv, backend).unwrap();
+            let wall = t.elapsed();
+            s.push(wall.as_secs_f64() * 1e3);
+            if env.myid() == 0 {
+                if rep > 0 {
+                    assert_eq!(
+                        shot.checksum, report.checksum,
+                        "{}/{placement}: checksum changed between repetitions",
+                        backend.label()
+                    );
+                }
+                shot = Shot {
+                    backend: backend.label(),
+                    placement,
+                    exec: exec_label(exec),
+                    units: units as u64,
+                    ops: report.ops,
+                    ops_per_sec: 0.0,
+                    p50_ns: report.p50_ns,
+                    p95_ns: report.p95_ns,
+                    p99_ns: report.p99_ns,
+                    cas_retries: report.cas_retries,
+                    atomic_ops: report.atomic_ops,
+                    fastpath_ops: report.atomic_fastpath_ops,
+                    checksum: report.checksum,
+                    wall_ms: 0.0,
+                };
+            }
+        }
+        if env.myid() == 0 {
+            shot.wall_ms = s.median();
+            shot.ops_per_sec = shot.ops as f64 / (s.median() / 1e3);
+            *out.lock().unwrap() = shot;
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"backend\":\"{}\",\"placement\":\"{}\",\"exec\":\"{}\",\"units\":{},\"ops\":{},\
+         \"ops_per_sec\":{:.1},\"p50_ns\":{:.1},\"p95_ns\":{:.1},\"p99_ns\":{:.1},\
+         \"cas_retries\":{},\"atomic_ops\":{},\"fastpath_ops\":{},\"checksum\":{},\
+         \"wall_ms\":{:.3}}}",
+        s.backend,
+        s.placement,
+        s.exec,
+        s.units,
+        s.ops,
+        s.ops_per_sec,
+        s.p50_ns,
+        s.p95_ns,
+        s.p99_ns,
+        s.cas_retries,
+        s.atomic_ops,
+        s.fastpath_ops,
+        s.checksum,
+        s.wall_ms
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let unit_grid: &[usize] = if quick { &[8] } else { &[64, 256] };
+    let max_units = *unit_grid.last().unwrap();
+    println!("==== §KV — lock-free vs MCS-lock vs owner-computes key-value store ====");
+
+    let mut shots = Vec::new();
+    for &units in unit_grid {
+        for placement in ["block", "scatter"] {
+            for exec in [ExecMode::ThreadPerRank, ExecMode::Pooled] {
+                for backend in KvBackend::ALL {
+                    shots.push(measure(units, placement, exec, backend, reps));
+                }
+            }
+        }
+    }
+
+    println!(
+        "\n{:>6} {:>8} {:>16} {:>6} {:>14} {:>10} {:>10} {:>12} {:>10}",
+        "bkend", "place", "exec", "units", "ops/s", "p50", "p99", "cas_retry", "fastpath"
+    );
+    for s in &shots {
+        println!(
+            "{:>6} {:>8} {:>16} {:>6} {:>14.0} {:>10} {:>10} {:>12} {:>10}",
+            s.backend,
+            s.placement,
+            s.exec,
+            s.units,
+            s.ops_per_sec,
+            fmt_ns(s.p50_ns),
+            fmt_ns(s.p99_ns),
+            s.cas_retries,
+            s.fastpath_ops
+        );
+    }
+
+    // --- correctness gates (deterministic — safe to assert in CI) -------
+    // 1. The final store contents are a pure function of the op streams:
+    //    every backend, placement, and exec mode at one unit count must
+    //    agree bit-for-bit.
+    for &units in unit_grid {
+        let group: Vec<&Shot> = shots.iter().filter(|s| s.units == units as u64).collect();
+        for s in &group[1..] {
+            assert_eq!(
+                group[0].checksum, s.checksum,
+                "{units} units: {}/{}/{} disagrees with {}/{}/{} on the final store",
+                s.backend, s.placement, s.exec, group[0].backend, group[0].placement,
+                group[0].exec
+            );
+        }
+    }
+    // 2. Lock-free beats the MCS-lock discipline on the contended mix, in
+    //    every cell of the grid.
+    for mcs in shots.iter().filter(|s| s.backend == "mcs") {
+        let cas = shots
+            .iter()
+            .find(|s| {
+                s.backend == "cas"
+                    && s.placement == mcs.placement
+                    && s.exec == mcs.exec
+                    && s.units == mcs.units
+            })
+            .unwrap();
+        assert!(
+            cas.ops_per_sec > mcs.ops_per_sec,
+            "{}/{}/{} units: lock-free {} ops/s did not beat MCS {} ops/s",
+            mcs.placement,
+            mcs.exec,
+            mcs.units,
+            cas.ops_per_sec,
+            mcs.ops_per_sec
+        );
+        println!(
+            "{:>8}/{:<16} {:>4} units: lock-free/MCS speedup {:.2}×",
+            mcs.placement,
+            mcs.exec,
+            mcs.units,
+            cas.ops_per_sec / mcs.ops_per_sec
+        );
+    }
+    // 3. Single-node placement actually exercises the CPU-atomic fast path.
+    for s in shots.iter().filter(|s| s.backend == "cas" && s.placement == "block") {
+        assert!(
+            s.fastpath_ops > 0,
+            "block placement issued no fast-path atomics ({}/{} units)",
+            s.exec,
+            s.units
+        );
+    }
+
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_kv\",\"reps\":{reps},\"max_units\":{max_units},\"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_kv.json", format!("{json}\n")).expect("write BENCH_kv.json");
+    println!("\nwrote BENCH_kv.json");
+}

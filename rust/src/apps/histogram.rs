@@ -5,20 +5,18 @@
 //! real histograms are skewed: round-robin bins spread the hot bins over
 //! the team instead of concentrating them on one owner).
 //!
-//! Accumulation is **lock-free** in the classic reduction shape: each
-//! unit fills a private full-width partial, ONE `allreduce` combines
-//! them, and each unit then writes only *its own* bins of the reduced
-//! result through the owner-computes local view — zero one-sided traffic
-//! and zero lock acquisitions, versus `bins × units` remote atomic
-//! `accumulate`s for the naive PGAS formulation.
-//!
-//! On multi-node launches with
-//! [`crate::dart::DartConfig::hierarchical_collectives`] enabled, that
-//! allreduce is the **hierarchical two-level** one: node partials combine
-//! intra-node first and cross the interconnect once per node, not once
-//! per unit — the app-level win the `perf_locality` bench measures
-//! (counts are `u64`, so the hierarchical result is bit-identical to the
-//! flat one).
+//! Accumulation is **lock-free** in two stages: each unit first fills a
+//! private full-width partial (plain local adds), then publishes every
+//! non-empty bin with one deferred atomic
+//! [`crate::dash::Array::accumulate`] — the engine's `accumulate_async`
+//! hot path — and completes the whole combine phase with ONE
+//! [`crate::dash::Array::flush`]. No locks, no per-op round trips, and
+//! same-node bins complete via the CPU-atomic fast path; counts are
+//! `u64`, so the result is exact and identical on every path. (The
+//! previous formulation combined partials with an `allreduce` and
+//! owner-computes publication; the atomic formulation sends only the
+//! non-empty bins, which for skewed streams is far less traffic, and it
+//! exercises the runtime's atomic hot path.)
 //!
 //! The final counts are verified with the owner-computes algorithms:
 //! [`crate::dash::algorithms::sum`] must equal the total sample count and
@@ -88,26 +86,23 @@ pub fn run_distributed(env: &DartEnv, cfg: &HistogramConfig) -> DartResult<Histo
     let me = env.team_myid(team)?;
     let hist: Array<'_, u64> = Array::cyclic(env, team, cfg.bins)?;
 
-    // --- lock-free accumulation: private partial, one allreduce.
+    // --- lock-free accumulation: private partial, then one deferred
+    // atomic accumulate per non-empty bin and a single flush. Exact for
+    // u64 counts regardless of interleaving; same-node bins ride the
+    // CPU-atomic fast path.
     let mut partial = vec![0u64; cfg.bins];
     let mut rng = Rng::new(cfg.seed ^ me as u64);
     for _ in 0..cfg.items_per_unit {
         partial[bin_of(rng.next_u64(), cfg.bins)] += 1;
     }
-    let mut reduced = vec![0u64; cfg.bins];
-    // Rides the hierarchical two-level path on multi-node launches with
-    // `DartConfig::hierarchical_collectives` on (one interconnect crossing
-    // per node); bit-identical either way for u64 sums.
-    env.allreduce(team, &partial, &mut reduced, crate::mpisim::MpiOp::Sum)?;
-
-    // --- owner-computes publication: each unit writes only its own bins.
-    let pat = *hist.pattern();
-    hist.with_local(|local| {
-        for (l, slot) in local.iter_mut().enumerate() {
-            *slot = reduced[pat.local_to_global(me, l)];
+    for (g, &count) in partial.iter().enumerate() {
+        if count != 0 {
+            hist.accumulate(g, count, crate::mpisim::MpiOp::Sum)?;
         }
-    })?;
+    }
+    hist.flush()?;
     env.barrier(team)?;
+    let pat = *hist.pattern();
 
     // --- verification through the algorithms layer (replicated results).
     let total = algorithms::sum(&hist)?;

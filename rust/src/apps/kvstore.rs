@@ -1,0 +1,365 @@
+//! Distributed key-value store — the atomics hot path's stress workload.
+//!
+//! Every unit replays a seeded **zipfian** GET/SET mix (hot keys are
+//! genuinely hot, like real caches) against one shared
+//! [`crate::dash::HashMap`], through three interchangeable write
+//! disciplines over the *same* storage layout:
+//!
+//! - [`KvBackend::CasLockFree`] — the lock-free hot path:
+//!   `compare_and_swap` slot claims plus deferred `accumulate_async`
+//!   publication, flushed every [`KvConfig::flush_every`] writes;
+//! - [`KvBackend::McsLockPerBucket`] — SETs serialize on a stripe of MCS
+//!   queue locks ([`crate::dart::DartEnv::lock_init`], paper §IV-B6)
+//!   covering the key's bucket, then use plain read-modify-write
+//!   ([`crate::dash::HashMap::put_exclusive`]); GETs stay lock-free;
+//! - [`KvBackend::OwnerShards`] — owner-computes sharding: units batch
+//!   requests by consistent-hash owner, ship them with the runtime's
+//!   eager messages, and owners apply plain local operations
+//!   ([`crate::dash::HashMap::local_put`]).
+//!
+//! SET values are a pure function of the key ([`value_of`]), so the final
+//! store contents depend only on *which* keys were set — never on the
+//! interleaving — and all three backends must agree on
+//! [`crate::dash::HashMap::content_checksum`]. That equality is this
+//! app's correctness oracle (asserted by the tests and the `perf_kv`
+//! bench); the bench additionally times the backends against each other
+//! under contention.
+
+use crate::dart::{DartEnv, DartErr, DartLock, DartResult, TeamId, DART_TEAM_ALL};
+use crate::dash::HashMap;
+use crate::mpisim::as_bytes;
+use crate::testing::prop::Rng;
+
+/// Message tag for owner-computes request batches.
+const TAG_KV_REQ: i32 = 7001;
+/// Message tag for owner-computes GET-reply batches.
+const TAG_KV_REP: i32 = 7002;
+
+/// Request word 0 of a GET.
+const OP_GET: u64 = 0;
+/// Request word 0 of a SET.
+const OP_SET: u64 = 1;
+
+/// The write discipline a run drives the store with (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvBackend {
+    /// Lock-free CAS claims + deferred atomic publication.
+    CasLockFree,
+    /// MCS stripe lock per bucket around plain read-modify-write SETs.
+    McsLockPerBucket,
+    /// Owner-computes sharding over eager messages.
+    OwnerShards,
+}
+
+impl KvBackend {
+    /// All backends, in the order benches and tests sweep them.
+    pub const ALL: [KvBackend; 3] =
+        [KvBackend::CasLockFree, KvBackend::McsLockPerBucket, KvBackend::OwnerShards];
+
+    /// Stable short name (bench JSON rows, test labels).
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvBackend::CasLockFree => "cas",
+            KvBackend::McsLockPerBucket => "mcs",
+            KvBackend::OwnerShards => "owner",
+        }
+    }
+}
+
+/// Parameters of a key-value store run.
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    /// Distinct keys in the universe (keys are `0..keys`; index 0 is the
+    /// zipfian-hottest).
+    pub keys: usize,
+    /// Operations each unit issues.
+    pub ops_per_unit: usize,
+    /// Share of GETs in the mix, `0..=100`.
+    pub get_percent: u32,
+    /// Zipf exponent `s` (popularity ∝ `1/(rank+1)^s`; 0 = uniform).
+    pub zipf_exponent: f64,
+    /// Stream seed (unit `u` draws from `seed ^ u`).
+    pub seed: u64,
+    /// Requested hashmap slots per unit (sized for load factor ≤ 1/8 in
+    /// the shipped configs; buckets overflow past ~16 colliding keys).
+    pub slots_per_unit: usize,
+    /// MCS lock stripes (only the `McsLockPerBucket` backend allocates
+    /// them).
+    pub locks: usize,
+    /// `CasLockFree` flush cadence: complete deferred publications every
+    /// this many SETs (plus one final flush).
+    pub flush_every: usize,
+    /// Team the run is collective over.
+    pub team: TeamId,
+}
+
+impl KvConfig {
+    /// A small default mix over `DART_TEAM_ALL`: 75% GETs over 256 hot
+    /// keys, zipf 0.99 — the classic cache-workload shape.
+    pub fn quick(ops_per_unit: usize) -> Self {
+        KvConfig {
+            keys: 256,
+            ops_per_unit,
+            get_percent: 75,
+            zipf_exponent: 0.99,
+            seed: 0x5EED_CAFE,
+            slots_per_unit: 512,
+            locks: 64,
+            flush_every: 32,
+            team: DART_TEAM_ALL,
+        }
+    }
+}
+
+/// Team-aggregated result of a run (identical on every unit).
+#[derive(Debug, Clone)]
+pub struct KvReport {
+    /// Total operations issued across the team.
+    pub ops: u64,
+    /// SETs issued.
+    pub sets: u64,
+    /// GETs issued.
+    pub gets: u64,
+    /// GETs that found their key.
+    pub hits: u64,
+    /// Lost `compare_and_swap` slot claims (lock-free backend contention).
+    pub cas_retries: u64,
+    /// Runtime atomic operations issued during the run
+    /// ([`crate::dart::Metrics::atomic_ops`] delta, team sum).
+    pub atomic_ops: u64,
+    /// Atomics completed on the intra-node CPU-atomic fast path
+    /// ([`crate::dart::Metrics::atomic_fastpath_ops`] delta, team sum).
+    pub atomic_fastpath_ops: u64,
+    /// Canonical final-content checksum — must be identical across
+    /// backends and execution modes for the same config.
+    pub checksum: u64,
+    /// Median modelled per-operation latency, team-max of the per-unit
+    /// percentiles (ns). For the batched owner-computes backend the whole
+    /// exchange is amortized uniformly over its operations.
+    pub p50_ns: f64,
+    /// 95th-percentile modelled per-operation latency (ns, team-max).
+    pub p95_ns: f64,
+    /// 99th-percentile modelled per-operation latency (ns, team-max).
+    pub p99_ns: f64,
+}
+
+/// The value a SET of `key` always writes — a pure function of the key
+/// (splitmix64 finalizer), so final contents are interleaving-free.
+pub fn value_of(key: u64) -> u64 {
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Zipfian sampler over `0..n` via a precomputed normalized CDF.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        // 53 uniform mantissa bits → u ∈ [0, 1).
+        let u = (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// One drawn operation: `(key, is_get)`. The draw order is fixed so every
+/// backend replays the identical stream.
+fn draw(zipf: &Zipf, rng: &mut Rng, get_percent: u32) -> (u64, bool) {
+    let key = zipf.sample(rng) as u64;
+    let is_get = rng.below(100) < get_percent as usize;
+    (key, is_get)
+}
+
+/// Run the key-value workload through `backend`. Collective over
+/// `cfg.team`; every unit gets the same [`KvReport`].
+pub fn run_kv(env: &DartEnv, cfg: &KvConfig, backend: KvBackend) -> DartResult<KvReport> {
+    if cfg.keys == 0 || cfg.ops_per_unit == 0 {
+        return Err(DartErr::Invalid("kvstore needs keys > 0 and ops > 0".into()));
+    }
+    if cfg.get_percent > 100 {
+        return Err(DartErr::Invalid("kvstore get_percent must be 0..=100".into()));
+    }
+    if cfg.locks == 0 || cfg.flush_every == 0 {
+        return Err(DartErr::Invalid("kvstore needs locks > 0 and flush_every > 0".into()));
+    }
+    let team = cfg.team;
+    let me = env.team_myid(team)?;
+    let atomic_ops0 = env.metrics.atomic_ops.get();
+    let fastpath0 = env.metrics.atomic_fastpath_ops.get();
+
+    let map: HashMap<'_, u64, u64> = HashMap::new(env, team, cfg.slots_per_unit)?;
+    // Lock stripes exist only for the MCS backend; lock_init is collective,
+    // so the decision must be config-driven (identical on every member).
+    let locks: Vec<DartLock> = if backend == KvBackend::McsLockPerBucket {
+        (0..cfg.locks).map(|_| env.lock_init(team)).collect::<DartResult<_>>()?
+    } else {
+        Vec::new()
+    };
+    env.barrier(team)?;
+
+    let zipf = Zipf::new(cfg.keys, cfg.zipf_exponent);
+    let mut rng = Rng::new(cfg.seed ^ me as u64);
+    let (mut sets, mut gets, mut hits) = (0u64, 0u64, 0u64);
+    let mut lat = crate::bench_util::Samples::new();
+
+    match backend {
+        KvBackend::CasLockFree => {
+            for _ in 0..cfg.ops_per_unit {
+                let (key, is_get) = draw(&zipf, &mut rng, cfg.get_percent);
+                let t = std::time::Instant::now();
+                if is_get {
+                    gets += 1;
+                    if map.get(key)?.is_some() {
+                        hits += 1;
+                    }
+                } else {
+                    sets += 1;
+                    map.put(key, value_of(key))?;
+                    if sets % cfg.flush_every as u64 == 0 {
+                        map.flush()?;
+                    }
+                }
+                lat.push(t.elapsed().as_nanos() as f64);
+            }
+            map.flush()?;
+        }
+        KvBackend::McsLockPerBucket => {
+            for _ in 0..cfg.ops_per_unit {
+                let (key, is_get) = draw(&zipf, &mut rng, cfg.get_percent);
+                let t = std::time::Instant::now();
+                if is_get {
+                    gets += 1;
+                    if map.get(key)?.is_some() {
+                        hits += 1;
+                    }
+                } else {
+                    sets += 1;
+                    let stripe = &locks[map.lock_index(key, cfg.locks)];
+                    env.lock_acquire(stripe)?;
+                    let res = map.put_exclusive(key, value_of(key));
+                    env.lock_release(stripe)?;
+                    res?;
+                }
+                lat.push(t.elapsed().as_nanos() as f64);
+            }
+        }
+        KvBackend::OwnerShards => {
+            let p = env.team_size(team)?;
+            let comm = env.team_comm(team)?;
+            let t_exchange = std::time::Instant::now();
+            // Partition my stream by owner: request batches of
+            // [kind, key] word pairs, in issue order.
+            let mut reqs: Vec<Vec<u64>> = vec![Vec::new(); p];
+            for _ in 0..cfg.ops_per_unit {
+                let (key, is_get) = draw(&zipf, &mut rng, cfg.get_percent);
+                let kind = if is_get {
+                    gets += 1;
+                    OP_GET
+                } else {
+                    sets += 1;
+                    OP_SET
+                };
+                reqs[map.owner_of(key)].extend_from_slice(&[kind, key]);
+            }
+            // Eager sends never block, so send-all-then-serve is
+            // deadlock-free (self included: the mailbox loops back).
+            for (r, batch) in reqs.iter().enumerate() {
+                comm.send(as_bytes(batch), r, TAG_KV_REQ)?;
+            }
+            // Serve every requester's batch with owner-local operations,
+            // replying [found, value] per GET in request order.
+            for r in 0..p {
+                let (data, _) = comm.recv_vec(r, TAG_KV_REQ)?;
+                let words: Vec<u64> = data
+                    .chunks_exact(8)
+                    .map(|c| u64::from_ne_bytes(c.try_into().unwrap()))
+                    .collect();
+                let mut replies: Vec<u64> = Vec::new();
+                for op in words.chunks_exact(2) {
+                    let (kind, key) = (op[0], op[1]);
+                    if kind == OP_SET {
+                        map.local_put(key, value_of(key))?;
+                    } else {
+                        match map.local_get(key)? {
+                            Some(v) => replies.extend_from_slice(&[1, v]),
+                            None => replies.extend_from_slice(&[0, 0]),
+                        }
+                    }
+                }
+                comm.send(as_bytes(&replies), r, TAG_KV_REP)?;
+            }
+            // Collect my GET replies.
+            for r in 0..p {
+                let (data, _) = comm.recv_vec(r, TAG_KV_REP)?;
+                for rep in data.chunks_exact(16) {
+                    if u64::from_ne_bytes(rep[..8].try_into().unwrap()) == 1 {
+                        hits += 1;
+                    }
+                }
+            }
+            // Batched design: per-op latency is the exchange amortized
+            // uniformly over the ops it carried.
+            let per_op = t_exchange.elapsed().as_nanos() as f64 / cfg.ops_per_unit as f64;
+            for _ in 0..cfg.ops_per_unit {
+                lat.push(per_op);
+            }
+        }
+    }
+
+    map.flush()?;
+    env.barrier(team)?;
+    let checksum = map.content_checksum()?;
+    let cas_retries = map.cas_retries();
+
+    // Team-aggregate the per-unit tallies (order-independent sums).
+    let local = [
+        cfg.ops_per_unit as u64,
+        sets,
+        gets,
+        hits,
+        cas_retries,
+        env.metrics.atomic_ops.get() - atomic_ops0,
+        env.metrics.atomic_fastpath_ops.get() - fastpath0,
+    ];
+    let mut total = [0u64; 7];
+    env.allreduce(team, &local, &mut total, crate::mpisim::MpiOp::Sum)?;
+    // Worst-unit latency percentiles (max is the conservative aggregate
+    // for a latency SLO, and it replicates the values on every unit).
+    let my_lat = [lat.percentile(50.0), lat.percentile(95.0), lat.percentile(99.0)];
+    let mut team_lat = [0f64; 3];
+    env.allreduce(team, &my_lat, &mut team_lat, crate::mpisim::MpiOp::Max)?;
+
+    for lock in locks {
+        env.lock_free(lock)?;
+    }
+    map.free()?;
+    Ok(KvReport {
+        ops: total[0],
+        sets: total[1],
+        gets: total[2],
+        hits: total[3],
+        cas_retries: total[4],
+        atomic_ops: total[5],
+        atomic_fastpath_ops: total[6],
+        checksum,
+        p50_ns: team_lat[0],
+        p95_ns: team_lat[1],
+        p99_ns: team_lat[2],
+    })
+}

@@ -6,6 +6,7 @@
 //! communication (L3) around AOT JAX/Pallas compute artifacts (L2/L1).
 
 pub mod histogram;
+pub mod kvstore;
 pub mod matmul;
 pub mod stencil;
 pub mod stencil2d;

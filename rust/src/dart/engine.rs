@@ -52,7 +52,7 @@
 
 use super::gptr::{GlobalPtr, TeamId, UnitId};
 use super::{DartEnv, DartErr, DartResult};
-use crate::mpisim::{ProgressMode, VectorType, Win};
+use crate::mpisim::{as_bytes, HasMpiType, MpiOp, ProgressMode, VectorType, Win};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
@@ -362,6 +362,51 @@ impl DartEnv {
         self.register_async(dst.len() as u64, at, win_id, target);
         self.metrics.gets.bump();
         self.metrics.bytes.add(dst.len() as u64);
+        Ok(())
+    }
+
+    /// `dart_accumulate` in deferred-completion mode: element-wise atomic
+    /// `target := target (op) src`, initiated like [`DartEnv::put_async`]
+    /// — one engine registration, remote completion deferred to the next
+    /// covering [`DartEnv::flush`]/[`DartEnv::flush_all`] (or to the
+    /// progress engine). The update is applied with lock-free per-element
+    /// CPU atomics ([`crate::mpisim::atomics`]), so concurrent accumulates
+    /// from many units to the same element never lose updates, and
+    /// accumulates to *different* elements never contend.
+    ///
+    /// On the locality fast path (shmem window + same-node target) the CPU
+    /// atomic IS the whole operation: it completes in place, skips the
+    /// pending list and the engine, and is counted in
+    /// [`super::Metrics::atomic_fastpath_ops`]. Results are bit-identical
+    /// to the modelled path by construction — both funnel through the same
+    /// atomic primitive; only the modelled completion time differs.
+    pub fn accumulate_async<T: HasMpiType>(
+        &self,
+        gptr: GlobalPtr,
+        src: &[T],
+        op: MpiOp,
+    ) -> DartResult<()> {
+        self.poll_if_polling();
+        let bytes = std::mem::size_of_val(src) as u64;
+        let fastpath = self.config().locality_fastpath;
+        let issued = self.with_win(gptr, |win, target, disp| {
+            if fastpath && win.is_shmem_local(target) {
+                win.accumulate_direct(as_bytes(src), target, disp as usize, op, T::MPI_TYPE)?;
+                Ok(None)
+            } else {
+                Ok(Some((
+                    win.accumulate(as_bytes(src), target, disp as usize, op, T::MPI_TYPE)?,
+                    win.id(),
+                    target,
+                )))
+            }
+        })?;
+        match issued {
+            Some((at, win_id, target)) => self.register_async(bytes, at, win_id, target),
+            None => self.metrics.atomic_fastpath_ops.bump(),
+        }
+        self.metrics.atomic_ops.bump();
+        self.metrics.atomic_bytes.add(bytes);
         Ok(())
     }
 

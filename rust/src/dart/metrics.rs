@@ -123,6 +123,16 @@ pub struct Metrics {
     /// bypassed the deferred-completion queue entirely — no progress-engine
     /// registration, nothing for a flush to wait on.
     pub locality_fastpath_ops: Counter,
+    /// Atomic operations issued (`accumulate`/`accumulate_async`/
+    /// `fetch_and_op`/`compare_and_swap`), any path.
+    pub atomic_ops: Counter,
+    /// Atomic operations completed via the intra-node CPU-atomic fast path
+    /// (shmem window + same-node target): the hardware atomic was the
+    /// whole operation — no modelled round trip, no engine registration.
+    pub atomic_fastpath_ops: Counter,
+    /// Bytes touched by atomic operations (operand bytes, not counted in
+    /// [`Metrics::bytes`]).
+    pub atomic_bytes: Counter,
     /// Live entries in the segment-resolution cache (current + peak) —
     /// the scale satellite's visibility into cache growth across hundreds
     /// of live segments. Updated at insert and invalidation points.
@@ -143,7 +153,7 @@ impl fmt::Display for Metrics {
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
              coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={} \
-             seg_cache={}/{}",
+             atomics={} atomic_fast={} atomic_bytes={} seg_cache={}/{}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -164,6 +174,9 @@ impl fmt::Display for Metrics {
             self.hier_coll_intra_ops.get(),
             self.hier_coll_inter_ops.get(),
             self.locality_fastpath_ops.get(),
+            self.atomic_ops.get(),
+            self.atomic_fastpath_ops.get(),
+            self.atomic_bytes.get(),
             self.seg_cache_size.get(),
             self.seg_cache_size.peak()
         )

@@ -189,38 +189,79 @@ impl DartEnv {
 
     /// `dart_accumulate`-style atomic element-wise update (MPI-3
     /// `MPI_Accumulate` under the hood).
+    ///
+    /// Deferred-completion, like [`DartEnv::put`]: the update is applied
+    /// atomically and is immediately visible to other atomics, but remote
+    /// completion (in the modelled-time sense) is deferred to the next
+    /// covering [`DartEnv::flush`]/[`DartEnv::flush_all`] — so a phase of
+    /// many accumulates pays **one** completion call, not one per op. For
+    /// the old accumulate-then-flush semantics use
+    /// [`DartEnv::accumulate_blocking`].
     pub fn accumulate<T: HasMpiType>(
         &self,
         gptr: GlobalPtr,
         src: &[T],
         op: MpiOp,
     ) -> DartResult<()> {
-        let (win, target, disp) = self.deref_gptr(gptr)?;
-        win.accumulate(as_bytes(src), target, disp as usize, op, T::MPI_TYPE)?;
-        win.flush(target)?;
-        Ok(())
+        self.accumulate_async(gptr, src, op)
+    }
+
+    /// Blocking accumulate: [`DartEnv::accumulate_async`] + a flush of the
+    /// target's segment — returns only once the op is remotely complete.
+    pub fn accumulate_blocking<T: HasMpiType>(
+        &self,
+        gptr: GlobalPtr,
+        src: &[T],
+        op: MpiOp,
+    ) -> DartResult<()> {
+        self.accumulate_async(gptr, src, op)?;
+        self.flush(gptr)
     }
 
     /// Atomic fetch-and-op on a single `T` (exposed for lock-free
-    /// algorithms beyond the built-in lock; paper §IV-B6).
+    /// algorithms beyond the built-in lock; paper §IV-B6). Synchronous —
+    /// the old value must travel back — but on the locality fast path
+    /// (shmem window + same-node target) the round trip collapses into one
+    /// CPU atomic with no modelled wire time.
     pub fn fetch_and_op<T: HasMpiType>(
         &self,
         gptr: GlobalPtr,
         value: T,
         op: MpiOp,
     ) -> DartResult<T> {
-        let (win, target, disp) = self.deref_gptr(gptr)?;
-        Ok(win.fetch_and_op_with(value, target, disp as usize, op)?)
+        let fastpath = self.config().locality_fastpath;
+        let old = self.with_win(gptr, |win, target, disp| {
+            if fastpath && win.is_shmem_local(target) {
+                self.metrics.atomic_fastpath_ops.bump();
+                Ok(win.fetch_and_op_direct(value, target, disp as usize, op)?)
+            } else {
+                Ok(win.fetch_and_op_with(value, target, disp as usize, op)?)
+            }
+        })?;
+        self.metrics.atomic_ops.bump();
+        self.metrics.atomic_bytes.add(std::mem::size_of::<T>() as u64);
+        Ok(old)
     }
 
-    /// Atomic compare-and-swap on a single `T`.
+    /// Atomic compare-and-swap on a single `T`. Synchronous, with the same
+    /// locality fast path as [`DartEnv::fetch_and_op`].
     pub fn compare_and_swap<T: HasMpiType + PartialEq>(
         &self,
         gptr: GlobalPtr,
         compare: T,
         value: T,
     ) -> DartResult<T> {
-        let (win, target, disp) = self.deref_gptr(gptr)?;
-        Ok(win.compare_and_swap(compare, value, target, disp as usize)?)
+        let fastpath = self.config().locality_fastpath;
+        let old = self.with_win(gptr, |win, target, disp| {
+            if fastpath && win.is_shmem_local(target) {
+                self.metrics.atomic_fastpath_ops.bump();
+                Ok(win.compare_and_swap_direct(compare, value, target, disp as usize)?)
+            } else {
+                Ok(win.compare_and_swap(compare, value, target, disp as usize)?)
+            }
+        })?;
+        self.metrics.atomic_ops.bump();
+        self.metrics.atomic_bytes.add(std::mem::size_of::<T>() as u64);
+        Ok(old)
     }
 }

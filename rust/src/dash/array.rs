@@ -25,7 +25,7 @@
 use super::pattern::Pattern;
 use crate::dart::gptr::{GlobalPtr, TeamId, UnitId};
 use crate::dart::{DartEnv, DartErr, DartResult, Element};
-use crate::mpisim::{as_bytes, as_bytes_mut};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
 use std::marker::PhantomData;
 
 /// A typed distributed 1-D array (see module docs).
@@ -163,6 +163,25 @@ impl<'e, T: Element> Array<'e, T> {
         self.check_range(g, 1)?;
         let (u, l) = self.pattern.global_to_local(g);
         self.env.put_blocking(self.gptr_of(u, l), as_bytes(&[value]))
+    }
+
+    /// Atomic element-wise update: `a[g] := a[g] (op) value`, lock-free
+    /// and deferred ([`crate::dart::DartEnv::accumulate_async`]) — many
+    /// units may accumulate into the same element concurrently without
+    /// losing updates, and a phase of accumulates completes with ONE
+    /// [`Array::flush`] instead of per-op round trips. Same-node targets
+    /// complete via the CPU-atomic fast path.
+    pub fn accumulate(&self, g: usize, value: T, op: MpiOp) -> DartResult<()> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.accumulate_async(self.gptr_of(u, l), &[value], op)
+    }
+
+    /// Complete every outstanding deferred operation on this array's
+    /// allocation (puts/gets from the bulk tier, accumulates) — one call
+    /// per phase, the engine's explicit-flush discipline.
+    pub fn flush(&self) -> DartResult<()> {
+        self.env.flush_all(self.gptr)
     }
 
     /// Bulk write: scatter `src` into the global range

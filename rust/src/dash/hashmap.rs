@@ -1,0 +1,499 @@
+//! `HashMap<K, V>` — a distributed key-value map over DART global memory,
+//! with a **lock-free** insert/update hot path on the runtime's MPI-3
+//! atomics (the primitives the paper exposes in §IV-B6 precisely so
+//! applications can avoid serializing on mutexes).
+//!
+//! Layout: one symmetric collective allocation per team member holding
+//! `slots_per_unit` **slots** of three `u64` words — `[tag, key, value]`
+//! (24 bytes). A slot is EMPTY while its tag word is zero; an occupied
+//! slot's tag is the key's **fingerprint** (a 64-bit hash with the top
+//! bit forced, so it can never read as EMPTY). Slots are grouped into
+//! **buckets** of [`BUCKET_SLOTS`] and probing is *bucket-confined*: a
+//! key probes only its own bucket's slots, in a fixed order. That keeps
+//! every access O(bucket), and — crucially for the locks-vs-atomics
+//! ablation — it means one lock per bucket really covers every slot an
+//! operation under that lock can touch.
+//!
+//! Routing is **consistent hashing**: each team member contributes
+//! [`VNODES`] points on a 64-bit ring; a key's owner is the member whose
+//! point follows the key's hash. Unlike `hash % units` the assignment is
+//! stable under ring edits, and the virtual nodes smooth the per-unit
+//! share (cf. the DASH container designs over DART, arXiv:1610.01482).
+//!
+//! Three write disciplines share this one layout (so their final
+//! contents are directly comparable):
+//!
+//! - [`HashMap::put`] — the **lock-free hot path**: claim an EMPTY tag
+//!   with `compare_and_swap` (bounded retry within the bucket), then
+//!   publish key and value with deferred atomic `accumulate_async`
+//!   `Replace` writes — remote completion batches into the next
+//!   [`HashMap::flush`], and same-node targets complete via the
+//!   CPU-atomic fast path. Lost CAS races are counted in
+//!   [`HashMap::cas_retries`].
+//! - [`HashMap::put_exclusive`] — plain read-modify-write (no atomics),
+//!   correct only under a caller-held lock covering the key's bucket
+//!   (e.g. a [`crate::dart::DartLock`] stripe keyed by
+//!   [`HashMap::lock_index`]) — the MCS-lock backend of the kvstore.
+//! - [`HashMap::local_put`]/[`HashMap::local_get`] — owner-computes: the
+//!   owning unit applies operations to its own partition with plain
+//!   loads/stores; remote units ship requests via messages.
+//!
+//! [`HashMap::get`] is ONE coalesced 24-byte read per probed slot (and
+//! the first probe hits for any key inserted without collisions). Reads
+//! verify the stored key word, so a fingerprint collision cannot return
+//! a wrong entry; the update path trusts the fingerprint alone (two live
+//! keys colliding on 63 hash bits is a ~2⁻⁶³-per-pair event, documented
+//! trade-off). Keys and values are any [`Element`] type (≤ 8 bytes),
+//! stored zero-extended in their word.
+
+use super::Element;
+use crate::dart::gptr::{GlobalPtr, TeamId, UnitId};
+use crate::dart::{DartEnv, DartErr, DartResult};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use std::cell::Cell;
+use std::marker::PhantomData;
+
+/// Slots per bucket — the probe horizon and the lock-coverage unit.
+pub const BUCKET_SLOTS: usize = 16;
+
+/// Virtual nodes per team member on the consistent-hash ring.
+pub const VNODES: usize = 16;
+
+/// Bytes per slot: three `u64` words `[tag, key, value]`.
+pub const SLOT_BYTES: usize = 24;
+
+/// Tag word of an empty slot.
+const EMPTY: u64 = 0;
+
+/// Fingerprints force the top bit so no occupied tag equals [`EMPTY`].
+const FP_BIT: u64 = 1 << 63;
+
+/// Salt decorrelating the bucket index from the ring position.
+const BUCKET_SALT: u64 = 0x9E6C_63B2_27D4_1CF5;
+
+/// splitmix64 finalizer — the repo's standard deterministic mix.
+#[inline]
+fn hash64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Zero-extend an element into its storage word.
+#[inline]
+fn bits_of<T: Element>(x: T) -> u64 {
+    let mut b = [0u8; 8];
+    let n = std::mem::size_of::<T>();
+    b[..n].copy_from_slice(as_bytes(std::slice::from_ref(&x)));
+    u64::from_ne_bytes(b)
+}
+
+/// Recover an element from its storage word.
+#[inline]
+fn from_bits<T: Element>(bits: u64) -> T {
+    let b = bits.to_ne_bytes();
+    let mut v = [T::default()];
+    let n = std::mem::size_of::<T>();
+    as_bytes_mut(&mut v).copy_from_slice(&b[..n]);
+    v[0]
+}
+
+/// A distributed key-value map (see module docs).
+pub struct HashMap<'e, K: Element, V: Element> {
+    env: &'e DartEnv,
+    team: TeamId,
+    /// Base collective pointer of the backing allocation.
+    gptr: GlobalPtr,
+    /// Absolute unit id of every team rank (rank-indexed).
+    units: Vec<UnitId>,
+    myrank: usize,
+    slots_per_unit: usize,
+    /// Consistent-hash ring: sorted `(point, team rank)` pairs.
+    ring: Vec<(u64, usize)>,
+    /// Lost `compare_and_swap` claims on this unit (contention gauge).
+    cas_retries: Cell<u64>,
+    _kv: PhantomData<(K, V)>,
+}
+
+impl<'e, K: Element, V: Element> HashMap<'e, K, V> {
+    /// Collectively create a map with (at least) `slots_per_unit` slots on
+    /// every team member — rounded up to whole buckets. Keys and values
+    /// must fit their 8-byte storage word (every built-in [`Element`]
+    /// does).
+    pub fn new(env: &'e DartEnv, team: TeamId, slots_per_unit: usize) -> DartResult<Self> {
+        if std::mem::size_of::<K>() > 8 || std::mem::size_of::<V>() > 8 {
+            return Err(DartErr::Invalid("hashmap keys/values must be at most 8 bytes".into()));
+        }
+        let slots = slots_per_unit.max(BUCKET_SLOTS).div_ceil(BUCKET_SLOTS) * BUCKET_SLOTS;
+        let p = env.team_size(team)?;
+        let gptr = env.team_memalloc_aligned(team, (slots * SLOT_BYTES) as u64)?;
+        let units: Vec<UnitId> =
+            (0..p).map(|r| env.team_unit_l2g(team, r)).collect::<DartResult<_>>()?;
+        let myrank = env.team_myid(team)?;
+        let mut ring: Vec<(u64, usize)> = (0..p)
+            .flat_map(|r| (0..VNODES).map(move |v| (hash64(((r as u64) << 32) | v as u64), r)))
+            .collect();
+        ring.sort_unstable();
+        let map = HashMap {
+            env,
+            team,
+            gptr,
+            units,
+            myrank,
+            slots_per_unit: slots,
+            ring,
+            cas_retries: Cell::new(0),
+            _kv: PhantomData,
+        };
+        // Zero my partition (all slots EMPTY), then rendezvous so nobody
+        // probes an uninitialized partition.
+        let zeros = vec![0u8; slots * SLOT_BYTES];
+        env.local_write(map.word_gptr(myrank, 0, 0), &zeros)?;
+        env.barrier(team)?;
+        Ok(map)
+    }
+
+    /// Slots per team member (rounded up to whole buckets).
+    pub fn slots_per_unit(&self) -> usize {
+        self.slots_per_unit
+    }
+
+    /// Buckets per team member.
+    pub fn buckets_per_unit(&self) -> usize {
+        self.slots_per_unit / BUCKET_SLOTS
+    }
+
+    /// Total slot capacity across the team.
+    pub fn capacity(&self) -> usize {
+        self.slots_per_unit * self.units.len()
+    }
+
+    /// The team this map is distributed over.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// The runtime handle the map was created with.
+    pub fn env(&self) -> &'e DartEnv {
+        self.env
+    }
+
+    /// Lost CAS claims on this unit since creation — the lock-free hot
+    /// path's contention gauge (reported by the `perf_kv` bench).
+    pub fn cas_retries(&self) -> u64 {
+        self.cas_retries.get()
+    }
+
+    // ------------------------------------------------------------------
+    // Routing
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn fp(kb: u64) -> u64 {
+        hash64(kb) | FP_BIT
+    }
+
+    #[inline]
+    fn owner_of_bits(&self, kb: u64) -> usize {
+        let h = hash64(kb);
+        let i = self.ring.partition_point(|&(point, _)| point < h);
+        self.ring[if i == self.ring.len() { 0 } else { i }].1
+    }
+
+    #[inline]
+    fn bucket_of_bits(&self, kb: u64) -> usize {
+        (hash64(kb ^ BUCKET_SALT) % self.buckets_per_unit() as u64) as usize
+    }
+
+    /// The team rank owning `key` (consistent-hash successor).
+    pub fn owner_of(&self, key: K) -> usize {
+        self.owner_of_bits(bits_of(key))
+    }
+
+    /// The bucket index `key` probes within its owner's partition.
+    pub fn bucket_of(&self, key: K) -> usize {
+        self.bucket_of_bits(bits_of(key))
+    }
+
+    /// Stripe index for lock-per-bucket schemes: a deterministic map of
+    /// `key`'s (owner, bucket) pair onto `nlocks` stripes — every key of
+    /// one bucket lands on the same stripe, so one held stripe lock covers
+    /// the whole probe region of any key under it.
+    pub fn lock_index(&self, key: K, nlocks: usize) -> usize {
+        let kb = bits_of(key);
+        let owner = self.owner_of_bits(kb) as u64;
+        let bucket = self.bucket_of_bits(kb) as u64;
+        (hash64((owner << 32) | bucket) % nlocks as u64) as usize
+    }
+
+    /// Global pointer to word `word` (0 = tag, 1 = key, 2 = value) of slot
+    /// `slot` on team rank `rank`.
+    #[inline]
+    fn word_gptr(&self, rank: usize, slot: usize, word: usize) -> GlobalPtr {
+        self.gptr.with_unit(self.units[rank]).add((slot * SLOT_BYTES + word * 8) as u64)
+    }
+
+    // ------------------------------------------------------------------
+    // The lock-free hot path
+    // ------------------------------------------------------------------
+
+    /// Insert or update, lock-free: claim an EMPTY slot's tag with
+    /// `compare_and_swap` (bounded retry within the key's bucket), then
+    /// publish key and value as deferred atomic `Replace` writes. Returns
+    /// `true` on a fresh insert, `false` on an update. Values written here
+    /// are immediately visible to conflicting atomics; modelled remote
+    /// completion batches into the next [`HashMap::flush`].
+    pub fn put(&self, key: K, value: V) -> DartResult<bool> {
+        let kb = bits_of(key);
+        let vb = bits_of(value);
+        let fp = Self::fp(kb);
+        let owner = self.owner_of_bits(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut tag_word = [0u8; 8];
+            self.env.get_blocking(self.word_gptr(owner, slot, 0), &mut tag_word)?;
+            let tag = u64::from_ne_bytes(tag_word);
+            if tag == fp {
+                // Update: one deferred atomic swap of the value word.
+                self.env.accumulate_async(self.word_gptr(owner, slot, 2), &[vb], MpiOp::Replace)?;
+                return Ok(false);
+            }
+            if tag != EMPTY {
+                continue; // another key's slot
+            }
+            // Claim the EMPTY slot.
+            let old = self.env.compare_and_swap(self.word_gptr(owner, slot, 0), EMPTY, fp)?;
+            if old == EMPTY {
+                self.env.accumulate_async(self.word_gptr(owner, slot, 1), &[kb], MpiOp::Replace)?;
+                self.env.accumulate_async(self.word_gptr(owner, slot, 2), &[vb], MpiOp::Replace)?;
+                return Ok(true);
+            }
+            self.cas_retries.set(self.cas_retries.get() + 1);
+            if old == fp {
+                // Lost the race to a concurrent insert of the same key:
+                // it degenerates to an update.
+                self.env.accumulate_async(self.word_gptr(owner, slot, 2), &[vb], MpiOp::Replace)?;
+                return Ok(false);
+            }
+            // Lost to a different key: probe on.
+        }
+        Err(DartErr::Invalid(format!(
+            "hashmap bucket overflow: bucket {bucket} on rank {owner} is full \
+             ({BUCKET_SLOTS} slots) — size the map for a lower load factor"
+        )))
+    }
+
+    /// Atomic read-modify-write of `key`'s value: `value := value (op)
+    /// new`, element-atomic via the accumulate hot path. A key not yet
+    /// present is inserted first (its value word starts zeroed, so e.g.
+    /// `Sum` merges into zero). Deferred like [`HashMap::put`].
+    pub fn merge(&self, key: K, value: V, op: MpiOp) -> DartResult<()> {
+        let kb = bits_of(key);
+        let fp = Self::fp(kb);
+        let owner = self.owner_of_bits(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut tag_word = [0u8; 8];
+            self.env.get_blocking(self.word_gptr(owner, slot, 0), &mut tag_word)?;
+            let mut tag = u64::from_ne_bytes(tag_word);
+            if tag == EMPTY {
+                let old = self.env.compare_and_swap(self.word_gptr(owner, slot, 0), EMPTY, fp)?;
+                if old == EMPTY {
+                    self.env.accumulate_async(
+                        self.word_gptr(owner, slot, 1),
+                        &[kb],
+                        MpiOp::Replace,
+                    )?;
+                    self.env.accumulate_async(self.word_gptr(owner, slot, 2), &[value], op)?;
+                    return Ok(());
+                }
+                self.cas_retries.set(self.cas_retries.get() + 1);
+                tag = old;
+            }
+            if tag == fp {
+                self.env.accumulate_async(self.word_gptr(owner, slot, 2), &[value], op)?;
+                return Ok(());
+            }
+        }
+        Err(DartErr::Invalid(format!(
+            "hashmap bucket overflow: bucket {bucket} on rank {owner} is full"
+        )))
+    }
+
+    /// Look `key` up: ONE coalesced 24-byte blocking read per probed slot
+    /// (first probe hits in the common case). The stored key word is
+    /// verified, so fingerprint collisions cannot alias reads.
+    pub fn get(&self, key: K) -> DartResult<Option<V>> {
+        let kb = bits_of(key);
+        let fp = Self::fp(kb);
+        let owner = self.owner_of_bits(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut words = [0u64; 3];
+            self.env
+                .get_blocking(self.word_gptr(owner, slot, 0), as_bytes_mut(&mut words))?;
+            if words[0] == EMPTY {
+                return Ok(None); // probe chains never skip an EMPTY slot
+            }
+            if words[0] == fp && words[1] == kb {
+                return Ok(Some(from_bits(words[2])));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Complete every outstanding deferred write on the map's allocation
+    /// (one call per phase — the engine's explicit-flush discipline).
+    pub fn flush(&self) -> DartResult<()> {
+        self.env.flush_all(self.gptr)
+    }
+
+    // ------------------------------------------------------------------
+    // The locked discipline (MCS backend)
+    // ------------------------------------------------------------------
+
+    /// Insert or update with plain reads and writes — **no atomics**. Only
+    /// correct while the caller holds a lock covering `key`'s bucket (see
+    /// [`HashMap::lock_index`]); this is the comparison point the MCS
+    /// backend of the kvstore measures against the lock-free path.
+    pub fn put_exclusive(&self, key: K, value: V) -> DartResult<bool> {
+        let kb = bits_of(key);
+        let vb = bits_of(value);
+        let fp = Self::fp(kb);
+        let owner = self.owner_of_bits(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut words = [0u64; 3];
+            self.env
+                .get_blocking(self.word_gptr(owner, slot, 0), as_bytes_mut(&mut words))?;
+            if words[0] == EMPTY {
+                let fresh = [fp, kb, vb];
+                self.env.put_blocking(self.word_gptr(owner, slot, 0), as_bytes(&fresh))?;
+                return Ok(true);
+            }
+            if words[0] == fp {
+                self.env.put_blocking(self.word_gptr(owner, slot, 2), &vb.to_ne_bytes())?;
+                return Ok(false);
+            }
+        }
+        Err(DartErr::Invalid(format!(
+            "hashmap bucket overflow: bucket {bucket} on rank {owner} is full"
+        )))
+    }
+
+    // ------------------------------------------------------------------
+    // The owner-computes discipline (sharded backend)
+    // ------------------------------------------------------------------
+
+    /// Owner-side insert/update: plain local memory operations on this
+    /// unit's own partition. Errs unless this unit owns `key` — the
+    /// owner-computes backend routes requests to owners first.
+    pub fn local_put(&self, key: K, value: V) -> DartResult<bool> {
+        let kb = bits_of(key);
+        let owner = self.owner_of_bits(kb);
+        if owner != self.myrank {
+            return Err(DartErr::Invalid(format!(
+                "local_put of a key owned by rank {owner} on rank {}",
+                self.myrank
+            )));
+        }
+        let fp = Self::fp(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut words = [0u64; 3];
+            self.env.local_read(self.word_gptr(owner, slot, 0), as_bytes_mut(&mut words))?;
+            if words[0] == EMPTY {
+                let fresh = [fp, kb, bits_of(value)];
+                self.env.local_write(self.word_gptr(owner, slot, 0), as_bytes(&fresh))?;
+                return Ok(true);
+            }
+            if words[0] == fp {
+                self.env
+                    .local_write(self.word_gptr(owner, slot, 2), &bits_of(value).to_ne_bytes())?;
+                return Ok(false);
+            }
+        }
+        Err(DartErr::Invalid(format!(
+            "hashmap bucket overflow: bucket {bucket} on rank {owner} is full"
+        )))
+    }
+
+    /// Owner-side lookup on this unit's own partition (errs unless this
+    /// unit owns `key`).
+    pub fn local_get(&self, key: K) -> DartResult<Option<V>> {
+        let kb = bits_of(key);
+        let owner = self.owner_of_bits(kb);
+        if owner != self.myrank {
+            return Err(DartErr::Invalid(format!(
+                "local_get of a key owned by rank {owner} on rank {}",
+                self.myrank
+            )));
+        }
+        let fp = Self::fp(kb);
+        let bucket = self.bucket_of_bits(kb);
+        for i in 0..BUCKET_SLOTS {
+            let slot = bucket * BUCKET_SLOTS + i;
+            let mut words = [0u64; 3];
+            self.env.local_read(self.word_gptr(owner, slot, 0), as_bytes_mut(&mut words))?;
+            if words[0] == EMPTY {
+                return Ok(None);
+            }
+            if words[0] == fp && words[1] == kb {
+                return Ok(Some(from_bits(words[2])));
+            }
+        }
+        Ok(None)
+    }
+
+    // ------------------------------------------------------------------
+    // Verification
+    // ------------------------------------------------------------------
+
+    /// Canonical content checksum, identical on every unit. Collective:
+    /// each member scans its partition, sorts its live `(key, value)`
+    /// pairs by key (slot order depends on insertion interleaving; the
+    /// content set does not), folds them with FNV-1a, and the per-unit
+    /// digests combine with an order-independent wrapping-sum allreduce.
+    /// Two maps hold the same entries iff their checksums match (mod hash
+    /// collisions) — regardless of which backend or exec mode filled them.
+    pub fn content_checksum(&self) -> DartResult<u64> {
+        let mut words = vec![0u64; self.slots_per_unit * 3];
+        self.env.local_read(self.word_gptr(self.myrank, 0, 0), as_bytes_mut(&mut words))?;
+        let mut pairs: Vec<(u64, u64)> = words
+            .chunks_exact(3)
+            .filter(|s| s[0] != EMPTY)
+            .map(|s| (s[1], s[2]))
+            .collect();
+        pairs.sort_unstable();
+        let mut digest = 0xCBF2_9CE4_8422_2325u64;
+        for (kb, vb) in &pairs {
+            for b in kb.to_ne_bytes().iter().chain(vb.to_ne_bytes().iter()) {
+                digest = (digest ^ *b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        // Make all-empty partitions contribute too (length folds in).
+        digest = digest.wrapping_add(pairs.len() as u64);
+        let mut sum = [0u64];
+        self.env.allreduce(self.team, &[digest], &mut sum, MpiOp::Sum)?;
+        Ok(sum[0])
+    }
+
+    /// Number of live entries on this unit's partition (local scan).
+    pub fn local_len(&self) -> DartResult<usize> {
+        let mut words = vec![0u64; self.slots_per_unit * 3];
+        self.env.local_read(self.word_gptr(self.myrank, 0, 0), as_bytes_mut(&mut words))?;
+        Ok(words.chunks_exact(3).filter(|s| s[0] != EMPTY).count())
+    }
+
+    /// Collectively free the backing global allocation (not done in
+    /// `Drop`: freeing is a collective call that can fail).
+    pub fn free(self) -> DartResult<()> {
+        self.env.team_memfree(self.team, self.gptr)
+    }
+}

@@ -21,7 +21,13 @@
 //! - [`algorithms`] — owner-computes `fill`/`transform`/`sum`/
 //!   `min_element`/`max_element` plus the pattern-redistributing
 //!   [`algorithms::copy`], all combining per-unit work with one team
-//!   collective.
+//!   collective;
+//! - [`HashMap`]`<K, V>` ([`hashmap`]) — a distributed key-value map with
+//!   consistent-hash routing, bucket-confined open addressing in
+//!   symmetric global memory, and a lock-free insert/update hot path on
+//!   the runtime's MPI-3 atomics (`compare_and_swap` claims + deferred
+//!   `accumulate_async` publication), exercised at scale by
+//!   `apps::kvstore` and the `perf_kv` bench.
 //!
 //! Element types are anything implementing the byte-API marker
 //! [`crate::dart::Element`]. Operation coalescing is observable in
@@ -30,10 +36,12 @@
 
 pub mod algorithms;
 pub mod array;
+pub mod hashmap;
 pub mod matrix;
 pub mod pattern;
 
 pub use crate::dart::Element;
 pub use array::Array;
+pub use hashmap::HashMap;
 pub use matrix::Matrix;
 pub use pattern::{Layout, Pattern, Run};

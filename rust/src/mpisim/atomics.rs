@@ -1,0 +1,360 @@
+//! Lock-free per-element atomic memory operations — the single engine
+//! under both the modelled RMA atomics and the same-node fastpath.
+//!
+//! MPI-3 guarantees element-wise atomicity among the accumulate family
+//! (`MPI_Accumulate`, `MPI_Get_accumulate`, `MPI_Fetch_and_op`,
+//! `MPI_Compare_and_swap`). The seed implementation serialized all of
+//! them behind one window-wide mutex; that made every atomic a lock
+//! acquisition, and — worse — it would have *raced* against any same-node
+//! fast path that touched the element with plain CPU atomics (a mutexed
+//! non-atomic read-modify-write and a CPU atomic on the same address are
+//! a data race). Here both paths funnel through the same primitive: every
+//! element is updated by a `compare_exchange_weak` loop (or a single
+//! hardware swap/load where the op allows) on the
+//! `AtomicU8`/`AtomicU16`/`AtomicU32`/`AtomicU64` overlaying its bytes.
+//!
+//! Consequences:
+//!
+//! - atomics from different origins to *different* elements proceed in
+//!   parallel — element granularity, like NIC-side atomics on real
+//!   hardware — while conflicting ops on the *same* element linearize;
+//! - the modelled path and the zero-copy fastpath are the **same** memory
+//!   operation, so their results are bit-identical by construction; only
+//!   the modelled completion time differs;
+//! - the hot path is genuinely lock-free: no mutex anywhere, and the
+//!   integer CAS loop degenerates to a single hardware RMW for
+//!   `Replace`/`NoOp`.
+//!
+//! All entry points alignment-check: window segments are 8-byte aligned
+//! (see `Segment::owned` in [`super::window`]), so any naturally-aligned
+//! displacement is atomically accessible; a misaligned element address is
+//! reported as [`MpiErr::Invalid`] instead of silently tearing.
+
+use super::datatype::{reduce_bytes, MpiOp, MpiType};
+use super::error::{MpiErr, MpiResult};
+use std::sync::atomic::{AtomicU16, AtomicU32, AtomicU64, AtomicU8, Ordering};
+
+/// Define the per-width fetch-apply and compare-and-swap primitives. Both
+/// return the element's old bits as the **first `size_of::<$uint>()`
+/// bytes** of a `[u8; 8]`, which keeps the callers endianness-agnostic.
+macro_rules! def_width {
+    ($rmw:ident, $cas:ident, $uint:ty, $atomic:ty) => {
+        /// Atomically `old := *p; *p := old (op) src; return old` for one
+        /// element.
+        ///
+        /// # Safety
+        /// `p` must point at a valid, naturally-aligned element inside a
+        /// registered window segment.
+        unsafe fn $rmw(p: *mut u8, op: MpiOp, ty: MpiType, src: &[u8]) -> MpiResult<[u8; 8]> {
+            const N: usize = std::mem::size_of::<$uint>();
+            let a = unsafe { &*(p as *const $atomic) };
+            let old: $uint = match op {
+                // Pure atomic read / pure atomic swap: one hardware op.
+                MpiOp::NoOp => a.load(Ordering::SeqCst),
+                MpiOp::Replace => {
+                    a.swap(<$uint>::from_ne_bytes(src.try_into().unwrap()), Ordering::SeqCst)
+                }
+                // Everything else: CAS loop. The arithmetic (`reduce_bytes`)
+                // is the same routine the non-atomic reduce paths use, so
+                // results match them bit-for-bit.
+                _ => {
+                    let mut cur = a.load(Ordering::SeqCst);
+                    loop {
+                        let mut acc = cur.to_ne_bytes();
+                        reduce_bytes(op, ty, &mut acc, src)?;
+                        let new = <$uint>::from_ne_bytes(acc);
+                        match a.compare_exchange_weak(cur, new, Ordering::SeqCst, Ordering::SeqCst)
+                        {
+                            Ok(_) => break cur,
+                            Err(seen) => cur = seen,
+                        }
+                    }
+                }
+            };
+            let mut out = [0u8; 8];
+            out[..N].copy_from_slice(&old.to_ne_bytes());
+            Ok(out)
+        }
+
+        /// Atomically `old := *p; if old == compare { *p := value };
+        /// return old` for one element (bitwise comparison, like
+        /// `MPI_Compare_and_swap`).
+        ///
+        /// # Safety
+        /// Same contract as the fetch-apply variant.
+        unsafe fn $cas(p: *mut u8, compare: &[u8], value: &[u8]) -> [u8; 8] {
+            const N: usize = std::mem::size_of::<$uint>();
+            let a = unsafe { &*(p as *const $atomic) };
+            let cmp = <$uint>::from_ne_bytes(compare.try_into().unwrap());
+            let val = <$uint>::from_ne_bytes(value.try_into().unwrap());
+            let old = match a.compare_exchange(cmp, val, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(old) | Err(old) => old,
+            };
+            let mut out = [0u8; 8];
+            out[..N].copy_from_slice(&old.to_ne_bytes());
+            out
+        }
+    };
+}
+
+def_width!(rmw1, cas1, u8, AtomicU8);
+def_width!(rmw2, cas2, u16, AtomicU16);
+def_width!(rmw4, cas4, u32, AtomicU32);
+def_width!(rmw8, cas8, u64, AtomicU64);
+
+/// Validate that `p` can be accessed as one atomic element of `n` bytes.
+#[inline]
+fn check_element(p: *const u8, n: usize) -> MpiResult<()> {
+    if !matches!(n, 1 | 2 | 4 | 8) {
+        return Err(MpiErr::Invalid(format!("unsupported atomic element size {n}")));
+    }
+    if (p as usize) % n != 0 {
+        return Err(MpiErr::Invalid(format!(
+            "atomic access to misaligned address {p:p} (element size {n})"
+        )));
+    }
+    Ok(())
+}
+
+/// Fetch-and-apply ONE element of `n` bytes at `p`; old bits land in the
+/// first `n` bytes of the result.
+///
+/// # Safety
+/// `p` must point at `n` valid bytes inside a registered window segment,
+/// aligned to `n` (checked by the callers via [`check_element`]).
+#[inline]
+unsafe fn rmw_elem(n: usize, p: *mut u8, op: MpiOp, ty: MpiType, src: &[u8]) -> MpiResult<[u8; 8]> {
+    match n {
+        1 => unsafe { rmw1(p, op, ty, src) },
+        2 => unsafe { rmw2(p, op, ty, src) },
+        4 => unsafe { rmw4(p, op, ty, src) },
+        _ => unsafe { rmw8(p, op, ty, src) },
+    }
+}
+
+/// Element-wise atomic `dst := dst (op) src` over `src.len() / ty.size()`
+/// consecutive elements — the memory side of `MPI_Accumulate`.
+///
+/// # Safety
+/// `dst` must point at `src.len()` valid bytes inside a registered window
+/// segment. Concurrent access to those bytes must go through this module
+/// (which is exactly what the window's accumulate-family ops guarantee).
+pub(crate) unsafe fn atomic_reduce(
+    op: MpiOp,
+    ty: MpiType,
+    dst: *mut u8,
+    src: &[u8],
+) -> MpiResult<()> {
+    let n = ty.size();
+    if src.len() % n != 0 {
+        return Err(MpiErr::SizeMismatch { local: src.len(), remote: src.len() / n * n });
+    }
+    check_element(dst, n)?;
+    for (i, elem) in src.chunks_exact(n).enumerate() {
+        unsafe { rmw_elem(n, dst.add(i * n), op, ty, elem)? };
+    }
+    Ok(())
+}
+
+/// Element-wise atomic fetch-then-apply: each element's pre-update value
+/// lands in `result`, then `dst := dst (op) src` — the memory side of
+/// `MPI_Get_accumulate` / `MPI_Fetch_and_op`.
+///
+/// # Safety
+/// Same contract as [`atomic_reduce`]; `result` must be `src.len()` bytes.
+pub(crate) unsafe fn atomic_fetch_reduce(
+    op: MpiOp,
+    ty: MpiType,
+    dst: *mut u8,
+    src: &[u8],
+    result: &mut [u8],
+) -> MpiResult<()> {
+    let n = ty.size();
+    if src.len() != result.len() || src.len() % n != 0 {
+        return Err(MpiErr::SizeMismatch { local: result.len(), remote: src.len() });
+    }
+    check_element(dst, n)?;
+    for (i, (elem, out)) in src.chunks_exact(n).zip(result.chunks_exact_mut(n)).enumerate() {
+        let old = unsafe { rmw_elem(n, dst.add(i * n), op, ty, elem)? };
+        out.copy_from_slice(&old[..n]);
+    }
+    Ok(())
+}
+
+/// Atomic compare-and-swap of ONE `n`-byte element (bitwise comparison);
+/// the old bits land in `old_out` — the memory side of
+/// `MPI_Compare_and_swap`.
+///
+/// # Safety
+/// `dst` must point at `n` valid bytes inside a registered window segment,
+/// with the same concurrent-access contract as [`atomic_reduce`].
+pub(crate) unsafe fn atomic_cas(
+    n: usize,
+    dst: *mut u8,
+    compare: &[u8],
+    value: &[u8],
+    old_out: &mut [u8],
+) -> MpiResult<()> {
+    if compare.len() != n || value.len() != n || old_out.len() != n {
+        return Err(MpiErr::SizeMismatch { local: old_out.len(), remote: n });
+    }
+    check_element(dst, n)?;
+    let old = match n {
+        1 => unsafe { cas1(dst, compare, value) },
+        2 => unsafe { cas2(dst, compare, value) },
+        4 => unsafe { cas4(dst, compare, value) },
+        _ => unsafe { cas8(dst, compare, value) },
+    };
+    old_out.copy_from_slice(&old[..n]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn misaligned_element_rejected() {
+        let mut buf = [0u8; 16];
+        let base = buf.as_mut_ptr();
+        // Find an address that is NOT 8-aligned within the buffer.
+        let off = if (base as usize) % 8 == 0 { 4 } else { 0 };
+        let r = unsafe {
+            atomic_reduce(MpiOp::Sum, MpiType::U64, base.add(off + 1), &1u64.to_ne_bytes())
+        };
+        assert!(matches!(r, Err(MpiErr::Invalid(_))));
+    }
+
+    #[test]
+    fn concurrent_sums_are_exact() {
+        // 8 threads × 10_000 fetch-adds on one u64: the CAS loop must not
+        // lose a single update.
+        let mut word = vec![0u64; 1];
+        let p = word.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        unsafe {
+                            atomic_reduce(
+                                MpiOp::Sum,
+                                MpiType::U64,
+                                p as *mut u8,
+                                &1u64.to_ne_bytes(),
+                            )
+                            .unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(word[0], 80_000);
+    }
+
+    #[test]
+    fn fetch_reduce_returns_old_values() {
+        let mut word = vec![5u32; 1];
+        let mut old = [0u8; 4];
+        unsafe {
+            atomic_fetch_reduce(
+                MpiOp::Sum,
+                MpiType::U32,
+                word.as_mut_ptr() as *mut u8,
+                &7u32.to_ne_bytes(),
+                &mut old,
+            )
+            .unwrap();
+        }
+        assert_eq!(u32::from_ne_bytes(old), 5);
+        assert_eq!(word[0], 12);
+    }
+
+    #[test]
+    fn cas_swaps_only_on_match() {
+        let mut word = vec![3u64; 1];
+        let p = word.as_mut_ptr() as *mut u8;
+        let mut old = [0u8; 8];
+        unsafe {
+            atomic_cas(8, p, &9u64.to_ne_bytes(), &1u64.to_ne_bytes(), &mut old).unwrap();
+        }
+        assert_eq!((u64::from_ne_bytes(old), word[0]), (3, 3)); // no match
+        unsafe {
+            atomic_cas(8, p, &3u64.to_ne_bytes(), &1u64.to_ne_bytes(), &mut old).unwrap();
+        }
+        assert_eq!((u64::from_ne_bytes(old), word[0]), (3, 1)); // swapped
+    }
+
+    #[test]
+    fn exactly_one_cas_winner_under_contention() {
+        use std::sync::atomic::{AtomicUsize, Ordering as AOrd};
+        let mut word = vec![0u64; 1];
+        let p = word.as_mut_ptr() as usize;
+        let winners = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 1..=8u64 {
+                let winners = &winners;
+                s.spawn(move || {
+                    let mut old = [0u8; 8];
+                    unsafe {
+                        atomic_cas(
+                            8,
+                            p as *mut u8,
+                            &0u64.to_ne_bytes(),
+                            &t.to_ne_bytes(),
+                            &mut old,
+                        )
+                        .unwrap();
+                    }
+                    if u64::from_ne_bytes(old) == 0 {
+                        winners.fetch_add(1, AOrd::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(winners.load(AOrd::SeqCst), 1);
+    }
+
+    #[test]
+    fn multi_element_accumulate_is_element_granular() {
+        // 4 threads each add a distinct pattern over 64 u32 elements; every
+        // element must end at the exact sum of the four patterns.
+        let mut arr = vec![0u32; 64];
+        let p = arr.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for t in 1..=4u32 {
+                s.spawn(move || {
+                    let src: Vec<u8> =
+                        (0..64u32).flat_map(|i| (t * 1000 + i).to_ne_bytes()).collect();
+                    for _ in 0..100 {
+                        unsafe {
+                            atomic_reduce(MpiOp::Sum, MpiType::U32, p as *mut u8, &src).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        for (i, &v) in arr.iter().enumerate() {
+            let expect = 100 * (1..=4u32).map(|t| t * 1000 + i as u32).sum::<u32>();
+            assert_eq!(v, expect, "element {i}");
+        }
+    }
+
+    #[test]
+    fn float_sum_matches_sequential_apply() {
+        // Bit-equality with the non-atomic reduce path on the same operand
+        // order (single thread → deterministic order).
+        let mut a = vec![1.5f64; 1];
+        let mut b = 1.5f64;
+        for i in 0..100 {
+            let x = (i as f64) * 0.75;
+            unsafe {
+                atomic_reduce(MpiOp::Sum, MpiType::F64, a.as_mut_ptr() as *mut u8, &x.to_ne_bytes())
+                    .unwrap();
+            }
+            let mut acc = b.to_ne_bytes();
+            reduce_bytes(MpiOp::Sum, MpiType::F64, &mut acc, &x.to_ne_bytes()).unwrap();
+            b = f64::from_ne_bytes(acc);
+        }
+        assert_eq!(a[0].to_bits(), b.to_bits());
+    }
+}

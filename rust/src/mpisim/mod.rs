@@ -34,6 +34,7 @@
 //! pipelines. Blocking operations spin until the modelled completion
 //! instant; request-based operations carry it in their handle.
 
+pub mod atomics;
 pub mod collectives;
 pub mod comm;
 pub mod dynwin;

@@ -23,9 +23,21 @@
 //! model, which the paper notes "fully matches the semantics of DART".
 //! Concurrent conflicting accesses produce undefined *values* (torn bytes)
 //! but never crash, mirroring MPI-3's relaxation over MPI-2 (§IV-A).
+//!
+//! Atomicity: the accumulate family (`accumulate`, `get_accumulate`,
+//! `fetch_and_op`, `compare_and_swap`) is **lock-free** — every operation
+//! resolves to per-element CPU atomics in [`super::atomics`] rather than a
+//! per-window mutex, so disjoint elements never contend and same-element
+//! conflicts serialize in hardware, exactly the guarantee MPI-3 gives
+//! (atomic per basic element, undefined ordering across elements). Window
+//! segments are 8-byte aligned to make the `AtomicU8..AtomicU64` overlay
+//! sound. [`Win::accumulate`] is a deferrable request like `put` (retired
+//! by `flush` or the progress engine); the `*_direct` variants complete
+//! same-node ops entirely in the CPU atomic with no modelled traffic.
 
+use super::atomics;
 use super::comm::Comm;
-use super::datatype::{reduce_bytes, HasMpiType, MpiOp, MpiType, Pod, VectorType};
+use super::datatype::{as_bytes, HasMpiType, MpiOp, MpiType, Pod, VectorType};
 use super::error::{MpiErr, MpiResult};
 use super::request::RmaRequest;
 use std::cell::RefCell;
@@ -62,10 +74,13 @@ pub(crate) enum SegmentOwner {
 
 impl Segment {
     fn owned(len: usize) -> Segment {
-        // Zero-initialized, stable heap allocation. We manage the buffer
-        // through a raw pointer because many threads access it
-        // concurrently (that is the point of an RMA window).
-        let mem = vec![0u8; len.max(1)].into_boxed_slice();
+        // Zero-initialized, stable heap allocation, backed by `u64`s so
+        // the segment base is 8-byte aligned — any naturally-aligned
+        // element inside it is then accessible with CPU atomics (see
+        // [`super::atomics`]). We manage the buffer through a raw pointer
+        // because many threads access it concurrently (that is the point
+        // of an RMA window).
+        let mem = vec![0u64; len.max(1).div_ceil(8)].into_boxed_slice();
         let ptr = Box::into_raw(mem) as *mut u8;
         Segment { ptr, len, owner: SegmentOwner::Owned }
     }
@@ -74,11 +89,11 @@ impl Segment {
 impl Drop for Segment {
     fn drop(&mut self) {
         if matches!(self.owner, SegmentOwner::Owned) {
-            // Reconstruct the box allocated in `owned` (len.max(1) bytes).
+            // Reconstruct the box allocated in `owned` (u64-backed).
             unsafe {
                 drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
-                    self.ptr,
-                    self.len.max(1),
+                    self.ptr as *mut u64,
+                    self.len.max(1).div_ceil(8),
                 )));
             }
         }
@@ -148,9 +163,6 @@ pub struct WinState {
     comm_ranks: Vec<usize>,
     segments: Vec<OnceLock<Segment>>,
     locks: Vec<TargetLock>,
-    /// Serializes accumulates and atomics (MPI guarantees element-wise
-    /// atomicity among accumulate-family operations).
-    atomic_m: Mutex<()>,
     /// `MPI_Win_allocate_shared` semantics: same-node peers access the
     /// memory load/store, so same-node transfers bypass the messaging
     /// protocol entirely (zero-copy; the paper's §VI future work).
@@ -254,7 +266,6 @@ impl Win {
                 comm_ranks: comm.rank_table().to_vec(),
                 segments: (0..n).map(|_| OnceLock::new()).collect(),
                 locks: (0..n).map(|_| TargetLock::new()).collect(),
-                atomic_m: Mutex::new(()),
                 shmem,
             });
             world.windows.write().unwrap().insert(id, st);
@@ -620,7 +631,15 @@ impl Win {
     }
 
     /// `MPI_Accumulate`: element-wise `target := target (op) origin`,
-    /// atomically per element w.r.t. other accumulate-family operations.
+    /// atomically per element w.r.t. other accumulate-family operations
+    /// (lock-free CPU atomics — see [`super::atomics`]).
+    ///
+    /// Like [`Win::put`], the operation is a *deferrable request*: it
+    /// completes locally on return (the update is already applied, since
+    /// public and private copies coincide in the unified model), joins the
+    /// pending list, and reaches remote completion at the next
+    /// `flush`/`unlock` — or through the asynchronous progress engine.
+    /// Returns the modelled wire-completion instant.
     pub fn accumulate(
         &self,
         origin: &[u8],
@@ -628,22 +647,18 @@ impl Win {
         disp: usize,
         op: MpiOp,
         ty: MpiType,
-    ) -> MpiResult<()> {
+    ) -> MpiResult<Instant> {
         self.assert_epoch(target)?;
         let dst = self.state.check_range(target, disp, origin.len())?;
-        {
-            let _g = self.state.atomic_m.lock().unwrap();
-            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, origin.len()) };
-            reduce_bytes(op, ty, dst_slice, origin)?;
-        }
+        unsafe { atomics::atomic_reduce(op, ty, dst, origin)? };
         let at = self.book(target, origin.len());
         self.push_pending(target, at);
-        Ok(())
+        Ok(at)
     }
 
     /// `MPI_Get_accumulate`: atomically fetch the target range into
-    /// `result` and apply `target := target (op) origin`. With
-    /// [`MpiOp::NoOp`] this is an atomic read of an array.
+    /// `result` and apply `target := target (op) origin`, element by
+    /// element. With [`MpiOp::NoOp`] this is an atomic read of an array.
     pub fn get_accumulate(
         &self,
         origin: &[u8],
@@ -658,12 +673,7 @@ impl Win {
             return Err(MpiErr::SizeMismatch { local: origin.len(), remote: result.len() });
         }
         let dst = self.state.check_range(target, disp, origin.len())?;
-        {
-            let _g = self.state.atomic_m.lock().unwrap();
-            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, origin.len()) };
-            result.copy_from_slice(dst_slice);
-            reduce_bytes(op, ty, dst_slice, origin)?;
-        }
+        unsafe { atomics::atomic_fetch_reduce(op, ty, dst, origin, result)? };
         // Fetch + update: a full round trip, like the scalar atomics.
         let at = self.book(target, origin.len());
         self.comm.world().wait_until(at);
@@ -675,6 +685,55 @@ impl Win {
     // ------------------------------------------------------------------
     // MPI-3 atomics — the primitives under the paper's MCS lock (§IV-B6)
     // ------------------------------------------------------------------
+
+    /// The shared memory side of the scalar atomics: atomically fetch the
+    /// element and apply `op` via [`super::atomics`] (no cost booking —
+    /// callers model whatever transport they represent).
+    fn atomic_fetch_apply<T: HasMpiType + Pod>(
+        &self,
+        value: T,
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+    ) -> MpiResult<T> {
+        let n = std::mem::size_of::<T>();
+        let dst = self.state.check_range(target, disp, n)?;
+        let mut old = [0u8; 8];
+        unsafe {
+            atomics::atomic_fetch_reduce(
+                op,
+                T::MPI_TYPE,
+                dst,
+                as_bytes(std::slice::from_ref(&value)),
+                &mut old[..n],
+            )?;
+        }
+        Ok(unsafe { std::ptr::read_unaligned(old.as_ptr() as *const T) })
+    }
+
+    /// The shared memory side of compare-and-swap (bitwise comparison,
+    /// per the MPI-3 definition).
+    fn atomic_cas_apply<T: HasMpiType + Pod>(
+        &self,
+        compare: T,
+        value: T,
+        target: usize,
+        disp: usize,
+    ) -> MpiResult<T> {
+        let n = std::mem::size_of::<T>();
+        let dst = self.state.check_range(target, disp, n)?;
+        let mut old = [0u8; 8];
+        unsafe {
+            atomics::atomic_cas(
+                n,
+                dst,
+                as_bytes(std::slice::from_ref(&compare)),
+                as_bytes(std::slice::from_ref(&value)),
+                &mut old[..n],
+            )?;
+        }
+        Ok(unsafe { std::ptr::read_unaligned(old.as_ptr() as *const T) })
+    }
 
     /// `MPI_Fetch_and_op`: atomically `old := target; target := old (op)
     /// value; return old`. With [`MpiOp::Replace`] this is atomic swap
@@ -700,18 +759,9 @@ impl Win {
         op: MpiOp,
     ) -> MpiResult<T> {
         self.assert_epoch(target)?;
-        let n = std::mem::size_of::<T>();
-        let dst = self.state.check_range(target, disp, n)?;
-        let old = {
-            let _g = self.state.atomic_m.lock().unwrap();
-            let old = unsafe { std::ptr::read(dst as *const T) };
-            let dst_slice = unsafe { std::slice::from_raw_parts_mut(dst, n) };
-            let val_bytes =
-                unsafe { std::slice::from_raw_parts(&value as *const T as *const u8, n) };
-            reduce_bytes(op, T::MPI_TYPE, dst_slice, val_bytes)?;
-            old
-        };
+        let old = self.atomic_fetch_apply(value, target, disp, op)?;
         // Round trip: request + response.
+        let n = std::mem::size_of::<T>();
         let at = self.book(target, n);
         self.comm.world().wait_until(at);
         let at = self.book_reverse(target, n);
@@ -720,7 +770,7 @@ impl Win {
     }
 
     /// `MPI_Compare_and_swap`: atomically `old := target; if old ==
-    /// compare { target := value }; return old`.
+    /// compare { target := value }; return old` (bitwise comparison).
     pub fn compare_and_swap<T: HasMpiType + Pod + PartialEq>(
         &self,
         compare: T,
@@ -729,21 +779,68 @@ impl Win {
         disp: usize,
     ) -> MpiResult<T> {
         self.assert_epoch(target)?;
+        let old = self.atomic_cas_apply(compare, value, target, disp)?;
         let n = std::mem::size_of::<T>();
-        let dst = self.state.check_range(target, disp, n)?;
-        let old = {
-            let _g = self.state.atomic_m.lock().unwrap();
-            let old = unsafe { std::ptr::read(dst as *const T) };
-            if old == compare {
-                unsafe { std::ptr::write(dst as *mut T, value) };
-            }
-            old
-        };
         let at = self.book(target, n);
         self.comm.world().wait_until(at);
         let at = self.book_reverse(target, n);
         self.comm.world().wait_until(at);
         Ok(old)
+    }
+
+    // ------------------------------------------------------------------
+    // Same-node direct atomics (shared-memory windows only)
+    // ------------------------------------------------------------------
+
+    /// Direct same-node accumulate: the CPU atomic IS the whole operation
+    /// — nothing is booked on the channel model and nothing joins the
+    /// pending list; the op is complete, locally and remotely, on return.
+    /// Callers must have established [`Win::is_shmem_local`]`(target)`.
+    /// Bit-identical to [`Win::accumulate`] by construction (same
+    /// [`super::atomics`] primitive).
+    pub(crate) fn accumulate_direct(
+        &self,
+        origin: &[u8],
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+        ty: MpiType,
+    ) -> MpiResult<()> {
+        debug_assert!(self.is_shmem_local(target), "accumulate_direct on a non-local target");
+        self.assert_epoch(target)?;
+        let dst = self.state.check_range(target, disp, origin.len())?;
+        unsafe { atomics::atomic_reduce(op, ty, dst, origin) }
+    }
+
+    /// Direct same-node fetch-and-op: no modelled round trip. See
+    /// [`Win::accumulate_direct`].
+    pub(crate) fn fetch_and_op_direct<T: HasMpiType + Pod>(
+        &self,
+        value: T,
+        target: usize,
+        disp: usize,
+        op: MpiOp,
+    ) -> MpiResult<T> {
+        debug_assert!(self.is_shmem_local(target), "fetch_and_op_direct on a non-local target");
+        self.assert_epoch(target)?;
+        self.atomic_fetch_apply(value, target, disp, op)
+    }
+
+    /// Direct same-node compare-and-swap: no modelled round trip. See
+    /// [`Win::accumulate_direct`].
+    pub(crate) fn compare_and_swap_direct<T: HasMpiType + Pod + PartialEq>(
+        &self,
+        compare: T,
+        value: T,
+        target: usize,
+        disp: usize,
+    ) -> MpiResult<T> {
+        debug_assert!(
+            self.is_shmem_local(target),
+            "compare_and_swap_direct on a non-local target"
+        );
+        self.assert_epoch(target)?;
+        self.atomic_cas_apply(compare, value, target, disp)
     }
 
     // ------------------------------------------------------------------

@@ -1,0 +1,293 @@
+//! Property tests for the lock-free atomics hot path: exactness under
+//! concurrency, CAS linearizability, element granularity of multi-element
+//! accumulates, and bit-equality of the CPU-atomic fast path against the
+//! modelled path — plus the kvstore's cross-backend agreement oracle.
+
+use dart::apps::kvstore::{run_kv, KvBackend, KvConfig};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::mpisim::{as_bytes_mut, ExecMode, MpiOp};
+use dart::testing::prop::{forall, Rng};
+use std::sync::Mutex;
+
+/// Every unit hammers one shared counter with `fetch_and_op(Sum)` of
+/// random deltas; the counter must end at exactly the wrapping sum of
+/// every delta issued — a single lost update breaks the equality.
+#[test]
+fn concurrent_fetch_and_op_sums_are_exact() {
+    forall(
+        "fetch_and_op-sum-exact",
+        5,
+        |r| (2 + r.below(7), 1 + r.below(64), r.next_u64()),
+        |&(units, ops, seed)| {
+            let off_by = Mutex::new(0u64);
+            run(DartConfig::with_units(units), |env| {
+                let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8).unwrap();
+                let c0 = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
+                if env.myid() == 0 {
+                    env.local_write(c0, &0u64.to_ne_bytes()).unwrap();
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+                let mut rng = Rng::new(seed ^ env.myid() as u64);
+                let mut mine = 0u64;
+                for _ in 0..ops {
+                    let d = rng.next_u64();
+                    mine = mine.wrapping_add(d);
+                    env.fetch_and_op(c0, d, MpiOp::Sum).unwrap();
+                }
+                let mut all = [0u64];
+                env.allreduce(DART_TEAM_ALL, &[mine], &mut all, MpiOp::Sum).unwrap();
+                env.barrier(DART_TEAM_ALL).unwrap();
+                if env.myid() == 0 {
+                    let mut got = [0u8; 8];
+                    env.local_read(c0, &mut got).unwrap();
+                    *off_by.lock().unwrap() = u64::from_ne_bytes(got).wrapping_sub(all[0]);
+                }
+                env.team_memfree(DART_TEAM_ALL, g).unwrap();
+            })
+            .unwrap();
+            let diff = *off_by.lock().unwrap();
+            if diff == 0 {
+                Ok(())
+            } else {
+                Err(format!("shared counter off by {diff} (wrapping)"))
+            }
+        },
+    );
+}
+
+/// All units race `compare_and_swap(slot, 0, myid + 1)` on a series of
+/// fresh slots. Linearizability demands exactly one winner per slot, and
+/// the slot must hold precisely the winner's value.
+#[test]
+fn cas_crowns_exactly_one_winner_per_slot() {
+    forall(
+        "cas-single-winner",
+        4,
+        |r| (2 + r.below(7), 1 + r.below(8)),
+        |&(units, rounds)| {
+            let bad = Mutex::new(Vec::<String>::new());
+            run(DartConfig::with_units(units), |env| {
+                let g = env.team_memalloc_aligned(DART_TEAM_ALL, (rounds * 8) as u64).unwrap();
+                let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
+                if env.myid() == 0 {
+                    env.local_write(base, &vec![0u8; rounds * 8]).unwrap();
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+                for s in 0..rounds {
+                    let slot = base.add((s * 8) as u64);
+                    let old = env.compare_and_swap(slot, 0u64, env.myid() as u64 + 1).unwrap();
+                    let won = u64::from(old == 0);
+                    let my_val = if won == 1 { env.myid() as u64 + 1 } else { 0 };
+                    let mut tot = [0u64; 2];
+                    env.allreduce(DART_TEAM_ALL, &[won, my_val], &mut tot, MpiOp::Sum).unwrap();
+                    let mut cell = [0u8; 8];
+                    env.get_blocking(slot, &mut cell).unwrap();
+                    let value = u64::from_ne_bytes(cell);
+                    if tot[0] != 1 {
+                        bad.lock().unwrap().push(format!("slot {s}: {} winners", tot[0]));
+                    } else if value != tot[1] {
+                        bad.lock()
+                            .unwrap()
+                            .push(format!("slot {s}: holds {value}, winner wrote {}", tot[1]));
+                    }
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+                env.team_memfree(DART_TEAM_ALL, g).unwrap();
+            })
+            .unwrap();
+            let bad = bad.into_inner().unwrap();
+            if bad.is_empty() {
+                Ok(())
+            } else {
+                Err(bad.join("; "))
+            }
+        },
+    );
+}
+
+/// Units issue overlapping multi-element `accumulate(Sum)` batches into
+/// one array. Element-granularity atomicity means every single element
+/// ends at its exact serial total, even where batches overlap mid-way.
+#[test]
+fn multi_element_accumulates_are_element_granular() {
+    forall(
+        "accumulate-element-granularity",
+        4,
+        |r| (2 + r.below(6), 4 + r.below(29), 1 + r.below(12), r.next_u64()),
+        |&(units, n, batches, seed)| {
+            // Serial replay of every unit's deterministic plan.
+            let mut expected = vec![0u64; n];
+            for u in 0..units {
+                let mut rng = Rng::new(seed ^ u as u64);
+                for _ in 0..batches {
+                    let start = rng.below(n);
+                    let len = 1 + rng.below(n - start);
+                    for (j, e) in expected[start..start + len].iter_mut().enumerate() {
+                        *e = e.wrapping_add((u + j) as u64 + 1);
+                    }
+                }
+            }
+            let got = Mutex::new(Vec::new());
+            run(DartConfig::with_units(units), |env| {
+                let g = env.team_memalloc_aligned(DART_TEAM_ALL, (n * 8) as u64).unwrap();
+                let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
+                if env.myid() == 0 {
+                    env.local_write(base, &vec![0u8; n * 8]).unwrap();
+                }
+                env.barrier(DART_TEAM_ALL).unwrap();
+                let u = env.myid() as usize;
+                let mut rng = Rng::new(seed ^ u as u64);
+                for _ in 0..batches {
+                    let start = rng.below(n);
+                    let len = 1 + rng.below(n - start);
+                    let src: Vec<u64> = (0..len).map(|j| (u + j) as u64 + 1).collect();
+                    env.accumulate(base.add((start * 8) as u64), &src, MpiOp::Sum).unwrap();
+                }
+                env.flush_all(g).unwrap();
+                env.barrier(DART_TEAM_ALL).unwrap();
+                if env.myid() == 0 {
+                    let mut buf = vec![0u64; n];
+                    env.local_read(base, as_bytes_mut(&mut buf)).unwrap();
+                    *got.lock().unwrap() = buf;
+                }
+                env.team_memfree(DART_TEAM_ALL, g).unwrap();
+            })
+            .unwrap();
+            let got = got.into_inner().unwrap();
+            if got == expected {
+                Ok(())
+            } else {
+                Err(format!("expected {expected:?}, got {got:?}"))
+            }
+        },
+    );
+}
+
+/// One seeded commutative atomic mix (element `e` always gets `Sum` for
+/// even `e`, `Bxor` for odd — per-element single ops keep the final state
+/// interleaving-free), run once per fast-path setting. Returns the final
+/// array contents and unit 0's fast-path hit counter.
+fn atomic_mix_contents(
+    units: usize,
+    n: usize,
+    ops: usize,
+    seed: u64,
+    fastpath: bool,
+) -> (Vec<u64>, u64) {
+    let out = Mutex::new((Vec::new(), 0u64));
+    let cfg =
+        DartConfig::with_units(units).with_shmem_windows(true).with_locality_fastpath(fastpath);
+    run(cfg, |env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, (n * 8) as u64).unwrap();
+        let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
+        if env.myid() == 0 {
+            env.local_write(base, &vec![0u8; n * 8]).unwrap();
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let mut rng = Rng::new(seed ^ env.myid() as u64);
+        for _ in 0..ops {
+            let e = rng.below(n);
+            let tgt = base.add((e * 8) as u64);
+            let op = if e % 2 == 0 { MpiOp::Sum } else { MpiOp::Bxor };
+            let delta = rng.next_u64();
+            if rng.bool() {
+                env.accumulate(tgt, &[delta], op).unwrap();
+            } else {
+                env.fetch_and_op(tgt, delta, op).unwrap();
+            }
+        }
+        env.flush_all(g).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        if env.myid() == 0 {
+            let mut buf = vec![0u64; n];
+            env.local_read(base, as_bytes_mut(&mut buf)).unwrap();
+            *out.lock().unwrap() = (buf, env.metrics.atomic_fastpath_ops.get());
+        }
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+/// The intra-node CPU-atomic fast path must be bit-identical to the
+/// modelled path: same seeded mix, shmem windows on, only the fast-path
+/// knob differs — and the knob must actually engage (hits > 0 on, = 0
+/// off).
+#[test]
+fn fastpath_and_modelled_path_agree_bitwise() {
+    forall(
+        "fastpath-bit-equality",
+        3,
+        |r| (2 + r.below(5), 4 + r.below(13), r.next_u64()),
+        |&(units, n, seed)| {
+            let (fast, fast_hits) = atomic_mix_contents(units, n, 64, seed, true);
+            let (slow, slow_hits) = atomic_mix_contents(units, n, 64, seed, false);
+            if fast_hits == 0 {
+                return Err("fast-path run never hit the CPU-atomic fast path".into());
+            }
+            if slow_hits != 0 {
+                return Err("modelled run hit the fast path with the knob off".into());
+            }
+            if fast == slow {
+                Ok(())
+            } else {
+                Err(format!("contents diverge:\n  fast {fast:?}\n  slow {slow:?}"))
+            }
+        },
+    );
+}
+
+fn kv_test_cfg() -> KvConfig {
+    KvConfig {
+        keys: 128,
+        ops_per_unit: 300,
+        get_percent: 60,
+        zipf_exponent: 0.9,
+        seed: 0x0DDB_A11,
+        slots_per_unit: 256,
+        locks: 16,
+        flush_every: 8,
+        team: DART_TEAM_ALL,
+    }
+}
+
+fn kv_checksum(cfg: DartConfig, backend: KvBackend) -> (u64, u64, u64) {
+    let kv = kv_test_cfg();
+    let out = Mutex::new((0u64, 0u64, 0u64));
+    run(cfg, |env| {
+        let report = run_kv(env, &kv, backend).unwrap();
+        if env.myid() == 0 {
+            assert_eq!(report.ops, report.sets + report.gets, "op accounting broke");
+            assert_eq!(report.ops, 8 * kv.ops_per_unit as u64);
+            *out.lock().unwrap() = (report.checksum, report.atomic_fastpath_ops, report.hits);
+        }
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+/// The kvstore's oracle: all three backends — and the pooled exec mode,
+/// and the shmem fast-path configuration — fill the store to the exact
+/// same final contents.
+#[test]
+fn kvstore_backends_agree_on_final_contents() {
+    let (cas, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::CasLockFree);
+    let (mcs, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::McsLockPerBucket);
+    let (own, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::OwnerShards);
+    assert_eq!(cas, mcs, "lock-free and MCS backends disagree on final contents");
+    assert_eq!(cas, own, "lock-free and owner-computes backends disagree on final contents");
+
+    // Pooled execution must not change the answer.
+    let pooled = DartConfig::with_units(8).with_exec(ExecMode::Pooled, 4);
+    let (cas_pooled, _, _) = kv_checksum(pooled, KvBackend::CasLockFree);
+    assert_eq!(cas, cas_pooled, "pooled execution changed the final contents");
+
+    // With shmem windows on a single node, the whole run rides the
+    // CPU-atomic fast path — and still agrees.
+    let shmem = DartConfig::with_units(8).with_shmem_windows(true);
+    let (cas_fast, fastpath_ops, hits) = kv_checksum(shmem, KvBackend::CasLockFree);
+    assert_eq!(cas, cas_fast, "fast-path run changed the final contents");
+    assert!(fastpath_ops > 0, "single-node shmem run never used the fast path");
+    // Sanity: a 60%-GET zipfian mix against keys it also SETs hits often.
+    assert!(hits > 0, "zipfian mix produced zero GET hits");
+}

@@ -65,6 +65,24 @@ SCHEMAS = {
         ],
         "other_keys": ["scenario", "placement", "mode"],
     },
+    "perf_kv": {
+        "top": ["bench", "reps", "max_units", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "ops",
+            "ops_per_sec",
+            "p50_ns",
+            "p95_ns",
+            "p99_ns",
+            "cas_retries",
+            "atomic_ops",
+            "fastpath_ops",
+            "checksum",
+            "wall_ms",
+        ],
+        "other_keys": ["backend", "placement", "exec"],
+    },
     "perf_scale": {
         "top": ["bench", "reps", "max_units", "results"],
         "rows": lambda doc: doc["results"],
