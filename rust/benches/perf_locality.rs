@@ -20,12 +20,18 @@
 //!   issue and the flush has nothing to drain
 //!   (`Metrics::locality_fastpath_ops` counts them); inter-node traffic
 //!   is unaffected by the knob.
+//!
+//! The multi-node allreduce pair additionally runs a **straggler series**
+//! (`"faults":"straggler"` rows): one node drags every transfer it
+//! touches by 4× via a single-class [`FaultPlan`]. The hierarchical tree
+//! pays the straggler once per reduction, the flat tree on every hop
+//! that touches it — so the hier advantage must survive.
 
 use dart::apps::histogram::{self, HistogramConfig};
 use dart::bench_util::{fmt_ns, quick_mode, Samples};
 use dart::dart::{run, DartConfig, DART_TEAM_ALL};
 use dart::mpisim::MpiOp;
-use dart::simnet::{CoreCoord, PinPolicy};
+use dart::simnet::{CoreCoord, FaultPlan, PinPolicy};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -35,6 +41,9 @@ struct Shot {
     scenario: &'static str,
     placement: &'static str,
     mode: &'static str,
+    /// Fault-plan label: `"none"` for the clean series, `"straggler"`
+    /// for the one-slow-node ablation.
+    faults: &'static str,
     /// Units in this scenario's launch (12 for the collective scenarios,
     /// 4 for the fastpath pair).
     units: u64,
@@ -64,10 +73,20 @@ fn coll_cfg(multi: bool, hier: bool) -> DartConfig {
         .with_hierarchical_collectives(hier)
 }
 
-fn measure_allreduce(placement: &'static str, multi: bool, hier: bool, reps: usize) -> Shot {
+fn measure_allreduce(
+    placement: &'static str,
+    multi: bool,
+    hier: bool,
+    reps: usize,
+    faults: Option<(&'static str, FaultPlan)>,
+) -> Shot {
     const N: usize = 1024; // 8 KiB of u64 — the E1 regime
+    let (fault_label, cfg) = match faults {
+        Some((label, plan)) => (label, coll_cfg(multi, hier).with_fault_plan(plan)),
+        None => ("none", coll_cfg(multi, hier)),
+    };
     let out = Mutex::new(Shot::default());
-    run(coll_cfg(multi, hier), |env| {
+    run(cfg, |env| {
         let mine = vec![env.myid() as u64 + 1; N];
         let mut red = vec![0u64; N];
         // Warm the split cache (sub-team creation) outside the timing.
@@ -84,6 +103,7 @@ fn measure_allreduce(placement: &'static str, multi: bool, hier: bool, reps: usi
                 scenario: "allreduce",
                 placement,
                 mode: if hier { "hier" } else { "flat" },
+                faults: fault_label,
                 units: 12,
                 reps: reps as u64,
                 ns: s.median(),
@@ -116,6 +136,7 @@ fn measure_histogram(placement: &'static str, multi: bool, hier: bool, reps: usi
                 scenario: "histogram",
                 placement,
                 mode: if hier { "hier" } else { "flat" },
+                faults: "none",
                 units: 12,
                 reps: reps as u64,
                 ns: s.median(),
@@ -171,6 +192,7 @@ fn measure_fastpath(placement: &'static str, pin: PinPolicy, fastpath: bool, rep
                 scenario: "fastpath",
                 placement,
                 mode: if fastpath { "on" } else { "off" },
+                faults: "none",
                 units: 4,
                 reps: reps as u64,
                 ns: s.median(),
@@ -188,10 +210,11 @@ fn measure_fastpath(placement: &'static str, pin: PinPolicy, fastpath: bool, rep
 
 fn json_shot(s: &Shot) -> String {
     format!(
-        "{{\"scenario\":\"{}\",\"placement\":\"{}\",\"mode\":\"{}\",\"units\":{},\"reps\":{},\
-         \"ns\":{:.1},\"intra_ops\":{},\"inter_ops\":{},\"fastpath_ops\":{},\"checksum\":{}}}",
-        s.scenario, s.placement, s.mode, s.units, s.reps, s.ns, s.intra_ops, s.inter_ops,
-        s.fastpath_ops, s.checksum
+        "{{\"scenario\":\"{}\",\"placement\":\"{}\",\"mode\":\"{}\",\"faults\":\"{}\",\
+         \"units\":{},\"reps\":{},\"ns\":{:.1},\"intra_ops\":{},\"inter_ops\":{},\
+         \"fastpath_ops\":{},\"checksum\":{}}}",
+        s.scenario, s.placement, s.mode, s.faults, s.units, s.reps, s.ns, s.intra_ops,
+        s.inter_ops, s.fastpath_ops, s.checksum
     )
 }
 
@@ -201,9 +224,17 @@ fn main() {
     let mut shots = Vec::new();
     for (placement, multi) in [("single-node", false), ("multi-node", true)] {
         for hier in [false, true] {
-            shots.push(measure_allreduce(placement, multi, hier, reps));
+            shots.push(measure_allreduce(placement, multi, hier, reps, None));
             shots.push(measure_histogram(placement, multi, hier, reps.min(12)));
         }
+    }
+    // Straggler series: node 0 of the 3-node cluster drags every transfer
+    // it touches by 4× (all other fault classes quiet, fixed seed).
+    let straggler =
+        FaultPlan { straggler_nodes: 1, straggler_factor: 4.0, ..FaultPlan::quiet(0x57A6) };
+    for hier in [false, true] {
+        let series = Some(("straggler", straggler));
+        shots.push(measure_allreduce("multi-node", true, hier, reps, series));
     }
     // The measured pair is unit 0 → unit 2. ScatterNode on 2 nodes puts
     // both on node 0 (intra-node); the Custom placement pins units 2,3 to
@@ -244,7 +275,12 @@ fn main() {
             let of = |mode: &str| {
                 shots
                     .iter()
-                    .find(|s| s.scenario == scenario && s.placement == placement && s.mode == mode)
+                    .find(|s| {
+                        s.scenario == scenario
+                            && s.placement == placement
+                            && s.mode == mode
+                            && s.faults == "none"
+                    })
                     .map(|s| s.checksum)
                     .unwrap()
             };
@@ -256,20 +292,49 @@ fn main() {
         }
     }
 
-    let flat = shots
-        .iter()
-        .find(|s| s.scenario == "allreduce" && s.placement == "multi-node" && s.mode == "flat")
-        .unwrap();
-    let hier = shots
-        .iter()
-        .find(|s| s.scenario == "allreduce" && s.placement == "multi-node" && s.mode == "hier")
-        .unwrap();
+    let clean = |mode: &str| {
+        shots
+            .iter()
+            .find(|s| {
+                s.scenario == "allreduce"
+                    && s.placement == "multi-node"
+                    && s.mode == mode
+                    && s.faults == "none"
+            })
+            .unwrap()
+    };
+    let (flat, hier) = (clean("flat"), clean("hier"));
     println!(
         "\nmulti-node allreduce: flat {} vs hier {} → {:.2}× (expected > 1: one \
          interconnect crossing per node instead of one per tree edge)",
         fmt_ns(flat.ns),
         fmt_ns(hier.ns),
         flat.ns / hier.ns
+    );
+
+    // Straggler gates: a dragging node must not change the result, and
+    // the two-level tree — which pays the straggler once per reduction
+    // instead of on every hop — must keep its edge over the flat tree.
+    let dragged = |mode: &str| {
+        shots
+            .iter()
+            .find(|s| s.scenario == "allreduce" && s.faults == "straggler" && s.mode == mode)
+            .unwrap()
+    };
+    let (s_flat, s_hier) = (dragged("flat"), dragged("hier"));
+    assert_eq!(s_flat.checksum, flat.checksum, "straggler node corrupted the reduction");
+    assert_eq!(s_flat.checksum, s_hier.checksum, "straggler: hier result differs from flat");
+    assert!(
+        s_hier.ns < s_flat.ns,
+        "hier lost its edge under a straggler node: hier={} flat={}",
+        fmt_ns(s_hier.ns),
+        fmt_ns(s_flat.ns)
+    );
+    println!(
+        "straggler allreduce:  flat {} vs hier {} → {:.2}× (one node dragging 4×)",
+        fmt_ns(s_flat.ns),
+        fmt_ns(s_hier.ns),
+        s_flat.ns / s_hier.ns
     );
 
     let rows: Vec<String> = shots.iter().map(json_shot).collect();

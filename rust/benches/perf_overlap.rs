@@ -22,12 +22,19 @@
 //! Results print as a table and land in `BENCH_overlap.json`, including
 //! the cost side of the ablation: total engine wakeups and the modelled
 //! nanoseconds charged for them (`progress_tick_ns`).
+//!
+//! A **straggler series** (`"faults":"straggler"` rows) reruns the
+//! `Caller`/`Polling` pair on the inter-node placement with one node
+//! dragging every transfer it touches by 4× (single-class
+//! [`FaultPlan`]): overlap is *more* valuable when the wire is slow, so
+//! `Polling` must still retire traffic in the background while `Caller`
+//! stays at zero overlap and pays the whole dragged wait itself.
 
 use dart::bench_util::{fmt_ns, quick_mode, Samples};
 use dart::dart::{run, DartConfig, ProgressMode, DART_TEAM_ALL};
 use dart::mpisim::MpiOp;
 use dart::simnet::cost::spin_for;
-use dart::simnet::PinPolicy;
+use dart::simnet::{FaultPlan, PinPolicy};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -36,6 +43,9 @@ use std::time::{Duration, Instant};
 struct Shot {
     mode: &'static str,
     placement: &'static str,
+    /// Fault-plan label: `"none"` for the clean series, `"straggler"`
+    /// for the one-slow-node ablation.
+    faults: &'static str,
     /// RMA phase: bytes issued as deferred-completion puts.
     async_bytes: u64,
     /// RMA phase: bytes retired by the progress engine (overlap achieved).
@@ -73,15 +83,28 @@ fn compute_window(env: &dart::dart::DartEnv, mode: ProgressMode, window: Duratio
     }
 }
 
-fn measure(mode: ProgressMode, placement: &'static str, pin: PinPolicy, reps: usize) -> Shot {
+fn measure(
+    mode: ProgressMode,
+    placement: &'static str,
+    pin: PinPolicy,
+    reps: usize,
+    faults: Option<(&'static str, FaultPlan)>,
+) -> Shot {
     const PUTS: usize = 24;
     const PUT_BYTES: usize = 16 << 10; // 16 KiB, E1 regime
     const WINDOW: Duration = Duration::from_micros(400);
     let out = Mutex::new(Shot::default());
-    let cfg = DartConfig::hermit(2, 2)
+    let mut cfg = DartConfig::hermit(2, 2)
         .with_pin(pin)
         .with_pools(1 << 16, 1 << 20)
         .with_progress_mode(mode);
+    let fault_label = match faults {
+        Some((label, plan)) => {
+            cfg = cfg.with_fault_plan(plan);
+            label
+        }
+        None => "none",
+    };
     run(cfg, |env| {
         let g = env.team_memalloc_aligned(DART_TEAM_ALL, (PUTS * PUT_BYTES) as u64).unwrap();
         let src = vec![0xA5u8; PUT_BYTES];
@@ -121,6 +144,7 @@ fn measure(mode: ProgressMode, placement: &'static str, pin: PinPolicy, reps: us
             *out.lock().unwrap() = Shot {
                 mode: mode.label(),
                 placement,
+                faults: fault_label,
                 async_bytes: (reps * PUTS * PUT_BYTES) as u64,
                 overlap_bytes: env.metrics.overlap_bytes.get(),
                 flush_ns: flush.median(),
@@ -138,11 +162,12 @@ fn measure(mode: ProgressMode, placement: &'static str, pin: PinPolicy, reps: us
 
 fn json_shot(s: &Shot) -> String {
     format!(
-        "{{\"mode\":\"{}\",\"placement\":\"{}\",\"async_bytes\":{},\"overlap_bytes\":{},\
-         \"overlap_efficiency\":{:.4},\"flush_ns\":{:.1},\"coll_wait_ns\":{:.1},\
-         \"engine_ticks\":{},\"tick_ns_charged\":{}}}",
+        "{{\"mode\":\"{}\",\"placement\":\"{}\",\"faults\":\"{}\",\"async_bytes\":{},\
+         \"overlap_bytes\":{},\"overlap_efficiency\":{:.4},\"flush_ns\":{:.1},\
+         \"coll_wait_ns\":{:.1},\"engine_ticks\":{},\"tick_ns_charged\":{}}}",
         s.mode,
         s.placement,
+        s.faults,
         s.async_bytes,
         s.overlap_bytes,
         s.overlap_efficiency(),
@@ -162,8 +187,17 @@ fn main() {
     let mut shots = Vec::new();
     for (pname, pin) in placements.iter() {
         for &mode in &modes {
-            shots.push(measure(mode, *pname, pin.clone(), reps));
+            shots.push(measure(mode, *pname, pin.clone(), reps, None));
         }
+    }
+    // Straggler series: one node drags every transfer it touches by 4×
+    // (all other fault classes quiet, fixed seed) — the ends of the
+    // overlap spectrum, on the placement where the wire matters.
+    let straggler =
+        FaultPlan { straggler_nodes: 1, straggler_factor: 4.0, ..FaultPlan::quiet(0x57A6) };
+    for mode in [ProgressMode::Caller, ProgressMode::Polling] {
+        let series = Some(("straggler", straggler));
+        shots.push(measure(mode, "inter-node", PinPolicy::ScatterNode, reps, series));
     }
     println!(
         "\n{:>10} {:>11} {:>10} {:>12} {:>12} {:>12} {:>14}",
@@ -185,6 +219,32 @@ fn main() {
         "\n(expected shape: caller = 0% overlap and the largest collective wait; \
          thread ≈ full overlap at the highest tick charge; polling in between)"
     );
+
+    // Straggler gates: cooperative polling must still retire traffic in
+    // the background while a node drags, and caller mode must still pay
+    // for everything itself — the overlap ranking survives the fault.
+    let dragged = |mode: &str| {
+        shots.iter().find(|s| s.faults == "straggler" && s.mode == mode).unwrap()
+    };
+    let (s_caller, s_polling) = (dragged("caller"), dragged("polling"));
+    assert_eq!(s_caller.overlap_bytes, 0, "caller mode overlapped under a straggler");
+    assert!(
+        s_polling.overlap_bytes > 0,
+        "polling retired nothing in the background under a straggler"
+    );
+    assert!(
+        s_polling.coll_wait_ns < s_caller.coll_wait_ns,
+        "polling lost its edge under a straggler: polling wait {} vs caller wait {}",
+        fmt_ns(s_polling.coll_wait_ns),
+        fmt_ns(s_caller.coll_wait_ns)
+    );
+    println!(
+        "straggler: caller wait {} vs polling wait {} at {:.0}% polling overlap",
+        fmt_ns(s_caller.coll_wait_ns),
+        fmt_ns(s_polling.coll_wait_ns),
+        s_polling.overlap_efficiency() * 100.0
+    );
+
     let rows: Vec<String> = shots.iter().map(json_shot).collect();
     let json = format!(
         "{{\"bench\":\"perf_overlap\",\"reps\":{reps},\"put_bytes\":16384,\"puts_per_rep\":24,\

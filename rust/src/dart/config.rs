@@ -1,7 +1,7 @@
 //! DART runtime configuration.
 
 use crate::mpisim::{ExecMode, ProgressMode};
-use crate::simnet::{CostModel, PinPolicy, Topology};
+use crate::simnet::{CostModel, FaultPlan, PinPolicy, Topology};
 
 /// Configuration for a DART SPMD launch ([`crate::dart::run`]).
 #[derive(Clone)]
@@ -82,6 +82,14 @@ pub struct DartConfig {
     /// Bound on concurrently runnable unit threads under
     /// [`ExecMode::Pooled`]; `0` = the machine's available parallelism.
     pub max_os_threads: usize,
+    /// Seeded deterministic fault injection ([`crate::simnet::faults`]):
+    /// `None` (default) is a friendly world; `Some(plan)` makes the
+    /// substrate inject message jitter, persistently slow channels,
+    /// RMA-completion reordering, starved progress ticks and straggler
+    /// nodes — every event reproducible from the plan's seed alone, and
+    /// counted in [`crate::dart::Metrics`] (`fault_*`) so tests can assert
+    /// the plan fired.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl DartConfig {
@@ -106,6 +114,7 @@ impl DartConfig {
             progress_mode: ProgressMode::Caller,
             exec: ExecMode::ThreadPerRank,
             max_os_threads: 0,
+            fault_plan: None,
         }
     }
 
@@ -192,6 +201,20 @@ impl DartConfig {
         self.exec = exec;
         self.max_os_threads = max_os_threads;
         self
+    }
+
+    /// Install a specific fault plan (see [`crate::simnet::faults`]).
+    #[must_use]
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Install [`FaultPlan::from_seed`]`(seed)` — every fault class live
+    /// at seed-derived intensities; the chaos suite's one-knob entry.
+    #[must_use]
+    pub fn with_fault_seed(self, seed: u64) -> Self {
+        self.with_fault_plan(FaultPlan::from_seed(seed))
     }
 }
 

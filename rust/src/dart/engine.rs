@@ -531,5 +531,21 @@ impl DartEnv {
         self.metrics.overlap_ops.add(ops - seen_ops);
         self.metrics.overlap_bytes.add(bytes - seen_bytes);
         self.progress_seen.set((ops, bytes));
+        self.sync_fault_metrics();
+    }
+
+    /// Mirror the world-global injected-fault counters into this unit's
+    /// [`super::Metrics`] `fault_*` fields (snapshot-diff, so repeated
+    /// sync points never double-count). A no-op without a fault plan.
+    pub(crate) fn sync_fault_metrics(&self) {
+        if self.config().fault_plan.is_none() {
+            return;
+        }
+        let s = self.mpi().state().fault_stats();
+        let seen = self.fault_seen.get();
+        self.metrics.fault_jitter_events.add(s.jitter_events - seen.jitter_events);
+        self.metrics.fault_reorders.add(s.reorders - seen.reorders);
+        self.metrics.fault_starved_ticks.add(s.starved_ticks - seen.starved_ticks);
+        self.fault_seen.set(s);
     }
 }

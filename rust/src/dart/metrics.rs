@@ -3,6 +3,12 @@
 //! `Cell`-based (the env is thread-local), so bumping a counter is a plain
 //! store — cheap enough to leave enabled in release builds and in the
 //! figure benches.
+//!
+//! [`Metrics::snapshot`] / [`MetricsSnapshot::delta`] support phase-scoped
+//! accounting (take a snapshot, run a phase, diff), and [`Metrics::reset`]
+//! zeroes everything — so a scenario that reuses one env across phases
+//! (warm-up vs. measured, or successive chaos scenarios) never sees
+//! leakage from an earlier phase.
 
 use std::cell::Cell;
 use std::fmt;
@@ -28,6 +34,12 @@ impl Counter {
     #[inline]
     pub fn get(&self) -> u64 {
         self.0.get()
+    }
+
+    /// Back to zero (see [`Metrics::reset`]).
+    #[inline]
+    pub fn reset(&self) {
+        self.0.set(0);
     }
 }
 
@@ -61,82 +73,146 @@ impl Gauge {
     pub fn peak(&self) -> u64 {
         self.peak.get()
     }
+
+    /// Back to zero, peak included (see [`Metrics::reset`]).
+    #[inline]
+    pub fn reset(&self) {
+        self.cur.set(0);
+        self.peak.set(0);
+    }
 }
 
-/// Per-unit DART operation counters.
-#[derive(Default)]
-pub struct Metrics {
+/// The single source of truth for the counter list: generates [`Metrics`]
+/// (live `Counter`s), [`MetricsSnapshot`] (plain `u64`s), and the
+/// snapshot/reset plumbing, so adding a counter is a one-line change that
+/// cannot drift between the three.
+macro_rules! define_metrics {
+    ($( $(#[$meta:meta])* $name:ident ),+ $(,)?) => {
+        /// Per-unit DART operation counters.
+        #[derive(Default)]
+        pub struct Metrics {
+            $( $(#[$meta])* pub $name: Counter, )+
+            /// Live entries in the segment-resolution cache (current +
+            /// peak) — the scale satellite's visibility into cache growth
+            /// across hundreds of live segments. Updated at insert and
+            /// invalidation points. (Gauge, not a counter: excluded from
+            /// [`MetricsSnapshot`].)
+            pub seg_cache_size: Gauge,
+        }
+
+        /// A plain-data copy of every [`Metrics`] counter at one instant —
+        /// diff two with [`MetricsSnapshot::delta`] for phase-scoped
+        /// accounting.
+        #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+        pub struct MetricsSnapshot {
+            $( $(#[$meta])* pub $name: u64, )+
+        }
+
+        impl Metrics {
+            /// Copy every counter's current value.
+            pub fn snapshot(&self) -> MetricsSnapshot {
+                MetricsSnapshot { $( $name: self.$name.get(), )+ }
+            }
+
+            /// Zero every counter and the gauge — scenario isolation for
+            /// runs that reuse one env across phases.
+            pub fn reset(&self) {
+                $( self.$name.reset(); )+
+                self.seg_cache_size.reset();
+            }
+        }
+
+        impl MetricsSnapshot {
+            /// Per-counter difference `self - earlier` (counters are
+            /// monotonic between resets, so take `earlier` first;
+            /// wrapping, so a reset in between cannot panic).
+            pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+                MetricsSnapshot { $( $name: self.$name.wrapping_sub(earlier.$name), )+ }
+            }
+        }
+    };
+}
+
+define_metrics! {
     /// Non-blocking puts issued.
-    pub puts: Counter,
+    puts,
     /// Non-blocking gets issued.
-    pub gets: Counter,
+    gets,
     /// Blocking puts issued.
-    pub puts_blocking: Counter,
+    puts_blocking,
     /// Blocking gets issued.
-    pub gets_blocking: Counter,
+    gets_blocking,
     /// Bytes moved by one-sided operations.
-    pub bytes: Counter,
+    bytes,
     /// Collective global memory allocations.
-    pub allocs: Counter,
+    allocs,
     /// Collective operations (barrier/bcast/...).
-    pub collectives: Counter,
+    collectives,
     /// Lock acquisitions.
-    pub lock_acquires: Counter,
+    lock_acquires,
     /// Explicit flush calls (`dart_flush`/`dart_flush_all`).
-    pub flushes: Counter,
+    flushes,
     /// Segment-cache hits on the §IV-B4 dereference chain.
-    pub cache_hits: Counter,
+    cache_hits,
     /// Segment-cache misses (full registry + translation-table walk).
-    pub cache_misses: Counter,
+    cache_misses,
     /// Progress-engine ticks driven by this unit's cooperative polls
     /// (`Polling` mode; background-thread ticks are world-global — see
     /// [`crate::dart::DartEnv::engine_ticks`]).
-    pub progress_ticks: Counter,
+    progress_ticks,
     /// Deferred one-sided operations retired by the progress engine —
     /// completed in the background with zero caller time.
-    pub overlap_ops: Counter,
+    overlap_ops,
     /// Bytes of deferred one-sided traffic retired by the progress engine
     /// (the "overlap achieved" number the `perf_overlap` bench reports).
-    pub overlap_bytes: Counter,
+    overlap_bytes,
     /// Nonblocking-collective phase transitions observed by this unit
     /// (one per initiation, one per completion).
-    pub coll_phases: Counter,
+    coll_phases,
     /// Contiguous runs issued by the `dash` layer's bulk transfers
     /// (`Array::copy_in`/`copy_out` and `dash::algorithms::copy`): each
     /// run is ONE one-sided operation covering many elements, so
     /// `dash_coalesced_runs ≪ elements moved` is the coalescing claim.
-    pub dash_coalesced_runs: Counter,
+    dash_coalesced_runs,
     /// Bytes moved by `dash::algorithms::copy` redistributions.
-    pub dash_redist_bytes: Counter,
+    dash_redist_bytes,
     /// Intra-node phases executed by hierarchical collectives (node-local
     /// reduce/bcast/gather/barrier legs) — together with
     /// [`Metrics::hier_coll_inter_ops`] this makes the two-level
     /// decomposition assertable by tests.
-    pub hier_coll_intra_ops: Counter,
+    hier_coll_intra_ops,
     /// Leader-team (cross-node) phases executed by hierarchical
     /// collectives. Bumped only on units that are their node's leader —
     /// non-leaders never touch the interconnect in a hierarchical
     /// collective.
-    pub hier_coll_inter_ops: Counter,
+    hier_coll_inter_ops,
     /// Deferred one-sided operations completed by the engine's intra-node
     /// zero-copy fast path (shmem window + same-node target): the op
     /// bypassed the deferred-completion queue entirely — no progress-engine
     /// registration, nothing for a flush to wait on.
-    pub locality_fastpath_ops: Counter,
+    locality_fastpath_ops,
     /// Atomic operations issued (`accumulate`/`accumulate_async`/
     /// `fetch_and_op`/`compare_and_swap`), any path.
-    pub atomic_ops: Counter,
+    atomic_ops,
     /// Atomic operations completed via the intra-node CPU-atomic fast path
     /// (shmem window + same-node target): the hardware atomic was the
     /// whole operation — no modelled round trip, no engine registration.
-    pub atomic_fastpath_ops: Counter,
+    atomic_fastpath_ops,
     /// Bytes touched by atomic operations (operand bytes, not counted in
     /// [`Metrics::bytes`]).
-    pub atomic_bytes: Counter,
-    /// Live entries in the segment-resolution cache (current + peak) —
-    /// the scale satellite's visibility into cache growth across hundreds
-    /// of live segments. Updated at insert and invalidation points.
-    pub seg_cache_size: Gauge,
+    atomic_bytes,
+    /// Injected per-message jitter events observed at this unit's sync
+    /// points. **World-global mirror**: the fault layer counts events
+    /// world-wide ([`crate::dart::DartEnv::fault_stats`]); this counter
+    /// mirrors the running total so per-unit assertions (and the chaos
+    /// suite) can prove the plan fired without a world handle.
+    fault_jitter_events,
+    /// Injected RMA-completion reorderings observed at this unit's sync
+    /// points (world-global mirror, like [`Metrics::fault_jitter_events`]).
+    fault_reorders,
+    /// Starved progress ticks observed at this unit's sync points
+    /// (world-global mirror, like [`Metrics::fault_jitter_events`]).
+    fault_starved_ticks,
 }
 
 impl Metrics {
@@ -153,7 +229,8 @@ impl fmt::Display for Metrics {
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
              coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={} \
-             atomics={} atomic_fast={} atomic_bytes={} seg_cache={}/{}",
+             atomics={} atomic_fast={} atomic_bytes={} fault_jitter={} fault_reorder={} \
+             fault_starved={} seg_cache={}/{}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -177,6 +254,9 @@ impl fmt::Display for Metrics {
             self.atomic_ops.get(),
             self.atomic_fastpath_ops.get(),
             self.atomic_bytes.get(),
+            self.fault_jitter_events.get(),
+            self.fault_reorders.get(),
+            self.fault_starved_ticks.get(),
             self.seg_cache_size.get(),
             self.seg_cache_size.peak()
         )
@@ -198,6 +278,7 @@ mod tests {
         assert_eq!(m.gets.get(), 0);
         let s = m.to_string();
         assert!(s.contains("puts=2"));
+        assert!(s.contains("fault_jitter=0"));
     }
 
     #[test]
@@ -212,5 +293,33 @@ mod tests {
         let m = Metrics::new();
         m.seg_cache_size.set(7);
         assert!(m.to_string().contains("seg_cache=7/7"));
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_a_phase() {
+        let m = Metrics::new();
+        m.puts.add(5);
+        m.fault_reorders.add(2);
+        let before = m.snapshot();
+        m.puts.add(3);
+        m.fault_reorders.bump();
+        m.overlap_bytes.add(100);
+        let d = m.snapshot().delta(&before);
+        assert_eq!(d.puts, 3);
+        assert_eq!(d.fault_reorders, 1);
+        assert_eq!(d.overlap_bytes, 100);
+        assert_eq!(d.gets, 0, "untouched counters must diff to zero");
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let m = Metrics::new();
+        m.puts.add(7);
+        m.fault_starved_ticks.add(4);
+        m.seg_cache_size.set(9);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+        assert_eq!(m.seg_cache_size.get(), 0);
+        assert_eq!(m.seg_cache_size.peak(), 0);
     }
 }

@@ -58,8 +58,14 @@ pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE};
 pub use group::DartGroup;
 pub use locality::{DomainCoord, LocalityScope, LocalitySplit};
 pub use lock::DartLock;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use onesided::DartHandle;
+
+/// Re-export: the fault-injection surface lives in
+/// [`crate::simnet::faults`] but is configured through
+/// [`DartConfig::fault_plan`] and observed through
+/// [`DartEnv::fault_stats`] / [`DartEnv::fault_trace`].
+pub use crate::simnet::{FaultEvent, FaultKind, FaultPlan, FaultStats};
 
 /// Re-export: the progress-mode knob lives in the substrate
 /// ([`crate::mpisim::progress`]) but is configured through
@@ -231,6 +237,10 @@ pub struct DartEnv {
     /// already mirrored into [`Metrics`] (see
     /// [`DartEnv::progress_poll`] and the flush family).
     pub(crate) progress_seen: Cell<(u64, u64)>,
+    /// Fault-injection bookkeeping: the world-global counters already
+    /// mirrored into this unit's [`Metrics`] `fault_*` fields
+    /// (snapshot-diff, same pattern as `progress_seen`).
+    pub(crate) fault_seen: Cell<FaultStats>,
     /// Hot-path operation counters.
     pub metrics: Metrics,
 }
@@ -259,6 +269,7 @@ where
         progress: cfg.progress_mode,
         exec: cfg.exec,
         max_os_threads: cfg.max_os_threads,
+        faults: cfg.fault_plan,
     };
     World::run(world_cfg, move |mpi| {
         let env = DartEnv::init(mpi, cfg.clone(), shared.clone()).expect("dart_init failed");
@@ -313,6 +324,7 @@ impl DartEnv {
             locality_cache: RefCell::new(HashMap::new()),
             hier_flat_teams: RefCell::new(std::collections::HashSet::new()),
             progress_seen: Cell::new((0, 0)),
+            fault_seen: Cell::new(FaultStats::default()),
             metrics: Metrics::new(),
         })
     }
@@ -353,6 +365,24 @@ impl DartEnv {
     /// The launch configuration.
     pub fn config(&self) -> &DartConfig {
         &self.config
+    }
+
+    /// Snapshot of the **world-global** injected-fault counters (all zero
+    /// without a [`DartConfig::fault_plan`]). Also mirrors the deltas into
+    /// this unit's [`Metrics`] `fault_*` counters, and returns exactly the
+    /// snapshot that was mirrored — so after a team barrier the returned
+    /// stats and the unit's `fault_*` metrics always agree, even if a
+    /// sibling unit books another event concurrently.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.sync_fault_metrics();
+        self.fault_seen.get()
+    }
+
+    /// The world's recorded dynamic fault events in canonical order — two
+    /// runs of the same seeded scenario must return identical traces (the
+    /// chaos suite's determinism oracle). Empty without a fault plan.
+    pub fn fault_trace(&self) -> Vec<FaultEvent> {
+        self.mpi.state().fault_trace()
     }
 
     /// `(slot limit, peak concurrently runnable units)` of the pooled

@@ -58,6 +58,7 @@ pub use progress::ProgressMode;
 pub use request::{RecvRequest, RmaRequest, SendRequest};
 pub use window::{LockKind, Win};
 
+use crate::simnet::faults::{FaultEvent, FaultPlan, FaultState, FaultStats};
 use crate::simnet::{CostModel, PinPolicy, Placement, RunGate, Tier, Topology};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -113,6 +114,12 @@ pub struct WorldConfig {
     /// [`ExecMode::Pooled`]; `0` means the machine's available parallelism.
     /// Ignored in thread-per-rank mode.
     pub max_os_threads: usize,
+    /// Seeded deterministic fault injection ([`crate::simnet::faults`]):
+    /// `None` (the default) runs a friendly world; `Some(plan)` injects
+    /// message jitter, slow channels, completion reordering, starved
+    /// progress ticks and straggler nodes — every event a pure function of
+    /// the plan's seed.
+    pub faults: Option<FaultPlan>,
 }
 
 impl WorldConfig {
@@ -128,6 +135,7 @@ impl WorldConfig {
             progress: ProgressMode::Caller,
             exec: ExecMode::ThreadPerRank,
             max_os_threads: 0,
+            faults: None,
         }
     }
 
@@ -143,6 +151,7 @@ impl WorldConfig {
             progress: ProgressMode::Caller,
             exec: ExecMode::ThreadPerRank,
             max_os_threads: 0,
+            faults: None,
         }
     }
 
@@ -161,6 +170,15 @@ impl WorldConfig {
 /// contention negligible, few enough that an idle world costs nothing.
 const CHANNEL_SHARDS: usize = 64;
 
+/// Per-directed-pair channel state: the instant until which the pair's
+/// serialization stage is occupied, and a message sequence number — the
+/// stable per-channel key the fault layer's per-message jitter decisions
+/// hash (program order on the booking thread, so seeded decisions replay).
+struct Chan {
+    busy: Instant,
+    seq: u64,
+}
+
 /// Globally shared world state (one per [`World::run`] call).
 pub struct WorldState {
     pub(crate) nranks: usize,
@@ -172,9 +190,10 @@ pub struct WorldState {
     pub(crate) next_context_id: AtomicU32,
     /// Directed-pair virtual-time channels, keyed `src * nranks + dst` and
     /// populated on first use — memory is O(active pairs), not O(nranks²),
-    /// which is what lets 4096-rank worlds exist at all. The value is the
-    /// instant until which the pair's serialization stage is occupied.
-    channels: Vec<Mutex<HashMap<u64, Instant>>>,
+    /// which is what lets 4096-rank worlds exist at all.
+    channels: Vec<Mutex<HashMap<u64, Chan>>>,
+    /// Live fault-injection state (`None` in a friendly world).
+    faults: Option<FaultState>,
     /// Run-slot gate of the pooled execution mode (`None` in
     /// thread-per-rank mode).
     exec_gate: Option<Arc<RunGate>>,
@@ -203,6 +222,7 @@ impl WorldState {
             next_win_id: AtomicU64::new(1),
             next_context_id: AtomicU32::new(1),
             channels: (0..CHANNEL_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            faults: cfg.faults.map(|plan| FaultState::new(plan, cfg.topology.nodes)),
             exec_gate,
             inter_node_msgs: AtomicU64::new(0),
             progress: progress::ProgressShared::new(cfg.nranks),
@@ -270,7 +290,7 @@ impl WorldState {
     ) -> Instant {
         let now = Instant::now();
         let base = if not_before > now { not_before } else { now };
-        if self.cost.scale <= 0.0 || src == dst {
+        if src == dst || (self.cost.scale <= 0.0 && self.faults.is_none()) {
             return base;
         }
         let tier = self.tier(src, dst);
@@ -286,18 +306,71 @@ impl WorldState {
             serialize_ns +=
                 self.cost.e1_latency_ns + 2.0 * bytes as f64 / self.cost.e1_copy_bytes_per_ns;
         }
-        let serialize = Duration::from_nanos((serialize_ns * self.cost.scale) as u64);
-        let latency = Duration::from_nanos((tc.latency_ns * self.cost.scale) as u64);
+        serialize_ns *= self.cost.scale;
+        let mut latency_ns = tc.latency_ns * self.cost.scale;
         let key = (src * self.nranks + dst) as u64;
+        // Fault injection, stage 1 (seq-independent): a persistently slow
+        // channel and/or a straggler endpoint multiply the modelled times.
+        if let Some(fs) = &self.faults {
+            let mut factor = 1.0f64;
+            if let Some(f) = fs.plan.channel_slowdown(key) {
+                factor *= f;
+                fs.note_slow_channel_msg();
+            }
+            if fs.is_straggler(self.placement.node_of(src))
+                || fs.is_straggler(self.placement.node_of(dst))
+            {
+                factor *= fs.plan.straggler_factor;
+                fs.note_straggler_msg();
+            }
+            serialize_ns *= factor;
+            latency_ns *= factor;
+        }
         let mut shard = self.channels[Self::channel_shard(key)].lock().unwrap();
-        let start = match shard.get(&key) {
-            Some(&busy) if busy > base => busy,
-            _ => base,
-        };
+        let chan = shard.entry(key).or_insert(Chan { busy: base, seq: 0 });
+        let msg_seq = chan.seq;
+        chan.seq += 1;
+        // Fault injection, stage 2 (under the shard lock, which owns the
+        // per-channel message sequence): per-message jitter. Jitter is
+        // *unscaled* modelled time, so a fault plan stays adversarial over
+        // a zero-cost model.
+        let mut jitter_ns = 0u64;
+        if let Some(fs) = &self.faults {
+            if let Some(j) = fs.plan.jitter_ns(key, msg_seq) {
+                jitter_ns = j;
+                fs.note_jitter(key, msg_seq, j);
+            }
+        }
+        let serialize = Duration::from_nanos(serialize_ns as u64 + jitter_ns);
+        let latency = Duration::from_nanos(latency_ns as u64);
+        let start = if chan.busy > base { chan.busy } else { base };
         let done = start + serialize;
-        shard.insert(key, done);
+        chan.busy = done;
         drop(shard);
         done + latency
+    }
+
+    /// Snapshot of the world's injected-fault counters (all zero when no
+    /// [`WorldConfig::faults`] plan is configured).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.as_ref().map(|f| f.snapshot()).unwrap_or_default()
+    }
+
+    /// The recorded dynamic fault events in canonical (class/key/seq)
+    /// order — the determinism oracle: two runs of the same seeded
+    /// scenario must return identical traces. Empty without a fault plan.
+    pub fn fault_trace(&self) -> Vec<FaultEvent> {
+        self.faults.as_ref().map(|f| f.trace()).unwrap_or_default()
+    }
+
+    /// The configured fault plan, if any.
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        self.faults.as_ref().map(|f| f.plan)
+    }
+
+    /// Crate-internal access for the progress engine's hooks.
+    pub(crate) fn fault_state(&self) -> Option<&FaultState> {
+        self.faults.as_ref()
     }
 
     /// Wait until `t` has passed (no-op if already past). Yield-aware: see

@@ -98,6 +98,11 @@ struct RmaShard {
     /// atomic load. Incremented *before* the push and decremented *after*
     /// the removal, so a nonzero queue is never reported empty.
     pending: AtomicU64,
+    /// Registrations ever made by this origin — the stable per-origin
+    /// sequence the fault layer's completion-reorder decisions hash.
+    /// Registration happens on the origin's own thread, so the sequence
+    /// follows program order and seeded decisions replay.
+    reg_seq: AtomicU64,
 }
 
 /// Per-world shared state of the progress engine.
@@ -125,7 +130,11 @@ impl ProgressShared {
     pub(crate) fn new(nranks: usize) -> Self {
         ProgressShared {
             rma: (0..nranks)
-                .map(|_| RmaShard { queue: Mutex::new(Vec::new()), pending: AtomicU64::new(0) })
+                .map(|_| RmaShard {
+                    queue: Mutex::new(Vec::new()),
+                    pending: AtomicU64::new(0),
+                    reg_seq: AtomicU64::new(0),
+                })
                 .collect(),
             total_pending: AtomicU64::new(0),
             colls: Mutex::new(HashMap::new()),
@@ -142,6 +151,11 @@ impl WorldState {
     /// Register a deferred-completion RMA operation with the engine. Only
     /// the origin's shard is locked; counters go up *before* the push so a
     /// queued entry is never invisible to the pending query.
+    ///
+    /// With a fault plan live, a seeded fraction of registrations is held
+    /// back past its wire completion — later-issued operations then retire
+    /// *first*, the unordered-completion hazard MPI-3 RMA permits (and the
+    /// chaos invariants probe `flush` and the MCS lock against).
     pub(crate) fn progress_register_rma(
         &self,
         origin: usize,
@@ -151,6 +165,14 @@ impl WorldState {
         target: usize,
     ) {
         let shard = &self.progress.rma[origin];
+        let mut complete_at = complete_at;
+        if let Some(fs) = self.fault_state() {
+            let seq = shard.reg_seq.fetch_add(1, Ordering::Relaxed);
+            if let Some(hold) = fs.plan.reorder_hold_ns(origin as u64, seq) {
+                complete_at += Duration::from_nanos(hold);
+                fs.note_reorder(origin as u64, seq, hold);
+            }
+        }
         shard.pending.fetch_add(1, Ordering::Release);
         self.progress.total_pending.fetch_add(1, Ordering::Release);
         shard.queue.lock().unwrap().push(PendingRma { bytes, complete_at, win, target });
@@ -222,7 +244,27 @@ impl WorldState {
     /// completion instant has passed, advance every live nonblocking
     /// collective, and charge the wakeup cost. Returns the number of RMA
     /// operations retired by this tick.
+    ///
+    /// With a fault plan live, a seeded fraction of wakeups is **starved**:
+    /// the tick fires (it counts, it is charged) but retires nothing,
+    /// advances nothing, and stalls for the plan's configured pause — the
+    /// progress-starvation regime of the asynchronous-progress follow-up
+    /// work. Starvation only delays background retirement; callers' own
+    /// completion calls (`flush`, `wait`, `test`) still progress, as MPI
+    /// semantics require.
     pub fn progress_tick(&self) -> usize {
+        let tick_seq = self.progress.ticks.fetch_add(1, Ordering::Relaxed);
+        if let Some(fs) = self.fault_state() {
+            if fs.plan.starves_tick(tick_seq) {
+                let stall = fs.plan.starve_stall_ns;
+                fs.note_starved_tick(tick_seq, stall);
+                if stall > 0 {
+                    self.progress.tick_ns_charged.fetch_add(stall, Ordering::Relaxed);
+                    crate::simnet::cost::spin_for(Duration::from_nanos(stall));
+                }
+                return 0;
+            }
+        }
         let now = Instant::now();
         let mut retired = 0usize;
         // Sharded sweep: the one-load early-out makes an idle tick free,
@@ -259,7 +301,6 @@ impl WorldState {
         for c in &live {
             c.advance(self);
         }
-        self.progress.ticks.fetch_add(1, Ordering::Relaxed);
         if self.cost.scale > 0.0 && self.cost.progress_tick_ns > 0.0 {
             let ns = self.cost.progress_tick_ns * self.cost.scale;
             self.progress.tick_ns_charged.fetch_add(ns as u64, Ordering::Relaxed);

@@ -1,0 +1,456 @@
+//! Deterministic fault injection for the simulated runtime (DST).
+//!
+//! Simulation-first is this repo's superpower: because the network is a
+//! *model* ([`crate::simnet::CostModel`] + the channel table in
+//! [`crate::mpisim::WorldState`]), adversity can be injected exactly where
+//! real clusters produce it — and, unlike on real clusters, every injected
+//! event can be a **pure function of a single `u64` seed**, so any failure
+//! reproduces from its seed alone (TigerBeetle/FoundationDB-style
+//! deterministic simulation testing).
+//!
+//! A [`FaultPlan`] describes four fault classes:
+//!
+//! 1. **Per-message latency jitter** and **per-channel slowdowns** — a
+//!    seeded fraction of messages pay extra wire time, and a seeded subset
+//!    of directed rank-pair channels is persistently slow (hot cable, bad
+//!    NIC queue). Injected in the channel model's single choke point,
+//!    `WorldState::book_transfer_after`, so window RMA, p2p sends, dynamic
+//!    windows and the nonblocking-collective schedules are all covered.
+//! 2. **Reordering of unordered RMA completions** — a seeded fraction of
+//!    deferred-completion registrations is held back, so later-issued
+//!    operations retire *before* earlier ones in the progress shards —
+//!    exactly the out-of-order completion MPI-3's unordered RMA permits
+//!    and `flush` must nonetheless cover.
+//! 3. **Starved progress ticks** — a seeded fraction of engine wakeups
+//!    fires but retires nothing and stalls for a modelled pause: the
+//!    progress-starvation regime that motivated the asynchronous-progress
+//!    follow-up work (arXiv:1609.08574).
+//! 4. **Straggler nodes** — every transfer touching a seeded-chosen node
+//!    runs at a configurable slowdown factor (one slow machine in the
+//!    job, the classic adverse placement).
+//!
+//! Every decision is derived by hashing `(seed, fault class, stable key,
+//! per-key sequence number)` through the splitmix64 finalizer — never from
+//! wall-clock state — and every *injected* event is counted (and, for the
+//! dynamic classes, traced as a [`FaultEvent`]) so tests can assert the
+//! plan actually fired and that a seed replays to an identical trace.
+//!
+//! Injected delays are **absolute modelled nanoseconds, not scaled by**
+//! [`crate::simnet::CostModel::scale`]: a fault plan stays adversarial
+//! over `CostModel::zero()`, which is what lets the chaos suite sweep
+//! 50+ seeds in wall-clock seconds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// splitmix64 finalizer — the one-way mix every fault decision goes
+/// through (same core as [`crate::testing::prop::Rng`]).
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Domain-separation constants, one per decision class.
+const CLASS_JITTER: u64 = 0x4A17;
+const CLASS_SLOW_CHANNEL: u64 = 0x510C;
+const CLASS_REORDER: u64 = 0x2E02;
+const CLASS_STARVE: u64 = 0x57A2;
+const CLASS_STRAGGLER: u64 = 0x5742;
+const CLASS_KNOB: u64 = 0x6B0B;
+
+/// A seeded fault-injection plan: which hazards are live and how hard
+/// they hit. Plain data — construct with [`FaultPlan::from_seed`] (all
+/// classes on, seed-derived intensities) or [`FaultPlan::quiet`] (all
+/// off) and override fields with struct-update syntax:
+///
+/// ```
+/// use dart::simnet::FaultPlan;
+/// let stragglers_only = FaultPlan {
+///     straggler_nodes: 1,
+///     straggler_factor: 3.0,
+///     ..FaultPlan::quiet(42)
+/// };
+/// assert!(stragglers_only.jitter_ns(0, 0).is_none());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// The reproduction handle: every decision this plan makes is a pure
+    /// function of this seed and the event's stable key.
+    pub seed: u64,
+    /// Probability (per mille) that a message on any channel pays jitter.
+    pub jitter_per_mille: u32,
+    /// Maximum extra modelled wire nanoseconds one jittered message pays
+    /// (the actual amount is seed-drawn in `[1, max]`).
+    pub jitter_max_ns: u64,
+    /// Probability (per mille) that a directed rank-pair channel is
+    /// *persistently* slow for the whole run.
+    pub slow_channel_per_mille: u32,
+    /// Multiplier applied to the modelled serialization + latency of
+    /// every message on a slow channel.
+    pub slow_channel_factor: f64,
+    /// Probability (per mille) that one deferred-RMA registration is held
+    /// back past its modelled completion (completion reordering).
+    pub reorder_per_mille: u32,
+    /// Maximum hold-back in modelled nanoseconds (seed-drawn `[1, max]`).
+    pub reorder_max_ns: u64,
+    /// Probability (per mille) that a progress-engine tick fires but
+    /// retires nothing.
+    pub starve_per_mille: u32,
+    /// Modelled nanoseconds a starved tick stalls before returning.
+    pub starve_stall_ns: u64,
+    /// How many nodes of the topology run slow (capped to `nodes - 1` so
+    /// at least one node stays healthy; 0 disables the class).
+    pub straggler_nodes: usize,
+    /// Slowdown multiplier for every transfer touching a straggler node.
+    pub straggler_factor: f64,
+}
+
+impl FaultPlan {
+    /// A plan with **every class live** at seed-derived intensities —
+    /// probabilities land in ranges that make each class fire within a
+    /// few dozen events, so a 50-seed sweep demonstrably exercises all
+    /// four hazards.
+    pub fn from_seed(seed: u64) -> Self {
+        let knob = |i: u64, lo: u64, span: u64| lo + mix(seed ^ mix(CLASS_KNOB ^ i)) % span;
+        FaultPlan {
+            seed,
+            jitter_per_mille: knob(1, 120, 380) as u32,
+            jitter_max_ns: knob(2, 2_000, 30_000),
+            slow_channel_per_mille: knob(3, 150, 350) as u32,
+            slow_channel_factor: 2.0 + knob(4, 0, 30) as f64 / 10.0,
+            reorder_per_mille: knob(5, 150, 400) as u32,
+            reorder_max_ns: knob(6, 5_000, 60_000),
+            starve_per_mille: knob(7, 120, 280) as u32,
+            starve_stall_ns: knob(8, 500, 4_500),
+            straggler_nodes: 1,
+            straggler_factor: 2.0 + knob(9, 0, 60) as f64 / 10.0,
+        }
+    }
+
+    /// A plan with **every class off** — the base for struct-update
+    /// construction of single-hazard plans (see the type-level example).
+    pub fn quiet(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            jitter_per_mille: 0,
+            jitter_max_ns: 0,
+            slow_channel_per_mille: 0,
+            slow_channel_factor: 1.0,
+            reorder_per_mille: 0,
+            reorder_max_ns: 0,
+            starve_per_mille: 0,
+            starve_stall_ns: 0,
+            straggler_nodes: 0,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// One seeded draw for `(class, key, seq)`.
+    #[inline]
+    fn draw(&self, class: u64, key: u64, seq: u64) -> u64 {
+        mix(self.seed ^ mix(class) ^ mix(key).rotate_left(23) ^ mix(seq).rotate_left(47))
+    }
+
+    /// Does `(class, key, seq)` fire at `per_mille` probability?
+    #[inline]
+    fn fires(&self, class: u64, key: u64, seq: u64, per_mille: u32) -> bool {
+        per_mille > 0 && self.draw(class, key, seq) % 1000 < u64::from(per_mille)
+    }
+
+    /// Extra wire nanoseconds the `msg_seq`-th message on `channel_key`
+    /// pays, or `None` if that message is clean. Pure in
+    /// `(seed, channel_key, msg_seq)`.
+    pub fn jitter_ns(&self, channel_key: u64, msg_seq: u64) -> Option<u64> {
+        if !self.fires(CLASS_JITTER, channel_key, msg_seq, self.jitter_per_mille) {
+            return None;
+        }
+        Some(1 + self.draw(CLASS_JITTER ^ 1, channel_key, msg_seq) % self.jitter_max_ns.max(1))
+    }
+
+    /// The persistent slowdown factor of `channel_key`, or `None` for a
+    /// healthy channel. Pure in `(seed, channel_key)`.
+    pub fn channel_slowdown(&self, channel_key: u64) -> Option<f64> {
+        self.fires(CLASS_SLOW_CHANNEL, channel_key, 0, self.slow_channel_per_mille)
+            .then_some(self.slow_channel_factor)
+    }
+
+    /// Modelled nanoseconds the `reg_seq`-th deferred-RMA registration of
+    /// `origin` is held back past its wire completion, or `None`. A hit
+    /// makes later-issued operations retire first — the MPI-3 unordered-
+    /// completion hazard. Pure in `(seed, origin, reg_seq)`.
+    pub fn reorder_hold_ns(&self, origin: u64, reg_seq: u64) -> Option<u64> {
+        if !self.fires(CLASS_REORDER, origin, reg_seq, self.reorder_per_mille) {
+            return None;
+        }
+        Some(1 + self.draw(CLASS_REORDER ^ 1, origin, reg_seq) % self.reorder_max_ns.max(1))
+    }
+
+    /// Is the `tick_seq`-th engine wakeup starved (fires but retires
+    /// nothing)? Pure in `(seed, tick_seq)`.
+    pub fn starves_tick(&self, tick_seq: u64) -> bool {
+        self.fires(CLASS_STARVE, tick_seq, 0, self.starve_per_mille)
+    }
+
+    /// The straggler verdict for every node of an `nodes`-node topology:
+    /// the `min(straggler_nodes, nodes - 1)` nodes with the smallest
+    /// seeded hash are slow — exact count, at least one healthy node.
+    /// Pure in `(seed, nodes)`.
+    pub fn straggler_set(&self, nodes: usize) -> Vec<bool> {
+        let k = self.straggler_nodes.min(nodes.saturating_sub(1));
+        let mut flags = vec![false; nodes];
+        if k == 0 {
+            return flags;
+        }
+        let mut ranked: Vec<usize> = (0..nodes).collect();
+        ranked.sort_by_key(|&n| self.draw(CLASS_STRAGGLER, n as u64, 0));
+        for &n in ranked.iter().take(k) {
+            flags[n] = true;
+        }
+        flags
+    }
+}
+
+/// One dynamic injected event, as recorded in the world's fault trace.
+///
+/// The trace holds only the *dynamic* classes (jitter, reorder, starved
+/// tick) — slow channels and stragglers are static facts of the plan,
+/// queryable via [`FaultPlan::channel_slowdown`] /
+/// [`FaultPlan::straggler_set`] and counted in [`FaultStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultEvent {
+    /// Which hazard fired.
+    pub kind: FaultKind,
+    /// The stable key (channel key for jitter, origin rank for reorder,
+    /// 0 for starved ticks).
+    pub key: u64,
+    /// The per-key sequence number (message seq, registration seq, or the
+    /// global tick index).
+    pub seq: u64,
+    /// Injected magnitude in modelled nanoseconds (0 for starved ticks
+    /// with no stall configured).
+    pub magnitude_ns: u64,
+}
+
+/// The dynamic fault classes a [`FaultEvent`] can record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Per-message latency jitter on a channel.
+    Jitter,
+    /// A deferred-RMA completion held back (reordered).
+    Reorder,
+    /// A progress tick that fired but retired nothing.
+    StarvedTick,
+}
+
+/// Snapshot of the world-global injected-event counters — what tests
+/// assert against to prove the plan fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Messages that paid per-message jitter.
+    pub jitter_events: u64,
+    /// Messages that rode a persistently slow channel.
+    pub slow_channel_msgs: u64,
+    /// Messages with at least one endpoint on a straggler node.
+    pub straggler_msgs: u64,
+    /// Deferred-RMA registrations held back (completion reorderings).
+    pub reorders: u64,
+    /// Progress ticks that fired but retired nothing.
+    pub starved_ticks: u64,
+}
+
+impl FaultStats {
+    /// Injected events across all classes.
+    pub fn total(&self) -> u64 {
+        self.jitter_events
+            + self.slow_channel_msgs
+            + self.straggler_msgs
+            + self.reorders
+            + self.starved_ticks
+    }
+}
+
+impl std::ops::AddAssign for FaultStats {
+    fn add_assign(&mut self, o: FaultStats) {
+        self.jitter_events += o.jitter_events;
+        self.slow_channel_msgs += o.slow_channel_msgs;
+        self.straggler_msgs += o.straggler_msgs;
+        self.reorders += o.reorders;
+        self.starved_ticks += o.starved_ticks;
+    }
+}
+
+/// Cap on recorded trace events — a backstop so a long bench run with
+/// faults on cannot grow the trace without bound (counters keep counting
+/// past the cap; only recording stops).
+const TRACE_CAP: usize = 1 << 16;
+
+/// Per-world live fault state: the plan, the resolved straggler set, the
+/// injected-event counters and the event trace. One per
+/// [`crate::mpisim::WorldState`] when a plan is configured.
+pub(crate) struct FaultState {
+    pub(crate) plan: FaultPlan,
+    /// Straggler verdict per node, resolved once at world creation.
+    straggler: Vec<bool>,
+    jitter_events: AtomicU64,
+    slow_channel_msgs: AtomicU64,
+    straggler_msgs: AtomicU64,
+    reorders: AtomicU64,
+    starved_ticks: AtomicU64,
+    trace: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: FaultPlan, nodes: usize) -> Self {
+        FaultState {
+            straggler: plan.straggler_set(nodes),
+            plan,
+            jitter_events: AtomicU64::new(0),
+            slow_channel_msgs: AtomicU64::new(0),
+            straggler_msgs: AtomicU64::new(0),
+            reorders: AtomicU64::new(0),
+            starved_ticks: AtomicU64::new(0),
+            trace: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Is `node` one of the plan's stragglers?
+    #[inline]
+    pub(crate) fn is_straggler(&self, node: usize) -> bool {
+        self.straggler.get(node).copied().unwrap_or(false)
+    }
+
+    fn record(&self, kind: FaultKind, key: u64, seq: u64, magnitude_ns: u64) {
+        let mut t = self.trace.lock().unwrap();
+        if t.len() < TRACE_CAP {
+            t.push(FaultEvent { kind, key, seq, magnitude_ns });
+        }
+    }
+
+    pub(crate) fn note_jitter(&self, channel_key: u64, msg_seq: u64, ns: u64) {
+        self.jitter_events.fetch_add(1, Ordering::Relaxed);
+        self.record(FaultKind::Jitter, channel_key, msg_seq, ns);
+    }
+
+    pub(crate) fn note_slow_channel_msg(&self) {
+        self.slow_channel_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_straggler_msg(&self) {
+        self.straggler_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_reorder(&self, origin: u64, reg_seq: u64, ns: u64) {
+        self.reorders.fetch_add(1, Ordering::Relaxed);
+        self.record(FaultKind::Reorder, origin, reg_seq, ns);
+    }
+
+    pub(crate) fn note_starved_tick(&self, tick_seq: u64, stall_ns: u64) {
+        self.starved_ticks.fetch_add(1, Ordering::Relaxed);
+        self.record(FaultKind::StarvedTick, 0, tick_seq, stall_ns);
+    }
+
+    /// Counter snapshot (monotonic; safe to diff).
+    pub(crate) fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            jitter_events: self.jitter_events.load(Ordering::Relaxed),
+            slow_channel_msgs: self.slow_channel_msgs.load(Ordering::Relaxed),
+            straggler_msgs: self.straggler_msgs.load(Ordering::Relaxed),
+            reorders: self.reorders.load(Ordering::Relaxed),
+            starved_ticks: self.starved_ticks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The recorded dynamic events in **canonical order** (sorted by
+    /// class/key/seq) — cross-thread push order is scheduling-dependent,
+    /// so traces are compared after sorting. Two runs of the same seeded
+    /// scenario must produce identical canonical traces.
+    pub(crate) fn trace(&self) -> Vec<FaultEvent> {
+        let mut t = self.trace.lock().unwrap().clone();
+        t.sort_unstable();
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_functions_of_the_seed() {
+        let a = FaultPlan::from_seed(0xDEAD_BEEF);
+        let b = FaultPlan::from_seed(0xDEAD_BEEF);
+        assert_eq!(a, b);
+        for key in 0..50u64 {
+            for seq in 0..20u64 {
+                assert_eq!(a.jitter_ns(key, seq), b.jitter_ns(key, seq));
+                assert_eq!(a.reorder_hold_ns(key, seq), b.reorder_hold_ns(key, seq));
+            }
+            assert_eq!(a.channel_slowdown(key), b.channel_slowdown(key));
+            assert_eq!(a.starves_tick(key), b.starves_tick(key));
+        }
+        assert_eq!(a.straggler_set(7), b.straggler_set(7));
+    }
+
+    #[test]
+    fn different_seeds_differ_somewhere() {
+        let a = FaultPlan::from_seed(1);
+        let b = FaultPlan::from_seed(2);
+        let differs = (0..200u64).any(|k| a.jitter_ns(k, 0) != b.jitter_ns(k, 0));
+        assert!(differs, "two seeds produced identical jitter streams");
+    }
+
+    #[test]
+    fn from_seed_fires_every_class_in_bounded_draws() {
+        for seed in [0u64, 1, 42, 0xFFFF_FFFF_FFFF_FFFF] {
+            let p = FaultPlan::from_seed(seed);
+            assert!((0..500).any(|s| p.jitter_ns(3, s).is_some()), "jitter dead at {seed}");
+            assert!((0..500).any(|k| p.channel_slowdown(k).is_some()), "slow dead at {seed}");
+            assert!((0..500).any(|s| p.reorder_hold_ns(1, s).is_some()), "reorder dead at {seed}");
+            assert!((0..500).any(|t| p.starves_tick(t)), "starve dead at {seed}");
+            assert!(p.jitter_max_ns > 0 && p.straggler_factor > 1.0);
+        }
+    }
+
+    #[test]
+    fn quiet_plan_never_fires() {
+        let p = FaultPlan::quiet(7);
+        assert!((0..1000u64).all(|s| p.jitter_ns(s, s).is_none()));
+        assert!((0..1000u64).all(|k| p.channel_slowdown(k).is_none()));
+        assert!((0..1000u64).all(|s| p.reorder_hold_ns(0, s).is_none()));
+        assert!((0..1000u64).all(|t| !p.starves_tick(t)));
+        assert!(p.straggler_set(8).iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn straggler_set_is_exact_and_leaves_a_healthy_node() {
+        let p = FaultPlan { straggler_nodes: 3, ..FaultPlan::from_seed(11) };
+        for nodes in 1..10 {
+            let set = p.straggler_set(nodes);
+            let count = set.iter().filter(|&&b| b).count();
+            assert_eq!(count, 3.min(nodes.saturating_sub(1)), "nodes={nodes}");
+        }
+    }
+
+    #[test]
+    fn state_counts_and_traces_canonically() {
+        let st = FaultState::new(FaultPlan::from_seed(5), 4);
+        st.note_reorder(1, 9, 100);
+        st.note_jitter(7, 0, 50);
+        st.note_starved_tick(3, 0);
+        st.note_slow_channel_msg();
+        st.note_straggler_msg();
+        let s = st.snapshot();
+        assert_eq!(
+            (s.jitter_events, s.reorders, s.starved_ticks, s.slow_channel_msgs, s.straggler_msgs),
+            (1, 1, 1, 1, 1)
+        );
+        assert_eq!(s.total(), 5);
+        // Canonical order: Jitter < Reorder < StarvedTick regardless of
+        // push order.
+        let kinds: Vec<FaultKind> = st.trace().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![FaultKind::Jitter, FaultKind::Reorder, FaultKind::StarvedTick]);
+    }
+}

@@ -16,10 +16,12 @@
 
 pub mod cost;
 pub mod exec;
+pub mod faults;
 pub mod pinning;
 
 pub use cost::{CostModel, Protocol, TierCost};
 pub use exec::RunGate;
+pub use faults::{FaultEvent, FaultKind, FaultPlan, FaultStats};
 pub use pinning::{pin_current_thread, PinPolicy};
 
 use std::fmt;

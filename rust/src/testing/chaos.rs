@@ -1,0 +1,473 @@
+//! Seeded chaos harness: run runtime invariants under active fault
+//! injection ([`crate::simnet::faults`]) across many seeds.
+//!
+//! The contract mirrors deterministic-simulation testing à la
+//! FoundationDB/TigerBeetle: a scenario is a pure function of its seed
+//! (`Fn(u64) -> Result<FaultStats, String>`), the world it launches gets
+//! [`FaultPlan::from_seed`]`(seed)` installed, and [`chaos_check`] sweeps
+//! a seed list, accumulates the observed [`FaultStats`] (so callers can
+//! assert every fault class actually fired), and — on failure — reports
+//! the **smallest** failing seed after replaying it to confirm the
+//! reproduction is deterministic. Re-run exactly one seed with
+//! `DART_CHAOS_SEEDS=0x<seed>` (see [`seeds`]).
+//!
+//! The module ships the five standing invariants the chaos suite
+//! (`rust/tests/chaos_tests.rs`) and the CI `chaos-smoke` job sweep:
+//! [`flush_completes_all`], [`mcs_fifo`], [`nonblocking_matches_blocking`],
+//! [`hier_matches_flat`], [`kv_backends_agree`].
+
+use crate::apps::kvstore::{run_kv, KvBackend, KvConfig};
+use crate::dart::{DartConfig, DartEnv, GlobalPtr, UnitId, DART_TEAM_ALL};
+use crate::mpisim::{MpiOp, ProgressMode};
+use crate::simnet::{CostModel, FaultStats, PinPolicy};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Mutex;
+
+/// A deterministic seed list: a splitmix64 chain from a fixed base, so
+/// "the first `n` chaos seeds" means the same thing on every machine.
+pub fn default_seeds(n: usize) -> Vec<u64> {
+    let mut rng = super::prop::Rng::new(0xC4A0_5EED);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// The seed list a chaos sweep should use: `DART_CHAOS_SEEDS` (a
+/// comma-separated list of decimal or `0x`-hex seeds) when set and
+/// non-empty — pinning CI smoke runs and replaying counterexamples —
+/// otherwise [`default_seeds`]`(n)`.
+pub fn seeds(n: usize) -> Vec<u64> {
+    match std::env::var("DART_CHAOS_SEEDS") {
+        Ok(list) if !list.trim().is_empty() => list.split(',').map(parse_seed).collect(),
+        _ => default_seeds(n),
+    }
+}
+
+fn parse_seed(tok: &str) -> u64 {
+    let t = tok.trim();
+    let parsed = match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => t.parse(),
+    };
+    parsed.unwrap_or_else(|_| panic!("DART_CHAOS_SEEDS: unparsable seed {t:?}"))
+}
+
+/// Sweep `scenario` over `seeds`, returning the summed [`FaultStats`] so
+/// the caller can assert the fault plan actually fired (a chaos test that
+/// injected nothing proves nothing).
+///
+/// On failure: panics naming the **smallest** failing seed (the canonical
+/// counterexample — scenarios don't have a size to shrink, so the seed
+/// ordering stands in for it), the failure message, the outcome of a
+/// confirming replay of that seed, and the `DART_CHAOS_SEEDS=` incantation
+/// that re-runs exactly that seed. A scenario panic is caught and treated
+/// as a failure of that seed, so one bad seed doesn't abort the sweep
+/// before the report.
+pub fn chaos_check(
+    name: &str,
+    seeds: &[u64],
+    scenario: impl Fn(u64) -> Result<FaultStats, String>,
+) -> FaultStats {
+    let mut total = FaultStats::default();
+    let mut failures: Vec<(u64, String)> = Vec::new();
+    for &seed in seeds {
+        match run_guarded(&scenario, seed) {
+            Ok(stats) => total += stats,
+            Err(msg) => failures.push((seed, msg)),
+        }
+    }
+    if failures.is_empty() {
+        return total;
+    }
+    failures.sort_by_key(|&(seed, _)| seed);
+    let (seed, msg) = &failures[0];
+    let replay = match run_guarded(&scenario, *seed) {
+        Err(m) => format!("replay of the seed failed again (deterministic): {m}"),
+        Ok(_) => format!(
+            "replay of seed {seed:#x} PASSED — the scenario is not a pure function of its seed"
+        ),
+    };
+    panic!(
+        "chaos scenario {name:?}: {}/{} seeds failed\n  \
+         smallest failing seed: {seed:#x}\n  failure: {msg}\n  {replay}\n  \
+         reproduce with: DART_CHAOS_SEEDS={seed:#x} cargo test --test chaos_tests",
+        failures.len(),
+        seeds.len(),
+    );
+}
+
+/// Run one seed, converting a scenario panic into `Err` so the sweep can
+/// finish and report.
+fn run_guarded(
+    scenario: &impl Fn(u64) -> Result<FaultStats, String>,
+    seed: u64,
+) -> Result<FaultStats, String> {
+    catch_unwind(AssertUnwindSafe(|| scenario(seed))).unwrap_or_else(|payload| {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_string()))
+            .unwrap_or_else(|| "non-string panic payload".into());
+        Err(format!("panicked: {msg}"))
+    })
+}
+
+/// Launch `cfg`, run `f` on every unit, and merge: any unit's `Err` fails
+/// the scenario; otherwise return the world's final [`FaultStats`].
+///
+/// `f` must keep its collective call sequence identical on every unit even
+/// while recording a failure (collect error strings, validate at the end)
+/// — bailing out of a collective on one unit only would deadlock the rest.
+fn world_check(
+    cfg: DartConfig,
+    f: impl Fn(&DartEnv) -> Result<(), String> + Send + Sync,
+) -> Result<FaultStats, String> {
+    let errs: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let stats: Mutex<FaultStats> = Mutex::new(FaultStats::default());
+    crate::dart::run(cfg, |env| {
+        let r = f(env);
+        env.barrier(DART_TEAM_ALL).expect("chaos final barrier failed");
+        if env.myid() == 0 {
+            *stats.lock().unwrap() = env.fault_stats();
+        }
+        if let Err(msg) = r {
+            errs.lock().unwrap().push(format!("unit {}: {msg}", env.myid()));
+        }
+    })
+    .map_err(|e| format!("launch failed: {e:?}"))?;
+    let mut errs = errs.into_inner().unwrap();
+    if errs.is_empty() {
+        Ok(stats.into_inner().unwrap())
+    } else {
+        errs.sort();
+        Err(errs.join("; "))
+    }
+}
+
+/// The invariants' base world: `units` units scattered over `nodes` nodes
+/// (multi-node so slow-channel/straggler classes have interconnect traffic
+/// to bite), **zero** cost model (fault delays are absolute ns, so chaos
+/// sweeps don't pay modelled wire time), `Polling` progress (ticks happen
+/// at deterministic program points), and the full seed-derived fault plan.
+fn chaos_cfg(units: usize, nodes: usize, seed: u64) -> DartConfig {
+    super::world(units)
+        .nodes(nodes)
+        .cost(CostModel::zero())
+        .placement(PinPolicy::ScatterNode)
+        .pools(1 << 16, 1 << 16)
+        .progress(ProgressMode::Polling)
+        .faults(seed)
+        .build()
+}
+
+/// A value only `(seed, a, b)` determine — payload generator for the
+/// invariants, so "the right bytes arrived" is checkable from scratch.
+fn chaos_value(seed: u64, a: u64, b: u64) -> u64 {
+    super::prop::Rng::new(seed ^ (a << 32) ^ b).next_u64()
+}
+
+/// Allocate `slots` zeroed u64 cells on unit 0's non-collective partition
+/// and broadcast the pointer (the lock suite's shared-cells idiom).
+fn shared_cells(env: &DartEnv, slots: usize) -> Result<GlobalPtr, String> {
+    let mut bits = [0u8; 16];
+    if env.myid() == 0 {
+        let g = env.memalloc((slots * 8) as u64).map_err(|e| format!("memalloc: {e:?}"))?;
+        for s in 0..slots {
+            env.local_write(g.add((s * 8) as u64), &0u64.to_ne_bytes())
+                .map_err(|e| format!("local_write: {e:?}"))?;
+        }
+        bits = g.to_bits().to_ne_bytes();
+    }
+    env.bcast(DART_TEAM_ALL, &mut bits, 0).map_err(|e| format!("bcast: {e:?}"))?;
+    Ok(GlobalPtr::from_bits(u128::from_ne_bytes(bits)))
+}
+
+/// **Invariant: `flush_all` completes all outstanding asyncs.** Every unit
+/// scatters one seeded u64 into its slot on every peer with `put_async`,
+/// flushes, barriers — then every byte must be in place, no matter how the
+/// plan jittered, reordered, or starved the deliveries.
+pub fn flush_completes_all(seed: u64) -> Result<FaultStats, String> {
+    world_check(chaos_cfg(4, 2, seed), |env| {
+        let me = env.myid();
+        let units = env.size();
+        let g = env
+            .team_memalloc_aligned(DART_TEAM_ALL, (units * 8) as u64)
+            .map_err(|e| format!("alloc: {e:?}"))?;
+        for p in 0..units {
+            let v = chaos_value(seed, me as u64, p as u64);
+            env.put_async(g.with_unit(p as UnitId).add(me as u64 * 8), &v.to_ne_bytes())
+                .map_err(|e| format!("put_async: {e:?}"))?;
+        }
+        env.flush_all(g).map_err(|e| format!("flush_all: {e:?}"))?;
+        env.barrier(DART_TEAM_ALL).map_err(|e| format!("barrier: {e:?}"))?;
+        let mut bad = Vec::new();
+        for w in 0..units {
+            let mut buf = [0u8; 8];
+            env.local_read(g.with_unit(me).add(w as u64 * 8), &mut buf)
+                .map_err(|e| format!("local_read: {e:?}"))?;
+            let (got, want) = (u64::from_ne_bytes(buf), chaos_value(seed, w as u64, me as u64));
+            if got != want {
+                bad.push(format!("writer {w}: got {got:#x} want {want:#x}"));
+            }
+        }
+        env.barrier(DART_TEAM_ALL).map_err(|e| format!("barrier: {e:?}"))?;
+        env.team_memfree(DART_TEAM_ALL, g).map_err(|e| format!("memfree: {e:?}"))?;
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("writes lost after flush_all: {}", bad.join(", ")))
+        }
+    })
+}
+
+/// **Invariant: MCS hand-off stays FIFO.** Waiters enqueue themselves in a
+/// forced order (each spins until its predecessor is the observed tail);
+/// the lock must serve them in exactly that order even when the plan
+/// reorders RMA completions and starves the progress engine.
+pub fn mcs_fifo(seed: u64) -> Result<FaultStats, String> {
+    const UNITS: usize = 4;
+    let order: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let stats = world_check(chaos_cfg(UNITS, 2, seed), |env| {
+        let lock = env.lock_init(DART_TEAM_ALL).map_err(|e| format!("lock_init: {e:?}"))?;
+        // Cell 0: next free log slot; cells 1..UNITS: the log itself.
+        let log = shared_cells(env, UNITS)?;
+        env.barrier(DART_TEAM_ALL).map_err(|e| format!("barrier: {e:?}"))?;
+        let me = env.myid();
+        if me == 0 {
+            env.lock_acquire(&lock).map_err(|e| format!("acquire: {e:?}"))?;
+        }
+        env.barrier(DART_TEAM_ALL).map_err(|e| format!("barrier: {e:?}"))?;
+        if me > 0 {
+            while env.lock_tail(&lock).map_err(|e| format!("tail: {e:?}"))? != (me - 1) as i64 {
+                std::thread::yield_now();
+            }
+            env.lock_acquire(&lock).map_err(|e| format!("acquire: {e:?}"))?;
+            let slot =
+                env.fetch_and_op(log, 1u64, MpiOp::Sum).map_err(|e| format!("faop: {e:?}"))?;
+            env.put_blocking(log.add(8 * (1 + slot)), &(me as u64).to_ne_bytes())
+                .map_err(|e| format!("put: {e:?}"))?;
+            env.lock_release(&lock).map_err(|e| format!("release: {e:?}"))?;
+        } else {
+            while env.lock_tail(&lock).map_err(|e| format!("tail: {e:?}"))? != (UNITS - 1) as i64 {
+                std::thread::yield_now();
+            }
+            env.lock_release(&lock).map_err(|e| format!("release: {e:?}"))?;
+        }
+        env.barrier(DART_TEAM_ALL).map_err(|e| format!("barrier: {e:?}"))?;
+        if me == 0 {
+            let mut buf = [0u8; 8 * UNITS];
+            env.get_blocking(log, &mut buf).map_err(|e| format!("get: {e:?}"))?;
+            *order.lock().unwrap() = buf[8..]
+                .chunks_exact(8)
+                .map(|c| u64::from_ne_bytes(c.try_into().unwrap()))
+                .collect();
+            env.memfree(log).map_err(|e| format!("memfree: {e:?}"))?;
+        }
+        env.lock_free(lock).map_err(|e| format!("lock_free: {e:?}"))?;
+        Ok(())
+    })?;
+    let served = order.into_inner().unwrap();
+    let want: Vec<u64> = (1..UNITS as u64).collect();
+    if served == want {
+        Ok(stats)
+    } else {
+        Err(format!("MCS served waiters in order {served:?}, enqueue order was {want:?}"))
+    }
+}
+
+/// **Invariant: nonblocking collectives deliver what blocking ones do.**
+/// The async allreduce/allgather ride the icoll completion bookings the
+/// plan jitters — the delivered bytes must still be bit-identical to the
+/// blocking paths', and the u64 sum must be *exactly* the full-team sum.
+pub fn nonblocking_matches_blocking(seed: u64) -> Result<FaultStats, String> {
+    const ELEMS: u64 = 8;
+    world_check(chaos_cfg(6, 3, seed), |env| {
+        let me = env.myid() as u64;
+        let units = env.size() as u64;
+        let mine: Vec<u64> = (0..ELEMS).map(|i| chaos_value(seed, me, i)).collect();
+
+        let mut blocking = vec![0u64; ELEMS as usize];
+        env.allreduce(DART_TEAM_ALL, &mine, &mut blocking, MpiOp::Sum)
+            .map_err(|e| format!("allreduce: {e:?}"))?;
+        let mut nonblocking = vec![0u64; ELEMS as usize];
+        let h = env
+            .allreduce_async(DART_TEAM_ALL, &mine, &mut nonblocking, MpiOp::Sum)
+            .map_err(|e| format!("allreduce_async: {e:?}"))?;
+        env.coll_wait(h).map_err(|e| format!("coll_wait: {e:?}"))?;
+
+        let expected: Vec<u64> = (0..ELEMS)
+            .map(|i| (0..units).fold(0u64, |acc, u| acc.wrapping_add(chaos_value(seed, u, i))))
+            .collect();
+        if blocking != expected {
+            return Err(format!("blocking allreduce wrong: {blocking:?} != {expected:?}"));
+        }
+        if nonblocking != blocking {
+            return Err(format!(
+                "nonblocking allreduce diverged: {nonblocking:?} != {blocking:?}"
+            ));
+        }
+
+        let send = chaos_value(seed, me, 0xA11).to_ne_bytes();
+        let mut recv_b = vec![0u8; 8 * units as usize];
+        env.allgather(DART_TEAM_ALL, &send, &mut recv_b)
+            .map_err(|e| format!("allgather: {e:?}"))?;
+        let mut recv_nb = vec![0u8; 8 * units as usize];
+        let h = env
+            .allgather_async(DART_TEAM_ALL, &send, &mut recv_nb)
+            .map_err(|e| format!("allgather_async: {e:?}"))?;
+        env.coll_wait(h).map_err(|e| format!("coll_wait: {e:?}"))?;
+        if recv_nb != recv_b {
+            return Err("nonblocking allgather diverged from blocking".into());
+        }
+        Ok(())
+    })
+}
+
+/// **Invariant: hierarchical collectives are bit-equal to flat ones.** Two
+/// worlds under the *same* fault plan — one flat, one two-level — must
+/// produce identical f64 allreduce bits and the exact u64 team sum:
+/// faults may only move modelled time, never bytes.
+pub fn hier_matches_flat(seed: u64) -> Result<FaultStats, String> {
+    const ELEMS: u64 = 8;
+    let mode = |hier: bool| -> Result<(Vec<u64>, FaultStats), String> {
+        let bits: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let mut cfg = chaos_cfg(6, 3, seed);
+        cfg.hierarchical_collectives = hier;
+        let stats = world_check(cfg, |env| {
+            let me = env.myid() as u64;
+            let units = env.size() as u64;
+            let mine_f: Vec<f64> =
+                (0..ELEMS).map(|i| chaos_value(seed, me, i) as f64 / 1e9).collect();
+            let mut out_f = vec![0f64; ELEMS as usize];
+            env.allreduce(DART_TEAM_ALL, &mine_f, &mut out_f, MpiOp::Sum)
+                .map_err(|e| format!("allreduce f64: {e:?}"))?;
+
+            let mine_u: Vec<u64> = (0..ELEMS).map(|i| chaos_value(seed, me, i)).collect();
+            let mut out_u = vec![0u64; ELEMS as usize];
+            env.allreduce(DART_TEAM_ALL, &mine_u, &mut out_u, MpiOp::Sum)
+                .map_err(|e| format!("allreduce u64: {e:?}"))?;
+            let expected: Vec<u64> = (0..ELEMS)
+                .map(|i| {
+                    (0..units).fold(0u64, |acc, u| acc.wrapping_add(chaos_value(seed, u, i)))
+                })
+                .collect();
+            if out_u != expected {
+                return Err(format!("u64 allreduce wrong: {out_u:?} != {expected:?}"));
+            }
+            if env.myid() == 0 {
+                *bits.lock().unwrap() = out_f.iter().map(|v| v.to_bits()).collect();
+            }
+            Ok(())
+        })?;
+        Ok((bits.into_inner().unwrap(), stats))
+    };
+    let (flat, stats_flat) = mode(false)?;
+    let (hier, stats_hier) = mode(true)?;
+    if flat != hier {
+        return Err(format!(
+            "hierarchical allreduce not bit-equal to flat: {hier:?} != {flat:?}"
+        ));
+    }
+    let mut total = stats_flat;
+    total += stats_hier;
+    Ok(total)
+}
+
+/// **Invariant: all three kvstore write disciplines agree.** The same
+/// zipfian workload through `Cas`, `Mcs`, and `OwnerShards` backends —
+/// each in its own faulted world — must land on one content checksum, and
+/// every op must be accounted for.
+pub fn kv_backends_agree(seed: u64) -> Result<FaultStats, String> {
+    const UNITS: usize = 4;
+    let kv = KvConfig {
+        keys: 64,
+        ops_per_unit: 60,
+        get_percent: 50,
+        zipf_exponent: 0.9,
+        seed,
+        slots_per_unit: 256,
+        locks: 8,
+        flush_every: 8,
+        team: DART_TEAM_ALL,
+    };
+    let mut total = FaultStats::default();
+    let mut sums: Vec<(&'static str, u64)> = Vec::new();
+    for backend in KvBackend::ALL {
+        let sum: Mutex<u64> = Mutex::new(0);
+        // Default pools (the hashmap needs the room); multi-node + faults.
+        let mut cfg = chaos_cfg(UNITS, 2, seed);
+        cfg.non_collective_pool = 8 << 20;
+        cfg.team_pool = 16 << 20;
+        let stats = world_check(cfg, |env| {
+            let report =
+                run_kv(env, &kv, backend).map_err(|e| format!("run_kv: {e:?}"))?;
+            if report.ops != (UNITS * kv.ops_per_unit) as u64 {
+                return Err(format!(
+                    "{}: {} ops accounted, expected {}",
+                    backend.label(),
+                    report.ops,
+                    UNITS * kv.ops_per_unit
+                ));
+            }
+            if env.myid() == 0 {
+                *sum.lock().unwrap() = report.checksum;
+            }
+            Ok(())
+        })?;
+        total += stats;
+        sums.push((backend.label(), sum.into_inner().unwrap()));
+    }
+    if sums.windows(2).all(|w| w[0].1 == w[1].1) {
+        Ok(total)
+    } else {
+        Err(format!("kvstore backends disagree on final contents: {sums:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_seeds_are_stable_and_distinct() {
+        let a = default_seeds(8);
+        assert_eq!(a, default_seeds(8));
+        let mut b = a.clone();
+        b.sort_unstable();
+        b.dedup();
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn seed_parser_takes_decimal_and_hex() {
+        assert_eq!(parse_seed(" 42 "), 42);
+        assert_eq!(parse_seed("0xff"), 255);
+        assert_eq!(parse_seed("0XDEAD"), 0xDEAD);
+    }
+
+    #[test]
+    fn chaos_check_sums_stats_on_success() {
+        let total = chaos_check("trivial", &[1, 2, 3], |seed| {
+            Ok(FaultStats { jitter_events: seed, ..FaultStats::default() })
+        });
+        assert_eq!(total.jitter_events, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "smallest failing seed: 0x2")]
+    fn chaos_check_shrinks_to_smallest_failing_seed() {
+        chaos_check("half-fail", &[9, 2, 5], |seed| {
+            if seed >= 5 {
+                Err("too big".into())
+            } else if seed == 2 {
+                Err("also bad".into())
+            } else {
+                Ok(FaultStats::default())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn chaos_check_survives_scenario_panics_to_report() {
+        chaos_check("panicky", &[1], |_| panic!("boom"));
+    }
+}

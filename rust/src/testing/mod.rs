@@ -3,7 +3,160 @@
 //!
 //! Deterministic splitmix64 generator + a `forall` runner that reports the
 //! failing seed so any counterexample is reproducible with
-//! `Rng::new(seed)`.
+//! `Rng::new(seed)`, plus the [`world`] launch builder shared by the
+//! integration suites and the seeded [`chaos`] harness.
+
+pub mod chaos;
+
+use crate::dart::{DartConfig, DartEnv};
+use crate::mpisim::{ExecMode, ProgressMode};
+use crate::simnet::{CostModel, FaultPlan, PinPolicy};
+use std::sync::Mutex;
+
+/// Start building a test world of `units` units: flat single-node
+/// topology, zero cost model, defaults identical to
+/// [`DartConfig::with_units`]. Chain overrides, then [`WorldBuilder::launch`]
+/// or [`WorldBuilder::collect`]:
+///
+/// ```no_run
+/// use dart::testing::world;
+/// let ids = world(4).faults(7).collect(|env| env.myid());
+/// assert_eq!(ids, vec![0, 1, 2, 3]);
+/// ```
+pub fn world(units: usize) -> WorldBuilder {
+    WorldBuilder { cfg: DartConfig::with_units(units) }
+}
+
+/// Fluent builder over [`DartConfig`] for the integration suites — hoists
+/// the per-suite `cfg()` helpers into one place and adds the fault knob.
+pub struct WorldBuilder {
+    cfg: DartConfig,
+}
+
+impl WorldBuilder {
+    /// Place the units on a Hermit-like cluster of `nodes` nodes with the
+    /// calibrated cost model (the multi-node suites' base config).
+    #[must_use]
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.cfg.topology = crate::simnet::Topology::hermit(nodes);
+        self.cfg.cost = CostModel::hermit();
+        self
+    }
+
+    /// Override the machine topology without touching the cost model
+    /// (for shapes [`WorldBuilder::nodes`] cannot express, e.g.
+    /// oversubscribed or asymmetric placements).
+    #[must_use]
+    pub fn topology(mut self, topo: crate::simnet::Topology) -> Self {
+        self.cfg.topology = topo;
+        self
+    }
+
+    /// Override the unit → core placement policy.
+    #[must_use]
+    pub fn placement(mut self, pin: PinPolicy) -> Self {
+        self.cfg.pin = pin;
+        self
+    }
+
+    /// Override the window pool sizes (non-collective, team).
+    #[must_use]
+    pub fn pools(mut self, non_collective: usize, team: usize) -> Self {
+        self.cfg.non_collective_pool = non_collective;
+        self.cfg.team_pool = team;
+        self
+    }
+
+    /// Override the network cost model.
+    #[must_use]
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.cfg.cost = cost;
+        self
+    }
+
+    /// Override the asynchronous-progress mode.
+    #[must_use]
+    pub fn progress(mut self, mode: ProgressMode) -> Self {
+        self.cfg.progress_mode = mode;
+        self
+    }
+
+    /// Override the execution mode and its run-slot bound.
+    #[must_use]
+    pub fn exec(mut self, exec: ExecMode, max_os_threads: usize) -> Self {
+        self.cfg.exec = exec;
+        self.cfg.max_os_threads = max_os_threads;
+        self
+    }
+
+    /// Toggle shared-memory windows.
+    #[must_use]
+    pub fn shmem(mut self, on: bool) -> Self {
+        self.cfg.shmem_windows = on;
+        self
+    }
+
+    /// Toggle the intra-node zero-copy fast path.
+    #[must_use]
+    pub fn fastpath(mut self, on: bool) -> Self {
+        self.cfg.locality_fastpath = on;
+        self
+    }
+
+    /// Toggle hierarchical two-level collectives.
+    #[must_use]
+    pub fn hierarchical(mut self, on: bool) -> Self {
+        self.cfg.hierarchical_collectives = on;
+        self
+    }
+
+    /// Install [`FaultPlan::from_seed`]`(seed)` — every fault class live at
+    /// seed-derived intensities (see [`crate::simnet::faults`]).
+    #[must_use]
+    pub fn faults(mut self, seed: u64) -> Self {
+        self.cfg.fault_plan = Some(FaultPlan::from_seed(seed));
+        self
+    }
+
+    /// Install a specific fault plan (e.g. a single-class plan built with
+    /// struct-update over [`FaultPlan::quiet`]).
+    #[must_use]
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.cfg.fault_plan = Some(plan);
+        self
+    }
+
+    /// Surrender the built [`DartConfig`] (for call sites that need knobs
+    /// the builder doesn't cover).
+    pub fn build(self) -> DartConfig {
+        self.cfg
+    }
+
+    /// Launch the world and run `f` on every unit
+    /// ([`crate::dart::run`] + unwrap).
+    pub fn launch(self, f: impl Fn(&DartEnv) + Send + Sync) {
+        crate::dart::run(self.cfg, f).expect("world launch failed");
+    }
+
+    /// Launch the world, run `f` on every unit, and return the per-unit
+    /// results ordered by unit id — replaces the `Mutex`-capture
+    /// boilerplate the suites used to hand-roll.
+    pub fn collect<T: Send>(self, f: impl Fn(&DartEnv) -> T + Send + Sync) -> Vec<T> {
+        let units = self.cfg.units;
+        let out: Mutex<Vec<Option<T>>> = Mutex::new((0..units).map(|_| None).collect());
+        crate::dart::run(self.cfg, |env| {
+            let v = f(env);
+            out.lock().unwrap()[env.myid() as usize] = Some(v);
+        })
+        .expect("world launch failed");
+        out.into_inner()
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(u, v)| v.unwrap_or_else(|| panic!("unit {u} produced no result")))
+            .collect()
+    }
+}
 
 /// Property-based testing primitives: a deterministic RNG and the
 /// [`prop::forall`] runner.

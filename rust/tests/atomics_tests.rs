@@ -4,10 +4,10 @@
 //! modelled path — plus the kvstore's cross-backend agreement oracle.
 
 use dart::apps::kvstore::{run_kv, KvBackend, KvConfig};
-use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dart::DART_TEAM_ALL;
 use dart::mpisim::{as_bytes_mut, ExecMode, MpiOp};
 use dart::testing::prop::{forall, Rng};
-use std::sync::Mutex;
+use dart::testing::{world, WorldBuilder};
 
 /// Every unit hammers one shared counter with `fetch_and_op(Sum)` of
 /// random deltas; the counter must end at exactly the wrapping sum of
@@ -19,8 +19,7 @@ fn concurrent_fetch_and_op_sums_are_exact() {
         5,
         |r| (2 + r.below(7), 1 + r.below(64), r.next_u64()),
         |&(units, ops, seed)| {
-            let off_by = Mutex::new(0u64);
-            run(DartConfig::with_units(units), |env| {
+            let per_unit = world(units).collect(|env| {
                 let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8).unwrap();
                 let c0 = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
                 if env.myid() == 0 {
@@ -34,22 +33,19 @@ fn concurrent_fetch_and_op_sums_are_exact() {
                     mine = mine.wrapping_add(d);
                     env.fetch_and_op(c0, d, MpiOp::Sum).unwrap();
                 }
-                let mut all = [0u64];
-                env.allreduce(DART_TEAM_ALL, &[mine], &mut all, MpiOp::Sum).unwrap();
                 env.barrier(DART_TEAM_ALL).unwrap();
-                if env.myid() == 0 {
-                    let mut got = [0u8; 8];
-                    env.local_read(c0, &mut got).unwrap();
-                    *off_by.lock().unwrap() = u64::from_ne_bytes(got).wrapping_sub(all[0]);
-                }
+                let mut got = [0u8; 8];
+                env.get_blocking(c0, &mut got).unwrap();
+                env.barrier(DART_TEAM_ALL).unwrap();
                 env.team_memfree(DART_TEAM_ALL, g).unwrap();
-            })
-            .unwrap();
-            let diff = *off_by.lock().unwrap();
-            if diff == 0 {
-                Ok(())
-            } else {
-                Err(format!("shared counter off by {diff} (wrapping)"))
+                (mine, u64::from_ne_bytes(got))
+            });
+            let total = per_unit.iter().fold(0u64, |acc, &(m, _)| acc.wrapping_add(m));
+            match per_unit.iter().find(|&&(_, fin)| fin != total) {
+                None => Ok(()),
+                Some(&(_, fin)) => {
+                    Err(format!("counter ended at {fin}, issued deltas sum to {total}"))
+                }
             }
         },
     );
@@ -65,37 +61,45 @@ fn cas_crowns_exactly_one_winner_per_slot() {
         4,
         |r| (2 + r.below(7), 1 + r.below(8)),
         |&(units, rounds)| {
-            let bad = Mutex::new(Vec::<String>::new());
-            run(DartConfig::with_units(units), |env| {
+            let per_unit = world(units).collect(|env| {
                 let g = env.team_memalloc_aligned(DART_TEAM_ALL, (rounds * 8) as u64).unwrap();
                 let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
                 if env.myid() == 0 {
                     env.local_write(base, &vec![0u8; rounds * 8]).unwrap();
                 }
                 env.barrier(DART_TEAM_ALL).unwrap();
+                let mut wins = Vec::with_capacity(rounds);
                 for s in 0..rounds {
                     let slot = base.add((s * 8) as u64);
                     let old = env.compare_and_swap(slot, 0u64, env.myid() as u64 + 1).unwrap();
-                    let won = u64::from(old == 0);
-                    let my_val = if won == 1 { env.myid() as u64 + 1 } else { 0 };
-                    let mut tot = [0u64; 2];
-                    env.allreduce(DART_TEAM_ALL, &[won, my_val], &mut tot, MpiOp::Sum).unwrap();
-                    let mut cell = [0u8; 8];
-                    env.get_blocking(slot, &mut cell).unwrap();
-                    let value = u64::from_ne_bytes(cell);
-                    if tot[0] != 1 {
-                        bad.lock().unwrap().push(format!("slot {s}: {} winners", tot[0]));
-                    } else if value != tot[1] {
-                        bad.lock()
-                            .unwrap()
-                            .push(format!("slot {s}: holds {value}, winner wrote {}", tot[1]));
-                    }
+                    wins.push(old == 0);
                 }
                 env.barrier(DART_TEAM_ALL).unwrap();
+                // CAS succeeds at most once per slot ever, so after the
+                // barrier every slot's value is final.
+                let mut cells = vec![0u64; rounds];
+                env.get_blocking(base, as_bytes_mut(&mut cells)).unwrap();
+                env.barrier(DART_TEAM_ALL).unwrap();
                 env.team_memfree(DART_TEAM_ALL, g).unwrap();
-            })
-            .unwrap();
-            let bad = bad.into_inner().unwrap();
+                (wins, cells)
+            });
+            let mut bad = Vec::new();
+            for s in 0..rounds {
+                let winners: Vec<usize> = (0..units).filter(|&u| per_unit[u].0[s]).collect();
+                if winners.len() != 1 {
+                    bad.push(format!("slot {s}: {} winners", winners.len()));
+                    continue;
+                }
+                let expect = winners[0] as u64 + 1;
+                for (u, (_, cells)) in per_unit.iter().enumerate() {
+                    if cells[s] != expect {
+                        bad.push(format!(
+                            "slot {s}: unit {u} read {}, winner wrote {expect}",
+                            cells[s]
+                        ));
+                    }
+                }
+            }
             if bad.is_empty() {
                 Ok(())
             } else {
@@ -127,8 +131,7 @@ fn multi_element_accumulates_are_element_granular() {
                     }
                 }
             }
-            let got = Mutex::new(Vec::new());
-            run(DartConfig::with_units(units), |env| {
+            let per_unit = world(units).collect(|env| {
                 let g = env.team_memalloc_aligned(DART_TEAM_ALL, (n * 8) as u64).unwrap();
                 let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
                 if env.myid() == 0 {
@@ -145,19 +148,15 @@ fn multi_element_accumulates_are_element_granular() {
                 }
                 env.flush_all(g).unwrap();
                 env.barrier(DART_TEAM_ALL).unwrap();
-                if env.myid() == 0 {
-                    let mut buf = vec![0u64; n];
-                    env.local_read(base, as_bytes_mut(&mut buf)).unwrap();
-                    *got.lock().unwrap() = buf;
-                }
+                let mut buf = vec![0u64; n];
+                env.get_blocking(base, as_bytes_mut(&mut buf)).unwrap();
+                env.barrier(DART_TEAM_ALL).unwrap();
                 env.team_memfree(DART_TEAM_ALL, g).unwrap();
-            })
-            .unwrap();
-            let got = got.into_inner().unwrap();
-            if got == expected {
-                Ok(())
-            } else {
-                Err(format!("expected {expected:?}, got {got:?}"))
+                buf
+            });
+            match per_unit.iter().find(|got| **got != expected) {
+                None => Ok(()),
+                Some(got) => Err(format!("expected {expected:?}, got {got:?}")),
             }
         },
     );
@@ -166,7 +165,7 @@ fn multi_element_accumulates_are_element_granular() {
 /// One seeded commutative atomic mix (element `e` always gets `Sum` for
 /// even `e`, `Bxor` for odd — per-element single ops keep the final state
 /// interleaving-free), run once per fast-path setting. Returns the final
-/// array contents and unit 0's fast-path hit counter.
+/// array contents and the team-total fast-path hit counter.
 fn atomic_mix_contents(
     units: usize,
     n: usize,
@@ -174,10 +173,7 @@ fn atomic_mix_contents(
     seed: u64,
     fastpath: bool,
 ) -> (Vec<u64>, u64) {
-    let out = Mutex::new((Vec::new(), 0u64));
-    let cfg =
-        DartConfig::with_units(units).with_shmem_windows(true).with_locality_fastpath(fastpath);
-    run(cfg, |env| {
+    let per_unit = world(units).shmem(true).fastpath(fastpath).collect(|env| {
         let g = env.team_memalloc_aligned(DART_TEAM_ALL, (n * 8) as u64).unwrap();
         let base = g.with_unit(env.team_unit_l2g(DART_TEAM_ALL, 0).unwrap());
         if env.myid() == 0 {
@@ -198,15 +194,19 @@ fn atomic_mix_contents(
         }
         env.flush_all(g).unwrap();
         env.barrier(DART_TEAM_ALL).unwrap();
-        if env.myid() == 0 {
-            let mut buf = vec![0u64; n];
-            env.local_read(base, as_bytes_mut(&mut buf)).unwrap();
-            *out.lock().unwrap() = (buf, env.metrics.atomic_fastpath_ops.get());
-        }
+        let mut buf = vec![0u64; n];
+        env.get_blocking(base, as_bytes_mut(&mut buf)).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
         env.team_memfree(DART_TEAM_ALL, g).unwrap();
-    })
-    .unwrap();
-    out.into_inner().unwrap()
+        (buf, env.metrics.atomic_fastpath_ops.get())
+    });
+    let contents = per_unit[0].0.clone();
+    assert!(
+        per_unit.iter().all(|(c, _)| *c == contents),
+        "units disagree on final array contents"
+    );
+    let hits = per_unit.iter().map(|&(_, h)| h).sum();
+    (contents, hits)
 }
 
 /// The intra-node CPU-atomic fast path must be bit-identical to the
@@ -251,19 +251,16 @@ fn kv_test_cfg() -> KvConfig {
     }
 }
 
-fn kv_checksum(cfg: DartConfig, backend: KvBackend) -> (u64, u64, u64) {
+fn kv_checksum(builder: WorldBuilder, backend: KvBackend) -> (u64, u64, u64) {
     let kv = kv_test_cfg();
-    let out = Mutex::new((0u64, 0u64, 0u64));
-    run(cfg, |env| {
+    let per_unit = builder.collect(|env| {
         let report = run_kv(env, &kv, backend).unwrap();
-        if env.myid() == 0 {
-            assert_eq!(report.ops, report.sets + report.gets, "op accounting broke");
-            assert_eq!(report.ops, 8 * kv.ops_per_unit as u64);
-            *out.lock().unwrap() = (report.checksum, report.atomic_fastpath_ops, report.hits);
-        }
-    })
-    .unwrap();
-    out.into_inner().unwrap()
+        assert_eq!(report.ops, report.sets + report.gets, "op accounting broke");
+        assert_eq!(report.ops, 8 * kv.ops_per_unit as u64);
+        (report.checksum, report.atomic_fastpath_ops, report.hits)
+    });
+    assert!(per_unit.iter().all(|r| *r == per_unit[0]), "units disagree on the team report");
+    per_unit[0]
 }
 
 /// The kvstore's oracle: all three backends — and the pooled exec mode,
@@ -271,21 +268,20 @@ fn kv_checksum(cfg: DartConfig, backend: KvBackend) -> (u64, u64, u64) {
 /// same final contents.
 #[test]
 fn kvstore_backends_agree_on_final_contents() {
-    let (cas, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::CasLockFree);
-    let (mcs, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::McsLockPerBucket);
-    let (own, _, _) = kv_checksum(DartConfig::with_units(8), KvBackend::OwnerShards);
+    let (cas, _, _) = kv_checksum(world(8), KvBackend::CasLockFree);
+    let (mcs, _, _) = kv_checksum(world(8), KvBackend::McsLockPerBucket);
+    let (own, _, _) = kv_checksum(world(8), KvBackend::OwnerShards);
     assert_eq!(cas, mcs, "lock-free and MCS backends disagree on final contents");
     assert_eq!(cas, own, "lock-free and owner-computes backends disagree on final contents");
 
     // Pooled execution must not change the answer.
-    let pooled = DartConfig::with_units(8).with_exec(ExecMode::Pooled, 4);
+    let pooled = world(8).exec(ExecMode::Pooled, 4);
     let (cas_pooled, _, _) = kv_checksum(pooled, KvBackend::CasLockFree);
     assert_eq!(cas, cas_pooled, "pooled execution changed the final contents");
 
     // With shmem windows on a single node, the whole run rides the
     // CPU-atomic fast path — and still agrees.
-    let shmem = DartConfig::with_units(8).with_shmem_windows(true);
-    let (cas_fast, fastpath_ops, hits) = kv_checksum(shmem, KvBackend::CasLockFree);
+    let (cas_fast, fastpath_ops, hits) = kv_checksum(world(8).shmem(true), KvBackend::CasLockFree);
     assert_eq!(cas, cas_fast, "fast-path run changed the final contents");
     assert!(fastpath_ops > 0, "single-node shmem run never used the fast path");
     // Sanity: a 60%-GET zipfian mix against keys it also SETs hits often.

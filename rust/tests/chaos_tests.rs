@@ -1,0 +1,185 @@
+//! Seeded chaos suite: the five standing runtime invariants swept across
+//! many fault seeds (`dart::testing::chaos`), plus the determinism oracle
+//! — a fixed seed must replay an *identical* injected-event trace — and
+//! the `Metrics` mirror of the world-global fault counters.
+//!
+//! Re-run one counterexample with
+//! `DART_CHAOS_SEEDS=0x<seed> cargo test --test chaos_tests`.
+
+use dart::dart::{FaultEvent, FaultStats, DART_TEAM_ALL};
+use dart::mpisim::ProgressMode;
+use dart::simnet::{CostModel, PinPolicy};
+use dart::testing::chaos;
+use dart::testing::world;
+use std::sync::Mutex;
+
+/// Seeds per invariant sweep (override with `DART_CHAOS_SEEDS`).
+const SWEEP: usize = 50;
+
+#[test]
+fn flush_completes_all_under_chaos() {
+    let stats = chaos::chaos_check(
+        "flush_completes_all",
+        &chaos::seeds(SWEEP),
+        chaos::flush_completes_all,
+    );
+    // The canary sweep: every fault class must demonstrably fire, or the
+    // whole suite is testing a friendly network and proving nothing.
+    assert!(stats.jitter_events > 0, "no jitter injected: {stats:?}");
+    assert!(stats.slow_channel_msgs > 0, "no slow channels: {stats:?}");
+    assert!(stats.straggler_msgs > 0, "no straggler traffic: {stats:?}");
+    assert!(stats.reorders > 0, "no completions reordered: {stats:?}");
+    assert!(stats.starved_ticks > 0, "no progress ticks starved: {stats:?}");
+}
+
+#[test]
+fn mcs_fifo_handoff_survives_chaos() {
+    let stats = chaos::chaos_check("mcs_fifo", &chaos::seeds(SWEEP), chaos::mcs_fifo);
+    assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
+}
+
+#[test]
+fn nonblocking_collectives_match_blocking_under_chaos() {
+    let stats = chaos::chaos_check(
+        "nonblocking_matches_blocking",
+        &chaos::seeds(SWEEP),
+        chaos::nonblocking_matches_blocking,
+    );
+    // The icoll completion bookings ride the faulted channel model.
+    assert!(stats.jitter_events > 0, "collective bookings never jittered: {stats:?}");
+}
+
+#[test]
+fn hierarchical_collectives_bit_equal_to_flat_under_chaos() {
+    let stats = chaos::chaos_check(
+        "hier_matches_flat",
+        &chaos::seeds(SWEEP),
+        chaos::hier_matches_flat,
+    );
+    assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
+}
+
+#[test]
+fn kv_backends_agree_under_chaos() {
+    let stats =
+        chaos::chaos_check("kv_backends_agree", &chaos::seeds(SWEEP), chaos::kv_backends_agree);
+    assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
+}
+
+// ---------------------------------------------------------------------
+// Determinism oracle
+// ---------------------------------------------------------------------
+
+const ORACLE_SEED: u64 = 0xD150_77E5;
+
+/// One oracle world: 2 units on 2 nodes, `Polling` progress, and only
+/// unit 0 initiating — so every channel has a single booking thread,
+/// every engine tick is program-ordered, and the injected-event trace is
+/// a pure function of the seed. Returns unit 0's view of the trace.
+fn oracle_run() -> (Vec<FaultEvent>, FaultStats) {
+    let out: Mutex<Option<(Vec<FaultEvent>, FaultStats)>> = Mutex::new(None);
+    world(2)
+        .nodes(2)
+        .cost(CostModel::zero())
+        .placement(PinPolicy::ScatterNode)
+        .pools(1 << 16, 1 << 16)
+        .progress(ProgressMode::Polling)
+        .faults(ORACLE_SEED)
+        .launch(|env| {
+            let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8 * 64).unwrap();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            if env.myid() == 0 {
+                for i in 0..64u64 {
+                    env.put_async(g.with_unit(1).add(8 * i), &i.to_ne_bytes()).unwrap();
+                    if i % 8 == 0 {
+                        env.progress_poll();
+                    }
+                }
+                env.flush_all(g).unwrap();
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+            if env.myid() == 0 {
+                *out.lock().unwrap() = Some((env.fault_trace(), env.fault_stats()));
+            }
+            env.team_memfree(DART_TEAM_ALL, g).unwrap();
+        });
+    out.into_inner().unwrap().expect("unit 0 captured no trace")
+}
+
+#[test]
+fn fixed_seed_replays_identical_event_trace() {
+    let (trace_a, stats_a) = oracle_run();
+    let (trace_b, stats_b) = oracle_run();
+    assert!(stats_a.total() > 0, "oracle seed injected nothing: {stats_a:?}");
+    assert!(!trace_a.is_empty(), "oracle seed produced an empty trace");
+    assert_eq!(stats_a, stats_b, "fault stats diverged between identical runs");
+    assert_eq!(
+        trace_a, trace_b,
+        "injected-event trace diverged between identical runs of seed {ORACLE_SEED:#x}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Metrics mirror
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_counters_mirror_into_unit_metrics() {
+    let per_unit = world(4)
+        .nodes(2)
+        .cost(CostModel::zero())
+        .placement(PinPolicy::ScatterNode)
+        .pools(1 << 16, 1 << 16)
+        .progress(ProgressMode::Polling)
+        .faults(0xF4017_5EED)
+        .collect(|env| {
+            let units = env.size();
+            let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8 * 16).unwrap();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let peer = ((env.myid() as usize + 1) % units) as i32;
+            for i in 0..16u64 {
+                env.put_async(g.with_unit(peer).add(8 * i), &i.to_ne_bytes()).unwrap();
+            }
+            env.flush_all(g).unwrap();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            // `fault_stats` is a sync point: the world-global counters are
+            // mirrored into this unit's Metrics before being returned, and
+            // nothing books events after the barrier above.
+            let stats = env.fault_stats();
+            let mirrored = (
+                env.metrics.fault_jitter_events.get(),
+                env.metrics.fault_reorders.get(),
+                env.metrics.fault_starved_ticks.get(),
+            );
+            env.team_memfree(DART_TEAM_ALL, g).unwrap();
+            (stats, mirrored)
+        });
+    let stats0 = per_unit[0].0;
+    assert!(stats0.total() > 0, "fault plan never fired: {stats0:?}");
+    for (unit, (stats, (jitter, reorders, starved))) in per_unit.iter().enumerate() {
+        assert_eq!(*jitter, stats.jitter_events, "unit {unit} jitter mirror out of sync");
+        assert_eq!(*reorders, stats.reorders, "unit {unit} reorder mirror out of sync");
+        assert_eq!(*starved, stats.starved_ticks, "unit {unit} starved-tick mirror out of sync");
+    }
+}
+
+#[test]
+fn friendly_world_keeps_fault_counters_at_zero() {
+    let per_unit = world(2).pools(1 << 16, 1 << 16).collect(|env| {
+        let g = env.team_memalloc_aligned(DART_TEAM_ALL, 8 * 4).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let peer = ((env.myid() as usize + 1) % env.size()) as i32;
+        env.put_async(g.with_unit(peer), &7u64.to_ne_bytes()).unwrap();
+        env.flush_all(g).unwrap();
+        env.barrier(DART_TEAM_ALL).unwrap();
+        let stats = env.fault_stats();
+        let trace = env.fault_trace();
+        env.team_memfree(DART_TEAM_ALL, g).unwrap();
+        (stats, trace.len(), env.metrics.fault_jitter_events.get())
+    });
+    for (stats, trace_len, jitter_metric) in per_unit {
+        assert_eq!(stats, FaultStats::default(), "faults fired with no plan installed");
+        assert_eq!(trace_len, 0);
+        assert_eq!(jitter_metric, 0);
+    }
+}

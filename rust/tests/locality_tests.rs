@@ -2,21 +2,17 @@
 //! `team_split_locality` (caching, teardown, edge cases), the
 //! hierarchical two-level collectives, and their flat fallbacks.
 
-use dart::dart::{run, DartConfig, LocalityScope, DART_TEAM_ALL};
+use dart::dart::{LocalityScope, DART_TEAM_ALL};
 use dart::mpisim::MpiOp;
 use dart::simnet::{CoreCoord, PinPolicy, Topology};
-use std::sync::Mutex;
+use dart::testing::{world, WorldBuilder};
 use std::time::Instant;
-
-fn pools(cfg: DartConfig) -> DartConfig {
-    cfg.with_pools(1 << 16, 1 << 16)
-}
 
 /// 12 units round-robin over a 3-node Hermit cluster: every power-of-two
 /// rank distance crosses nodes (2^k mod 3 != 0), so this is the placement
 /// where locality-blind trees hurt most — 4 units per node.
-fn three_node_cfg() -> DartConfig {
-    pools(DartConfig::hermit(12, 3).with_pin(PinPolicy::ScatterNode))
+fn three_node() -> WorldBuilder {
+    world(12).nodes(3).placement(PinPolicy::ScatterNode).pools(1 << 16, 1 << 16)
 }
 
 // ---------------------------------------------------------------------------
@@ -25,7 +21,7 @@ fn three_node_cfg() -> DartConfig {
 
 #[test]
 fn unit_locality_matches_placement() {
-    run(three_node_cfg(), |env| {
+    three_node().launch(|env| {
         for u in 0..12 {
             let c = env.unit_locality(u).unwrap();
             assert_eq!(c.node, u as usize % 3, "unit {u} node");
@@ -36,7 +32,6 @@ fn unit_locality_matches_placement() {
         assert!(env.unit_locality(-1).is_err());
         assert!(env.unit_locality(12).is_err());
     })
-    .unwrap();
 }
 
 // ---------------------------------------------------------------------------
@@ -45,7 +40,7 @@ fn unit_locality_matches_placement() {
 
 #[test]
 fn split_groups_members_by_node() {
-    run(three_node_cfg(), |env| {
+    three_node().launch(|env| {
         let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
         assert_eq!(split.domains, 3);
         // My node-local team holds exactly the units sharing my node.
@@ -63,14 +58,13 @@ fn split_groups_members_by_node() {
         }
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn split_single_node_topology_leader_team_is_singleton() {
     // Flat (single-node) topology: the local team mirrors the parent and
     // the leader team is a singleton holding unit 0.
-    run(pools(DartConfig::with_units(4)), |env| {
+    world(4).pools(1 << 16, 1 << 16).launch(|env| {
         let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
         assert_eq!(split.domains, 1);
         assert_eq!(env.team_size(split.local).unwrap(), 4);
@@ -82,14 +76,13 @@ fn split_single_node_topology_leader_team_is_singleton() {
         }
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn split_numa_scope_distinguishes_domains() {
     // 4 units round-robin over the NUMA domains of one Hermit node.
-    let cfg = pools(DartConfig::hermit(4, 1).with_pin(PinPolicy::ScatterNuma));
-    run(cfg, |env| {
+    let cfg = world(4).nodes(1).placement(PinPolicy::ScatterNuma).pools(1 << 16, 1 << 16);
+    cfg.launch(|env| {
         // Node scope: one node -> degenerate split.
         let by_node = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
         assert_eq!(by_node.domains, 1);
@@ -102,7 +95,6 @@ fn split_numa_scope_distinguishes_domains() {
         assert_eq!(env.team_size(lt).unwrap(), 4);
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
@@ -110,9 +102,7 @@ fn split_oversubscribed_placement_wraps() {
     // 5 units on a 2-node, 1-core-per-node machine: Block placement wraps
     // modulo the 2 cores, so units 0,2,4 share node 0 and 1,3 share node 1.
     let topo = Topology { nodes: 2, numa_per_node: 1, cores_per_numa: 1 };
-    let mut cfg = pools(DartConfig::with_units(5));
-    cfg.topology = topo;
-    run(cfg, |env| {
+    world(5).pools(1 << 16, 1 << 16).topology(topo).launch(|env| {
         let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
         assert_eq!(split.domains, 2);
         let local = env.team_get_group(split.local).unwrap();
@@ -127,12 +117,11 @@ fn split_oversubscribed_placement_wraps() {
         }
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn split_is_cached_and_destroyed_with_parent() {
-    run(three_node_cfg(), |env| {
+    three_node().launch(|env| {
         let baseline = env.live_teams().len();
         let grp = env.group_all();
         let t = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
@@ -155,7 +144,6 @@ fn split_is_cached_and_destroyed_with_parent() {
         env.team_destroy(t2).unwrap();
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
@@ -165,7 +153,7 @@ fn split_sub_teams_cannot_be_destroyed_directly() {
     // collective over them, not the parent), so it is rejected; the
     // parent destroy is the supported teardown and still works after the
     // rejected attempt.
-    run(three_node_cfg(), |env| {
+    three_node().launch(|env| {
         let grp = env.group_all();
         let t = env.team_create(DART_TEAM_ALL, &grp).unwrap().unwrap();
         let split = env.team_split_locality(t, LocalityScope::Node).unwrap();
@@ -177,7 +165,6 @@ fn split_sub_teams_cannot_be_destroyed_directly() {
         assert_eq!(env.locality_splits_cached(), 0);
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 // ---------------------------------------------------------------------------
@@ -190,8 +177,7 @@ fn hier_allreduce_bit_equal_to_flat() {
     // different reduction orders must agree bit for bit; u64 is exact by
     // construction. Run the same reduction flat and hierarchical.
     let reduce_with = |hier: bool| -> Vec<(u64, u64)> {
-        let out = Mutex::new(vec![(0u64, 0u64); 12]);
-        run(three_node_cfg().with_hierarchical_collectives(hier), |env| {
+        three_node().hierarchical(hier).collect(|env| {
             let me = env.myid() as usize;
             let mine_f = vec![(me * 7 + 3) as f64; 64];
             let mine_u = vec![(me as u64) << 20 | 0x3F; 64];
@@ -200,10 +186,8 @@ fn hier_allreduce_bit_equal_to_flat() {
             env.allreduce(DART_TEAM_ALL, &mine_f, &mut red_f, MpiOp::Sum).unwrap();
             env.allreduce(DART_TEAM_ALL, &mine_u, &mut red_u, MpiOp::Sum).unwrap();
             assert!(red_f.iter().all(|&x| x == red_f[0]));
-            out.lock().unwrap()[me] = (red_f[0].to_bits(), red_u[0]);
+            (red_f[0].to_bits(), red_u[0])
         })
-        .unwrap();
-        out.into_inner().unwrap()
     };
     let flat = reduce_with(false);
     let hier = reduce_with(true);
@@ -215,7 +199,7 @@ fn hier_allreduce_bit_equal_to_flat() {
 
 #[test]
 fn hier_allreduce_decomposition_is_observable() {
-    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+    three_node().hierarchical(true).launch(|env| {
         let mine = [env.myid() as u64];
         let mut red = [0u64];
         env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
@@ -227,12 +211,11 @@ fn hier_allreduce_decomposition_is_observable() {
         assert_eq!(env.metrics.hier_coll_inter_ops.get(), expect_inter);
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn hier_falls_back_flat_on_single_node() {
-    run(pools(DartConfig::with_units(4)).with_hierarchical_collectives(true), |env| {
+    world(4).pools(1 << 16, 1 << 16).hierarchical(true).launch(|env| {
         let mine = [env.myid() as u64 + 1];
         let mut red = [0u64];
         env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
@@ -250,12 +233,11 @@ fn hier_falls_back_flat_on_single_node() {
         assert_eq!(env.locality_splits_cached(), 0);
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn hier_bcast_delivers_from_every_root() {
-    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+    three_node().hierarchical(true).launch(|env| {
         for root in [0usize, 5, 11] {
             let mut buf = [0u8; 16];
             if env.team_myid(DART_TEAM_ALL).unwrap() == root {
@@ -267,30 +249,30 @@ fn hier_bcast_delivers_from_every_root() {
         assert!(env.metrics.hier_coll_intra_ops.get() > 0);
         env.barrier(DART_TEAM_ALL).unwrap();
     })
-    .unwrap();
 }
 
 #[test]
 fn hier_allgather_matches_flat_with_uneven_nodes() {
     // 5 units over 2 nodes (ScatterNode): nodes hold 3 and 2 units — the
     // padding path of the hierarchical allgather.
-    let cfg = pools(DartConfig::hermit(5, 2).with_pin(PinPolicy::ScatterNode));
     let gather_with = |hier: bool| -> Vec<Vec<u32>> {
-        let out = Mutex::new(vec![Vec::new(); 5]);
-        run(cfg.clone().with_hierarchical_collectives(hier), |env| {
-            let me = env.myid() as u32;
-            let mine = [me * 11 + 1, me * 11 + 2];
-            let mut all = [0u32; 10];
-            env.allgather(
-                DART_TEAM_ALL,
-                dart::mpisim::as_bytes(&mine),
-                dart::mpisim::as_bytes_mut(&mut all),
-            )
-            .unwrap();
-            out.lock().unwrap()[me as usize] = all.to_vec();
-        })
-        .unwrap();
-        out.into_inner().unwrap()
+        world(5)
+            .nodes(2)
+            .placement(PinPolicy::ScatterNode)
+            .pools(1 << 16, 1 << 16)
+            .hierarchical(hier)
+            .collect(|env| {
+                let me = env.myid() as u32;
+                let mine = [me * 11 + 1, me * 11 + 2];
+                let mut all = [0u32; 10];
+                env.allgather(
+                    DART_TEAM_ALL,
+                    dart::mpisim::as_bytes(&mine),
+                    dart::mpisim::as_bytes_mut(&mut all),
+                )
+                .unwrap();
+                all.to_vec()
+            })
     };
     let flat = gather_with(false);
     let hier = gather_with(true);
@@ -303,13 +285,12 @@ fn hier_allgather_matches_flat_with_uneven_nodes() {
 fn hier_barrier_synchronizes() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let phase = AtomicUsize::new(0);
-    run(three_node_cfg().with_hierarchical_collectives(true), |env| {
+    three_node().hierarchical(true).launch(|env| {
         phase.fetch_add(1, Ordering::SeqCst);
         env.barrier(DART_TEAM_ALL).unwrap();
         assert_eq!(phase.load(Ordering::SeqCst), 12);
         assert!(env.metrics.hier_coll_intra_ops.get() >= 2);
     })
-    .unwrap();
 }
 
 #[test]
@@ -319,8 +300,7 @@ fn hier_allreduce_models_less_time_than_flat_on_multinode() {
     // one interconnect crossing per node instead of one per tree edge —
     // completes in strictly less modelled time than the flat path.
     let time_with = |hier: bool| -> f64 {
-        let out = Mutex::new(0f64);
-        run(three_node_cfg().with_hierarchical_collectives(hier), |env| {
+        let medians = three_node().hierarchical(hier).collect(|env| {
             let mine = vec![env.myid() as u64; 1024]; // 8 KiB, E1 regime
             let mut red = vec![0u64; 1024];
             // Warm the split cache outside the timed region.
@@ -330,17 +310,11 @@ fn hier_allreduce_models_less_time_than_flat_on_multinode() {
                 env.barrier(DART_TEAM_ALL).unwrap();
                 let t = Instant::now();
                 env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
-                let ns = t.elapsed().as_nanos() as f64;
-                if env.myid() == 0 {
-                    med.push(ns);
-                }
+                med.push(t.elapsed().as_nanos() as f64);
             }
-            if env.myid() == 0 {
-                *out.lock().unwrap() = med.median();
-            }
-        })
-        .unwrap();
-        out.into_inner().unwrap()
+            med.median()
+        });
+        medians[0]
     };
     let flat = time_with(false);
     let hier = time_with(true);
@@ -356,36 +330,35 @@ fn split_respects_custom_placement() {
     // Units deliberately placed so that unit 0 is alone on node 1 and
     // units 1..=3 share node 0 — leader order must follow unit ids, not
     // node indices.
-    let topo = Topology::hermit(2);
     let coords = vec![
         CoreCoord { node: 1, numa: 0, core: 0 },
         CoreCoord { node: 0, numa: 0, core: 0 },
         CoreCoord { node: 0, numa: 1, core: 0 },
         CoreCoord { node: 0, numa: 0, core: 1 },
     ];
-    let mut cfg = pools(DartConfig::with_units(4))
-        .with_pin(PinPolicy::Custom(coords))
-        .with_hierarchical_collectives(true);
-    cfg.topology = topo;
-    run(cfg, |env| {
-        let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
-        assert_eq!(split.domains, 2);
-        let local = env.team_get_group(split.local).unwrap();
-        if env.myid() == 0 {
-            assert_eq!(local.members(), &[0]);
-        } else {
-            assert_eq!(local.members(), &[1, 2, 3]);
-        }
-        // Leaders: unit 0 (node 1) and unit 1 (node 0), sorted by unit id.
-        assert_eq!(split.is_leader, env.myid() <= 1);
-        if let Some(lt) = split.leaders {
-            assert_eq!(env.team_get_group(lt).unwrap().members(), &[0, 1]);
-        }
-        // A hierarchical reduction over this placement still sums right.
-        let mut red = [0u64];
-        env.allreduce(DART_TEAM_ALL, &[1u64], &mut red, MpiOp::Sum).unwrap();
-        assert_eq!(red[0], 4);
-        env.barrier(DART_TEAM_ALL).unwrap();
-    })
-    .unwrap();
+    world(4)
+        .pools(1 << 16, 1 << 16)
+        .topology(Topology::hermit(2))
+        .placement(PinPolicy::Custom(coords))
+        .hierarchical(true)
+        .launch(|env| {
+            let split = env.team_split_locality(DART_TEAM_ALL, LocalityScope::Node).unwrap();
+            assert_eq!(split.domains, 2);
+            let local = env.team_get_group(split.local).unwrap();
+            if env.myid() == 0 {
+                assert_eq!(local.members(), &[0]);
+            } else {
+                assert_eq!(local.members(), &[1, 2, 3]);
+            }
+            // Leaders: unit 0 (node 1) and unit 1 (node 0), sorted by unit id.
+            assert_eq!(split.is_leader, env.myid() <= 1);
+            if let Some(lt) = split.leaders {
+                assert_eq!(env.team_get_group(lt).unwrap().members(), &[0, 1]);
+            }
+            // A hierarchical reduction over this placement still sums right.
+            let mut red = [0u64];
+            env.allreduce(DART_TEAM_ALL, &[1u64], &mut red, MpiOp::Sum).unwrap();
+            assert_eq!(red[0], 4);
+            env.barrier(DART_TEAM_ALL).unwrap();
+        })
 }

@@ -3,10 +3,10 @@
 //! results, with the pooled mode's concurrently runnable ranks bounded
 //! by the configured slot limit and the channel table staying sparse.
 
-use dart::dart::{run, DartConfig, UnitId, DART_TEAM_ALL};
+use dart::dart::{UnitId, DART_TEAM_ALL};
 use dart::mpisim::{ExecMode, MpiOp};
 use dart::simnet::PinPolicy;
-use std::sync::Mutex;
+use dart::testing::world;
 
 const UNITS: usize = 256;
 const NODES: usize = 16;
@@ -16,7 +16,7 @@ const PUT_BYTES: usize = 256;
 /// (256 ranks contend for 8 slots) regardless of the host's core count.
 const SLOTS: usize = 8;
 
-/// What one round leaves behind (captured on unit 0).
+/// What one round leaves behind on each unit.
 #[derive(Clone, Copy, Default, PartialEq, Debug)]
 struct Outcome {
     red_first: u64,
@@ -24,56 +24,60 @@ struct Outcome {
     ring_byte: u8,
 }
 
-fn round(exec: ExecMode) -> (Outcome, Option<(usize, usize)>, usize) {
-    let out = Mutex::new((Outcome::default(), None, 0usize));
-    let cfg = DartConfig::hermit(UNITS, NODES)
-        .with_pin(PinPolicy::ScatterNode)
-        .with_pools(1 << 14, 1 << 18)
-        .with_exec(exec, SLOTS);
-    run(cfg, |env| {
-        let n = env.size();
-        let me = env.myid() as usize;
-        let g = env.team_memalloc_aligned(DART_TEAM_ALL, PUT_BYTES as u64).unwrap();
-        let mine = vec![me as u64 + 1; RED];
-        let mut red = vec![0u64; RED];
-        env.barrier(DART_TEAM_ALL).unwrap();
-        env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
-        let src = vec![(me & 0xFF) as u8; PUT_BYTES];
-        let right = ((me + 1) % n) as UnitId;
-        env.put_async(g.with_unit(right), &src).unwrap();
-        env.flush_all(g).unwrap();
-        env.barrier(DART_TEAM_ALL).unwrap();
-        let writer = (me + n - 1) % n;
-        let mut got = vec![0u8; PUT_BYTES];
-        env.local_read(g.with_unit(me as UnitId), &mut got).unwrap();
-        assert!(got.iter().all(|&b| b == (writer & 0xFF) as u8), "unit {me}: wrong ring bytes");
-        if me == 0 {
-            *out.lock().unwrap() = (
+fn round(exec: ExecMode) -> Vec<(Outcome, Option<(usize, usize)>, usize)> {
+    world(UNITS)
+        .nodes(NODES)
+        .placement(PinPolicy::ScatterNode)
+        .pools(1 << 14, 1 << 18)
+        .exec(exec, SLOTS)
+        .collect(|env| {
+            let n = env.size();
+            let me = env.myid() as usize;
+            let g = env.team_memalloc_aligned(DART_TEAM_ALL, PUT_BYTES as u64).unwrap();
+            let mine = vec![me as u64 + 1; RED];
+            let mut red = vec![0u64; RED];
+            env.barrier(DART_TEAM_ALL).unwrap();
+            env.allreduce(DART_TEAM_ALL, &mine, &mut red, MpiOp::Sum).unwrap();
+            let src = vec![(me & 0xFF) as u8; PUT_BYTES];
+            let right = ((me + 1) % n) as UnitId;
+            env.put_async(g.with_unit(right), &src).unwrap();
+            env.flush_all(g).unwrap();
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let writer = (me + n - 1) % n;
+            let mut got = vec![0u8; PUT_BYTES];
+            env.local_read(g.with_unit(me as UnitId), &mut got).unwrap();
+            assert!(got.iter().all(|&b| b == (writer & 0xFF) as u8), "unit {me}: wrong ring bytes");
+            let result = (
                 Outcome { red_first: red[0], red_last: red[RED - 1], ring_byte: got[0] },
                 env.exec_gate_stats(),
                 env.active_channels(),
             );
-        }
-        env.team_memfree(DART_TEAM_ALL, g).unwrap();
-    })
-    .unwrap();
-    out.into_inner().unwrap()
+            env.team_memfree(DART_TEAM_ALL, g).unwrap();
+            result
+        })
 }
 
 #[test]
 fn smoke_256_units_both_exec_modes() {
-    let (per_rank, gate_tpr, _) = round(ExecMode::ThreadPerRank);
-    let (pooled, gate_pooled, channels) = round(ExecMode::Pooled);
+    let per_rank = round(ExecMode::ThreadPerRank);
+    let pooled = round(ExecMode::Pooled);
 
     // The allreduce over unit ids has a closed form — both modes must
-    // produce it exactly.
+    // produce it exactly, on every unit.
     let expect = (UNITS as u64 * (UNITS as u64 + 1)) / 2;
-    assert_eq!(per_rank.red_first, expect);
-    assert_eq!(per_rank, pooled, "pooled world computed different results");
+    assert_eq!(per_rank[0].0.red_first, expect);
+    let outcomes = |v: &[(Outcome, Option<(usize, usize)>, usize)]| {
+        v.iter().map(|r| r.0).collect::<Vec<_>>()
+    };
+    assert_eq!(
+        outcomes(&per_rank),
+        outcomes(&pooled),
+        "pooled world computed different results"
+    );
 
     // Thread-per-rank has no gate; pooled respects its slot limit.
-    assert_eq!(gate_tpr, None);
-    let (limit, peak) = gate_pooled.expect("pooled world must expose gate stats");
+    assert_eq!(per_rank[0].1, None);
+    let (limit, peak) = pooled[0].1.expect("pooled world must expose gate stats");
     assert_eq!(limit, SLOTS);
     assert!(
         (1..=SLOTS).contains(&peak),
@@ -82,5 +86,6 @@ fn smoke_256_units_both_exec_modes() {
 
     // Lazily-populated channels: a logarithmic round on 256 units must
     // populate nowhere near the 65 536 eager pairs.
+    let channels = pooled[0].2;
     assert!(channels > 0 && channels < UNITS * UNITS / 8, "channel table not sparse: {channels}");
 }

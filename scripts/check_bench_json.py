@@ -35,7 +35,7 @@ SCHEMAS = {
             "engine_ticks",
             "tick_ns_charged",
         ],
-        "other_keys": ["mode", "placement"],
+        "other_keys": ["mode", "placement", "faults"],
     },
     "perf_dash": {
         "top": ["bench", "units", "reps", "elem_bytes", "results"],
@@ -63,7 +63,7 @@ SCHEMAS = {
             "fastpath_ops",
             "checksum",
         ],
-        "other_keys": ["scenario", "placement", "mode"],
+        "other_keys": ["scenario", "placement", "mode", "faults"],
     },
     "perf_kv": {
         "top": ["bench", "reps", "max_units", "results"],
