@@ -1,0 +1,94 @@
+//! A distributed task farm on `dash::WorkQueue` — the dynamic-memory
+//! counterpart of the `prodcons` example. Where `prodcons` serializes a
+//! single ring behind the MCS lock, here *every* unit owns a lock-free
+//! MPMC ring in dynamically attached global memory (`memattach` — no
+//! pool budget), enqueues claim slots with `compare_and_swap` tickets,
+//! and a consumer whose own ring runs dry **steals** from its
+//! neighbours' rings round-robin. No locks anywhere.
+//!
+//! ```sh
+//! cargo run --release --example work_queue [units] [tasks-per-unit]
+//! ```
+//!
+//! Each unit produces `tasks-per-unit` tagged tasks into its own ring;
+//! the ring (32 slots) is deliberately smaller than the batch, so a
+//! producer that finds it full retires one task itself to make room —
+//! producers are consumers too. After a barrier the farm drains: `pop`
+//! empties the local ring, then steals. Because every task is claimed by
+//! exactly one winning CAS, the allreduced sum of what everyone retired
+//! must equal the produced sum exactly — asserted at the end.
+//!
+//! The full-sized version of this shape (skewed producers, atomic
+//! retire counter + XOR checksum against a sequential reference, chaos
+//! sweep) lives in `apps/wqueue.rs` and the `perf_dynamic` bench.
+
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::WorkQueue;
+use dart::mpisim::MpiOp;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const RING: usize = 32; // slots per unit — smaller than the batch on purpose
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let units: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_unit: u64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    println!(
+        "== PGAS work-stealing farm: {units} units × {per_unit} tasks, rings of {RING} =="
+    );
+
+    let retired_sum = AtomicU64::new(0);
+    let steals = AtomicU64::new(0);
+
+    run(DartConfig::with_units(units), |env| {
+        let me = env.myid() as u64;
+        let q = WorkQueue::new(env, DART_TEAM_ALL, RING).unwrap();
+
+        // Produce into my own ring; on full, retire one task myself.
+        let mut my_sum = 0u64;
+        for k in 0..per_unit {
+            let task = me * 1_000_000 + k;
+            while !q.push(task).unwrap() {
+                if let Some(t) = q.pop().unwrap() {
+                    my_sum = my_sum.wrapping_add(t);
+                }
+            }
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+
+        // Drain: own ring first, then round-robin steals — `pop` does both.
+        // Nothing is pushed after the barrier, so a full scan coming back
+        // empty means every task has been claimed by someone.
+        while let Some(t) = q.pop().unwrap() {
+            my_sum = my_sum.wrapping_add(t);
+        }
+
+        // Exactly-once oracle: the team-wide retired sum is the produced sum.
+        let mut total = [0u64];
+        env.allreduce(DART_TEAM_ALL, &[my_sum], &mut total, MpiOp::Sum).unwrap();
+        let mut stolen = [0u64];
+        env.allreduce(
+            DART_TEAM_ALL,
+            &[env.metrics.wq_steals.get()],
+            &mut stolen,
+            MpiOp::Sum,
+        )
+        .unwrap();
+        if env.myid() == 0 {
+            retired_sum.store(total[0], Ordering::SeqCst);
+            steals.store(stolen[0], Ordering::SeqCst);
+        }
+        q.free().unwrap();
+    })?;
+
+    let produced: u64 = (0..units as u64)
+        .map(|u| (0..per_unit).map(|k| u * 1_000_000 + k).sum::<u64>())
+        .sum();
+    let retired = retired_sum.load(Ordering::SeqCst);
+    println!(
+        "produced sum = {produced}, retired sum = {retired} ({} cross-ring steals)",
+        steals.load(Ordering::SeqCst)
+    );
+    assert_eq!(produced, retired, "every task retired exactly once");
+    println!("work_queue OK ({} tasks through {units} lock-free rings)", units as u64 * per_unit);
+    Ok(())
+}

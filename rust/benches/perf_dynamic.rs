@@ -1,0 +1,404 @@
+//! §DYN — the dynamic half of the global memory model, measured.
+//!
+//! Four scenario families over the `memattach` subsystem, writing
+//! `BENCH_dynamic.json`:
+//!
+//! - **attach / detach** — latency of the non-collective
+//!   `memattach`/`memdetach` pair (64 KiB regions), the dynamic
+//!   counterpart of the paper's collective allocation path;
+//! - **put/get overhead** — blocking put/get to a *remote* unit's
+//!   symmetric allocation vs its dynamically attached region, segment
+//!   cache on. The dynamic path must stay within a bounded factor of the
+//!   symmetric path (asserted): after the first resolution both are one
+//!   cache hit + the same window op;
+//! - **vector growth** — `dash::Vector` grown through ≥ 3 capacity
+//!   doublings by collective pushes; reports redistribution bandwidth and
+//!   asserts the grown vector is **bit-identical** to a preallocated
+//!   `dash::Array` of the final capacity filled with the same values;
+//! - **work queue** — the `apps::wqueue` task farm under block and
+//!   scatter placements; throughput plus the exactly-once checksum gate
+//!   against the sequential reference.
+
+use dart::apps::wqueue::{reference_result, run_distributed, WqueueConfig};
+use dart::bench_util::{bandwidth_mb_s, fmt_ns, quick_mode, Samples};
+use dart::dart::{run, DartConfig, GlobalPtr, DART_TEAM_ALL};
+use dart::dash::{Array, Pattern, Vector};
+use dart::mpisim::ExecMode;
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured configuration (uniform row schema for the JSON).
+#[derive(Clone, Default)]
+struct Shot {
+    scenario: &'static str,
+    placement: &'static str,
+    units: u64,
+    /// Operations per repetition (ops, elements, or tasks — see scenario).
+    ops: u64,
+    /// Median per-op latency (0 where throughput is the story).
+    ns_per_op: f64,
+    /// Median throughput.
+    ops_per_sec: f64,
+    /// Bytes the scenario moved (region size, payload, redistribution).
+    bytes: u64,
+    /// Bandwidth where bytes/wall is meaningful, else 0.
+    bandwidth_mb_s: f64,
+    /// Scenario checksum (cross-run / cross-structure oracle; 0 if n/a).
+    checksum: u64,
+    /// Median repetition wall-clock in ms.
+    wall_ms: f64,
+}
+
+fn cfg(units: usize, placement: &'static str) -> DartConfig {
+    let (nodes, pin) = match placement {
+        "block" => (1, PinPolicy::Block),
+        _ => (8, PinPolicy::ScatterNode),
+    };
+    DartConfig::hermit(units, nodes)
+        .with_pin(pin)
+        .with_pools(1 << 16, 1 << 21)
+        .with_shmem_windows(true)
+        .with_segment_cache(true)
+        .with_exec(ExecMode::ThreadPerRank, 0)
+}
+
+/// Deterministic element payload for the vector/array comparison.
+fn elem(g: u64, seed: u64) -> u64 {
+    (g ^ seed).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (g >> 7)
+}
+
+// ---------------------------------------------------------------------------
+// attach / detach latency
+// ---------------------------------------------------------------------------
+
+fn measure_attach(units: usize, reps: usize, quick: bool) -> Vec<Shot> {
+    let region = 64 * 1024u64;
+    let pairs = if quick { 64 } else { 512 };
+    let out = Mutex::new(Vec::new());
+    run(cfg(units, "block"), |env| {
+        let mut attach = Samples::new();
+        let mut detach = Samples::new();
+        for _ in 0..reps {
+            if env.myid() == 0 {
+                let mut a_ns = 0.0;
+                let mut d_ns = 0.0;
+                for _ in 0..pairs {
+                    let t = Instant::now();
+                    let g = env.memattach(region).unwrap();
+                    a_ns += t.elapsed().as_nanos() as f64;
+                    let t = Instant::now();
+                    env.memdetach(g).unwrap();
+                    d_ns += t.elapsed().as_nanos() as f64;
+                }
+                attach.push(a_ns / pairs as f64);
+                detach.push(d_ns / pairs as f64);
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        }
+        if env.myid() == 0 {
+            let shot = |scenario, s: &Samples| Shot {
+                scenario,
+                placement: "block",
+                units: units as u64,
+                ops: pairs,
+                ns_per_op: s.median(),
+                ops_per_sec: 1e9 / s.median(),
+                bytes: region,
+                bandwidth_mb_s: 0.0,
+                checksum: 0,
+                wall_ms: s.median() * pairs as f64 / 1e6,
+            };
+            let mut o = out.lock().unwrap();
+            o.push(shot("attach", &attach));
+            o.push(shot("detach", &detach));
+        }
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// dynamic vs symmetric put/get overhead (cache on)
+// ---------------------------------------------------------------------------
+
+fn measure_overhead(units: usize, reps: usize, quick: bool) -> Vec<Shot> {
+    let ops = if quick { 512u64 } else { 4096 };
+    let out = Mutex::new(Vec::new());
+    run(cfg(units, "scatter"), |env| {
+        let p = env.size();
+        // Symmetric target: remote half of a collective allocation.
+        let sym = env.team_memalloc_aligned(DART_TEAM_ALL, 64).unwrap();
+        // Dynamic target: every unit attaches, directory allgathered.
+        let mine = env.memattach(64).unwrap();
+        let mut recv = vec![0u8; 16 * p];
+        env.allgather(DART_TEAM_ALL, &mine.to_bits().to_ne_bytes(), &mut recv).unwrap();
+        let dir: Vec<GlobalPtr> = recv
+            .chunks_exact(16)
+            .map(|c| GlobalPtr::from_bits(u128::from_ne_bytes(c.try_into().unwrap())))
+            .collect();
+        env.barrier(DART_TEAM_ALL).unwrap();
+
+        if env.myid() == 0 {
+            let victim = p - 1; // scatter placement ⇒ off-node
+            let targets = [("sym", sym.with_unit(victim as i32)), ("dyn", dir[victim])];
+            let mut medians = Vec::new();
+            for (kind, gptr) in targets {
+                let mut put = Samples::new();
+                let mut get = Samples::new();
+                let mut buf = [0u8; 8];
+                // Warm the segment cache: overhead is the steady state.
+                env.put_blocking(gptr, &7u64.to_ne_bytes()).unwrap();
+                for _ in 0..reps {
+                    let t = Instant::now();
+                    for i in 0..ops {
+                        env.put_blocking(gptr, &i.to_ne_bytes()).unwrap();
+                    }
+                    put.push(t.elapsed().as_nanos() as f64 / ops as f64);
+                    let t = Instant::now();
+                    for _ in 0..ops {
+                        env.get_blocking(gptr, &mut buf).unwrap();
+                    }
+                    get.push(t.elapsed().as_nanos() as f64 / ops as f64);
+                }
+                let readback = u64::from_ne_bytes(buf);
+                assert_eq!(readback, ops - 1, "{kind}: lost the last put");
+                for (dir_label, s) in [("put", &put), ("get", &get)] {
+                    medians.push((kind, dir_label, s.median()));
+                    out.lock().unwrap().push(Shot {
+                        scenario: match (dir_label, kind) {
+                            ("put", "sym") => "put_sym",
+                            ("put", "dyn") => "put_dyn",
+                            ("get", "sym") => "get_sym",
+                            _ => "get_dyn",
+                        },
+                        placement: "scatter",
+                        units: units as u64,
+                        ops,
+                        ns_per_op: s.median(),
+                        ops_per_sec: 1e9 / s.median(),
+                        bytes: 8,
+                        bandwidth_mb_s: bandwidth_mb_s(8, s.median()),
+                        checksum: readback,
+                        wall_ms: s.median() * ops as f64 / 1e6,
+                    });
+                }
+            }
+            // The bounded-overhead gate: with the cache warm, the dynamic
+            // path is one generation check away from the symmetric path.
+            for want in ["put", "get"] {
+                let sym_ns = medians.iter().find(|m| m.0 == "sym" && m.1 == want).unwrap().2;
+                let dyn_ns = medians.iter().find(|m| m.0 == "dyn" && m.1 == want).unwrap().2;
+                assert!(
+                    dyn_ns <= sym_ns * 4.0 + 5_000.0,
+                    "dynamic {want} {dyn_ns:.0} ns/op not within bounded overhead of \
+                     symmetric {sym_ns:.0} ns/op (cache on)"
+                );
+                println!(
+                    "  {want}: symmetric {} vs dynamic {} per op ({:.2}× overhead)",
+                    fmt_ns(sym_ns),
+                    fmt_ns(dyn_ns),
+                    dyn_ns / sym_ns
+                );
+            }
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+        env.memdetach(mine).unwrap();
+        env.team_memfree(DART_TEAM_ALL, sym).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// vector growth bandwidth + bit-equality vs preallocated Array
+// ---------------------------------------------------------------------------
+
+fn measure_vector_growth(units: usize, reps: usize, quick: bool) -> Vec<Shot> {
+    // 16 collective pushes of one element per member: capacity p → 16p,
+    // four doublings (the acceptance floor is three).
+    let pushes = if quick { 16 } else { 32 };
+    let seed = 0xD1_4A_11_0Cu64;
+    let out = Mutex::new(Vec::new());
+    run(cfg(units, "block"), |env| {
+        let p = env.size();
+        let team = DART_TEAM_ALL;
+        let mut walls = Samples::new();
+        let mut shot = Shot::default();
+        for _ in 0..reps {
+            let redist_before = env.metrics.dash_redist_bytes.get();
+            let mut v = Vector::<u64>::with_capacity(env, team, p).unwrap();
+            let cap0 = v.capacity();
+            env.barrier(team).unwrap();
+            let t = Instant::now();
+            for _ in 0..pushes {
+                let base = v.len().unwrap();
+                let me = env.team_myid(team).unwrap();
+                v.push(elem((base + me) as u64, seed)).unwrap();
+            }
+            let wall = t.elapsed();
+            walls.push(wall.as_secs_f64() * 1e3);
+
+            let n = v.len().unwrap();
+            let final_cap = v.capacity();
+            let doublings = (final_cap / cap0).ilog2();
+            assert!(
+                doublings >= 3,
+                "grew {cap0} → {final_cap}: only {doublings} doublings (need ≥ 3)"
+            );
+            // The oracle: a preallocated Array of the final capacity with
+            // the same BLOCKED pattern and the same fill.
+            let arr =
+                Array::<u64>::new(env, team, Pattern::blocked(final_cap, p).unwrap()).unwrap();
+            let me = env.team_myid(team).unwrap();
+            arr.with_local(|loc| {
+                for (i, slot) in loc.iter_mut().enumerate() {
+                    let g = arr.pattern().local_to_global(me, i);
+                    *slot = if g < n { elem(g as u64, seed) } else { 0 };
+                }
+            })
+            .unwrap();
+            env.barrier(team).unwrap();
+            let got = v.read_local().unwrap();
+            let want = arr.read_local().unwrap();
+            assert_eq!(
+                got, want,
+                "unit {me}: grown vector differs from preallocated array"
+            );
+            let checksum = (0..n as u64).fold(0u64, |acc, g| acc ^ elem(g, seed));
+            let redist = env.metrics.dash_redist_bytes.get() - redist_before;
+            if env.myid() == 0 {
+                shot = Shot {
+                    scenario: "vector_growth",
+                    placement: "block",
+                    units: units as u64,
+                    ops: n as u64,
+                    ns_per_op: 0.0,
+                    ops_per_sec: 0.0,
+                    bytes: redist,
+                    bandwidth_mb_s: 0.0,
+                    checksum,
+                    wall_ms: 0.0,
+                };
+            }
+            arr.free().unwrap();
+            v.free().unwrap();
+        }
+        if env.myid() == 0 {
+            shot.wall_ms = walls.median();
+            shot.ops_per_sec = shot.ops as f64 / (walls.median() / 1e3);
+            shot.bandwidth_mb_s = bandwidth_mb_s(shot.bytes as usize, walls.median() * 1e6);
+            out.lock().unwrap().push(shot);
+        }
+        env.barrier(team).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// work-queue throughput under block and scatter placement
+// ---------------------------------------------------------------------------
+
+fn measure_wqueue(units: usize, placement: &'static str, reps: usize, quick: bool) -> Shot {
+    let wq = WqueueConfig {
+        tasks: if quick { 512 } else { 4096 },
+        ring_capacity: 32,
+        seed: 0xFA12_07A5 ^ units as u64,
+        team: DART_TEAM_ALL,
+    };
+    let want = reference_result(&wq);
+    let out = Mutex::new(Shot::default());
+    run(cfg(units, placement), |env| {
+        let mut walls = Samples::new();
+        let mut steals = 0u64;
+        for _ in 0..reps {
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let t = Instant::now();
+            let report = run_distributed(env, &wq).unwrap();
+            walls.push(t.elapsed().as_secs_f64() * 1e3);
+            assert_eq!(report.retired, wq.tasks as u64, "{placement}: lost tasks");
+            assert_eq!(report.checksum, want, "{placement}: checksum mismatch");
+            steals = env.metrics.wq_steals.get();
+        }
+        if env.myid() == 0 {
+            *out.lock().unwrap() = Shot {
+                scenario: "wq_throughput",
+                placement,
+                units: units as u64,
+                ops: wq.tasks as u64,
+                ns_per_op: walls.median() * 1e6 / wq.tasks as f64,
+                ops_per_sec: wq.tasks as f64 / (walls.median() / 1e3),
+                bytes: 8 * wq.tasks as u64,
+                bandwidth_mb_s: 0.0,
+                checksum: want,
+                wall_ms: walls.median(),
+            };
+            // Steals are this unit's count; the skewed split guarantees
+            // *someone* stole, which the chaos invariant checks team-wide.
+            let _ = steals;
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"scenario\":\"{}\",\"placement\":\"{}\",\"units\":{},\"ops\":{},\
+         \"ns_per_op\":{:.1},\"ops_per_sec\":{:.1},\"bytes\":{},\
+         \"bandwidth_mb_s\":{:.3},\"checksum\":{},\"wall_ms\":{:.3}}}",
+        s.scenario,
+        s.placement,
+        s.units,
+        s.ops,
+        s.ns_per_op,
+        s.ops_per_sec,
+        s.bytes,
+        s.bandwidth_mb_s,
+        s.checksum,
+        s.wall_ms
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let units = if quick { 4 } else { 8 };
+    println!("==== §DYN — dynamic global memory: attach, overhead, growth, queue ====");
+
+    let mut shots = Vec::new();
+    shots.extend(measure_attach(units, reps, quick));
+    shots.extend(measure_overhead(units, reps, quick));
+    shots.extend(measure_vector_growth(units, reps, quick));
+    for placement in ["block", "scatter"] {
+        shots.push(measure_wqueue(units, placement, reps, quick));
+    }
+
+    println!(
+        "\n{:>14} {:>8} {:>6} {:>8} {:>10} {:>14} {:>12} {:>10}",
+        "scenario", "place", "units", "ops", "ns/op", "ops/s", "MB/s", "wall_ms"
+    );
+    for s in &shots {
+        println!(
+            "{:>14} {:>8} {:>6} {:>8} {:>10} {:>14.0} {:>12.1} {:>10.3}",
+            s.scenario,
+            s.placement,
+            s.units,
+            s.ops,
+            fmt_ns(s.ns_per_op),
+            s.ops_per_sec,
+            s.bandwidth_mb_s,
+            s.wall_ms
+        );
+    }
+
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_dynamic\",\"reps\":{reps},\"max_units\":{units},\"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_dynamic.json", format!("{json}\n")).expect("write BENCH_dynamic.json");
+    println!("\nwrote BENCH_dynamic.json");
+}

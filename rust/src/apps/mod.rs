@@ -10,3 +10,4 @@ pub mod kvstore;
 pub mod matmul;
 pub mod stencil;
 pub mod stencil2d;
+pub mod wqueue;

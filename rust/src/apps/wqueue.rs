@@ -1,0 +1,178 @@
+//! Dynamic task farm — the work-stealing workload over
+//! [`crate::dash::WorkQueue`] and the dynamic-memory subsystem.
+//!
+//! A deterministic set of tasks (seeded, deliberately **skewed**: early
+//! producers seed far more work than late ones, so an ideal static
+//! partition does not exist) is enqueued across the per-unit rings; every
+//! unit then pops until the farm runs dry, stealing from its neighbours'
+//! rings once its own is empty. Task results land in a collective results
+//! array via deferred atomic accumulates.
+//!
+//! Termination uses the standard distributed-counter idiom: an empty
+//! sweep of all rings is only a moment-in-time observation, so completion
+//! is detected on a shared **done counter** (atomic `fetch_and_op` in
+//! symmetric memory) that producers advance as they enqueue and consumers
+//! advance as they retire — when `retired == enqueued_total` the farm is
+//! drained for good.
+//!
+//! Everything is verifiable: task payloads are pure functions of the
+//! seed, so [`reference_result`] replays the whole farm sequentially and
+//! the distributed run must match it exactly — every task executed
+//! exactly once, regardless of which unit stole it.
+
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId, DART_TEAM_ALL};
+use crate::dash::WorkQueue;
+use crate::mpisim::MpiOp;
+use crate::testing::prop::Rng;
+
+/// Parameters of a task-farm run.
+#[derive(Debug, Clone)]
+pub struct WqueueConfig {
+    /// Total tasks enqueued across the team.
+    pub tasks: usize,
+    /// Slots per unit ring (small rings exercise the full/steal paths).
+    pub ring_capacity: usize,
+    /// Task-payload seed.
+    pub seed: u64,
+    /// Team the run is collective over.
+    pub team: TeamId,
+}
+
+impl WqueueConfig {
+    /// A small default configuration over `DART_TEAM_ALL`.
+    pub fn quick(tasks: usize) -> Self {
+        WqueueConfig { tasks, ring_capacity: 64, seed: 0xFA12_07A5, team: DART_TEAM_ALL }
+    }
+}
+
+/// Result of a run (identical on every unit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WqueueReport {
+    /// Tasks retired across the team (must equal the configured total).
+    pub retired: u64,
+    /// Order-independent checksum over every task's computed result.
+    pub checksum: u64,
+    /// Pops this unit served from a remote ring (its share of
+    /// `Metrics::wq_steals` growth during the run).
+    pub my_steals: u64,
+}
+
+/// The task payload: a few rounds of splitmix keep it cheap but
+/// order-sensitive enough that a lost or doubled task always changes the
+/// checksum.
+#[inline]
+fn task_result(task_id: u64, seed: u64) -> u64 {
+    let mut r = Rng::new(seed ^ task_id.wrapping_mul(0x9E37_79B9));
+    r.next_u64() ^ task_id
+}
+
+/// How many of the `tasks` tasks producer `u` of `p` seeds: a skewed
+/// front-loaded split (unit 0 the most, trailing units possibly none) —
+/// the shape work stealing exists for.
+fn tasks_of(u: usize, p: usize, tasks: usize) -> (u64, u64) {
+    // Quadratic taper: unit i carries weight (p-i)²; unit 0 additionally
+    // absorbs the rounding remainder so the counts always sum to `tasks`.
+    let weights: Vec<u64> = (0..p).map(|i| ((p - i) * (p - i)) as u64).collect();
+    let total_w: u64 = weights.iter().sum();
+    let base: Vec<u64> = weights.iter().map(|&w| tasks as u64 * w / total_w).collect();
+    let remainder = tasks as u64 - base.iter().sum::<u64>();
+    let mut start = 0u64;
+    for i in 0..p {
+        let n = base[i] + if i == 0 { remainder } else { 0 };
+        if i == u {
+            return (start, n);
+        }
+        start += n;
+    }
+    unreachable!("unit {u} outside team of {p}")
+}
+
+/// Sequential reference: the checksum the farm must reproduce.
+pub fn reference_result(cfg: &WqueueConfig) -> u64 {
+    (0..cfg.tasks as u64).fold(0u64, |acc, t| acc ^ task_result(t, cfg.seed))
+}
+
+/// Run the distributed task farm. Collective over `cfg.team`.
+pub fn run_distributed(env: &DartEnv, cfg: &WqueueConfig) -> DartResult<WqueueReport> {
+    if cfg.tasks == 0 || cfg.ring_capacity == 0 {
+        return Err(DartErr::Invalid("task farm needs tasks > 0 and ring slots > 0".into()));
+    }
+    let team = cfg.team;
+    let p = env.team_size(team)?;
+    let me = env.team_myid(team)?;
+    let steals_before = env.metrics.wq_steals.get();
+
+    let q = WorkQueue::new(env, team, cfg.ring_capacity)?;
+    // Shared cells in symmetric memory: [retired counter, checksum].
+    let cells = env.team_memalloc_aligned(team, 16)?;
+    if me == 0 {
+        env.local_write(cells, &[0u8; 16])?;
+    }
+    env.barrier(team)?;
+    let retired_cell = cells;
+    let checksum_cell = cells.add(8);
+
+    // --- seed my (skewed) share of the tasks, spilling to neighbours'
+    // rings when mine fills up — enqueue must never deadlock on a small
+    // ring while every unit is still producing.
+    let (start, count) = tasks_of(me, p, cfg.tasks);
+    for t in start..start + count {
+        let mut target = me;
+        loop {
+            if q.push_to(target, t)? {
+                break;
+            }
+            // Ring full: drain one task myself (helps the farm along and
+            // guarantees progress even with every ring full), then try
+            // the next ring.
+            if let Some(task) = q.pop()? {
+                retire(env, &q, task, cfg.seed, retired_cell, checksum_cell, me)?;
+            }
+            target = (target + 1) % p;
+        }
+    }
+
+    // --- consume until the farm is drained for good: the shared retired
+    // counter is the termination proof, an empty sweep is only a hint.
+    loop {
+        if let Some(task) = q.pop()? {
+            retire(env, &q, task, cfg.seed, retired_cell, checksum_cell, me)?;
+            continue;
+        }
+        let retired = env.fetch_and_op(retired_cell, 0u64, MpiOp::NoOp)?;
+        if retired >= cfg.tasks as u64 {
+            break;
+        }
+        // Not drained — someone is still producing or mid-retire; give
+        // the progress engine a tick and sweep again.
+        env.progress_poll();
+    }
+    env.barrier(team)?;
+
+    let retired = env.fetch_and_op(retired_cell, 0u64, MpiOp::NoOp)?;
+    let checksum = env.fetch_and_op(checksum_cell, 0u64, MpiOp::NoOp)?;
+    let my_steals = env.metrics.wq_steals.get() - steals_before;
+
+    env.barrier(team)?;
+    q.free()?;
+    env.team_memfree(team, cells)?;
+    Ok(WqueueReport { retired, checksum, my_steals })
+}
+
+/// Execute one task and publish its result: checksum XOR then the
+/// retired-count increment — in that order, so `retired == total` proves
+/// every result is already in the checksum cell.
+fn retire(
+    env: &DartEnv,
+    _q: &WorkQueue<'_>,
+    task: u64,
+    seed: u64,
+    retired_cell: crate::dart::GlobalPtr,
+    checksum_cell: crate::dart::GlobalPtr,
+    _me: usize,
+) -> DartResult<()> {
+    let result = task_result(task, seed);
+    env.fetch_and_op(checksum_cell, result, MpiOp::Bxor)?;
+    env.fetch_and_op(retired_cell, 1u64, MpiOp::Sum)?;
+    Ok(())
+}

@@ -70,6 +70,12 @@ pub(crate) struct Resolution {
     pub target: usize,
     /// The allocation's window.
     pub win: Rc<Win>,
+    /// Dynamic-window detach generation this resolution was taken at; 0
+    /// for static (collective-pool) resolutions. A dynamic entry is valid
+    /// only while the window's generation still equals this — detaches are
+    /// non-collective, so remote caches invalidate lazily by comparing
+    /// generations instead of being told (see `mpisim::dynwin`).
+    pub dyn_gen: u64,
 }
 
 /// Hard cap on cached resolutions. Reaching it means the application
@@ -92,6 +98,12 @@ pub(crate) struct SegmentCache {
     /// resolve here, so the engine keeps the handle out of the `RefCell`'d
     /// registry state entirely.
     world_win: Rc<Win>,
+    /// The env's one dynamic window: every dynamic pointer resolves here,
+    /// same reasoning as `world_win`. Dynamic resolutions are cached in
+    /// the same buckets (their negative segids can never collide with a
+    /// team id) and carry the window's detach generation for lazy
+    /// invalidation.
+    dyn_win: Rc<Win>,
     enabled: bool,
     buckets: HashMap<(TeamId, UnitId), Vec<Resolution>>,
     /// Total resolutions across all buckets (kept so the size query and
@@ -100,8 +112,8 @@ pub(crate) struct SegmentCache {
 }
 
 impl SegmentCache {
-    pub(crate) fn new(world_win: Rc<Win>, enabled: bool) -> Self {
-        SegmentCache { world_win, enabled, buckets: HashMap::new(), entries: 0 }
+    pub(crate) fn new(world_win: Rc<Win>, dyn_win: Rc<Win>, enabled: bool) -> Self {
+        SegmentCache { world_win, dyn_win, enabled, buckets: HashMap::new(), entries: 0 }
     }
 
     #[inline]
@@ -202,6 +214,9 @@ impl DartEnv {
         if gptr.is_null() {
             return Err(DartErr::InvalidGptr("null pointer dereference".into()));
         }
+        if gptr.is_dynamic() {
+            return self.resolve_dynamic_scoped(gptr, f);
+        }
         if !gptr.is_collective() {
             // Fig. 4 path: "trivially dereferenced" against the world
             // window with the absolute unit as target.
@@ -228,6 +243,73 @@ impl DartEnv {
         };
         self.metrics.seg_cache_size.set(live as u64);
         out
+    }
+
+    /// The dynamic arm of the dereference chain: resolve a
+    /// [`super::gptr::FLAG_DYNAMIC`] pointer against the env's dynamic
+    /// window. The displacement handed to `f` is the pointer's **absolute
+    /// attach-token address** — `check_range`'s floor lookup resolves it,
+    /// so no base subtraction happens here. Resolutions are memoized like
+    /// collective ones, but a cache hit additionally requires the cached
+    /// detach generation to still be current; a stale or missing entry
+    /// re-resolves against the live attach table (and errors if the region
+    /// was detached).
+    fn resolve_dynamic_scoped<R>(
+        &self,
+        gptr: GlobalPtr,
+        f: impl FnOnce(&Rc<Win>, usize, u64) -> DartResult<R>,
+    ) -> DartResult<R> {
+        if gptr.unitid as usize >= self.size() {
+            return Err(DartErr::InvalidUnit(gptr.unitid));
+        }
+        {
+            let cache = self.seg_cache.borrow();
+            if let Some(r) = cache.lookup(gptr) {
+                if r.dyn_gen == cache.dyn_win.dyn_generation() {
+                    self.metrics.cache_hits.bump();
+                    return f(&r.win, r.target, gptr.offset);
+                }
+            }
+        }
+        self.metrics.cache_misses.bump();
+        let r = self.resolve_dynamic_slow(gptr)?;
+        let out = f(&r.win, r.target, gptr.offset);
+        let live = {
+            let mut cache = self.seg_cache.borrow_mut();
+            // Drop any stale resolution of the same region before
+            // memoizing the fresh one, so the bucket never holds two
+            // entries covering one extent.
+            cache.invalidate_segment(gptr.segid, r.base);
+            cache.insert(r);
+            cache.live()
+        };
+        self.metrics.seg_cache_size.set(live as u64);
+        out
+    }
+
+    /// The uncached dynamic slow path: look the token up in the live
+    /// attach table. The generation is read **before** the region lookup —
+    /// a detach racing with this resolution can then only produce an entry
+    /// already marked stale (which re-resolves on next use), never a
+    /// fresh-marked entry for a dead region.
+    fn resolve_dynamic_slow(&self, gptr: GlobalPtr) -> DartResult<Resolution> {
+        let win = self.seg_cache.borrow().dyn_win.clone();
+        let gen = win.dyn_generation();
+        let (base, len) =
+            win.dyn_region_of(gptr.unitid as usize, gptr.offset).ok_or_else(|| {
+                DartErr::InvalidGptr(format!("{gptr}: not in any attached region"))
+            })?;
+        Ok(Resolution {
+            segid: gptr.segid,
+            unitid: gptr.unitid,
+            base,
+            len: len as u64,
+            // The dynamic window spans DART_TEAM_ALL, so the absolute
+            // unit id IS the window-relative rank.
+            target: gptr.unitid as usize,
+            win,
+            dyn_gen: gen,
+        })
     }
 
     /// Scoped dereference: run `f` with the resolved window (the put/get

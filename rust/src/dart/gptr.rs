@@ -21,6 +21,14 @@ use std::fmt;
 /// Flag bit: the pointer refers to a *collective* global allocation.
 pub const FLAG_COLLECTIVE: u16 = 1 << 0;
 
+/// Flag bit: the pointer refers to *dynamically attached* memory
+/// ([`crate::dart::DartEnv::memattach`], backed by the env's dynamic
+/// window). The displacement is then the **absolute attach token** handed
+/// out at attach time — not relative to any pool base — and `segid` is a
+/// negative per-owner region id (team ids are non-negative, so dynamic
+/// segments can never alias a team segment in resolution caches).
+pub const FLAG_DYNAMIC: u16 = 1 << 1;
+
 /// Absolute unit id (rank in `DART_TEAM_ALL`).
 pub type UnitId = i32;
 
@@ -58,6 +66,12 @@ impl GlobalPtr {
         GlobalPtr { unitid: unit, segid, flags: FLAG_COLLECTIVE, offset }
     }
 
+    /// A dynamic pointer to `unit`'s attached region `segid` (negative),
+    /// at absolute attach-token address `token`.
+    pub fn dynamic(unit: UnitId, segid: TeamId, token: u64) -> GlobalPtr {
+        GlobalPtr { unitid: unit, segid, flags: FLAG_DYNAMIC, offset: token }
+    }
+
     /// Is this `DART_GPTR_NULL`?
     pub fn is_null(&self) -> bool {
         self.unitid < 0
@@ -66,6 +80,11 @@ impl GlobalPtr {
     /// Does the pointer refer to a collective allocation?
     pub fn is_collective(&self) -> bool {
         self.flags & FLAG_COLLECTIVE != 0
+    }
+
+    /// Does the pointer refer to dynamically attached memory?
+    pub fn is_dynamic(&self) -> bool {
+        self.flags & FLAG_DYNAMIC != 0
     }
 
     /// `dart_gptr_setunit`: the same location in another unit's copy of an
@@ -112,7 +131,13 @@ impl fmt::Display for GlobalPtr {
             "gptr(u{} seg{} {} +{})",
             self.unitid,
             self.segid,
-            if self.is_collective() { "coll" } else { "priv" },
+            if self.is_dynamic() {
+                "dyn"
+            } else if self.is_collective() {
+                "coll"
+            } else {
+                "priv"
+            },
             self.offset
         )
     }
@@ -134,6 +159,8 @@ mod tests {
             GlobalPtr::non_collective(12345, u64::MAX / 3),
             GlobalPtr::collective(7, 42, 0xdead_beef),
             GlobalPtr::collective(i32::MAX, i16::MAX, u64::MAX),
+            GlobalPtr::dynamic(3, -1, 1 << 20),
+            GlobalPtr::dynamic(0, i16::MIN, u64::MAX / 7),
             GlobalPtr::NULL,
         ];
         for g in cases {
@@ -154,6 +181,15 @@ mod tests {
         assert_eq!(g.segid, 3);
         assert_eq!(g.offset, 128);
         assert!(g.is_collective());
+    }
+
+    #[test]
+    fn dynamic_flag_and_display() {
+        let g = GlobalPtr::dynamic(2, -3, 0x10_0040);
+        assert!(g.is_dynamic());
+        assert!(!g.is_collective());
+        assert_eq!(g.add(8).offset, 0x10_0048);
+        assert!(format!("{g}").contains("dyn"));
     }
 
     #[test]

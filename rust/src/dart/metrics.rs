@@ -98,6 +98,10 @@ macro_rules! define_metrics {
             /// invalidation points. (Gauge, not a counter: excluded from
             /// [`MetricsSnapshot`].)
             pub seg_cache_size: Gauge,
+            /// Bytes currently attached by this unit via
+            /// [`crate::dart::DartEnv::memattach`] (current + peak).
+            /// (Gauge, not a counter: excluded from [`MetricsSnapshot`].)
+            pub dyn_bytes_attached: Gauge,
         }
 
         /// A plain-data copy of every [`Metrics`] counter at one instant —
@@ -119,6 +123,7 @@ macro_rules! define_metrics {
             pub fn reset(&self) {
                 $( self.$name.reset(); )+
                 self.seg_cache_size.reset();
+                self.dyn_bytes_attached.reset();
             }
         }
 
@@ -201,6 +206,18 @@ define_metrics! {
     /// Bytes touched by atomic operations (operand bytes, not counted in
     /// [`Metrics::bytes`]).
     atomic_bytes,
+    /// Dynamic-memory regions attached by this unit
+    /// ([`crate::dart::DartEnv::memattach`]).
+    dyn_attach_ops,
+    /// Dynamic-memory regions detached by this unit
+    /// ([`crate::dart::DartEnv::memdetach`]).
+    dyn_detach_ops,
+    /// Successful [`crate::dash::WorkQueue`] pops served from a *remote*
+    /// unit's ring — work stealing in action.
+    wq_steals,
+    /// CAS retries inside [`crate::dash::WorkQueue`] enqueue-commit and
+    /// dequeue-claim loops — the queue's contention indicator.
+    wq_cas_retries,
     /// Injected per-message jitter events observed at this unit's sync
     /// points. **World-global mirror**: the fault layer counts events
     /// world-wide ([`crate::dart::DartEnv::fault_stats`]); this counter
@@ -229,8 +246,9 @@ impl fmt::Display for Metrics {
             "puts={} gets={} puts_b={} gets_b={} bytes={} allocs={} colls={} locks={} \
              flushes={} cache_hit={} cache_miss={} ticks={} overlap_ops={} overlap_bytes={} \
              coll_phases={} dash_runs={} dash_redist={} hier_intra={} hier_inter={} fastpath={} \
-             atomics={} atomic_fast={} atomic_bytes={} fault_jitter={} fault_reorder={} \
-             fault_starved={} seg_cache={}/{}",
+             atomics={} atomic_fast={} atomic_bytes={} dyn_attach={} dyn_detach={} \
+             wq_steals={} wq_retries={} fault_jitter={} fault_reorder={} \
+             fault_starved={} seg_cache={}/{} dyn_bytes={}/{}",
             self.puts.get(),
             self.gets.get(),
             self.puts_blocking.get(),
@@ -254,11 +272,17 @@ impl fmt::Display for Metrics {
             self.atomic_ops.get(),
             self.atomic_fastpath_ops.get(),
             self.atomic_bytes.get(),
+            self.dyn_attach_ops.get(),
+            self.dyn_detach_ops.get(),
+            self.wq_steals.get(),
+            self.wq_cas_retries.get(),
             self.fault_jitter_events.get(),
             self.fault_reorders.get(),
             self.fault_starved_ticks.get(),
             self.seg_cache_size.get(),
-            self.seg_cache_size.peak()
+            self.seg_cache_size.peak(),
+            self.dyn_bytes_attached.get(),
+            self.dyn_bytes_attached.peak()
         )
     }
 }
@@ -317,9 +341,32 @@ mod tests {
         m.puts.add(7);
         m.fault_starved_ticks.add(4);
         m.seg_cache_size.set(9);
+        m.dyn_bytes_attached.set(1024);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
         assert_eq!(m.seg_cache_size.get(), 0);
         assert_eq!(m.seg_cache_size.peak(), 0);
+        assert_eq!(m.dyn_bytes_attached.get(), 0);
+        assert_eq!(m.dyn_bytes_attached.peak(), 0);
+    }
+
+    #[test]
+    fn dynamic_counters_flow_through_snapshot_and_display() {
+        let m = Metrics::new();
+        m.dyn_attach_ops.bump();
+        m.dyn_detach_ops.bump();
+        m.wq_steals.add(3);
+        m.wq_cas_retries.add(5);
+        m.dyn_bytes_attached.set(256);
+        m.dyn_bytes_attached.set(64);
+        let before = MetricsSnapshot::default();
+        let d = m.snapshot().delta(&before);
+        assert_eq!(d.dyn_attach_ops, 1);
+        assert_eq!(d.dyn_detach_ops, 1);
+        assert_eq!(d.wq_steals, 3);
+        assert_eq!(d.wq_cas_retries, 5);
+        let s = m.to_string();
+        assert!(s.contains("wq_steals=3"));
+        assert!(s.contains("dyn_bytes=64/256"));
     }
 }

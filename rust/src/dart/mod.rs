@@ -54,7 +54,7 @@ mod tests;
 
 pub use collectives::DartCollHandle;
 pub use config::DartConfig;
-pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE};
+pub use gptr::{GlobalPtr, TeamId, UnitId, DART_TEAM_ALL, FLAG_COLLECTIVE, FLAG_DYNAMIC};
 pub use group::DartGroup;
 pub use locality::{DomainCoord, LocalityScope, LocalitySplit};
 pub use lock::DartLock;
@@ -160,6 +160,11 @@ impl From<MpiErr> for DartErr {
 /// DART result alias.
 pub type DartResult<T> = Result<T, DartErr>;
 
+/// Reserved p2p tag for [`DartEnv::gptr_publish`]/[`DartEnv::gptr_accept`]
+/// — far outside the small tag values applications use, so a publication
+/// can never be matched by an application receive.
+const DYN_PUBLISH_TAG: i32 = 0x44594e; // "DYN"
+
 /// Marker trait for element types the typed layers above the byte-level
 /// DART API ([`crate::dash`]) may store in distributed containers.
 ///
@@ -204,6 +209,17 @@ struct EnvState {
     world_win: Rc<Win>,
     /// My partition of the world window.
     nc_alloc: FreeListAllocator,
+    /// The env's one dynamic window (paper §II's `MPI_Win_create_dynamic`
+    /// half of the memory model): every [`DartEnv::memattach`] region on
+    /// every unit lives here, inside the same eager shared epoch as the
+    /// pools.
+    dyn_win: crate::mpisim::DynWin,
+    /// My live attached regions: attach token → `(segid, length)` — the
+    /// detach-time validation and accounting record.
+    dyn_segs: HashMap<u64, (TeamId, u64)>,
+    /// Per-unit dynamic-segment id dispenser (handed out negated; wraps
+    /// within `1..i16::MAX`, disambiguated by the globally unique tokens).
+    next_dyn_seg: i16,
 }
 
 /// The per-unit DART runtime handle (what `dart_init` yields).
@@ -299,6 +315,10 @@ impl DartEnv {
         // shared-memory flavour).
         let pool = alloc_win(config.team_pool)?;
         pool.lock_all()?;
+        // The dynamic window (paper §II): exposes no memory yet; units
+        // register regions at runtime with `memattach`. Same shared-memory
+        // flavour and eager epoch as the pools.
+        let dyn_win = crate::mpisim::DynWin::create_with(&comm, config.shmem_windows)?;
 
         let mut registry = TeamRegistry::new(config.teamlist_size, config.indexed_teamlist);
         registry.insert(TeamEntry::new(
@@ -312,14 +332,25 @@ impl DartEnv {
         let size = mpi.world_size();
         let nc_alloc = FreeListAllocator::new(config.non_collective_pool as u64);
         let world_win = Rc::new(world_win);
-        let seg_cache = RefCell::new(SegmentCache::new(world_win.clone(), config.segment_cache));
+        let seg_cache = RefCell::new(SegmentCache::new(
+            world_win.clone(),
+            dyn_win.win_rc(),
+            config.segment_cache,
+        ));
         Ok(DartEnv {
             mpi,
             myid,
             size,
             config,
             shared,
-            state: RefCell::new(EnvState { registry, world_win, nc_alloc }),
+            state: RefCell::new(EnvState {
+                registry,
+                world_win,
+                nc_alloc,
+                dyn_win,
+                dyn_segs: HashMap::new(),
+                next_dyn_seg: 1,
+            }),
             seg_cache,
             locality_cache: RefCell::new(HashMap::new()),
             hier_flat_teams: RefCell::new(std::collections::HashSet::new()),
@@ -682,6 +713,120 @@ impl DartEnv {
     }
 
     // ------------------------------------------------------------------
+    // Dynamic global memory (§II dynamic windows)
+    // ------------------------------------------------------------------
+
+    /// `dart_memattach`: **non-collective** registration of `nbytes` of
+    /// fresh zeroed globally accessible memory — the second half of the
+    /// paper's memory model, backed by the env's dynamic window
+    /// (`MPI_Win_create_dynamic` + `MPI_Win_attach`) instead of any
+    /// pre-reserved pool, so it is not bounded by
+    /// [`DartConfig::non_collective_pool`].
+    ///
+    /// The returned pointer carries [`gptr::FLAG_DYNAMIC`], a fresh
+    /// negative per-unit segment id, and the region's **attach token** as
+    /// its displacement. Peers can use it only after learning it out of
+    /// band — ship it with [`DartEnv::gptr_publish`]/[`DartEnv::gptr_accept`],
+    /// [`DartEnv::gptr_bcast`], or any collective of your own. Every
+    /// one-sided operation (async/blocking put/get, strided, accumulate,
+    /// `fetch_and_op`, `compare_and_swap`, the locality fast path, flushes
+    /// and the progress engine) works on it unchanged.
+    pub fn memattach(&self, nbytes: u64) -> DartResult<GlobalPtr> {
+        if nbytes == 0 {
+            return Err(DartErr::Invalid("memattach of zero bytes".into()));
+        }
+        let mut st = self.state.borrow_mut();
+        let token = st.dyn_win.attach(nbytes as usize)?;
+        let segid = -st.next_dyn_seg;
+        st.next_dyn_seg = if st.next_dyn_seg == i16::MAX { 1 } else { st.next_dyn_seg + 1 };
+        st.dyn_segs.insert(token, (segid, nbytes));
+        self.metrics.dyn_attach_ops.bump();
+        self.metrics.dyn_bytes_attached.set(self.metrics.dyn_bytes_attached.get() + nbytes);
+        Ok(GlobalPtr::dynamic(self.myid, segid, token))
+    }
+
+    /// `dart_memdetach`: withdraw a region this unit attached with
+    /// [`DartEnv::memattach`]. **Non-collective and owner-only**; `gptr`
+    /// must be the exact pointer `memattach` returned (not an interior
+    /// pointer). My own cached resolutions are dropped here; remote units'
+    /// caches invalidate lazily through the window's detach generation
+    /// (see `mpisim::dynwin`) — their next operation on a pointer into the
+    /// dead region re-resolves and fails, operations *racing* the detach
+    /// read junk but never dangle.
+    pub fn memdetach(&self, gptr: GlobalPtr) -> DartResult<()> {
+        if !gptr.is_dynamic() {
+            return Err(DartErr::InvalidGptr(format!("memdetach of non-dynamic {gptr}")));
+        }
+        if gptr.unitid != self.myid {
+            return Err(DartErr::InvalidGptr(format!(
+                "memdetach of unit {}'s region by unit {}",
+                gptr.unitid, self.myid
+            )));
+        }
+        let len = {
+            let mut st = self.state.borrow_mut();
+            let (segid, len) = *st.dyn_segs.get(&gptr.offset).ok_or_else(|| {
+                DartErr::InvalidGptr(format!("{gptr} is not a live attach token"))
+            })?;
+            if segid != gptr.segid {
+                return Err(DartErr::InvalidGptr(format!(
+                    "{gptr} names segment {} but token belongs to segment {segid}",
+                    gptr.segid
+                )));
+            }
+            st.dyn_win.detach(gptr.offset)?;
+            st.dyn_segs.remove(&gptr.offset);
+            len
+        };
+        self.seg_cache.borrow_mut().invalidate_segment(gptr.segid, gptr.offset);
+        self.metrics.seg_cache_size.set(self.seg_cache.borrow().live() as u64);
+        self.metrics.dyn_detach_ops.bump();
+        self.metrics.dyn_bytes_attached.set(self.metrics.dyn_bytes_attached.get() - len);
+        Ok(())
+    }
+
+    /// Bytes currently attached by **this unit** via [`DartEnv::memattach`]
+    /// (diagnostics; the world-wide figure is the sum over units).
+    pub fn dyn_attached_bytes(&self) -> u64 {
+        self.metrics.dyn_bytes_attached.get()
+    }
+
+    /// Point-to-point attach-token publication: ship `gptr` to unit `to`,
+    /// who must call [`DartEnv::gptr_accept`]`(my id)`. The 128-bit wire
+    /// form travels over the world communicator's two-sided channel on a
+    /// reserved tag, so it cannot match an application `recv`.
+    pub fn gptr_publish(&self, gptr: GlobalPtr, to: UnitId) -> DartResult<()> {
+        if to < 0 || to as usize >= self.size {
+            return Err(DartErr::InvalidUnit(to));
+        }
+        let comm = self.team_comm(DART_TEAM_ALL)?;
+        Ok(comm.send(&gptr.to_bits().to_ne_bytes(), to as usize, DYN_PUBLISH_TAG)?)
+    }
+
+    /// Receive a global pointer published by unit `from` with
+    /// [`DartEnv::gptr_publish`] (blocking).
+    pub fn gptr_accept(&self, from: UnitId) -> DartResult<GlobalPtr> {
+        if from < 0 || from as usize >= self.size {
+            return Err(DartErr::InvalidUnit(from));
+        }
+        let comm = self.team_comm(DART_TEAM_ALL)?;
+        let (bytes, _) = comm.recv_vec(from as usize, DYN_PUBLISH_TAG)?;
+        let bytes: [u8; 16] = bytes
+            .try_into()
+            .map_err(|_| DartErr::Invalid("malformed gptr publication".into()))?;
+        Ok(GlobalPtr::from_bits(u128::from_ne_bytes(bytes)))
+    }
+
+    /// Collective attach-token publication: broadcast `gptr` from `root`
+    /// (team-relative rank) to every member of `team`.
+    pub fn gptr_bcast(&self, team: TeamId, gptr: &mut GlobalPtr, root: usize) -> DartResult<()> {
+        let mut bytes = gptr.to_bits().to_ne_bytes();
+        self.bcast(team, &mut bytes, root)?;
+        *gptr = GlobalPtr::from_bits(u128::from_ne_bytes(bytes));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
     // Internal plumbing shared with onesided/collectives/lock
     // ------------------------------------------------------------------
 
@@ -713,6 +858,7 @@ impl DartEnv {
             len: e.len,
             target,
             win: e.win.clone(),
+            dyn_gen: 0,
         })
     }
 

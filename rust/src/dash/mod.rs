@@ -27,7 +27,17 @@
 //!   symmetric global memory, and a lock-free insert/update hot path on
 //!   the runtime's MPI-3 atomics (`compare_and_swap` claims + deferred
 //!   `accumulate_async` publication), exercised at scale by
-//!   `apps::kvstore` and the `perf_kv` bench.
+//!   `apps::kvstore` and the `perf_kv` bench;
+//! - [`Vector`]`<T>` ([`vector`]) — the **growable** array over the
+//!   dynamic half of the memory model
+//!   ([`crate::dart::DartEnv::memattach`]): amortized-doubling collective
+//!   `push` / non-collective `push_back_global`, pattern-preserving
+//!   redistribution on growth, bit-identical to a preallocated [`Array`]
+//!   of the final size;
+//! - [`WorkQueue`] ([`workqueue`]) — a global MPMC task queue over
+//!   dynamic segments: per-unit rings, CAS-claimed head/tail on the
+//!   atomics hot path, work stealing between units; exercised by
+//!   `apps::wqueue` and the `perf_dynamic` bench.
 //!
 //! Element types are anything implementing the byte-API marker
 //! [`crate::dart::Element`]. Operation coalescing is observable in
@@ -39,9 +49,13 @@ pub mod array;
 pub mod hashmap;
 pub mod matrix;
 pub mod pattern;
+pub mod vector;
+pub mod workqueue;
 
 pub use crate::dart::Element;
 pub use array::Array;
 pub use hashmap::HashMap;
 pub use matrix::Matrix;
 pub use pattern::{Layout, Pattern, Run};
+pub use vector::Vector;
+pub use workqueue::WorkQueue;

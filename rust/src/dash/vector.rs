@@ -1,0 +1,381 @@
+//! `Vector<T>` — a typed, **growable** 1-D distributed array over DART
+//! dynamic global memory (the DASH paper's dynamic containers, on the
+//! `memattach` half of the memory model).
+//!
+//! Where [`super::Array`] owns one fixed symmetric allocation, a `Vector`
+//! owns one **dynamically attached region per unit**
+//! ([`crate::dart::DartEnv::memattach`]) plus an allgathered directory of
+//! the regions' global pointers — so capacity is bounded by nothing but
+//! memory, and growth is a first-class operation:
+//!
+//! - [`Vector::push`] — collective amortized-doubling append: every
+//!   member contributes one element per call (appended in team-rank
+//!   order); when the claimed range exceeds capacity the vector doubles,
+//!   redistributing into freshly attached regions;
+//! - [`Vector::push_back_global`] — non-collective append: any unit
+//!   CAS-claims the next free index (atomic `fetch_and_op` on the shared
+//!   length cell) and writes it; at capacity it reports
+//!   [`DartErr::Invalid`] — growth stays collective-only, because only a
+//!   collective call can attach new regions on every member;
+//! - growth is **pattern-preserving**: the BLOCKED distribution is
+//!   recomputed over the new capacity and each unit redistributes its old
+//!   block with the same coalescing-runs idiom as
+//!   [`super::algorithms::copy`] (one deferred put per maximal run,
+//!   counted in `Metrics::dash_coalesced_runs`/`dash_redist_bytes`), so a
+//!   vector grown through any number of doublings is **bit-identical** to
+//!   a preallocated [`super::Array`] of the final size — the invariant
+//!   the chaos suite sweeps.
+//!
+//! The element access tiers mirror [`super::Array`]: blocking
+//! element get/put, run-coalesced bulk [`Vector::copy_in`]/
+//! [`Vector::copy_out`], and owner-computes local views.
+
+use super::pattern::Pattern;
+use crate::dart::gptr::{GlobalPtr, TeamId, UnitId};
+use crate::dart::{DartEnv, DartErr, DartResult, Element};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use std::marker::PhantomData;
+
+/// A typed growable distributed 1-D vector (see module docs).
+pub struct Vector<'e, T: Element> {
+    env: &'e DartEnv,
+    team: TeamId,
+    /// BLOCKED distribution of the current *capacity* (not length).
+    pattern: Pattern,
+    capacity: usize,
+    /// Directory of the per-unit attached regions, team-rank indexed —
+    /// rebuilt (allgather) on every growth.
+    dir: Vec<GlobalPtr>,
+    /// The shared length cell: an 8-byte symmetric allocation all
+    /// appends `fetch_and_op` on.
+    len_gptr: GlobalPtr,
+    /// Absolute unit id of every team rank (rank-indexed).
+    units: Vec<UnitId>,
+    /// My team-relative rank.
+    myrank: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<'e, T: Element> Vector<'e, T> {
+    /// Collectively create an empty vector with room for `capacity`
+    /// elements (at least one slot per member is reserved, so growth
+    /// arithmetic never degenerates). Every slot starts as
+    /// `T::default()`.
+    pub fn with_capacity(
+        env: &'e DartEnv,
+        team: TeamId,
+        capacity: usize,
+    ) -> DartResult<Vector<'e, T>> {
+        let p = env.team_size(team)?;
+        let capacity = capacity.max(p);
+        let pattern = Pattern::blocked(capacity, p)?;
+        let units: Vec<UnitId> =
+            (0..p).map(|r| env.team_unit_l2g(team, r)).collect::<DartResult<_>>()?;
+        let myrank = env.team_myid(team)?;
+        let dir = Self::attach_and_gather(env, team, &pattern)?;
+        // The shared length cell lives in symmetric memory so every
+        // member can compute its pointer; the first member zeroes it.
+        let len_gptr = env.team_memalloc_aligned(team, 8)?;
+        if myrank == 0 {
+            env.local_write(len_gptr, &0u64.to_ne_bytes())?;
+        }
+        let v =
+            Vector { env, team, pattern, capacity, dir, len_gptr, units, myrank, _elem: PhantomData };
+        // Deterministic initial contents (same contract as `Array::new`),
+        // then a rendezvous so no unit reads an uninitialized partition.
+        let fill = vec![T::default(); v.local_len()];
+        v.write_local(&fill)?;
+        env.barrier(team)?;
+        Ok(v)
+    }
+
+    /// Attach this unit's region for `pattern` (zeroed by the runtime)
+    /// and allgather the directory. Collective.
+    fn attach_and_gather(
+        env: &DartEnv,
+        team: TeamId,
+        pattern: &Pattern,
+    ) -> DartResult<Vec<GlobalPtr>> {
+        let p = pattern.nunits();
+        // Symmetric region size (max extent) so growth and directory
+        // arithmetic never special-case the ragged last block.
+        let bytes = (pattern.max_local_extent() * std::mem::size_of::<T>()).max(1);
+        let mine = env.memattach(bytes as u64)?;
+        let mut recv = vec![0u8; 16 * p];
+        env.allgather(team, &mine.to_bits().to_ne_bytes(), &mut recv)?;
+        Ok(recv
+            .chunks_exact(16)
+            .map(|c| GlobalPtr::from_bits(u128::from_ne_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Number of elements currently stored (atomic read of the shared
+    /// length cell — coherent under concurrent appends).
+    pub fn len(&self) -> DartResult<usize> {
+        Ok(self.env.fetch_and_op(self.len_gptr, 0u64, MpiOp::NoOp)? as usize)
+    }
+
+    /// `len() == 0`?
+    pub fn is_empty(&self) -> DartResult<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Current capacity in elements.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The current distribution pattern (BLOCKED over the capacity).
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+
+    /// The team this vector is distributed over.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// Global pointer to local offset `local` of team rank `unit`'s
+    /// region — directory lookup + pointer arithmetic, no communication.
+    fn gptr_of(&self, unit: usize, local: usize) -> GlobalPtr {
+        self.dir[unit].add((local * std::mem::size_of::<T>()) as u64)
+    }
+
+    fn check_range(&self, start: usize, len: usize) -> DartResult<()> {
+        match start.checked_add(len) {
+            Some(end) if end <= self.capacity => Ok(()),
+            _ => Err(DartErr::Invalid(format!(
+                "global range {start}+{len} out of vector capacity 0..{}",
+                self.capacity
+            ))),
+        }
+    }
+
+    /// Read one element (blocking one-sided get). Bounds-checked against
+    /// the *capacity*; reading at or past [`Vector::len`] yields
+    /// `T::default()` fill.
+    pub fn get(&self, g: usize) -> DartResult<T> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        let mut v = [T::default()];
+        self.env.get_blocking(self.gptr_of(u, l), as_bytes_mut(&mut v))?;
+        Ok(v[0])
+    }
+
+    /// Write one element in place (blocking one-sided put).
+    pub fn put(&self, g: usize, value: T) -> DartResult<()> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.put_blocking(self.gptr_of(u, l), as_bytes(&[value]))
+    }
+
+    /// **Collective** append: every member contributes `value`; the team
+    /// atomically claims a `team_size`-element range and member rank `r`
+    /// writes slot `base + r`. Doubles the capacity first (collectively,
+    /// with redistribution) whenever the claimed range would not fit —
+    /// the amortized-doubling discipline. Returns the global index of
+    /// *my* element. Not to be mixed with concurrent
+    /// [`Vector::push_back_global`] calls.
+    pub fn push(&mut self, value: T) -> DartResult<usize> {
+        let p = self.units.len();
+        // Agree on the base index, growing until the range fits. The
+        // length is only advanced after the slots are written, so a
+        // concurrent reader never sees a covered-but-unwritten slot.
+        let base = loop {
+            let mut b = [0u8; 8];
+            if self.myrank == 0 {
+                b = (self.len()? as u64).to_ne_bytes();
+            }
+            self.env.bcast(self.team, &mut b, 0)?;
+            let base = u64::from_ne_bytes(b) as usize;
+            if base + p <= self.capacity {
+                break base;
+            }
+            let mut target = self.capacity.max(1);
+            while base + p > target {
+                target *= 2;
+            }
+            self.grow_to(target)?;
+        };
+        let g = base + self.myrank;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.put_blocking(self.gptr_of(u, l), as_bytes(&[value]))?;
+        self.env.barrier(self.team)?;
+        if self.myrank == 0 {
+            self.env.fetch_and_op(self.len_gptr, p as u64, MpiOp::Sum)?;
+        }
+        self.env.barrier(self.team)?;
+        Ok(g)
+    }
+
+    /// **Non-collective** append: atomically claim the next free index
+    /// and write `value` there; any unit may call at any time. At
+    /// capacity the claim is rolled back and [`DartErr::Invalid`] is
+    /// reported — growing needs every member's participation
+    /// ([`Vector::push`] or [`Vector::reserve`]), which a non-collective
+    /// call cannot provide. Returns the claimed global index.
+    pub fn push_back_global(&self, value: T) -> DartResult<usize> {
+        let idx = self.env.fetch_and_op(self.len_gptr, 1u64, MpiOp::Sum)? as usize;
+        if idx >= self.capacity {
+            // Surrender the claim (wrapping -1) so the length stays the
+            // true element count for a later collective grow-and-retry.
+            self.env.fetch_and_op(self.len_gptr, u64::MAX, MpiOp::Sum)?;
+            return Err(DartErr::Invalid(format!(
+                "vector full (len == capacity == {}): grow collectively with \
+                 push() or reserve()",
+                self.capacity
+            )));
+        }
+        let (u, l) = self.pattern.global_to_local(idx);
+        self.env.put_blocking(self.gptr_of(u, l), as_bytes(&[value]))?;
+        Ok(idx)
+    }
+
+    /// **Collective**: grow capacity to at least `new_cap` (rounded up by
+    /// doubling), redistributing existing elements. A no-op if the
+    /// capacity already suffices.
+    pub fn reserve(&mut self, new_cap: usize) -> DartResult<()> {
+        let mut target = self.capacity.max(1);
+        while target < new_cap {
+            target *= 2;
+        }
+        if target > self.capacity {
+            self.grow_to(target)?;
+        }
+        Ok(())
+    }
+
+    /// The collective growth step: attach regions for the new BLOCKED
+    /// pattern, redistribute my old block into them (one deferred put per
+    /// maximal contiguous run of the new pattern — the coalescing-copy
+    /// idiom), then detach the old regions.
+    fn grow_to(&mut self, new_cap: usize) -> DartResult<()> {
+        debug_assert!(new_cap > self.capacity);
+        let p = self.units.len();
+        let new_pattern = Pattern::blocked(new_cap, p)?;
+        let new_dir = Self::attach_and_gather(self.env, self.team, &new_pattern)?;
+        // Default-fill my new region *before* any redistribution put can
+        // land in it (the barrier orders the two phases), keeping the
+        // `T::default()` fill contract through growth.
+        let fill = vec![T::default(); new_pattern.local_extent(self.myrank)];
+        if !fill.is_empty() {
+            self.env.local_write(new_dir[self.myrank], as_bytes(&fill))?;
+        }
+        self.env.barrier(self.team)?;
+        // Owner-computes redistribution of my old contiguous block.
+        let old_extent = self.pattern.local_extent(self.myrank);
+        if old_extent > 0 {
+            let old_vals = self.read_local()?;
+            let my_start = self.pattern.local_to_global(self.myrank, 0);
+            let mut ops = 0u64;
+            for run in new_pattern.runs(my_start, old_extent) {
+                let off = run.global - my_start;
+                let dst =
+                    new_dir[run.unit].add((run.local * std::mem::size_of::<T>()) as u64);
+                self.env.put_async(dst, as_bytes(&old_vals[off..off + run.len]))?;
+                ops += 1;
+            }
+            self.env.metrics.dash_coalesced_runs.add(ops);
+            self.env
+                .metrics
+                .dash_redist_bytes
+                .add((old_extent * std::mem::size_of::<T>()) as u64);
+            // One dynamic window per env: this completes every
+            // redistribution put regardless of target region.
+            self.env.flush_all(new_dir[self.myrank])?;
+        }
+        self.env.barrier(self.team)?;
+        self.env.memdetach(self.dir[self.myrank])?;
+        self.pattern = new_pattern;
+        self.capacity = new_cap;
+        self.dir = new_dir;
+        Ok(())
+    }
+
+    /// Bulk write with run coalescing (see [`super::Array::copy_in`]).
+    /// Returns the number of one-sided operations issued.
+    pub fn copy_in(&self, start: usize, src: &[T]) -> DartResult<u64> {
+        self.check_range(start, src.len())?;
+        if src.is_empty() {
+            return Ok(0);
+        }
+        let mut ops = 0u64;
+        for run in self.pattern.runs(start, src.len()) {
+            let off = run.global - start;
+            self.env
+                .put_async(self.gptr_of(run.unit, run.local), as_bytes(&src[off..off + run.len]))?;
+            ops += 1;
+        }
+        self.env.metrics.dash_coalesced_runs.add(ops);
+        self.env.flush_all(self.dir[self.myrank])?;
+        Ok(ops)
+    }
+
+    /// Bulk read with run coalescing (see [`super::Array::copy_out`]).
+    /// Returns the number of one-sided operations issued.
+    pub fn copy_out(&self, start: usize, dst: &mut [T]) -> DartResult<u64> {
+        self.check_range(start, dst.len())?;
+        if dst.is_empty() {
+            return Ok(0);
+        }
+        let mut ops = 0u64;
+        for run in self.pattern.runs(start, dst.len()) {
+            let off = run.global - start;
+            self.env.get_async(
+                self.gptr_of(run.unit, run.local),
+                as_bytes_mut(&mut dst[off..off + run.len]),
+            )?;
+            ops += 1;
+        }
+        self.env.metrics.dash_coalesced_runs.add(ops);
+        self.env.flush_all(self.dir[self.myrank])?;
+        Ok(ops)
+    }
+
+    /// Number of capacity slots stored on this unit.
+    pub fn local_len(&self) -> usize {
+        self.pattern.local_extent(self.myrank)
+    }
+
+    /// Copy of this unit's region, in local storage order.
+    pub fn read_local(&self) -> DartResult<Vec<T>> {
+        let mut buf = vec![T::default(); self.local_len()];
+        if !buf.is_empty() {
+            self.env.local_read(self.dir[self.myrank], as_bytes_mut(&mut buf))?;
+        }
+        Ok(buf)
+    }
+
+    /// Replace this unit's region. `src.len()` must equal
+    /// [`Vector::local_len`].
+    pub fn write_local(&self, src: &[T]) -> DartResult<()> {
+        if src.len() != self.local_len() {
+            return Err(DartErr::Invalid(format!(
+                "write_local of {} elements into a {}-element partition",
+                src.len(),
+                self.local_len()
+            )));
+        }
+        if src.is_empty() {
+            return Ok(());
+        }
+        self.env.local_write(self.dir[self.myrank], as_bytes(src))
+    }
+
+    /// The owner-computes local view (see [`super::Array::with_local`]).
+    pub fn with_local<R>(&self, f: impl FnOnce(&mut [T]) -> R) -> DartResult<R> {
+        let mut buf = self.read_local()?;
+        let out = f(&mut buf);
+        self.write_local(&buf)?;
+        Ok(out)
+    }
+
+    /// Collectively tear the vector down: detach my region, free the
+    /// length cell. Not done in `Drop` for the same reason as
+    /// [`super::Array::free`].
+    pub fn free(self) -> DartResult<()> {
+        self.env.barrier(self.team)?;
+        self.env.memdetach(self.dir[self.myrank])?;
+        self.env.team_memfree(self.team, self.len_gptr)
+    }
+}

@@ -1,0 +1,217 @@
+//! `WorkQueue` — a global MPMC task queue with work stealing, built on
+//! DART dynamic global memory and the runtime's MPI-3 atomics.
+//!
+//! Each unit owns one bounded **ring** in a dynamically attached region
+//! ([`crate::dart::DartEnv::memattach`]); the allgathered directory of
+//! ring pointers makes every ring reachable from every unit, so any unit
+//! may enqueue to, dequeue from, or **steal** from any ring — the
+//! classic distributed task-farm shape (and the irregular-workload
+//! gateway ROADMAP item 2 names).
+//!
+//! ## The lock-free protocol
+//!
+//! Three 8-byte control cells head each ring, followed by `cap` 8-byte
+//! item slots; all transitions go through the runtime's atomic
+//! `fetch_and_op`/`compare_and_swap` hot path (same-node rings collapse
+//! to CPU atomics via the locality fast path):
+//!
+//! - **enqueue** — CAS-reserve a ticket on `tail_reserved` (full ⇒
+//!   `Ok(false)`, nothing reserved), write the slot `ticket % cap`, then
+//!   CAS-commit `tail_committed` from `ticket` to `ticket+1`. Commits
+//!   therefore retire **in ticket order**; a slot is observable only
+//!   after every earlier slot is written.
+//! - **dequeue/steal** — read `tail_committed` then `head`; if work
+//!   remains, read slot `head % cap` **before** CAS-claiming
+//!   `head → head+1`. Reading first is safe: overwriting that slot
+//!   requires a producer ticket `head + cap`, which the full-check only
+//!   admits after `head` has already advanced — in which case our CAS
+//!   loses. A won CAS is therefore proof the read value was valid, and
+//!   each item is delivered **exactly once** (the chaos invariant
+//!   `work_queue_exactly_once` sweeps this under fault injection).
+//!
+//! CAS retries land in `Metrics::wq_cas_retries`; successful pops served
+//! from a remote ring land in `Metrics::wq_steals`.
+//!
+//! Items are opaque `u64` payloads (an index into task state the
+//! application keeps elsewhere — the byte-level DART discipline). Zero is
+//! a legal item: emptiness is tracked by the head/tail cells, never by
+//! sentinel values.
+
+use crate::dart::gptr::{GlobalPtr, TeamId, UnitId};
+use crate::dart::{DartEnv, DartErr, DartResult};
+use crate::mpisim::MpiOp;
+
+/// Ring-control cell offsets (bytes).
+const HEAD: u64 = 0;
+const TAIL_RESERVED: u64 = 8;
+const TAIL_COMMITTED: u64 = 16;
+/// First item slot (bytes).
+const SLOTS: u64 = 24;
+
+/// A distributed MPMC work-stealing queue (see module docs).
+pub struct WorkQueue<'e> {
+    env: &'e DartEnv,
+    team: TeamId,
+    /// Slots per unit ring.
+    cap: usize,
+    /// Directory of the per-unit ring regions, team-rank indexed.
+    dir: Vec<GlobalPtr>,
+    /// My team-relative rank.
+    myrank: usize,
+}
+
+impl<'e> WorkQueue<'e> {
+    /// Collectively create a queue with a `cap`-slot ring per member.
+    pub fn new(env: &'e DartEnv, team: TeamId, cap: usize) -> DartResult<WorkQueue<'e>> {
+        if cap == 0 {
+            return Err(DartErr::Invalid("work queue with zero-slot rings".into()));
+        }
+        let p = env.team_size(team)?;
+        let myrank = env.team_myid(team)?;
+        // Attached memory is zeroed, so head/tails start at 0 — empty.
+        let mine = env.memattach(SLOTS + (cap as u64) * 8)?;
+        let mut recv = vec![0u8; 16 * p];
+        env.allgather(team, &mine.to_bits().to_ne_bytes(), &mut recv)?;
+        let dir = recv
+            .chunks_exact(16)
+            .map(|c| GlobalPtr::from_bits(u128::from_ne_bytes(c.try_into().unwrap())))
+            .collect();
+        Ok(WorkQueue { env, team, cap, dir, myrank })
+    }
+
+    /// Slots per unit ring.
+    pub fn ring_capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Number of member rings.
+    pub fn nrings(&self) -> usize {
+        self.dir.len()
+    }
+
+    /// The team this queue is distributed over.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// Atomic read of a control cell (`fetch_and_op` + `MPI_NO_OP`).
+    fn cell(&self, unit: usize, off: u64) -> DartResult<u64> {
+        self.env.fetch_and_op(self.dir[unit].add(off), 0u64, MpiOp::NoOp)
+    }
+
+    /// Enqueue `item` onto team rank `unit`'s ring. `Ok(false)` means the
+    /// ring was full and nothing was enqueued (spill to another ring or
+    /// retry after consumers drain). Non-collective; any unit may target
+    /// any ring.
+    pub fn push_to(&self, unit: usize, item: u64) -> DartResult<bool> {
+        if unit >= self.dir.len() {
+            return Err(DartErr::Invalid(format!(
+                "ring {unit} out of 0..{}",
+                self.dir.len()
+            )));
+        }
+        let ring = self.dir[unit];
+        // CAS-reserve a ticket (never a blind fetch-add: a fetch-add with
+        // rollback on full could hand the same ticket out twice, which
+        // the in-order commit chain cannot survive).
+        let ticket = loop {
+            let t = self.cell(unit, TAIL_RESERVED)?;
+            let head = self.cell(unit, HEAD)?;
+            if t - head >= self.cap as u64 {
+                return Ok(false);
+            }
+            let old = self.env.compare_and_swap(ring.add(TAIL_RESERVED), t, t + 1)?;
+            if old == t {
+                break t;
+            }
+            self.env.metrics.wq_cas_retries.bump();
+        };
+        let slot = ring.add(SLOTS + (ticket % self.cap as u64) * 8);
+        self.env.put_blocking(slot, &item.to_ne_bytes())?;
+        // Commit in ticket order: my commit can only land once every
+        // earlier ticket's slot is committed.
+        loop {
+            let old = self.env.compare_and_swap(ring.add(TAIL_COMMITTED), ticket, ticket + 1)?;
+            if old == ticket {
+                return Ok(true);
+            }
+            self.env.metrics.wq_cas_retries.bump();
+        }
+    }
+
+    /// Enqueue onto my own ring (the task-farm producer's default).
+    pub fn push(&self, item: u64) -> DartResult<bool> {
+        self.push_to(self.myrank, item)
+    }
+
+    /// Try to dequeue one item from team rank `unit`'s ring. `Ok(None)`
+    /// means the ring was observed empty.
+    pub fn try_pop_from(&self, unit: usize) -> DartResult<Option<u64>> {
+        if unit >= self.dir.len() {
+            return Err(DartErr::Invalid(format!(
+                "ring {unit} out of 0..{}",
+                self.dir.len()
+            )));
+        }
+        let ring = self.dir[unit];
+        loop {
+            let committed = self.cell(unit, TAIL_COMMITTED)?;
+            let head = self.cell(unit, HEAD)?;
+            if head >= committed {
+                return Ok(None);
+            }
+            // Read the slot BEFORE claiming it (see module docs for why
+            // a won CAS proves this read was not torn by a producer).
+            let mut buf = [0u8; 8];
+            self.env
+                .get_blocking(ring.add(SLOTS + (head % self.cap as u64) * 8), &mut buf)?;
+            let old = self.env.compare_and_swap(ring.add(HEAD), head, head + 1)?;
+            if old == head {
+                return Ok(Some(u64::from_ne_bytes(buf)));
+            }
+            self.env.metrics.wq_cas_retries.bump();
+        }
+    }
+
+    /// Dequeue one item: my own ring first, then **steal** round-robin
+    /// from the other members' rings (successful remote pops bump
+    /// `Metrics::wq_steals`). `Ok(None)` after one full sweep found every
+    /// ring empty — which is a moment-in-time observation, not a
+    /// termination proof; task farms detect completion with a counter
+    /// (see `apps::wqueue`).
+    pub fn pop(&self) -> DartResult<Option<u64>> {
+        if let Some(item) = self.try_pop_from(self.myrank)? {
+            return Ok(Some(item));
+        }
+        let p = self.dir.len();
+        for d in 1..p {
+            let victim = (self.myrank + d) % p;
+            if let Some(item) = self.try_pop_from(victim)? {
+                self.env.metrics.wq_steals.bump();
+                return Ok(Some(item));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Items currently enqueued across all rings (a racy diagnostic sum —
+    /// exact only while no producer or consumer is active).
+    pub fn len(&self) -> DartResult<u64> {
+        let mut total = 0;
+        for u in 0..self.dir.len() {
+            total += self.cell(u, TAIL_COMMITTED)? - self.cell(u, HEAD)?;
+        }
+        Ok(total)
+    }
+
+    /// `len() == 0`? (Same caveat as [`WorkQueue::len`].)
+    pub fn is_empty(&self) -> DartResult<bool> {
+        Ok(self.len()? == 0)
+    }
+
+    /// Collectively tear the queue down: detach my ring region.
+    pub fn free(self) -> DartResult<()> {
+        self.env.barrier(self.team)?;
+        self.env.memdetach(self.dir[self.myrank])
+    }
+}

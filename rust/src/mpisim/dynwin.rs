@@ -7,214 +7,257 @@
 //! and publishes the returned *address token* to peers out of band (in
 //! real MPI the virtual address is shipped; here the token plays that
 //! role). RMA targets `(rank, token + offset)`.
+//!
+//! The implementation is a side-table on the ordinary [`Win`]:
+//! [`Win::allocate_dynamic`] builds a regular collective window whose
+//! per-rank static segments are zero-length and whose [`DynSide`] holds
+//! the per-rank attach tables. Displacement resolution —
+//! `WinState::check_range`, the single choke point every one-sided
+//! operation goes through — floor-looks-up the target rank's attach table
+//! instead of bounds-checking the static segment. Everything else
+//! (passive-target epochs, deferred completion + flush, request ops,
+//! vector datatypes, the accumulate family and CPU-atomic fast paths,
+//! shared-memory locality) is inherited verbatim, which is exactly what
+//! lets the DART layer route `memattach` memory through its unchanged
+//! engine/progress machinery.
+//!
+//! Three deliberate simulator choices:
+//!
+//! - **u64-backed regions, 8-byte-aligned tokens** — like static
+//!   [`Win`] segments, so naturally aligned elements inside an attached
+//!   region are sound targets for the lock-free accumulate/CAS path.
+//! - **a detach graveyard** — `detach` withdraws the region from the
+//!   attach table (subsequent resolutions fail) but parks the allocation
+//!   until window teardown, so a pointer resolved by a *racing* RMA op
+//!   stays valid; MPI makes such races erroneous, we make them
+//!   value-undefined but memory-safe, matching the static windows' story.
+//! - **a detach generation counter** — bumped on every detach; consumers
+//!   that cache resolutions (the DART segment cache) compare generations
+//!   to invalidate lazily, since a non-collective detach cannot reach
+//!   into remote caches.
 
 use super::comm::Comm;
 use super::error::{MpiErr, MpiResult};
-use super::window::LockKind;
+use super::window::Win;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Mutex, RwLock};
 
-/// One attached region.
-struct Region {
-    mem: Box<[u8]>,
+/// First address token handed out (a recognizable non-zero base, so a
+/// zero/small displacement on a dynamic window is an obvious bug).
+const DYN_BASE_ADDR: u64 = 1 << 20;
+
+/// One attached region. Backed by `u64`s so the base is 8-byte aligned —
+/// naturally aligned elements inside are then CPU-atomics-safe (see
+/// [`super::atomics`]), which the DART work queue's CAS protocol relies on.
+pub(crate) struct DynRegion {
+    mem: Box<[u64]>,
+    /// Exposed length in bytes.
+    len: usize,
 }
 
-/// Per-rank attach table: token base → region (sorted for range lookup).
-#[derive(Default)]
-struct RankRegions {
-    regions: BTreeMap<u64, Region>,
+impl DynRegion {
+    fn new(len: usize) -> DynRegion {
+        DynRegion { mem: vec![0u64; len.max(1).div_ceil(8)].into_boxed_slice(), len }
+    }
+
+    #[inline]
+    fn ptr(&self) -> *mut u8 {
+        self.mem.as_ptr() as *mut u8
+    }
 }
 
-impl RankRegions {
-    /// Resolve `(addr, len)` to a raw pointer inside one attached region.
-    fn resolve(&self, addr: u64, len: usize) -> Option<*mut u8> {
-        let (&base, region) = self.regions.range(..=addr).next_back()?;
-        let off = addr - base;
-        if off as usize + len <= region.mem.len() {
-            // Box contents are heap-stable; many threads may target this
-            // region concurrently under RMA semantics.
-            Some(unsafe { (region.mem.as_ptr() as *mut u8).add(off as usize) })
+/// The dynamic flavour's shared state: per-rank attach tables plus the
+/// token dispenser and the detach-generation counter. Lives inside
+/// `WinState`, one per dynamic window.
+pub(crate) struct DynSide {
+    /// Indexed by comm rank: attach-token base → region (sorted, so a
+    /// displacement resolves by floor lookup).
+    ranks: Vec<RwLock<BTreeMap<u64, DynRegion>>>,
+    /// Address-token dispenser (region bases never collide, any rank).
+    next_addr: AtomicU64,
+    /// Bumped on every detach (any rank) — the cache-invalidation epoch.
+    /// Starts at 1 so consumers can use 0 as "not a dynamic resolution".
+    generation: AtomicU64,
+    /// Currently attached bytes across all ranks (diagnostics/metrics).
+    attached_bytes: AtomicU64,
+    /// Detached regions parked until window teardown (pointer stability
+    /// under racing ops — see module docs).
+    graveyard: Mutex<Vec<DynRegion>>,
+}
+
+impl DynSide {
+    pub(crate) fn new(nranks: usize) -> DynSide {
+        DynSide {
+            ranks: (0..nranks).map(|_| RwLock::new(BTreeMap::new())).collect(),
+            next_addr: AtomicU64::new(DYN_BASE_ADDR),
+            generation: AtomicU64::new(1),
+            attached_bytes: AtomicU64::new(0),
+            graveyard: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn rank(&self, target: usize) -> MpiResult<&RwLock<BTreeMap<u64, DynRegion>>> {
+        self.ranks.get(target).ok_or(MpiErr::RankOutOfRange(target, self.ranks.len()))
+    }
+
+    /// Resolve `(target, addr, len)` to a raw pointer inside one attached
+    /// region — the dynamic arm of `WinState::check_range`. The pointer
+    /// outlives the table lock: region allocations are heap-stable and
+    /// survive detach in the graveyard.
+    pub(crate) fn resolve(&self, target: usize, addr: u64, len: usize) -> MpiResult<*mut u8> {
+        let map = self.rank(target)?.read().unwrap();
+        let (&base, region) = map.range(..=addr).next_back().ok_or(MpiErr::DispOutOfRange {
+            disp: addr as usize,
+            len,
+            size: 0,
+        })?;
+        let off = (addr - base) as usize;
+        if off.checked_add(len).map_or(true, |end| end > region.len) {
+            return Err(MpiErr::DispOutOfRange { disp: addr as usize, len, size: region.len });
+        }
+        Ok(unsafe { region.ptr().add(off) })
+    }
+
+    fn attach(&self, rank: usize, size: usize) -> MpiResult<u64> {
+        if size == 0 {
+            return Err(MpiErr::Invalid("attach of empty region".into()));
+        }
+        // 8-byte-aligned spans with a guard gap, so tokens stay aligned
+        // and an off-by-one displacement can never silently land in a
+        // neighbouring region.
+        let span = (size as u64).div_ceil(8) * 8 + 64;
+        let base = self.next_addr.fetch_add(span, Ordering::SeqCst);
+        self.rank(rank)?.write().unwrap().insert(base, DynRegion::new(size));
+        self.attached_bytes.fetch_add(size as u64, Ordering::SeqCst);
+        Ok(base)
+    }
+
+    fn detach(&self, rank: usize, addr: u64) -> MpiResult<()> {
+        let removed = self.rank(rank)?.write().unwrap().remove(&addr);
+        match removed {
+            Some(region) => {
+                self.attached_bytes.fetch_sub(region.len as u64, Ordering::SeqCst);
+                self.graveyard.lock().unwrap().push(region);
+                // Publish the withdrawal *after* the table change: a
+                // consumer that observes the new generation and re-resolves
+                // is guaranteed to miss the region.
+                self.generation.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }
+            None => Err(MpiErr::Invalid(format!("detach of unattached address {addr}"))),
+        }
+    }
+
+    fn region_of(&self, target: usize, addr: u64) -> Option<(u64, usize)> {
+        let map = self.ranks.get(target)?.read().unwrap();
+        let (&base, region) = map.range(..=addr).next_back()?;
+        if addr - base < region.len as u64 {
+            Some((base, region.len))
         } else {
             None
         }
     }
 }
 
-struct DynState {
-    /// Indexed by comm rank.
-    ranks: Vec<RwLock<RankRegions>>,
-    /// Address-token dispenser (region bases never collide, any rank).
-    next_addr: AtomicU64,
-    /// Simple passive-target lock per rank (shared only — what DART-style
-    /// consumers use).
-    epoch: Vec<(Mutex<usize>, Condvar)>,
+/// The dynamic-window surface on [`Win`]. Every method errors with
+/// [`MpiErr::Invalid`] on a window that was not created with
+/// [`Win::allocate_dynamic`] (except the queries, which report "not
+/// dynamic" benignly).
+impl Win {
+    fn dyn_side(&self) -> MpiResult<&DynSide> {
+        self.state
+            .dynamic
+            .as_ref()
+            .ok_or_else(|| MpiErr::Invalid("attach/detach on a non-dynamic window".into()))
+    }
+
+    /// `MPI_Win_attach`: expose `size` fresh zeroed bytes on this rank;
+    /// returns the address token peers use to target the region.
+    /// Non-collective.
+    pub fn attach(&self, size: usize) -> MpiResult<u64> {
+        self.dyn_side()?.attach(self.comm().rank(), size)
+    }
+
+    /// `MPI_Win_detach`: withdraw one of this rank's regions (by its
+    /// attach token). Non-collective; bumps the window's detach
+    /// generation so resolution caches can invalidate lazily.
+    pub fn detach(&self, addr: u64) -> MpiResult<()> {
+        self.dyn_side()?.detach(self.comm().rank(), addr)
+    }
+
+    /// Was this window created with [`Win::allocate_dynamic`]?
+    pub fn is_dynamic(&self) -> bool {
+        self.state.dynamic.is_some()
+    }
+
+    /// The detach-generation counter: starts at 1, bumped on every detach
+    /// by any rank. 0 means "not a dynamic window". Two equal readings
+    /// bracket a detach-free interval, so a resolution cached at
+    /// generation `g` is still valid whenever the counter still reads `g`.
+    pub fn dyn_generation(&self) -> u64 {
+        self.state.dynamic.as_ref().map_or(0, |d| d.generation.load(Ordering::SeqCst))
+    }
+
+    /// The `(token base, length)` of the attached region covering `addr`
+    /// on `target`, or `None` (detached / never attached / not dynamic).
+    pub fn dyn_region_of(&self, target: usize, addr: u64) -> Option<(u64, usize)> {
+        self.state.dynamic.as_ref()?.region_of(target, addr)
+    }
+
+    /// Currently attached bytes across all ranks (0 on non-dynamic
+    /// windows).
+    pub fn dyn_attached_bytes(&self) -> u64 {
+        self.state.dynamic.as_ref().map_or(0, |d| d.attached_bytes.load(Ordering::SeqCst))
+    }
 }
 
-/// A dynamic RMA window handle (rank-local).
+/// A dynamic RMA window handle with DART's idiom baked in: created
+/// collectively, shared epochs opened eagerly on every target
+/// (`lock_all`, §IV-B5), shared via `Rc` so resolution caches can hold
+/// the same handle the owner does. Derefs to [`Win`], so the full
+/// one-sided surface — put/get (deferred or fused), request ops, vector
+/// transfers, accumulate/fetch-op/CAS and their same-node direct
+/// variants, flush/flush_all — works on attached regions out of the box.
 pub struct DynWin {
-    state: Arc<DynState>,
-    comm: Comm,
-    _not_send: std::marker::PhantomData<*const ()>,
+    win: Rc<Win>,
 }
 
 impl DynWin {
-    /// `MPI_Win_create_dynamic`: collective; exposes no memory yet.
+    /// `MPI_Win_create_dynamic` + eager `lock_all`: collective; exposes no
+    /// memory yet.
     pub fn create(comm: &Comm) -> MpiResult<DynWin> {
-        let n = comm.size();
-        // Rendezvous: rank 0 builds the shared state, parks it in a
-        // process-global side table under a globally unique key, and
-        // broadcasts the key; everyone clones the Arc, then rank 0 cleans
-        // the table entry up.
-        static NEXT_KEY: AtomicU64 = AtomicU64::new(1);
-        let mut key = 0u64;
-        if comm.rank() == 0 {
-            key = NEXT_KEY.fetch_add(1, Ordering::SeqCst);
-            let st = Arc::new(DynState {
-                ranks: (0..n).map(|_| RwLock::new(RankRegions::default())).collect(),
-                next_addr: AtomicU64::new(1 << 20),
-                epoch: (0..n).map(|_| (Mutex::new(0), Condvar::new())).collect(),
-            });
-            dyn_side_table().lock().unwrap().insert(key, st);
-        }
-        let mut kb = key.to_ne_bytes();
-        comm.bcast(&mut kb, 0)?;
-        key = u64::from_ne_bytes(kb);
-        let state = dyn_side_table()
-            .lock()
-            .unwrap()
-            .get(&key)
-            .cloned()
-            .ok_or(MpiErr::UnknownWindow(key))?;
-        comm.barrier()?;
-        if comm.rank() == 0 {
-            dyn_side_table().lock().unwrap().remove(&key);
-        }
-        Ok(DynWin { state, comm: comm.clone(), _not_send: std::marker::PhantomData })
+        Self::create_with(comm, false)
     }
 
-    /// `MPI_Win_attach`: expose `size` fresh zeroed bytes; returns the
-    /// address token peers use to target this region.
-    pub fn attach(&self, size: usize) -> MpiResult<u64> {
-        if size == 0 {
-            return Err(MpiErr::Invalid("attach of empty region".into()));
-        }
-        let base = self
-            .state
-            .next_addr
-            .fetch_add(size.next_power_of_two() as u64 + 64, Ordering::SeqCst);
-        let mem = vec![0u8; size].into_boxed_slice();
-        self.state.ranks[self.comm.rank()]
-            .write()
-            .unwrap()
-            .regions
-            .insert(base, Region { mem });
-        Ok(base)
+    /// Like [`DynWin::create`], with the shared-memory flavour: same-node
+    /// transfers to attached regions go zero-copy / CPU-atomic direct.
+    pub fn create_with(comm: &Comm, shmem: bool) -> MpiResult<DynWin> {
+        let win = Win::allocate_dynamic(comm, shmem)?;
+        win.lock_all()?;
+        Ok(DynWin { win: Rc::new(win) })
     }
 
-    /// `MPI_Win_detach`: withdraw a region (by its attach token).
-    pub fn detach(&self, addr: u64) -> MpiResult<()> {
-        let removed =
-            self.state.ranks[self.comm.rank()].write().unwrap().regions.remove(&addr);
-        match removed {
-            Some(_) => Ok(()),
-            None => Err(MpiErr::Invalid(format!("detach of unattached address {addr}"))),
-        }
-    }
-
-    /// `MPI_Win_lock(SHARED, target)` for the dynamic window.
-    pub fn lock_shared(&self, target: usize) -> MpiResult<()> {
-        let (m, _cv) = self
-            .state
-            .epoch
-            .get(target)
-            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?;
-        *m.lock().unwrap() += 1;
-        Ok(())
-    }
-
-    /// `MPI_Win_unlock`.
-    pub fn unlock(&self, target: usize) -> MpiResult<()> {
-        let (m, cv) = self
-            .state
-            .epoch
-            .get(target)
-            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?;
-        let mut g = m.lock().unwrap();
-        if *g == 0 {
-            return Err(MpiErr::NoMatchingLock { win: 0, target });
-        }
-        *g -= 1;
-        cv.notify_all();
-        Ok(())
-    }
-
-    /// `MPI_Put` on an attached region (blocking through flush like the
-    /// static window's put+flush; dynamic windows are not on DART's hot
-    /// path, so the simpler completion model is fine).
-    pub fn put(&self, origin: &[u8], target: usize, addr: u64) -> MpiResult<()> {
-        let regions = self
-            .state
-            .ranks
-            .get(target)
-            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?
-            .read()
-            .unwrap();
-        let dst = regions.resolve(addr, origin.len()).ok_or(MpiErr::DispOutOfRange {
-            disp: addr as usize,
-            len: origin.len(),
-            size: 0,
-        })?;
-        unsafe { std::ptr::copy_nonoverlapping(origin.as_ptr(), dst, origin.len()) };
-        drop(regions);
-        let src_w = self.comm.my_world();
-        let dst_w = self.comm.world_rank_of(target)?;
-        let at = self.comm.world().book_transfer(src_w, dst_w, origin.len());
-        self.comm.world().wait_until(at);
-        Ok(())
-    }
-
-    /// `MPI_Get` on an attached region.
-    pub fn get(&self, dest: &mut [u8], target: usize, addr: u64) -> MpiResult<()> {
-        let regions = self
-            .state
-            .ranks
-            .get(target)
-            .ok_or(MpiErr::RankOutOfRange(target, self.comm.size()))?
-            .read()
-            .unwrap();
-        let src = regions.resolve(addr, dest.len()).ok_or(MpiErr::DispOutOfRange {
-            disp: addr as usize,
-            len: dest.len(),
-            size: 0,
-        })?;
-        unsafe { std::ptr::copy_nonoverlapping(src, dest.as_mut_ptr(), dest.len()) };
-        drop(regions);
-        let src_w = self.comm.my_world();
-        let dst_w = self.comm.world_rank_of(target)?;
-        let at = self.comm.world().book_transfer(dst_w, src_w, dest.len());
-        self.comm.world().wait_until(at);
-        Ok(())
-    }
-
-    /// Kind marker (diagnostics; mirrors `MPI_WIN_FLAVOR_DYNAMIC`).
-    pub fn lock_kind_supported(&self) -> LockKind {
-        LockKind::Shared
+    /// A shared handle to the underlying window (what resolution caches
+    /// store).
+    pub fn win_rc(&self) -> Rc<Win> {
+        self.win.clone()
     }
 }
 
-/// Process-global side table used only during `DynWin::create` rendezvous.
-/// (`std::sync::OnceLock` — the crate is dependency-free, no `once_cell`.)
-fn dyn_side_table() -> &'static Mutex<std::collections::HashMap<u64, Arc<DynState>>> {
-    use std::sync::OnceLock;
-    static TABLE: OnceLock<Mutex<std::collections::HashMap<u64, Arc<DynState>>>> = OnceLock::new();
-    TABLE.get_or_init(|| Mutex::new(std::collections::HashMap::new()))
+impl std::ops::Deref for DynWin {
+    type Target = Win;
+
+    fn deref(&self) -> &Win {
+        &self.win
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mpisim::{World, WorldConfig, ANY_SOURCE};
+    use crate::mpisim::{as_bytes, MpiOp, MpiType, World, WorldConfig, ANY_SOURCE};
 
     #[test]
     fn attach_put_get_detach() {
@@ -227,15 +270,13 @@ mod tests {
                 c.send(&addr.to_ne_bytes(), 0, 1).unwrap();
                 c.barrier().unwrap();
                 let mut got = [0u8; 5];
-                win.get(&mut got, 1, addr).unwrap();
+                win.get_flush(&mut got, 1, addr as usize).unwrap();
                 assert_eq!(&got, b"hello");
                 win.detach(addr).unwrap();
             } else {
                 let (bytes, _) = c.recv_vec(1, 1).unwrap();
                 let addr = u64::from_ne_bytes(bytes.try_into().unwrap());
-                win.lock_shared(1).unwrap();
-                win.put(b"hello", 1, addr).unwrap();
-                win.unlock(1).unwrap();
+                win.put_flush(b"hello", 1, addr as usize).unwrap();
                 c.barrier().unwrap();
             }
             c.barrier().unwrap();
@@ -255,8 +296,8 @@ mod tests {
                 c.barrier().unwrap();
                 let mut b1 = [0u8; 4];
                 let mut b2 = [0u8; 4];
-                win.get(&mut b1, 0, a1 + 8).unwrap();
-                win.get(&mut b2, 0, a2).unwrap();
+                win.get_flush(&mut b1, 0, (a1 + 8) as usize).unwrap();
+                win.get_flush(&mut b2, 0, a2 as usize).unwrap();
                 assert_eq!(b1, [1; 4]);
                 assert_eq!(b2, [2; 4]);
             } else {
@@ -265,8 +306,8 @@ mod tests {
                 let (b, _) = c.recv_vec(ANY_SOURCE, 0).unwrap();
                 let a2 = u64::from_ne_bytes(b.try_into().unwrap());
                 // offset addressing within a region
-                win.put(&[1u8; 4], 0, a1 + 8).unwrap();
-                win.put(&[2u8; 4], 0, a2).unwrap();
+                win.put_flush(&[1u8; 4], 0, (a1 + 8) as usize).unwrap();
+                win.put_flush(&[2u8; 4], 0, a2 as usize).unwrap();
                 c.barrier().unwrap();
             }
             c.barrier().unwrap();
@@ -280,10 +321,12 @@ mod tests {
             let win = DynWin::create(&c).unwrap();
             let addr = win.attach(16).unwrap();
             // beyond the region
-            assert!(win.put(&[0u8; 32], 0, addr).is_err());
-            assert!(win.put(&[0u8; 8], 0, addr + 12).is_err());
+            assert!(win.put_flush(&[0u8; 32], 0, addr as usize).is_err());
+            assert!(win.put_flush(&[0u8; 8], 0, (addr + 12) as usize).is_err());
+            let gen = win.dyn_generation();
             win.detach(addr).unwrap();
-            assert!(win.put(&[0u8; 4], 0, addr).is_err());
+            assert_eq!(win.dyn_generation(), gen + 1, "detach must bump the generation");
+            assert!(win.put_flush(&[0u8; 4], 0, addr as usize).is_err());
             assert!(win.detach(addr).is_err());
         });
     }
@@ -296,11 +339,89 @@ mod tests {
             let w2 = DynWin::create(&c).unwrap();
             if c.rank() == 0 {
                 let a1 = w1.attach(8).unwrap();
-                // The same token is meaningless on w2.
-                assert!(w2.put(&[1u8; 4], 0, a1).is_err());
-                w1.put(&[1u8; 4], 0, a1).unwrap();
+                // The same token is meaningless on w2 (attach tables are
+                // per-window even though the token ranges coincide).
+                assert!(w2.put_flush(&[1u8; 4], 0, a1 as usize).is_err());
+                w1.put_flush(&[1u8; 4], 0, a1 as usize).unwrap();
             }
             c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn deferred_ops_and_flush_work_on_attached_memory() {
+        // The inherited deferred-completion path: put/get join the pending
+        // list and complete at flush, exactly like a static window.
+        World::run(WorldConfig::local(2), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            let addr = win.attach(64).unwrap();
+            c.barrier().unwrap();
+            let peer = (c.rank() + 1) % 2;
+            let peer_tok = {
+                // exchange tokens: everyone attached one region; swap bases
+                c.send(&addr.to_ne_bytes(), peer, 7).unwrap();
+                let (b, _) = c.recv_vec(peer, 7).unwrap();
+                u64::from_ne_bytes(b.try_into().unwrap())
+            };
+            let v = (c.rank() as u64 + 1) * 0x1111;
+            win.put(&v.to_ne_bytes(), peer, peer_tok as usize).unwrap();
+            win.flush(peer).unwrap();
+            c.barrier().unwrap();
+            let mut mine = [0u8; 8];
+            win.read_local(addr as usize, &mut mine).unwrap();
+            assert_eq!(u64::from_ne_bytes(mine), (peer as u64 + 1) * 0x1111);
+            c.barrier().unwrap();
+        });
+    }
+
+    #[test]
+    fn atomics_work_on_attached_memory() {
+        use std::sync::atomic::{AtomicI64, Ordering as AOrd};
+        let result = AtomicI64::new(0);
+        World::run(WorldConfig::local(4), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            let mut tok = [0u8; 8];
+            if c.rank() == 0 {
+                tok = win.attach(8).unwrap().to_ne_bytes();
+            }
+            c.bcast(&mut tok, 0).unwrap();
+            let addr = u64::from_ne_bytes(tok) as usize;
+            c.barrier().unwrap();
+            // Everyone hammers the shared cell: accumulate + fetch_and_op.
+            for _ in 0..25 {
+                win.accumulate(as_bytes(&[1i64]), 0, addr, MpiOp::Sum, MpiType::I64).unwrap();
+            }
+            win.flush(0).unwrap();
+            let _ = win.fetch_and_op_with(1i64, 0, addr, MpiOp::Sum).unwrap();
+            c.barrier().unwrap();
+            if c.rank() == 0 {
+                let mut v = [0u8; 8];
+                win.read_local(addr, &mut v).unwrap();
+                result.store(i64::from_ne_bytes(v), AOrd::SeqCst);
+            }
+            c.barrier().unwrap();
+        });
+        assert_eq!(result.load(std::sync::atomic::Ordering::SeqCst), 4 * 25 + 4);
+    }
+
+    #[test]
+    fn attached_bytes_tracks_attach_and_detach() {
+        World::run(WorldConfig::local(1), |mpi| {
+            let c = mpi.comm_world();
+            let win = DynWin::create(&c).unwrap();
+            assert!(win.is_dynamic());
+            assert_eq!(win.dyn_attached_bytes(), 0);
+            let a = win.attach(100).unwrap();
+            let b = win.attach(28).unwrap();
+            assert_eq!(win.dyn_attached_bytes(), 128);
+            assert_eq!(win.dyn_region_of(0, a + 99), Some((a, 100)));
+            assert_eq!(win.dyn_region_of(0, a + 100), None);
+            win.detach(a).unwrap();
+            assert_eq!(win.dyn_attached_bytes(), 28);
+            win.detach(b).unwrap();
+            assert_eq!(win.dyn_attached_bytes(), 0);
         });
     }
 }

@@ -167,6 +167,15 @@ pub struct WinState {
     /// memory load/store, so same-node transfers bypass the messaging
     /// protocol entirely (zero-copy; the paper's §VI future work).
     shmem: bool,
+    /// `MPI_Win_create_dynamic` flavour: present iff this window was
+    /// created with [`Win::allocate_dynamic`]. Every rank then exposes a
+    /// zero-length static segment (so the epoch machinery above works
+    /// unchanged) and displacements resolve through the per-rank attach
+    /// tables instead of `segments` — the one branch in
+    /// [`WinState::check_range`] below is the *entire* integration point:
+    /// every one-sided op, atomic, vector transfer and local access
+    /// funnels through it.
+    pub(crate) dynamic: Option<super::dynwin::DynSide>,
 }
 
 impl WinState {
@@ -178,6 +187,13 @@ impl WinState {
     }
 
     fn check_range(&self, target: usize, disp: usize, len: usize) -> MpiResult<*mut u8> {
+        if let Some(d) = &self.dynamic {
+            // Dynamic windows address `(rank, attach-token + offset)`:
+            // the floor lookup over the rank's attach table replaces the
+            // static bounds check.
+            self.segment(target)?; // uniform rank validation
+            return d.resolve(target, disp as u64, len);
+        }
         let seg = self.segment(target)?;
         if disp.checked_add(len).map_or(true, |end| end > seg.len) {
             return Err(MpiErr::DispOutOfRange { disp, len, size: seg.len });
@@ -189,7 +205,7 @@ impl WinState {
 /// Rank-local window handle. Like a real `MPI_Win`, it is bound to the rank
 /// (thread) that created it: epoch state is per-origin.
 pub struct Win {
-    state: Arc<WinState>,
+    pub(crate) state: Arc<WinState>,
     comm: Comm,
     /// Epochs this origin currently holds: target → lock kind.
     epochs: RefCell<HashMap<usize, LockKind>>,
@@ -206,7 +222,7 @@ impl Win {
     /// `MPI_Win_allocate`: collective over `comm`; every rank exposes a
     /// fresh zero-initialized segment of `local_size` bytes.
     pub fn allocate(comm: &Comm, local_size: usize) -> MpiResult<Win> {
-        Self::build(comm, false, |_| Segment::owned(local_size))
+        Self::build(comm, false, false, |_| Segment::owned(local_size))
     }
 
     /// `MPI_Win_allocate_shared`: like [`Win::allocate`], but same-node
@@ -216,12 +232,26 @@ impl Win {
     /// sizes, intra- and inter-NUMA communication becomes a lot more
     /// efficient"). Inter-node behaviour is unchanged.
     pub fn allocate_shared(comm: &Comm, local_size: usize) -> MpiResult<Win> {
-        Self::build(comm, true, |_| Segment::owned(local_size))
+        Self::build(comm, true, false, |_| Segment::owned(local_size))
     }
 
     /// `MPI_Win_allocate` with per-rank sizes.
     pub fn allocate_per_rank(comm: &Comm, local_size: usize, _sizes_hint: &[usize]) -> MpiResult<Win> {
-        Self::build(comm, false, |_| Segment::owned(local_size))
+        Self::build(comm, false, false, |_| Segment::owned(local_size))
+    }
+
+    /// `MPI_Win_create_dynamic`: collective; the window exposes **no**
+    /// memory at creation — each rank registers remotely accessible memory
+    /// later with [`Win::attach`] (paper §II) and ships the returned
+    /// address token to peers out of band. Every rank publishes a
+    /// zero-length static segment so the passive-target lock/epoch,
+    /// flush/pending and [`Win::is_shmem_local`] machinery is shared
+    /// verbatim with allocated windows; only displacement resolution
+    /// differs (see [`WinState::check_range`]). With `shmem`, same-node
+    /// transfers to attached regions take the zero-copy path like an
+    /// `MPI_Win_allocate_shared` window.
+    pub fn allocate_dynamic(comm: &Comm, shmem: bool) -> MpiResult<Win> {
+        Self::build(comm, shmem, true, |_| Segment::owned(0))
     }
 
     /// A window over `[offset, offset+len)` of this window's memory on
@@ -239,7 +269,7 @@ impl Win {
         }
         let parent = self.state.clone();
         let shmem = self.state.shmem;
-        Self::build(&self.comm, shmem, move |rank| {
+        Self::build(&self.comm, shmem, false, move |rank| {
             let pseg = parent.segment(rank).expect("parent segment");
             Segment {
                 ptr: unsafe { pseg.ptr.add(offset) },
@@ -252,6 +282,7 @@ impl Win {
     fn build(
         comm: &Comm,
         shmem: bool,
+        dynamic: bool,
         make_segment: impl Fn(usize) -> Segment,
     ) -> MpiResult<Win> {
         let world = comm.world().clone();
@@ -267,6 +298,7 @@ impl Win {
                 segments: (0..n).map(|_| OnceLock::new()).collect(),
                 locks: (0..n).map(|_| TargetLock::new()).collect(),
                 shmem,
+                dynamic: dynamic.then(|| super::dynwin::DynSide::new(n)),
             });
             world.windows.write().unwrap().insert(id, st);
         }

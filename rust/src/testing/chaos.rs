@@ -11,13 +11,16 @@
 //! reproduction is deterministic. Re-run exactly one seed with
 //! `DART_CHAOS_SEEDS=0x<seed>` (see [`seeds`]).
 //!
-//! The module ships the five standing invariants the chaos suite
+//! The module ships the seven standing invariants the chaos suite
 //! (`rust/tests/chaos_tests.rs`) and the CI `chaos-smoke` job sweep:
 //! [`flush_completes_all`], [`mcs_fifo`], [`nonblocking_matches_blocking`],
-//! [`hier_matches_flat`], [`kv_backends_agree`].
+//! [`hier_matches_flat`], [`kv_backends_agree`],
+//! [`work_queue_exactly_once`], [`vector_growth_matches_prealloc`].
 
 use crate::apps::kvstore::{run_kv, KvBackend, KvConfig};
+use crate::apps::wqueue::{reference_result, run_distributed, WqueueConfig};
 use crate::dart::{DartConfig, DartEnv, GlobalPtr, UnitId, DART_TEAM_ALL};
+use crate::dash::{Array, Pattern, Vector};
 use crate::mpisim::{MpiOp, ProgressMode};
 use crate::simnet::{CostModel, FaultStats, PinPolicy};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -420,6 +423,90 @@ pub fn kv_backends_agree(seed: u64) -> Result<FaultStats, String> {
     } else {
         Err(format!("kvstore backends disagree on final contents: {sums:?}"))
     }
+}
+
+/// **Invariant: the work-queue task farm retires every task exactly
+/// once.** The `apps::wqueue` farm — skewed producers, tiny rings forcing
+/// the full/spill paths, CAS-claimed dequeues, cross-ring stealing — runs
+/// in a faulted multi-node world; the XOR checksum over retired task
+/// results must equal the sequential reference (a lost task, a doubled
+/// task, or a torn slot read each breaks it), and the retired count must
+/// be exact, no matter how the plan reorders completions or starves the
+/// progress engine.
+pub fn work_queue_exactly_once(seed: u64) -> Result<FaultStats, String> {
+    let wq = WqueueConfig { tasks: 160, ring_capacity: 8, seed, team: DART_TEAM_ALL };
+    let want = reference_result(&wq);
+    world_check(chaos_cfg(4, 2, seed), move |env| {
+        let report = run_distributed(env, &wq).map_err(|e| format!("run_distributed: {e:?}"))?;
+        if report.retired != wq.tasks as u64 {
+            return Err(format!("{} tasks retired, expected {}", report.retired, wq.tasks));
+        }
+        if report.checksum != want {
+            return Err(format!(
+                "checksum {:#x} != sequential reference {want:#x} — a task was lost, \
+                 doubled, or torn",
+                report.checksum
+            ));
+        }
+        Ok(())
+    })
+}
+
+/// **Invariant: a vector grown under chaos is bit-identical to a
+/// preallocated array.** Collective pushes drive `dash::Vector` through
+/// ≥ 3 capacity doublings — attach, allgather, redistribution puts, and
+/// detach all riding the faulted channels — and every unit's final
+/// partition must equal, bit for bit, a `dash::Array` preallocated at the
+/// final capacity and filled with the same seed-derived values.
+pub fn vector_growth_matches_prealloc(seed: u64) -> Result<FaultStats, String> {
+    world_check(chaos_cfg(4, 2, seed), move |env| {
+        let team = DART_TEAM_ALL;
+        let p = env.size();
+        let me = env.team_myid(team).map_err(|e| format!("team_myid: {e:?}"))?;
+        let mut v = Vector::<u64>::with_capacity(env, team, p)
+            .map_err(|e| format!("with_capacity: {e:?}"))?;
+        let cap0 = v.capacity();
+        for _ in 0..16 {
+            let base = v.len().map_err(|e| format!("len: {e:?}"))?;
+            v.push(chaos_value(seed, (base + me) as u64, 0x7EC))
+                .map_err(|e| format!("push: {e:?}"))?;
+        }
+        let n = v.len().map_err(|e| format!("len: {e:?}"))?;
+        let doublings = (v.capacity() / cap0).ilog2();
+
+        let arr = Array::<u64>::new(
+            env,
+            team,
+            Pattern::blocked(v.capacity(), p).map_err(|e| format!("pattern: {e:?}"))?,
+        )
+        .map_err(|e| format!("array: {e:?}"))?;
+        arr.with_local(|loc| {
+            for (i, slot) in loc.iter_mut().enumerate() {
+                let g = arr.pattern().local_to_global(me, i);
+                *slot = if g < n { chaos_value(seed, g as u64, 0x7EC) } else { 0 };
+            }
+        })
+        .map_err(|e| format!("with_local: {e:?}"))?;
+        env.barrier(team).map_err(|e| format!("barrier: {e:?}"))?;
+        let got = v.read_local().map_err(|e| format!("read_local: {e:?}"))?;
+        let want = arr.read_local().map_err(|e| format!("read_local: {e:?}"))?;
+        arr.free().map_err(|e| format!("array free: {e:?}"))?;
+        v.free().map_err(|e| format!("vector free: {e:?}"))?;
+        if doublings < 3 {
+            return Err(format!("only {doublings} doublings ({cap0} → final)"));
+        }
+        if n != 16 * p {
+            return Err(format!("length {n} after 16 collective pushes of {p}"));
+        }
+        if got != want {
+            return Err(format!(
+                "unit {me}: grown vector diverged from the preallocated array \
+                 ({} differing slots)",
+                got.iter().zip(&want).filter(|(a, b)| a != b).count()
+            ));
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]

@@ -1,4 +1,4 @@
-//! Seeded chaos suite: the five standing runtime invariants swept across
+//! Seeded chaos suite: the seven standing runtime invariants swept across
 //! many fault seeds (`dart::testing::chaos`), plus the determinism oracle
 //! — a fixed seed must replay an *identical* injected-event trace — and
 //! the `Metrics` mirror of the world-global fault counters.
@@ -63,6 +63,29 @@ fn hierarchical_collectives_bit_equal_to_flat_under_chaos() {
 fn kv_backends_agree_under_chaos() {
     let stats =
         chaos::chaos_check("kv_backends_agree", &chaos::seeds(SWEEP), chaos::kv_backends_agree);
+    assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
+}
+
+#[test]
+fn work_queue_retires_exactly_once_under_chaos() {
+    let stats = chaos::chaos_check(
+        "work_queue_exactly_once",
+        &chaos::seeds(SWEEP),
+        chaos::work_queue_exactly_once,
+    );
+    // The queue's CAS traffic rides the faulted channels: reorder and
+    // straggler classes must demonstrably fire across the sweep.
+    assert!(stats.reorders > 0, "no completions reordered: {stats:?}");
+    assert!(stats.straggler_msgs > 0, "no straggler traffic: {stats:?}");
+}
+
+#[test]
+fn vector_growth_bit_equal_to_prealloc_under_chaos() {
+    let stats = chaos::chaos_check(
+        "vector_growth_matches_prealloc",
+        &chaos::seeds(SWEEP),
+        chaos::vector_growth_matches_prealloc,
+    );
     assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
 }
 

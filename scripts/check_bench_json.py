@@ -83,6 +83,21 @@ SCHEMAS = {
         ],
         "other_keys": ["backend", "placement", "exec"],
     },
+    "perf_dynamic": {
+        "top": ["bench", "reps", "max_units", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "ops",
+            "ns_per_op",
+            "ops_per_sec",
+            "bytes",
+            "bandwidth_mb_s",
+            "checksum",
+            "wall_ms",
+        ],
+        "other_keys": ["scenario", "placement"],
+    },
     "perf_scale": {
         "top": ["bench", "reps", "max_units", "results"],
         "rows": lambda doc: doc["results"],
