@@ -1,0 +1,108 @@
+//! BFS tour: a seeded R-MAT graph in distributed CSR form, remote
+//! adjacency pulls, CAS-claimed parents, and oracle-checked levels.
+//!
+//! ```sh
+//! cargo run --release --example bfs_tour
+//! ```
+//!
+//! The launch models 8 units round-robin over a 2-node Hermit cluster
+//! with shmem windows on — the placement where the claim protocol's
+//! locality options matter. The tour walks the irregular stack:
+//!
+//! 1. **`dash::Graph`** — every unit replays the same seeded Kronecker
+//!    edge stream and keeps its owned rows, so the distributed CSR comes
+//!    up with zero communication beyond one capacity allreduce.
+//! 2. **Remote adjacency pull** — `get_neighbors` on a non-owned vertex:
+//!    two scalar gets plus ONE coalesced vector-typed get.
+//! 3. **Level-synchronous BFS** — `apps::bfs` races one
+//!    `compare_and_swap` per candidate claim at the distributed parent
+//!    array; levels are race-independent even though parents are not.
+//! 4. **Intra-node combining** — the same traversal with `combine` on
+//!    dedups candidates node-locally first; the level summary is
+//!    bit-identical, the claim count is not.
+//! 5. **The oracle** — `run_checked` verifies levels, parent edges, and
+//!    monotonicity against the sequential replay.
+
+use dart::apps::bfs::{reference_summary, run_checked, run_distributed, BfsConfig};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::{Graph, GraphConfig};
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = DartConfig::hermit(8, 2)
+        .with_pin(PinPolicy::ScatterNode)
+        .with_pools(1 << 18, 1 << 21)
+        .with_shmem_windows(true);
+    let graph = GraphConfig { scale: 7, edge_factor: 8, seed: 0xB0F5_7011 };
+    println!("== BFS tour: R-MAT scale {} over 8 units on 2 Hermit nodes ==", graph.scale);
+    let log = Mutex::new(Vec::<(usize, String)>::new());
+
+    run(cfg, |env| {
+        // --- 1. The distributed CSR comes up collectively. -------------
+        let g = Graph::build(env, DART_TEAM_ALL, graph).expect("graph build");
+        let me = env.team_myid(DART_TEAM_ALL).expect("rank");
+        let rows = g.my_rows();
+
+        // --- 2. Pull a remote row's neighbors (owner-partitioned, so
+        // any vertex outside my rows costs one coalesced vector get). --
+        let remote_v = (rows.end) % g.nverts();
+        let pulled = g.get_neighbors(remote_v).expect("remote pull");
+        log.lock().unwrap().push((
+            me,
+            format!(
+                "unit {me}: rows {:?} ({} edges stored) | pulled v{remote_v} from unit {}: \
+                 degree {}",
+                rows,
+                g.local_edge_count(),
+                g.owner_of(remote_v),
+                pulled.len()
+            ),
+        ));
+        g.free().expect("graph free");
+
+        // --- 3 + 4. Traverse twice: flat claims, then intra-node
+        // combining. Levels must agree bit-for-bit; claims differ. ------
+        let flat = BfsConfig { graph, root: 0, combine: false, team: DART_TEAM_ALL };
+        let combined = BfsConfig { combine: true, ..flat.clone() };
+        let a = run_distributed(env, &flat).expect("flat bfs");
+        let b = run_distributed(env, &combined).expect("combined bfs");
+        assert_eq!(a.summary, b.summary, "combining changed the levels");
+
+        // --- 5. And once more against the sequential oracle. -----------
+        let checked = run_checked(env, &flat).expect("oracle-checked bfs");
+        if me == 0 {
+            log.lock().unwrap().push((
+                usize::MAX,
+                format!(
+                    "reached {}/{} vertices in {} levels | checksum {:#x} | \
+                     claims: flat {} vs combined {}",
+                    checked.summary.reached,
+                    graph.nverts(),
+                    checked.summary.max_level + 1,
+                    checked.summary.checksum,
+                    a.claim_attempts,
+                    b.claim_attempts
+                ),
+            ));
+        }
+        env.barrier(DART_TEAM_ALL).expect("barrier");
+    })?;
+
+    let mut lines = log.into_inner().unwrap();
+    lines.sort_by_key(|&(id, _)| id);
+    for (_, line) in lines {
+        println!("{line}");
+    }
+    let oracle = reference_summary(&BfsConfig {
+        graph,
+        root: 0,
+        combine: false,
+        team: DART_TEAM_ALL,
+    });
+    println!(
+        "(sequential oracle agrees: reached {}, max level {}, checksum {:#x})",
+        oracle.reached, oracle.max_level, oracle.checksum
+    );
+    Ok(())
+}

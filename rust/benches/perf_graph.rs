@@ -1,0 +1,214 @@
+//! §GRAPH — Graph500-style BFS: data-dependent one-sided traffic.
+//!
+//! Drives `apps::bfs` over a seeded R-MAT `dash::Graph` on a 2×2 grid of
+//! claim strategies and fast-path settings, writing `BENCH_graph.json`:
+//!
+//! - **mode** — `flat` CASes every candidate claim straight at the
+//!   distributed parent array vs `hier`, which also turns on
+//!   hierarchical collectives and combines candidates intra-node first
+//!   (one claim per node-target pair crosses the interconnect);
+//! - **fastpath** — the shmem CPU-atomic fast path `on` vs `off` (shmem
+//!   windows stay on in both cells, only the fast path toggles).
+//!
+//! Deterministic correctness gates, asserted here so CI catches
+//! regressions: all four cells produce the bit-identical level summary,
+//! that summary equals the sequential oracle's, fast-path cells actually
+//! complete atomics on the CPU path, and intra-node combining never
+//! issues more claims than the flat protocol.
+
+use dart::apps::bfs::{reference_summary, run_distributed, BfsConfig};
+use dart::bench_util::{quick_mode, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::GraphConfig;
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured configuration (uniform row schema for the JSON).
+#[derive(Clone, Default)]
+struct Shot {
+    mode: &'static str,
+    fastpath: &'static str,
+    units: u64,
+    nverts: u64,
+    /// Directed edges stored across the team after dedup.
+    nedges: u64,
+    reached: u64,
+    max_level: i64,
+    /// The deterministic level checksum (the cross-cell oracle).
+    checksum: u64,
+    rounds: u64,
+    /// CAS claims issued team-wide (lower under intra-node combining).
+    claims: u64,
+    /// Atomics completed on the CPU-atomic fast path.
+    fastpath_atomics: u64,
+    /// Stored-edge traversal rate over the median repetition.
+    teps: f64,
+    wall_ms: f64,
+}
+
+fn cfg(units: usize, nodes: usize, hier: bool, fastpath: bool) -> DartConfig {
+    DartConfig::hermit(units, nodes)
+        .with_pin(PinPolicy::ScatterNode)
+        .with_pools(1 << 20, 1 << 22)
+        .with_shmem_windows(true)
+        .with_locality_fastpath(fastpath)
+        .with_hierarchical_collectives(hier)
+}
+
+fn measure(
+    units: usize,
+    nodes: usize,
+    graph: GraphConfig,
+    hier: bool,
+    fastpath: bool,
+    reps: usize,
+) -> Shot {
+    let bfs = BfsConfig { graph, root: 0, combine: hier, team: DART_TEAM_ALL };
+    let out = Mutex::new(Shot::default());
+    run(cfg(units, nodes, hier, fastpath), |env| {
+        let mut s = Samples::new();
+        let mut shot = Shot::default();
+        for rep in 0..reps {
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let t = Instant::now();
+            let report = run_distributed(env, &bfs).unwrap();
+            let wall = t.elapsed();
+            s.push(wall.as_secs_f64() * 1e3);
+            if env.myid() == 0 {
+                if rep > 0 {
+                    assert_eq!(
+                        shot.checksum, report.summary.checksum,
+                        "bfs checksum changed between repetitions"
+                    );
+                }
+                shot = Shot {
+                    mode: if hier { "hier" } else { "flat" },
+                    fastpath: if fastpath { "on" } else { "off" },
+                    units: units as u64,
+                    nverts: graph.nverts() as u64,
+                    nedges: report.nedges_stored,
+                    reached: report.summary.reached,
+                    max_level: report.summary.max_level,
+                    checksum: report.summary.checksum,
+                    rounds: report.rounds,
+                    claims: report.claim_attempts,
+                    fastpath_atomics: env.metrics.atomic_fastpath_ops.get(),
+                    teps: 0.0,
+                    wall_ms: 0.0,
+                };
+            }
+        }
+        if env.myid() == 0 {
+            shot.wall_ms = s.median();
+            shot.teps = shot.nedges as f64 / (s.median() / 1e3);
+            *out.lock().unwrap() = shot;
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"mode\":\"{}\",\"fastpath\":\"{}\",\"units\":{},\"nverts\":{},\"nedges\":{},\
+         \"reached\":{},\"max_level\":{},\"checksum\":{},\"rounds\":{},\"claims\":{},\
+         \"fastpath_atomics\":{},\"teps\":{:.1},\"wall_ms\":{:.3}}}",
+        s.mode,
+        s.fastpath,
+        s.units,
+        s.nverts,
+        s.nedges,
+        s.reached,
+        s.max_level,
+        s.checksum,
+        s.rounds,
+        s.claims,
+        s.fastpath_atomics,
+        s.teps,
+        s.wall_ms
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let (units, nodes) = if quick { (8, 2) } else { (32, 4) };
+    let graph = GraphConfig {
+        scale: if quick { 8 } else { 10 },
+        edge_factor: if quick { 8 } else { 16 },
+        seed: 0x6EA4_500D,
+    };
+    println!("==== §GRAPH — Graph500-style BFS over the distributed CSR ====");
+
+    let mut shots = Vec::new();
+    for hier in [false, true] {
+        for fastpath in [true, false] {
+            shots.push(measure(units, nodes, graph, hier, fastpath, reps));
+        }
+    }
+
+    println!(
+        "\n{:>6} {:>9} {:>6} {:>8} {:>8} {:>10} {:>10} {:>12} {:>10}",
+        "mode", "fastpath", "units", "reached", "rounds", "claims", "fp_atomic", "teps", "wall_ms"
+    );
+    for s in &shots {
+        println!(
+            "{:>6} {:>9} {:>6} {:>8} {:>8} {:>10} {:>10} {:>12.0} {:>10.3}",
+            s.mode, s.fastpath, s.units, s.reached, s.rounds, s.claims, s.fastpath_atomics,
+            s.teps, s.wall_ms
+        );
+    }
+
+    // --- correctness gates (deterministic — safe to assert in CI) -------
+    // 1. Levels are race-independent: every cell agrees bit-for-bit.
+    for s in &shots[1..] {
+        assert_eq!(
+            (shots[0].checksum, shots[0].reached, shots[0].max_level),
+            (s.checksum, s.reached, s.max_level),
+            "{}/{} disagrees with {}/{} on the level summary",
+            s.mode,
+            s.fastpath,
+            shots[0].mode,
+            shots[0].fastpath
+        );
+    }
+    // 2. The distributed traversal equals the sequential oracle.
+    let bfs = BfsConfig { graph, root: 0, combine: false, team: DART_TEAM_ALL };
+    let oracle = reference_summary(&bfs);
+    assert_eq!(
+        (shots[0].reached, shots[0].max_level, shots[0].checksum),
+        (oracle.reached, oracle.max_level, oracle.checksum),
+        "distributed BFS disagrees with the sequential oracle"
+    );
+    // 3. Fast-path cells actually complete atomics on the CPU path.
+    for s in shots.iter().filter(|s| s.fastpath == "on") {
+        assert!(s.fastpath_atomics > 0, "{} cell issued no fast-path atomics", s.mode);
+    }
+    // 4. Intra-node combining never issues more claims than flat.
+    for hier in shots.iter().filter(|s| s.mode == "hier") {
+        let flat = shots
+            .iter()
+            .find(|s| s.mode == "flat" && s.fastpath == hier.fastpath)
+            .unwrap();
+        assert!(
+            hier.claims <= flat.claims,
+            "hier/{} issued {} claims, more than flat's {}",
+            hier.fastpath,
+            hier.claims,
+            flat.claims
+        );
+    }
+
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_graph\",\"reps\":{reps},\"scale\":{},\"edge_factor\":{},\
+         \"results\":[{}]}}",
+        graph.scale,
+        graph.edge_factor,
+        rows.join(",")
+    );
+    std::fs::write("BENCH_graph.json", format!("{json}\n")).expect("write BENCH_graph.json");
+    println!("\nwrote BENCH_graph.json");
+}

@@ -1,0 +1,214 @@
+//! §SORT — distributed sample sort: data-dependent element routing.
+//!
+//! Drives `apps::samplesort` through its bucketed redistribution on a
+//! grid of collective modes, fast-path settings, and key distributions,
+//! writing `BENCH_sort.json`:
+//!
+//! - **collectives** — `flat` vs `hier` two-level (splitter and count
+//!   allgathers decompose intra-node first);
+//! - **fastpath** — the shmem zero-copy fast path `on` vs `off` (the
+//!   bucket scatter's same-node puts complete by direct store when on);
+//! - **dist** — `uniform` keys vs `skewed` heavy-duplicate keys (bucket
+//!   imbalance, some buckets empty).
+//!
+//! Deterministic correctness gates, asserted here so CI catches
+//! regressions: every cell preserves the input multiset (permutation
+//! check), reports global sortedness, agrees bit-for-bit on the
+//! position-weighted output checksum across config cells, and matches
+//! the sequential oracle's checksums.
+
+use dart::apps::samplesort::{reference_checksums, run_distributed, KeyDist, SortConfig};
+use dart::bench_util::{quick_mode, Samples};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::simnet::PinPolicy;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured configuration (uniform row schema for the JSON).
+#[derive(Clone, Default)]
+struct Shot {
+    collectives: &'static str,
+    fastpath: &'static str,
+    dist: &'static str,
+    units: u64,
+    n: u64,
+    /// Order-independent output multiset checksum (= input's iff the
+    /// sort is a permutation).
+    checksum: u64,
+    /// Position-weighted output checksum (the cross-cell oracle).
+    position_checksum: u64,
+    /// Largest bucket — the skew measure.
+    max_bucket: u64,
+    /// Coalesced one-sided ops for both redistributions, team-wide.
+    redist_ops: u64,
+    /// Sorted keys per second over the median repetition.
+    keys_per_sec: f64,
+    wall_ms: f64,
+}
+
+fn cfg(units: usize, nodes: usize, hier: bool, fastpath: bool) -> DartConfig {
+    DartConfig::hermit(units, nodes)
+        .with_pin(PinPolicy::ScatterNode)
+        .with_pools(1 << 20, 1 << 22)
+        .with_shmem_windows(true)
+        .with_locality_fastpath(fastpath)
+        .with_hierarchical_collectives(hier)
+}
+
+fn dist_label(dist: KeyDist) -> &'static str {
+    match dist {
+        KeyDist::Uniform => "uniform",
+        KeyDist::Skewed => "skewed",
+        KeyDist::AllEqual => "all-equal",
+        KeyDist::Sorted => "sorted",
+        KeyDist::Reverse => "reverse",
+    }
+}
+
+fn measure(
+    units: usize,
+    nodes: usize,
+    n: usize,
+    dist: KeyDist,
+    hier: bool,
+    fastpath: bool,
+    reps: usize,
+) -> Shot {
+    let sort = SortConfig { n, seed: 0x50B7_5EED, dist, oversample: 16, team: DART_TEAM_ALL };
+    let out = Mutex::new(Shot::default());
+    run(cfg(units, nodes, hier, fastpath), |env| {
+        let mut s = Samples::new();
+        let mut shot = Shot::default();
+        for rep in 0..reps {
+            env.barrier(DART_TEAM_ALL).unwrap();
+            let t = Instant::now();
+            let report = run_distributed(env, &sort).unwrap();
+            let wall = t.elapsed();
+            s.push(wall.as_secs_f64() * 1e3);
+            if env.myid() == 0 {
+                assert!(report.sorted_ok, "{}: output not sorted", dist_label(dist));
+                assert_eq!(
+                    report.checksum_in, report.checksum_out,
+                    "{}: output is not a permutation of the input",
+                    dist_label(dist)
+                );
+                assert_eq!(report.count, n as u64);
+                if rep > 0 {
+                    assert_eq!(
+                        shot.position_checksum, report.position_checksum,
+                        "sort output changed between repetitions"
+                    );
+                }
+                shot = Shot {
+                    collectives: if hier { "hier" } else { "flat" },
+                    fastpath: if fastpath { "on" } else { "off" },
+                    dist: dist_label(dist),
+                    units: units as u64,
+                    n: n as u64,
+                    checksum: report.checksum_out,
+                    position_checksum: report.position_checksum,
+                    max_bucket: report.max_bucket,
+                    redist_ops: report.redist_ops,
+                    keys_per_sec: 0.0,
+                    wall_ms: 0.0,
+                };
+            }
+        }
+        if env.myid() == 0 {
+            shot.wall_ms = s.median();
+            shot.keys_per_sec = n as f64 / (s.median() / 1e3);
+            *out.lock().unwrap() = shot;
+        }
+        env.barrier(DART_TEAM_ALL).unwrap();
+    })
+    .unwrap();
+    out.into_inner().unwrap()
+}
+
+fn json_shot(s: &Shot) -> String {
+    format!(
+        "{{\"collectives\":\"{}\",\"fastpath\":\"{}\",\"dist\":\"{}\",\"units\":{},\"n\":{},\
+         \"checksum\":{},\"position_checksum\":{},\"max_bucket\":{},\"redist_ops\":{},\
+         \"keys_per_sec\":{:.1},\"wall_ms\":{:.3}}}",
+        s.collectives,
+        s.fastpath,
+        s.dist,
+        s.units,
+        s.n,
+        s.checksum,
+        s.position_checksum,
+        s.max_bucket,
+        s.redist_ops,
+        s.keys_per_sec,
+        s.wall_ms
+    )
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let (units, nodes) = if quick { (8, 2) } else { (32, 4) };
+    let n = if quick { 1 << 12 } else { 1 << 16 };
+    println!("==== §SORT — distributed sample sort through the bucketed redistribution ====");
+
+    let mut shots = Vec::new();
+    for dist in [KeyDist::Uniform, KeyDist::Skewed] {
+        for hier in [false, true] {
+            for fastpath in [true, false] {
+                shots.push(measure(units, nodes, n, dist, hier, fastpath, reps));
+            }
+        }
+    }
+
+    println!(
+        "\n{:>8} {:>6} {:>9} {:>6} {:>10} {:>11} {:>12} {:>10}",
+        "dist", "coll", "fastpath", "units", "max_bkt", "redist_ops", "keys/s", "wall_ms"
+    );
+    for s in &shots {
+        println!(
+            "{:>8} {:>6} {:>9} {:>6} {:>10} {:>11} {:>12.0} {:>10.3}",
+            s.dist, s.collectives, s.fastpath, s.units, s.max_bucket, s.redist_ops,
+            s.keys_per_sec, s.wall_ms
+        );
+    }
+
+    // --- correctness gates (deterministic — safe to assert in CI) -------
+    // 1. The output order is config-independent: all four cells of each
+    //    distribution agree bit-for-bit, and both match the oracle.
+    for dist in [KeyDist::Uniform, KeyDist::Skewed] {
+        let label = dist_label(dist);
+        let sort = SortConfig { n, seed: 0x50B7_5EED, dist, oversample: 16, team: DART_TEAM_ALL };
+        let (multiset, position) = reference_checksums(&sort);
+        for s in shots.iter().filter(|s| s.dist == label) {
+            assert_eq!(
+                (s.checksum, s.position_checksum),
+                (multiset, position),
+                "{label} {}/{} disagrees with the sequential oracle",
+                s.collectives,
+                s.fastpath
+            );
+        }
+    }
+    // 2. The redistribution actually coalesces: ops stay far below one
+    //    per element (each unit ships at most one run per bucket).
+    for s in &shots {
+        assert!(s.redist_ops > 0, "{}: no redistribution ops recorded", s.dist);
+        assert!(
+            s.redist_ops <= 2 * s.units * (s.units + 1),
+            "{} {}/{}: {} redistribution ops for {} units — coalescing regressed",
+            s.dist,
+            s.collectives,
+            s.fastpath,
+            s.redist_ops,
+            s.units
+        );
+    }
+
+    let rows: Vec<String> = shots.iter().map(json_shot).collect();
+    let json = format!(
+        "{{\"bench\":\"perf_sort\",\"reps\":{reps},\"n\":{n},\"results\":[{}]}}",
+        rows.join(",")
+    );
+    std::fs::write("BENCH_sort.json", format!("{json}\n")).expect("write BENCH_sort.json");
+    println!("\nwrote BENCH_sort.json");
+}

@@ -1,0 +1,382 @@
+//! Graph500-style breadth-first search over [`crate::dash::Graph`] —
+//! the first workload whose communication pattern is decided by the
+//! data, not the programmer.
+//!
+//! Level-synchronous BFS with **CAS-claimed parents**: each round, every
+//! unit walks its owned frontier rows through the zero-network local CSR
+//! and races one [`crate::dash::Array::compare_and_swap`] per candidate
+//! `(target, parent)` pair against the distributed parent array (`-1` →
+//! parent). Whichever claim wins, the *level* a vertex receives is its
+//! true BFS distance: claims in round `L` originate only from
+//! distance-`L` frontier vertices, so level assignment is deterministic
+//! even though the parent tree is race-dependent. Owners then scan their
+//! partition for newly-claimed rows (the next frontier), and one
+//! `allreduce` of the frontier size decides termination — the classic
+//! DART-paper mix of fine-grained atomics and coarse collectives.
+//!
+//! With `combine` enabled, the locality split
+//! ([`crate::dart::DartEnv::team_split_locality`], node scope) turns the
+//! claim phase two-level: members of a node allgather their candidate
+//! lists intra-node, dedup the union by target, and partition the
+//! surviving claims round-robin — so one claim per (node, target)
+//! crosses the interconnect instead of one per (unit, target). Candidate
+//! dedup can only drop duplicate claims, so levels — and the whole
+//! [`BfsSummary`] — are bit-identical with and without combining, which
+//! the cross-configuration tests pin down.
+//!
+//! Everything is oracle-backed: [`reference_levels`] replays the same
+//! seeded R-MAT edge stream sequentially, and [`run_checked`] verifies
+//! level-by-level agreement, parent-edge existence (via coalesced remote
+//! adjacency pulls), and level monotonicity along parent edges.
+
+use crate::dart::{DartEnv, DartErr, DartResult, LocalityScope, TeamId, DART_TEAM_ALL};
+use crate::dash::{Array, Graph, GraphConfig};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+
+/// Parameters of a distributed BFS run.
+#[derive(Debug, Clone)]
+pub struct BfsConfig {
+    /// The seeded R-MAT graph to build and traverse.
+    pub graph: GraphConfig,
+    /// Root vertex (must be `< graph.nverts()`).
+    pub root: usize,
+    /// Combine candidate claims intra-node before CASing (the locality-
+    /// aware two-level claim phase). Levels are identical either way.
+    pub combine: bool,
+    /// Team the run is collective over.
+    pub team: TeamId,
+}
+
+impl BfsConfig {
+    /// A small default configuration over `DART_TEAM_ALL`.
+    pub fn quick(scale: u32, edge_factor: usize, seed: u64) -> Self {
+        BfsConfig {
+            graph: GraphConfig { scale, edge_factor, seed },
+            root: 0,
+            combine: false,
+            team: DART_TEAM_ALL,
+        }
+    }
+}
+
+/// The configuration-independent part of a BFS result: identical across
+/// flat/hierarchical collectives, fastpath on/off, exec modes, and
+/// combine on/off — the quantity the agreement tests compare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BfsSummary {
+    /// Vertices reached from the root (root included).
+    pub reached: u64,
+    /// Largest assigned level (0 if only the root is reachable).
+    pub max_level: i64,
+    /// Order-independent checksum `Σ (v+1)·(level(v)+1)` over reached
+    /// vertices (wrapping).
+    pub checksum: u64,
+}
+
+/// Result of a distributed BFS run (identical on every unit).
+#[derive(Debug, Clone)]
+pub struct BfsReport {
+    /// The deterministic, race-independent traversal summary.
+    pub summary: BfsSummary,
+    /// Level-synchronous rounds executed (= `max_level` + 1, plus the
+    /// empty terminating round).
+    pub rounds: u64,
+    /// CAS claims issued across the team (race- and config-dependent:
+    /// intra-node combining lowers it).
+    pub claim_attempts: u64,
+    /// Directed edges stored across the team after dedup.
+    pub nedges_stored: u64,
+}
+
+/// Sequential oracle: BFS levels (`-1` = unreached) over the identical
+/// seeded edge stream the distributed build replays.
+pub fn reference_levels(cfg: &GraphConfig, root: usize) -> Vec<i64> {
+    let n = cfg.nverts();
+    let mut adj: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for (a, b) in crate::dash::graph::edges(cfg) {
+        if a != b {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+    }
+    let mut levels = vec![-1i64; n];
+    levels[root] = 0;
+    let mut frontier = vec![root];
+    let mut next = Vec::new();
+    let mut level = 0i64;
+    while !frontier.is_empty() {
+        for &u in &frontier {
+            for &v in &adj[u] {
+                if levels[v as usize] == -1 {
+                    levels[v as usize] = level + 1;
+                    next.push(v as usize);
+                }
+            }
+        }
+        level += 1;
+        std::mem::swap(&mut frontier, &mut next);
+        next.clear();
+    }
+    levels
+}
+
+/// The [`BfsSummary`] a level vector implies — shared by the oracle and
+/// the distributed run so the comparison is definitionally fair.
+pub fn summarize_levels(levels: &[i64]) -> BfsSummary {
+    let mut reached = 0u64;
+    let mut max_level = 0i64;
+    let mut checksum = 0u64;
+    for (v, &l) in levels.iter().enumerate() {
+        if l >= 0 {
+            reached += 1;
+            max_level = max_level.max(l);
+            checksum = checksum.wrapping_add((v as u64 + 1).wrapping_mul(l as u64 + 1));
+        }
+    }
+    BfsSummary { reached, max_level, checksum }
+}
+
+/// What the oracle predicts for `cfg` — compare against
+/// [`BfsReport::summary`].
+pub fn reference_summary(cfg: &BfsConfig) -> BfsSummary {
+    summarize_levels(&reference_levels(&cfg.graph, cfg.root))
+}
+
+/// The distributed traversal core. Returns the report plus the level
+/// and parent arrays (still allocated) and the graph, so callers can
+/// validate before freeing.
+fn bfs_core<'e>(
+    env: &'e DartEnv,
+    cfg: &BfsConfig,
+) -> DartResult<(BfsReport, Array<'e, i64>, Array<'e, i64>, Graph<'e>)> {
+    let n = cfg.graph.nverts();
+    if cfg.root >= n {
+        return Err(DartErr::Invalid(format!("BFS root {} out of 0..{n}", cfg.root)));
+    }
+    let team = cfg.team;
+    let graph = Graph::build(env, team, cfg.graph)?;
+    let parent: Array<'e, i64> = Array::new(env, team, *graph.pattern())?;
+    let level: Array<'e, i64> = Array::new(env, team, *graph.pattern())?;
+    let rows = graph.my_rows();
+    // Initialize owner-locally: parent/level -1 everywhere, root claimed
+    // by itself at level 0 (Graph500 convention parent[root] = root).
+    let root = cfg.root;
+    parent.with_local(|buf| buf.fill(-1))?;
+    level.with_local(|buf| buf.fill(-1))?;
+    if rows.contains(&root) {
+        let l = root - rows.start;
+        parent.with_local(|buf| buf[l] = root as i64)?;
+        level.with_local(|buf| buf[l] = 0)?;
+    }
+    env.barrier(team)?;
+
+    let split = if cfg.combine {
+        Some(env.team_split_locality(team, LocalityScope::Node)?)
+    } else {
+        None
+    };
+
+    let mut frontier: Vec<usize> = if rows.contains(&root) { vec![root] } else { Vec::new() };
+    let mut claim_attempts = 0u64;
+    let mut rounds = 0u64;
+    let mut cur_level = 0i64;
+    loop {
+        rounds += 1;
+        // Candidate (target, parent) pairs from my owned frontier rows —
+        // pure local CSR traversal, deduped by target.
+        let mut cands: Vec<(u64, u64)> = Vec::new();
+        for &u in &frontier {
+            for &v in graph.local_neighbors(u)? {
+                cands.push((v, u as u64));
+            }
+        }
+        cands.sort_unstable();
+        cands.dedup_by_key(|c| c.0);
+
+        // Two-level claim phase: union the node's candidates, dedup by
+        // target, and split the survivors round-robin so each claim
+        // leaves the node at most once.
+        if let Some(split) = &split {
+            let lp = env.team_size(split.local)?;
+            if lp > 1 {
+                let mut counts = vec![0u64; lp];
+                env.allgather(
+                    split.local,
+                    as_bytes(&[cands.len() as u64]),
+                    as_bytes_mut(&mut counts),
+                )?;
+                let maxc = counts.iter().copied().max().unwrap_or(0) as usize;
+                if maxc > 0 {
+                    let mut send = vec![u64::MAX; 2 * maxc];
+                    for (i, &(t, par)) in cands.iter().enumerate() {
+                        send[2 * i] = t;
+                        send[2 * i + 1] = par;
+                    }
+                    let mut recv = vec![0u64; 2 * maxc * lp];
+                    env.allgather(split.local, as_bytes(&send), as_bytes_mut(&mut recv))?;
+                    let mut merged: Vec<(u64, u64)> = Vec::new();
+                    for (r, &count) in counts.iter().enumerate() {
+                        let base = 2 * maxc * r;
+                        for i in 0..count as usize {
+                            merged.push((recv[base + 2 * i], recv[base + 2 * i + 1]));
+                        }
+                    }
+                    merged.sort_unstable();
+                    merged.dedup_by_key(|c| c.0);
+                    let my_lrank = env.team_myid(split.local)?;
+                    cands = merged
+                        .into_iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % lp == my_lrank)
+                        .map(|(_, c)| c)
+                        .collect();
+                } else {
+                    cands.clear();
+                }
+            }
+        }
+
+        // Race the claims. A lost race (old != -1) means the target was
+        // reached this round by someone else or an earlier round — both
+        // leave its level correct.
+        for &(v, par) in &cands {
+            parent.compare_and_swap(v as usize, -1, par as i64)?;
+            claim_attempts += 1;
+        }
+        env.barrier(team)?;
+
+        // Owners scan for newly-claimed rows: parent set, level not yet.
+        let parents = parent.read_local()?;
+        let mut next: Vec<usize> = Vec::new();
+        level.with_local(|levels| {
+            for (l, &p) in parents.iter().enumerate() {
+                if p != -1 && levels[l] == -1 {
+                    levels[l] = cur_level + 1;
+                    next.push(rows.start + l);
+                }
+            }
+        })?;
+        let mut total = [0u64];
+        env.allreduce(team, &[next.len() as u64], &mut total, MpiOp::Sum)?;
+        if total[0] == 0 {
+            break;
+        }
+        frontier = next;
+        cur_level += 1;
+        if cur_level > n as i64 {
+            return Err(DartErr::Invalid("BFS failed to terminate".into()));
+        }
+    }
+
+    // Replicated summary from owner-local partials.
+    let my_summary = summarize_levels_at(&level.read_local()?, rows.start);
+    let mut sums = [0u64; 3];
+    env.allreduce(
+        team,
+        &[my_summary.reached, my_summary.checksum, graph.local_edge_count() as u64],
+        &mut sums,
+        MpiOp::Sum,
+    )?;
+    let mut maxes = [0i64];
+    env.allreduce(team, &[my_summary.max_level], &mut maxes, MpiOp::Max)?;
+    let mut attempts = [0u64];
+    env.allreduce(team, &[claim_attempts], &mut attempts, MpiOp::Sum)?;
+    let report = BfsReport {
+        summary: BfsSummary { reached: sums[0], max_level: maxes[0], checksum: sums[1] },
+        rounds,
+        claim_attempts: attempts[0],
+        nedges_stored: sums[2],
+    };
+    Ok((report, level, parent, graph))
+}
+
+/// [`summarize_levels`] over a local partition whose first global index
+/// is `base` (so the checksum terms use global vertex ids).
+fn summarize_levels_at(local: &[i64], base: usize) -> BfsSummary {
+    let mut s = BfsSummary { reached: 0, max_level: 0, checksum: 0 };
+    for (l, &lv) in local.iter().enumerate() {
+        if lv >= 0 {
+            s.reached += 1;
+            s.max_level = s.max_level.max(lv);
+            let v = (base + l) as u64;
+            s.checksum = s.checksum.wrapping_add((v + 1).wrapping_mul(lv as u64 + 1));
+        }
+    }
+    s
+}
+
+/// Run the distributed BFS. Collective over `cfg.team`; every unit
+/// returns the same report.
+pub fn run_distributed(env: &DartEnv, cfg: &BfsConfig) -> DartResult<BfsReport> {
+    let (report, level, parent, graph) = bfs_core(env, cfg)?;
+    level.free()?;
+    parent.free()?;
+    graph.free()?;
+    Ok(report)
+}
+
+/// Run the distributed BFS and verify it against the sequential oracle
+/// *in place*: owner-local levels must match [`reference_levels`]
+/// exactly, every claimed parent edge must exist in the graph (checked
+/// through coalesced remote adjacency pulls), parent levels must be
+/// exactly one less than their child's, and unreached vertices must
+/// stay unclaimed. Returns the report, or an `Err` naming the first
+/// violated invariant.
+pub fn run_checked(env: &DartEnv, cfg: &BfsConfig) -> DartResult<BfsReport> {
+    let (report, level, parent, graph) = bfs_core(env, cfg)?;
+    let oracle = reference_levels(&cfg.graph, cfg.root);
+    let rows = graph.my_rows();
+    let levels = level.read_local()?;
+    let parents = parent.read_local()?;
+    let mut verdict: DartResult<()> = Ok(());
+    'scan: for (l, (&lv, &par)) in levels.iter().zip(&parents).enumerate() {
+        let v = rows.start + l;
+        if lv != oracle[v] {
+            verdict = Err(DartErr::Invalid(format!(
+                "level[{v}] = {lv}, oracle says {}",
+                oracle[v]
+            )));
+            break 'scan;
+        }
+        if lv == -1 {
+            if par != -1 {
+                verdict = Err(DartErr::Invalid(format!("unreached {v} has parent {par}")));
+                break 'scan;
+            }
+            continue;
+        }
+        if v == cfg.root {
+            if par != cfg.root as i64 {
+                verdict = Err(DartErr::Invalid(format!("root parent is {par}")));
+                break 'scan;
+            }
+            continue;
+        }
+        let par = par as usize;
+        if par >= graph.nverts() || oracle[par] != lv - 1 {
+            verdict = Err(DartErr::Invalid(format!(
+                "parent[{v}] = {par} breaks level monotonicity at level {lv}"
+            )));
+            break 'scan;
+        }
+        // Edge existence through the remote-pull path (neighbor lists
+        // are sorted, so binary search is exact).
+        if graph.get_neighbors(par)?.binary_search(&(v as u64)).is_err() {
+            verdict = Err(DartErr::Invalid(format!("parent edge {par} → {v} does not exist")));
+            break 'scan;
+        }
+    }
+    // Surface everyone's verdict before freeing (collective), so one
+    // failing unit cannot leave the team wedged in `free`.
+    let failed = u64::from(verdict.is_err());
+    let mut any = [0u64];
+    env.allreduce(cfg.team, &[failed], &mut any, MpiOp::Max)?;
+    level.free()?;
+    parent.free()?;
+    graph.free()?;
+    verdict?;
+    if any[0] != 0 {
+        return Err(DartErr::Invalid("BFS validation failed on another unit".into()));
+    }
+    Ok(report)
+}

@@ -5,9 +5,11 @@
 //! as the end-to-end proof that the three layers compose: DART one-sided
 //! communication (L3) around AOT JAX/Pallas compute artifacts (L2/L1).
 
+pub mod bfs;
 pub mod histogram;
 pub mod kvstore;
 pub mod matmul;
+pub mod samplesort;
 pub mod stencil;
 pub mod stencil2d;
 pub mod wqueue;

@@ -1,0 +1,337 @@
+//! Distributed sample sort — the second irregular workload: the
+//! *destination* of every element is decided by the data.
+//!
+//! The classic four-phase recipe over the dash layer:
+//!
+//! 1. **local sort** — each unit sorts its BLOCKED partition in place
+//!    (zero network, owner-computes);
+//! 2. **splitter selection** — every unit contributes `oversample`
+//!    regular samples of its sorted partition (empty partitions send
+//!    `u64::MAX` sentinels), one allgather replicates the `p·s` samples,
+//!    and every unit independently derives the identical `p-1` splitters;
+//! 3. **bucketed redistribution** — per-unit bucket counts are
+//!    allgathered (`p×p`), every unit computes its exclusive write
+//!    offsets into each destination bucket, and ships each bucket slice
+//!    with one [`crate::dash::Array::copy_in_async`] — the run-coalescing
+//!    machinery batches ALL buckets behind a single flush, and empty
+//!    buckets (skewed or all-equal inputs) are zero-op legal;
+//! 4. **local merge** — each unit k-way merges the `p` sorted chunks it
+//!    received, then publishes its bucket into a BLOCKED output array
+//!    (a second, possibly unit-spanning coalesced redistribution) so the
+//!    result is a plain dash array any oracle can compare against.
+//!
+//! The output is deterministic — duplicates are indistinguishable `u64`s
+//! — so the positional checksum is bit-identical across flat/hier
+//! collectives, fastpath on/off, and both exec modes; permutation
+//! preservation (count + order-independent mixed checksum) is exactly
+//! invariant nine of the chaos harness.
+
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId, DART_TEAM_ALL};
+use crate::dash::{algorithms, Array};
+use crate::mpisim::{as_bytes, as_bytes_mut, MpiOp};
+use crate::testing::prop::Rng;
+
+/// Input key distributions, including the degenerate shapes that break
+/// naive splitter selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyDist {
+    /// Independent uniform 64-bit keys.
+    Uniform,
+    /// Heavily duplicated keys drawn from a small value range (bucket
+    /// skew: some buckets overflow, others are empty).
+    Skewed,
+    /// Every key identical — all elements route to one bucket.
+    AllEqual,
+    /// Already sorted ascending.
+    Sorted,
+    /// Sorted descending.
+    Reverse,
+}
+
+/// Parameters of a distributed sample-sort run.
+#[derive(Debug, Clone)]
+pub struct SortConfig {
+    /// Total element count (distributed BLOCKED; 0 is legal and sorts to
+    /// an empty array).
+    pub n: usize,
+    /// Key-stream seed.
+    pub seed: u64,
+    /// Input distribution shape.
+    pub dist: KeyDist,
+    /// Regular samples per unit for splitter selection.
+    pub oversample: usize,
+    /// Team the run is collective over.
+    pub team: TeamId,
+}
+
+impl SortConfig {
+    /// A small default configuration over `DART_TEAM_ALL`.
+    pub fn quick(n: usize, seed: u64) -> Self {
+        SortConfig { n, seed, dist: KeyDist::Uniform, oversample: 8, team: DART_TEAM_ALL }
+    }
+}
+
+/// The key at global index `g` — a pure function, so the input is
+/// replayable by the sequential oracle and identical for any team size.
+pub fn key_at(cfg: &SortConfig, g: usize) -> u64 {
+    match cfg.dist {
+        KeyDist::Uniform => Rng::new(cfg.seed ^ g as u64).next_u64(),
+        KeyDist::Skewed => {
+            let span = (cfg.n as u64 / 8).max(1);
+            Rng::new(cfg.seed ^ g as u64).next_u64() % span
+        }
+        KeyDist::AllEqual => 0xA11E_0A11,
+        KeyDist::Sorted => g as u64,
+        KeyDist::Reverse => (cfg.n - 1 - g) as u64,
+    }
+}
+
+/// Sequential oracle: the fully sorted key stream.
+pub fn reference_sorted(cfg: &SortConfig) -> Vec<u64> {
+    let mut keys: Vec<u64> = (0..cfg.n).map(|g| key_at(cfg, g)).collect();
+    keys.sort_unstable();
+    keys
+}
+
+/// Order-independent multiset checksum term for one key (a splitmix
+/// draw, so multiset changes don't cancel the way plain sums can).
+fn mix(key: u64) -> u64 {
+    Rng::new(key).next_u64()
+}
+
+/// What the oracle predicts for `cfg`: `(multiset checksum, position
+/// checksum)` — compare against [`SortReport::checksum_out`] and
+/// [`SortReport::position_checksum`].
+pub fn reference_checksums(cfg: &SortConfig) -> (u64, u64) {
+    let sorted = reference_sorted(cfg);
+    let multiset = sorted.iter().fold(0u64, |acc, &k| acc.wrapping_add(mix(k)));
+    let position = sorted.iter().enumerate().fold(0u64, |acc, (g, &k)| {
+        acc.wrapping_add((g as u64 + 1).wrapping_mul(mix(k)))
+    });
+    (multiset, position)
+}
+
+/// Result of a run (identical on every unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SortReport {
+    /// Total elements sorted (= `cfg.n`).
+    pub count: u64,
+    /// Order-independent checksum of the input multiset.
+    pub checksum_in: u64,
+    /// Order-independent checksum of the output multiset — equal to
+    /// `checksum_in` iff the sort is a permutation (invariant nine).
+    pub checksum_out: u64,
+    /// Position-weighted checksum `Σ (g+1)·mix(out[g])` of the output
+    /// array — pins the exact output order across configurations.
+    pub position_checksum: u64,
+    /// Global sortedness verified (local scans + one boundary allgather).
+    pub sorted_ok: bool,
+    /// Largest bucket (elements), the skew measure.
+    pub max_bucket: u64,
+    /// Coalesced one-sided operations issued for both redistributions,
+    /// summed over the team.
+    pub redist_ops: u64,
+}
+
+/// The distributed sort core: returns the report plus the sorted output
+/// array (still allocated) so callers can validate before freeing.
+fn sort_core<'e>(
+    env: &'e DartEnv,
+    cfg: &SortConfig,
+) -> DartResult<(SortReport, Array<'e, u64>)> {
+    if cfg.oversample == 0 {
+        return Err(DartErr::Invalid("sample sort needs oversample > 0".into()));
+    }
+    let team = cfg.team;
+    let p = env.team_size(team)?;
+    let me = env.team_myid(team)?;
+    let s = cfg.oversample;
+
+    // Phase 0+1: materialize the keyed input, then sort my partition.
+    let input: Array<'e, u64> = Array::blocked(env, team, cfg.n)?;
+    algorithms::transform(&input, |g, _| key_at(cfg, g))?;
+    let mut sorted = input.read_local()?;
+    sorted.sort_unstable();
+    let checksum_in_local: u64 = sorted.iter().fold(0u64, |acc, &k| acc.wrapping_add(mix(k)));
+    input.free()?;
+
+    // Phase 2: regular samples (MAX sentinels from empty partitions),
+    // one allgather, identical splitters everywhere.
+    let mut samples = vec![u64::MAX; s];
+    if !sorted.is_empty() {
+        for (i, slot) in samples.iter_mut().enumerate() {
+            *slot = sorted[i * sorted.len() / s];
+        }
+    }
+    let mut all_samples = vec![0u64; s * p];
+    env.allgather(team, as_bytes(&samples), as_bytes_mut(&mut all_samples))?;
+    all_samples.sort_unstable();
+    let splitters: Vec<u64> = (1..p).map(|j| all_samples[j * s]).collect();
+    let bucket_of = |k: u64| splitters.partition_point(|&sp| sp < k);
+
+    // Phase 3a: bucket counts, allgathered p×p so every unit knows both
+    // the bucket totals and its exclusive write offset in each bucket.
+    let mut counts = vec![0u64; p];
+    for &k in &sorted {
+        counts[bucket_of(k)] += 1;
+    }
+    let mut all_counts = vec![0u64; p * p];
+    env.allgather(team, as_bytes(&counts), as_bytes_mut(&mut all_counts))?;
+    let bucket_total = |j: usize| (0..p).map(|r| all_counts[r * p + j]).sum::<u64>();
+    let my_offset = |j: usize| (0..me).map(|r| all_counts[r * p + j]).sum::<u64>();
+    let cap = (0..p).map(bucket_total).max().unwrap_or(0) as usize;
+
+    // Phase 3b: the bucketed redistribution — one coalesced deferred
+    // scatter per destination bucket (empty slices are zero-op), ONE
+    // flush, one barrier. `cap` slots per unit lines bucket `j` up with
+    // global index `j·cap` in the BLOCKED receive array.
+    let recv: Array<'e, u64> = Array::blocked(env, team, cap * p)?;
+    let mut ops = 0u64;
+    let mut pos = 0usize;
+    for j in 0..p {
+        let len = counts[j] as usize;
+        ops += recv.copy_in_async(j * cap + my_offset(j) as usize, &sorted[pos..pos + len])?;
+        pos += len;
+    }
+    recv.flush()?;
+    env.barrier(team)?;
+
+    // Phase 4: k-way merge of the p sorted chunks in my bucket.
+    let slots = recv.read_local()?;
+    let mut chunks: Vec<&[u64]> = Vec::with_capacity(p);
+    let mut base = 0usize;
+    for r in 0..p {
+        let len = all_counts[r * p + me] as usize;
+        chunks.push(&slots[base..base + len]);
+        base += len;
+    }
+    let mut merged = Vec::with_capacity(base);
+    let mut heads = vec![0usize; p];
+    loop {
+        let mut best: Option<(u64, usize)> = None;
+        for (r, chunk) in chunks.iter().enumerate() {
+            if heads[r] < chunk.len() {
+                let k = chunk[heads[r]];
+                if best.map_or(true, |(bk, _)| k < bk) {
+                    best = Some((k, r));
+                }
+            }
+        }
+        match best {
+            Some((k, r)) => {
+                merged.push(k);
+                heads[r] += 1;
+            }
+            None => break,
+        }
+    }
+    recv.free()?;
+    let checksum_out_local: u64 = merged.iter().fold(0u64, |acc, &k| acc.wrapping_add(mix(k)));
+
+    // Local sortedness + cross-bucket boundary check (empty buckets are
+    // skipped by making their min/max sentinels that always pass).
+    let locally_sorted = merged.windows(2).all(|w| w[0] <= w[1]);
+    let bounds = if merged.is_empty() {
+        [u64::MAX, 0]
+    } else {
+        [merged[0], *merged.last().unwrap()]
+    };
+    let mut all_bounds = vec![0u64; 2 * p];
+    env.allgather(team, as_bytes(&bounds), as_bytes_mut(&mut all_bounds))?;
+    let mut boundary_ok = true;
+    let mut prev_max: Option<u64> = None;
+    for r in 0..p {
+        let (mn, mx) = (all_bounds[2 * r], all_bounds[2 * r + 1]);
+        if mn == u64::MAX && mx == 0 {
+            continue;
+        }
+        if let Some(pm) = prev_max {
+            boundary_ok &= pm <= mn;
+        }
+        prev_max = Some(mx);
+    }
+
+    // Publish my bucket into the BLOCKED output array — the second
+    // bucketed redistribution, whose runs genuinely span units.
+    let out: Array<'e, u64> = Array::blocked(env, team, cfg.n)?;
+    let out_base = (0..me).map(bucket_total).sum::<u64>() as usize;
+    ops += out.copy_in_async(out_base, &merged)?;
+    out.flush()?;
+    env.barrier(team)?;
+
+    // Position checksum from the output's owner-local view.
+    let pat = *out.pattern();
+    let out_local = out.read_local()?;
+    let position_local: u64 = out_local.iter().enumerate().fold(0u64, |acc, (l, &k)| {
+        acc.wrapping_add(((pat.local_to_global(me, l) as u64) + 1).wrapping_mul(mix(k)))
+    });
+
+    // Replicated report.
+    let flags = u64::from(!(locally_sorted && boundary_ok));
+    let mut sums = [0u64; 5];
+    env.allreduce(
+        team,
+        &[
+            merged.len() as u64,
+            checksum_in_local,
+            checksum_out_local,
+            position_local,
+            ops,
+        ],
+        &mut sums,
+        MpiOp::Sum,
+    )?;
+    let mut bad = [0u64];
+    env.allreduce(team, &[flags], &mut bad, MpiOp::Max)?;
+    let report = SortReport {
+        count: sums[0],
+        checksum_in: sums[1],
+        checksum_out: sums[2],
+        position_checksum: sums[3],
+        sorted_ok: bad[0] == 0,
+        max_bucket: cap as u64,
+        redist_ops: sums[4],
+    };
+    Ok((report, out))
+}
+
+/// Run the distributed sample sort. Collective over `cfg.team`; every
+/// unit returns the same report.
+pub fn run_distributed(env: &DartEnv, cfg: &SortConfig) -> DartResult<SortReport> {
+    let (report, out) = sort_core(env, cfg)?;
+    out.free()?;
+    Ok(report)
+}
+
+/// Run the distributed sort and verify the output array element-by-
+/// element against [`reference_sorted`]: each unit compares its owned
+/// partition of the output to the oracle's slice — a full positional
+/// equality check with zero extra communication. Returns the report, or
+/// an `Err` naming the first mismatch.
+pub fn run_checked(env: &DartEnv, cfg: &SortConfig) -> DartResult<SortReport> {
+    let (report, out) = sort_core(env, cfg)?;
+    let oracle = reference_sorted(cfg);
+    let me = env.team_myid(cfg.team)?;
+    let pat = *out.pattern();
+    let local = out.read_local()?;
+    let mut verdict: DartResult<()> = Ok(());
+    for (l, &k) in local.iter().enumerate() {
+        let g = pat.local_to_global(me, l);
+        if oracle[g] != k {
+            verdict = Err(DartErr::Invalid(format!(
+                "out[{g}] = {k}, oracle says {}",
+                oracle[g]
+            )));
+            break;
+        }
+    }
+    // Agree on the verdict before the collective free.
+    let mut any = [0u64];
+    env.allreduce(cfg.team, &[u64::from(verdict.is_err())], &mut any, MpiOp::Max)?;
+    out.free()?;
+    verdict?;
+    if any[0] != 0 {
+        return Err(DartErr::Invalid("sort validation failed on another unit".into()));
+    }
+    Ok(report)
+}

@@ -113,8 +113,10 @@ fn extremum<T: Element>(
         }
         winner = prefer(winner, (*g as usize, *v), &better);
     }
-    // Patterns are non-empty, so at least one unit contributed.
-    Ok(winner.expect("non-empty array has an extremum"))
+    // Every unit can be empty now that zero-length patterns are legal;
+    // an empty array has no extremum, and panicking inside a collective
+    // would wedge the team, so report it as an error on every member.
+    winner.ok_or_else(|| crate::dart::DartErr::Invalid("extremum of an empty array".into()))
 }
 
 /// Global minimum as `(global index, value)`; ties resolve to the
@@ -141,6 +143,11 @@ pub fn max_element<T: Element>(arr: &Array<'_, T>) -> DartResult<(usize, T)> {
 /// the exchange. Returns the number of one-sided operations this unit
 /// issued (also in `Metrics::dash_coalesced_runs`; bytes in
 /// `Metrics::dash_redist_bytes`).
+///
+/// Units with zero-length local extents (short arrays over wide teams,
+/// empty buckets of a data-dependent decomposition, fully empty arrays)
+/// participate only in the barriers: they issue no operations and
+/// receive none, but must still call in — the exchange is collective.
 pub fn copy<T: Element>(src: &Array<'_, T>, dst: &Array<'_, T>) -> DartResult<u64> {
     use crate::dart::DartErr;
     if src.len() != dst.len() {

@@ -98,9 +98,11 @@ impl<'e, T: Element> Array<'e, T> {
         self.pattern.len()
     }
 
-    /// Arrays are never empty (patterns enforce `n ≥ 1`).
+    /// Whether the array holds zero elements. Empty arrays are legal
+    /// (data-dependent decompositions produce them); every per-element
+    /// operation on them is a no-op and collectives still synchronize.
     pub fn is_empty(&self) -> bool {
-        false
+        self.pattern.is_empty()
     }
 
     /// The distribution pattern.
@@ -177,6 +179,26 @@ impl<'e, T: Element> Array<'e, T> {
         self.env.accumulate_async(self.gptr_of(u, l), &[value], op)
     }
 
+    /// Atomic fetch-and-op on one element: returns the value before the
+    /// update. Synchronous (element-granularity MPI-3 atomics; same-node
+    /// targets ride the CPU-atomic fast path).
+    pub fn fetch_op(&self, g: usize, value: T, op: MpiOp) -> DartResult<T> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.fetch_and_op(self.gptr_of(u, l), value, op)
+    }
+
+    /// Atomic compare-and-swap on one element: installs `value` iff the
+    /// element equals `compare`, returning the previous value either way
+    /// (the claim succeeded iff the return equals `compare`). This is the
+    /// claim primitive irregular workloads race on — e.g. BFS parent
+    /// claims on a distributed parent array.
+    pub fn compare_and_swap(&self, g: usize, compare: T, value: T) -> DartResult<T> {
+        self.check_range(g, 1)?;
+        let (u, l) = self.pattern.global_to_local(g);
+        self.env.compare_and_swap(self.gptr_of(u, l), compare, value)
+    }
+
     /// Complete every outstanding deferred operation on this array's
     /// allocation (puts/gets from the bulk tier, accumulates) — one call
     /// per phase, the engine's explicit-flush discipline.
@@ -203,6 +225,25 @@ impl<'e, T: Element> Array<'e, T> {
         }
         self.env.metrics.dash_coalesced_runs.add(ops);
         self.env.flush_all(self.gptr)?;
+        Ok(ops)
+    }
+
+    /// Deferred bulk write: like [`Array::copy_in`] but WITHOUT the
+    /// trailing `flush_all`, so a caller scattering many disjoint ranges
+    /// (the bucketed-redistribution pattern: one range per destination
+    /// bucket, some of them empty) batches every run behind a single
+    /// [`Array::flush`]. Returns the number of one-sided operations
+    /// issued; an empty `src` issues none and is always legal.
+    pub fn copy_in_async(&self, start: usize, src: &[T]) -> DartResult<u64> {
+        self.check_range(start, src.len())?;
+        let mut ops = 0u64;
+        for run in self.pattern.runs(start, src.len()) {
+            let off = run.global - start;
+            self.env
+                .put_async(self.gptr_of(run.unit, run.local), as_bytes(&src[off..off + run.len]))?;
+            ops += 1;
+        }
+        self.env.metrics.dash_coalesced_runs.add(ops);
         Ok(ops)
     }
 

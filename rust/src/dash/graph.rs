@@ -1,0 +1,282 @@
+//! `Graph` — a distributed CSR graph with owner-partitioned rows.
+//!
+//! The first *irregular* data structure in the dash layer: where every
+//! other container's communication pattern is fixed by its [`Pattern`],
+//! a graph's is decided by the data. Vertices are owner-partitioned
+//! BLOCKED over the team (vertex `v`'s adjacency lives on `v`'s owner);
+//! the storage is three BLOCKED [`Array`]s in symmetric global memory:
+//!
+//! - `adj_off[v]` — start offset of `v`'s neighbor list *within its
+//!   owner's local adjacency storage*;
+//! - `deg[v]` — `v`'s degree;
+//! - `adj` — the concatenated neighbor lists, `edge_cap` slots per unit
+//!   (the team-wide maximum local edge count, so the BLOCKED pattern
+//!   lines local storage up with global index `unit · edge_cap`).
+//!
+//! Because a vertex's neighbor list is contiguous on its owner, a remote
+//! adjacency pull ([`Graph::get_neighbors`]) is two scalar gets (offset
+//! and degree) plus ONE coalesced vector-typed get of the whole list —
+//! the access shape the DASH papers argue the runtime must make cheap.
+//! Owners additionally keep a plain local CSR mirror
+//! ([`Graph::local_neighbors`]) so traversal over owned rows costs no
+//! one-sided traffic at all.
+//!
+//! Graphs are built from a seeded Kronecker/R-MAT generator
+//! ([`rmat_edge`], Graph500's A/B/C/D = 0.57/0.19/0.19/0.05): edge `k`
+//! is a pure function of `(seed, k)`, so every unit replays the same
+//! edge stream and keeps the endpoints it owns — construction is
+//! embarrassingly parallel and bit-reproducible for any team size. The
+//! graph is stored undirected (each kept edge contributes both
+//! directions), self-loops are dropped, and neighbor lists are sorted
+//! and deduplicated so structure — not generation order — defines the
+//! graph. An `edge_factor` of zero produces a legal edgeless graph
+//! (`adj` is then a zero-length array — the empty-distribution case the
+//! pattern layer explicitly supports).
+
+use super::array::Array;
+use super::pattern::Pattern;
+use crate::dart::{DartEnv, DartErr, DartResult, TeamId};
+use crate::mpisim::MpiOp;
+use crate::testing::prop::Rng;
+
+/// Parameters of a reproducible R-MAT graph.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphConfig {
+    /// log2 of the vertex count (`nverts = 1 << scale`).
+    pub scale: u32,
+    /// Directed edges generated per vertex (`nedges = edge_factor << scale`);
+    /// zero yields an edgeless graph.
+    pub edge_factor: usize,
+    /// Generator seed; edge `k` is a pure function of `(seed, k)`.
+    pub seed: u64,
+}
+
+impl GraphConfig {
+    /// Vertex count `2^scale`.
+    pub fn nverts(&self) -> usize {
+        1usize << self.scale
+    }
+
+    /// Number of generated directed edge pairs (before self-loop and
+    /// duplicate removal).
+    pub fn nedges(&self) -> usize {
+        self.edge_factor << self.scale
+    }
+}
+
+/// The `k`-th R-MAT edge for `(seed, scale)` — a pure function, so every
+/// unit (and the sequential oracle) generates the identical edge list
+/// without communicating. Quadrant probabilities are Graph500's
+/// (A, B, C, D) = (0.57, 0.19, 0.19, 0.05) per bit of recursion.
+pub fn rmat_edge(seed: u64, scale: u32, k: u64) -> (u64, u64) {
+    let mut rng = Rng::new(seed ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let (mut a, mut b) = (0u64, 0u64);
+    for bit in 0..scale {
+        let q = rng.next_u64() % 100;
+        let (ai, bi) = if q < 57 {
+            (0u64, 0u64)
+        } else if q < 76 {
+            (0, 1)
+        } else if q < 95 {
+            (1, 0)
+        } else {
+            (1, 1)
+        };
+        a |= ai << bit;
+        b |= bi << bit;
+    }
+    (a, b)
+}
+
+/// The full directed edge stream of `cfg` (self-loops included — callers
+/// filter), in generation order. Pure; used by both [`Graph::build`] and
+/// the sequential BFS oracle.
+pub fn edges(cfg: &GraphConfig) -> impl Iterator<Item = (u64, u64)> + '_ {
+    (0..cfg.nedges() as u64).map(move |k| rmat_edge(cfg.seed, cfg.scale, k))
+}
+
+/// A distributed CSR graph (see module docs). Collectively built and
+/// freed; cheap owner-local traversal plus coalesced remote pulls.
+pub struct Graph<'e> {
+    env: &'e DartEnv,
+    team: TeamId,
+    cfg: GraphConfig,
+    /// Vertex ownership map (BLOCKED over the team).
+    pattern: Pattern,
+    /// Per-vertex start offset into the owner's `adj` slots.
+    adj_off: Array<'e, u64>,
+    /// Per-vertex degree.
+    deg: Array<'e, u64>,
+    /// Concatenated neighbor lists, `edge_cap` global slots per unit.
+    adj: Array<'e, u64>,
+    /// Team-wide maximum local (directed) edge count.
+    edge_cap: usize,
+    /// My team rank.
+    myrank: usize,
+    /// Global index of my first owned vertex.
+    row0: usize,
+    /// Local CSR mirror: `local_off[l]..local_off[l + 1]` indexes
+    /// `local_adj` for owned row `row0 + l`.
+    local_off: Vec<usize>,
+    /// Local CSR mirror: concatenated neighbor lists of my rows.
+    local_adj: Vec<u64>,
+}
+
+impl<'e> Graph<'e> {
+    /// Collectively build the graph over `team`: every unit replays the
+    /// seeded edge stream, keeps the directions whose source it owns
+    /// (both directions of each generated pair — the graph is stored
+    /// undirected), drops self-loops, sorts and dedups each neighbor
+    /// list, and publishes its rows into the global CSR arrays.
+    pub fn build(env: &'e DartEnv, team: TeamId, cfg: GraphConfig) -> DartResult<Graph<'e>> {
+        if cfg.scale > 24 {
+            return Err(DartErr::Invalid("graph scale > 24 is not simulatable".into()));
+        }
+        let n = cfg.nverts();
+        let p = env.team_size(team)?;
+        let me = env.team_myid(team)?;
+        let pattern = Pattern::blocked(n, p)?;
+        let extent = pattern.local_extent(me);
+        let row0 = if extent == 0 { n } else { pattern.local_to_global(me, 0) };
+
+        // Replicated generation: keep the directions I own.
+        let mut lists: Vec<Vec<u64>> = vec![Vec::new(); extent];
+        let owns = |v: u64| -> bool { (v as usize) >= row0 && (v as usize) < row0 + extent };
+        for (a, b) in edges(&cfg) {
+            if a == b {
+                continue;
+            }
+            if owns(a) {
+                lists[a as usize - row0].push(b);
+            }
+            if owns(b) {
+                lists[b as usize - row0].push(a);
+            }
+        }
+        let mut local_off = Vec::with_capacity(extent + 1);
+        let mut local_adj = Vec::new();
+        local_off.push(0);
+        for list in &mut lists {
+            list.sort_unstable();
+            list.dedup();
+            local_adj.extend_from_slice(list);
+            local_off.push(local_adj.len());
+        }
+
+        // Team-wide adjacency capacity so BLOCKED local storage lines up
+        // with global index unit · edge_cap on every member.
+        let mut emax = [0u64];
+        env.allreduce(team, &[local_adj.len() as u64], &mut emax, MpiOp::Max)?;
+        let edge_cap = emax[0] as usize;
+
+        let adj_off: Array<'e, u64> = Array::new(env, team, pattern)?;
+        let deg: Array<'e, u64> = Array::new(env, team, pattern)?;
+        let adj: Array<'e, u64> = Array::new(env, team, Pattern::blocked(edge_cap * p, p)?)?;
+        adj_off.with_local(|buf| {
+            for (l, slot) in buf.iter_mut().enumerate() {
+                *slot = local_off[l] as u64;
+            }
+        })?;
+        deg.with_local(|buf| {
+            for (l, slot) in buf.iter_mut().enumerate() {
+                *slot = (local_off[l + 1] - local_off[l]) as u64;
+            }
+        })?;
+        adj.with_local(|buf| buf[..local_adj.len()].copy_from_slice(&local_adj))?;
+        // No unit may pull a row before its owner published it.
+        env.barrier(team)?;
+        Ok(Graph {
+            env,
+            team,
+            cfg,
+            pattern,
+            adj_off,
+            deg,
+            adj,
+            edge_cap,
+            myrank: me,
+            row0,
+            local_off,
+            local_adj,
+        })
+    }
+
+    /// Vertex count.
+    pub fn nverts(&self) -> usize {
+        self.cfg.nverts()
+    }
+
+    /// The generator configuration the graph was built from.
+    pub fn config(&self) -> &GraphConfig {
+        &self.cfg
+    }
+
+    /// The vertex-ownership pattern (BLOCKED over the team).
+    pub fn pattern(&self) -> &Pattern {
+        &self.pattern
+    }
+
+    /// The team the graph is distributed over.
+    pub fn team(&self) -> TeamId {
+        self.team
+    }
+
+    /// The runtime handle the graph was built with.
+    pub fn env(&self) -> &'e DartEnv {
+        self.env
+    }
+
+    /// Team rank owning vertex `v`.
+    pub fn owner_of(&self, v: usize) -> usize {
+        self.pattern.global_to_local(v).0
+    }
+
+    /// The global index range of my owned rows.
+    pub fn my_rows(&self) -> std::ops::Range<usize> {
+        self.row0..self.row0 + self.local_off.len() - 1
+    }
+
+    /// Directed edge count of my owned rows (after self-loop removal and
+    /// deduplication).
+    pub fn local_edge_count(&self) -> usize {
+        self.local_adj.len()
+    }
+
+    /// Neighbor list of an **owned** vertex — pure local memory, the
+    /// traversal hot path.
+    pub fn local_neighbors(&self, v: usize) -> DartResult<&[u64]> {
+        if !self.my_rows().contains(&v) {
+            return Err(DartErr::Invalid(format!(
+                "local_neighbors({v}) on rank {} owning {:?}",
+                self.myrank,
+                self.my_rows()
+            )));
+        }
+        let l = v - self.row0;
+        Ok(&self.local_adj[self.local_off[l]..self.local_off[l + 1]])
+    }
+
+    /// Neighbor list of **any** vertex: owned rows answer from the local
+    /// CSR mirror; remote rows cost two scalar gets (offset, degree) and
+    /// ONE coalesced vector-typed get of the contiguous list.
+    pub fn get_neighbors(&self, v: usize) -> DartResult<Vec<u64>> {
+        if self.my_rows().contains(&v) {
+            return Ok(self.local_neighbors(v)?.to_vec());
+        }
+        let owner = self.owner_of(v);
+        let off = self.adj_off.get(v)? as usize;
+        let d = self.deg.get(v)? as usize;
+        let mut list = vec![0u64; d];
+        if d > 0 {
+            self.adj.copy_out(owner * self.edge_cap + off, &mut list)?;
+        }
+        Ok(list)
+    }
+
+    /// Collectively release the backing global memory.
+    pub fn free(self) -> DartResult<()> {
+        self.adj_off.free()?;
+        self.deg.free()?;
+        self.adj.free()
+    }
+}

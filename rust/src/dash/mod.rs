@@ -34,6 +34,12 @@
 //!   `push` / non-collective `push_back_global`, pattern-preserving
 //!   redistribution on growth, bit-identical to a preallocated [`Array`]
 //!   of the final size;
+//! - [`Graph`] ([`graph`]) — a distributed CSR graph with owner-
+//!   partitioned rows over BLOCKED arrays and a seeded Kronecker/R-MAT
+//!   generator: the first *irregular* container, whose communication
+//!   pattern (coalesced remote adjacency pulls, CAS claims in the BFS
+//!   app) is decided by the data rather than the pattern; exercised by
+//!   `apps::bfs` and the `perf_graph` bench;
 //! - [`WorkQueue`] ([`workqueue`]) — a global MPMC task queue over
 //!   dynamic segments: per-unit rings, CAS-claimed head/tail on the
 //!   atomics hot path, work stealing between units; exercised by
@@ -46,6 +52,7 @@
 
 pub mod algorithms;
 pub mod array;
+pub mod graph;
 pub mod hashmap;
 pub mod matrix;
 pub mod pattern;
@@ -54,6 +61,7 @@ pub mod workqueue;
 
 pub use crate::dart::Element;
 pub use array::Array;
+pub use graph::{Graph, GraphConfig};
 pub use hashmap::HashMap;
 pub use matrix::Matrix;
 pub use pattern::{Layout, Pattern, Run};

@@ -102,12 +102,14 @@ fn dealt_extent(total: usize, tile: usize, pgrid: usize, idx: usize) -> usize {
 
 impl Pattern {
     fn new(n: usize, nunits: usize, layout: Layout) -> DartResult<Pattern> {
-        if n == 0 {
-            return Err(DartErr::Invalid("pattern over zero elements".into()));
-        }
         if nunits == 0 {
             return Err(DartErr::Invalid("pattern over zero units".into()));
         }
+        // n == 0 is legal: every unit gets extent 0 and `runs`/`block_iter`
+        // yield nothing. Data-dependent decompositions (sample-sort buckets,
+        // edgeless graphs) produce genuinely empty distributions, so the
+        // index maps must tolerate them instead of forcing callers to
+        // special-case emptiness before construction.
         Ok(Pattern { n, nunits, layout })
     }
 
@@ -158,9 +160,10 @@ impl Pattern {
         self.n
     }
 
-    /// Patterns are never empty (enforced at construction).
+    /// Whether the pattern distributes zero elements (every unit then has
+    /// local extent 0 and all run iterators are empty).
     pub fn is_empty(&self) -> bool {
-        false
+        self.n == 0
     }
 
     /// Number of team-relative units the pattern distributes over.
@@ -434,9 +437,27 @@ mod tests {
 
     #[test]
     fn invalid_shapes_rejected() {
-        assert!(Pattern::blocked(0, 4).is_err());
         assert!(Pattern::cyclic(8, 0).is_err());
         assert!(Pattern::block_cyclic(8, 2, 0).is_err());
         assert!(Pattern::tiled(4, 4, 0, 2, 2, 1).is_err());
+    }
+
+    #[test]
+    fn empty_patterns_are_legal_and_inert() {
+        for pat in [
+            Pattern::blocked(0, 4).unwrap(),
+            Pattern::cyclic(0, 4).unwrap(),
+            Pattern::block_cyclic(0, 4, 3).unwrap(),
+            Pattern::tiled(0, 5, 2, 2, 2, 2).unwrap(),
+        ] {
+            assert!(pat.is_empty());
+            assert_eq!(pat.len(), 0);
+            assert_eq!(pat.max_local_extent(), 0);
+            for u in 0..pat.nunits() {
+                assert_eq!(pat.local_extent(u), 0);
+                assert_eq!(pat.block_iter(u).count(), 0);
+            }
+            assert_eq!(pat.runs(0, 0).count(), 0);
+        }
     }
 }

@@ -11,11 +11,12 @@
 //! reproduction is deterministic. Re-run exactly one seed with
 //! `DART_CHAOS_SEEDS=0x<seed>` (see [`seeds`]).
 //!
-//! The module ships the seven standing invariants the chaos suite
+//! The module ships the nine standing invariants the chaos suite
 //! (`rust/tests/chaos_tests.rs`) and the CI `chaos-smoke` job sweep:
 //! [`flush_completes_all`], [`mcs_fifo`], [`nonblocking_matches_blocking`],
 //! [`hier_matches_flat`], [`kv_backends_agree`],
-//! [`work_queue_exactly_once`], [`vector_growth_matches_prealloc`].
+//! [`work_queue_exactly_once`], [`vector_growth_matches_prealloc`],
+//! [`bfs_levels_deterministic`], [`sample_sort_is_permutation`].
 
 use crate::apps::kvstore::{run_kv, KvBackend, KvConfig};
 use crate::apps::wqueue::{reference_result, run_distributed, WqueueConfig};
@@ -503,6 +504,78 @@ pub fn vector_growth_matches_prealloc(seed: u64) -> Result<FaultStats, String> {
                 "unit {me}: grown vector diverged from the preallocated array \
                  ({} differing slots)",
                 got.iter().zip(&want).filter(|(a, b)| a != b).count()
+            ));
+        }
+        Ok(())
+    })
+}
+
+/// **Invariant: BFS levels are deterministic.** One faulted world runs the
+/// level-synchronous traversal twice — flat claims, then intra-node
+/// combining — over the same seeded R-MAT graph. The parent *trees* may
+/// differ (CAS races resolve arbitrarily under reordered completions),
+/// but the level summary must be bit-identical between the two modes and
+/// equal to the sequential oracle's, no matter how the plan jitters the
+/// claim traffic.
+pub fn bfs_levels_deterministic(seed: u64) -> Result<FaultStats, String> {
+    use crate::apps::bfs::{reference_summary, BfsConfig};
+    let graph = crate::dash::GraphConfig { scale: 5, edge_factor: 4, seed };
+    let flat = BfsConfig { graph, root: 0, combine: false, team: DART_TEAM_ALL };
+    let combined = BfsConfig { combine: true, ..flat.clone() };
+    let oracle = reference_summary(&flat);
+    world_check(chaos_cfg(4, 2, seed), |env| {
+        let a = crate::apps::bfs::run_distributed(env, &flat)
+            .map_err(|e| format!("flat bfs: {e:?}"))?;
+        let b = crate::apps::bfs::run_distributed(env, &combined)
+            .map_err(|e| format!("combined bfs: {e:?}"))?;
+        if a.summary != b.summary {
+            return Err(format!(
+                "combining changed the levels: flat {:?} vs combined {:?}",
+                a.summary, b.summary
+            ));
+        }
+        if a.summary != oracle {
+            return Err(format!(
+                "traversal diverged from the sequential oracle: {:?} vs {:?}",
+                a.summary, oracle
+            ));
+        }
+        Ok(())
+    })
+}
+
+/// **Invariant: sample sort emits a sorted permutation.** A faulted world
+/// runs the bucketed redistribution over a seed-chosen key distribution
+/// (uniform, heavy-duplicate, or all-equal — the empty-bucket case). The
+/// output must be globally sorted, carry exactly the input multiset
+/// (order-independent checksums match), and place every key where the
+/// sequential oracle puts it — even when the plan reorders or starves the
+/// scatter's one-sided traffic.
+pub fn sample_sort_is_permutation(seed: u64) -> Result<FaultStats, String> {
+    use crate::apps::samplesort::{reference_checksums, KeyDist, SortConfig};
+    let dist = [KeyDist::Uniform, KeyDist::Skewed, KeyDist::AllEqual][(seed % 3) as usize];
+    let sort = SortConfig { n: 192, seed, dist, oversample: 4, team: DART_TEAM_ALL };
+    let (multiset, position) = reference_checksums(&sort);
+    world_check(chaos_cfg(4, 2, seed), |env| {
+        let r = crate::apps::samplesort::run_distributed(env, &sort)
+            .map_err(|e| format!("sample sort: {e:?}"))?;
+        if !r.sorted_ok {
+            return Err("output is not globally sorted".into());
+        }
+        if r.checksum_in != r.checksum_out {
+            return Err(format!(
+                "output is not a permutation of the input: in {:#x} out {:#x}",
+                r.checksum_in, r.checksum_out
+            ));
+        }
+        if r.count != sort.n as u64 {
+            return Err(format!("{} keys out of {} survived redistribution", r.count, sort.n));
+        }
+        if (r.checksum_out, r.position_checksum) != (multiset, position) {
+            return Err(format!(
+                "output diverged from the sequential oracle: ({:#x}, {:#x}) vs ({multiset:#x}, \
+                 {position:#x})",
+                r.checksum_out, r.position_checksum
             ));
         }
         Ok(())

@@ -1,4 +1,4 @@
-//! Seeded chaos suite: the seven standing runtime invariants swept across
+//! Seeded chaos suite: the nine standing runtime invariants swept across
 //! many fault seeds (`dart::testing::chaos`), plus the determinism oracle
 //! — a fixed seed must replay an *identical* injected-event trace — and
 //! the `Metrics` mirror of the world-global fault counters.
@@ -85,6 +85,28 @@ fn vector_growth_bit_equal_to_prealloc_under_chaos() {
         "vector_growth_matches_prealloc",
         &chaos::seeds(SWEEP),
         chaos::vector_growth_matches_prealloc,
+    );
+    assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
+}
+
+#[test]
+fn bfs_levels_deterministic_under_chaos() {
+    let stats = chaos::chaos_check(
+        "bfs_levels_deterministic",
+        &chaos::seeds(SWEEP),
+        chaos::bfs_levels_deterministic,
+    );
+    // The claim CASes and adjacency pulls ride the faulted channels.
+    assert!(stats.reorders > 0, "no completions reordered: {stats:?}");
+    assert!(stats.jitter_events > 0, "no jitter injected: {stats:?}");
+}
+
+#[test]
+fn sample_sort_is_permutation_under_chaos() {
+    let stats = chaos::chaos_check(
+        "sample_sort_is_permutation",
+        &chaos::seeds(SWEEP),
+        chaos::sample_sort_is_permutation,
     );
     assert!(stats.total() > 0, "fault plan never fired: {stats:?}");
 }

@@ -1,0 +1,253 @@
+//! Irregular-workload property suite: the distributed BFS and sample
+//! sort checked against their sequential oracles across seeds, unit
+//! counts, and the degenerate inputs that break naive decompositions —
+//! empty graphs, disconnected components, all-equal / pre-sorted /
+//! reverse-sorted key streams, and inputs smaller than the team. Plus
+//! the zero-extent regressions: empty `dash` patterns and arrays must be
+//! legal, inert citizens of every collective algorithm.
+
+use dart::apps::bfs::{self, BfsConfig, BfsSummary};
+use dart::apps::samplesort::{self, KeyDist, SortConfig};
+use dart::dart::{run, DartConfig, DART_TEAM_ALL};
+use dart::dash::{algorithms, Array, GraphConfig, Pattern};
+use dart::testing::prop::Rng;
+use std::sync::Mutex;
+
+fn cfg(units: usize) -> DartConfig {
+    DartConfig::with_units(units).with_pools(1 << 18, 1 << 20)
+}
+
+/// The sweep's seed list — deterministic, ≥ 10 seeds per oracle sweep.
+fn sweep_seeds(n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(0x1AAE_607A_7E57);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// BFS: oracle sweeps
+// ---------------------------------------------------------------------------
+
+/// Ten seeded R-MAT graphs, each traversed flat and with intra-node
+/// combining, every unit's levels audited in `run_checked`: parent edges
+/// must exist, levels must be exactly the oracle's BFS distances, and
+/// unreached vertices must stay unclaimed.
+#[test]
+fn bfs_matches_oracle_across_seeds() {
+    run(cfg(4), |env| {
+        for seed in sweep_seeds(10) {
+            for combine in [false, true] {
+                let mut bfs = BfsConfig::quick(5, 4, seed);
+                bfs.combine = combine;
+                let report = bfs::run_checked(env, &bfs).unwrap();
+                assert_eq!(report.summary, bfs::reference_summary(&bfs));
+                assert!(report.summary.reached >= 1, "root must reach itself");
+            }
+        }
+    })
+    .unwrap();
+}
+
+/// The level summary is a pure function of the graph seed — the world
+/// size (including the degenerate 1-unit world and a count that does not
+/// divide the vertex count) must be invisible.
+#[test]
+fn bfs_agrees_across_unit_counts() {
+    let bfs = BfsConfig::quick(5, 4, 0x5CA1_AB1E);
+    let oracle = bfs::reference_summary(&bfs);
+    for units in [1usize, 2, 5, 8] {
+        let out: Mutex<Option<BfsSummary>> = Mutex::new(None);
+        run(cfg(units), |env| {
+            let report = bfs::run_checked(env, &bfs).unwrap();
+            if env.myid() == 0 {
+                *out.lock().unwrap() = Some(report.summary);
+            }
+        })
+        .unwrap();
+        let got = out.into_inner().unwrap().expect("unit 0 captured no summary");
+        assert_eq!(got, oracle, "{units}-unit world diverged from the oracle");
+    }
+}
+
+/// `edge_factor: 0` produces a graph with no edges at all — the empty
+/// adjacency array (a zero-length BLOCKED pattern) must build, and the
+/// traversal must reach exactly the root at level 0.
+#[test]
+fn bfs_handles_an_edgeless_graph() {
+    run(cfg(4), |env| {
+        let bfs = BfsConfig {
+            graph: GraphConfig { scale: 4, edge_factor: 0, seed: 7 },
+            root: 5,
+            combine: false,
+            team: DART_TEAM_ALL,
+        };
+        let report = bfs::run_checked(env, &bfs).unwrap();
+        assert_eq!(report.summary.reached, 1, "only the root is reachable");
+        assert_eq!(report.summary.max_level, 0);
+        assert_eq!(report.nedges_stored, 0);
+    })
+    .unwrap();
+}
+
+/// Sparse R-MAT graphs are disconnected: the sweep must include at least
+/// one graph whose traversal leaves vertices unreached, and `run_checked`
+/// must still pass on every one (unreached ⇒ parent stays -1).
+#[test]
+fn bfs_handles_disconnected_components() {
+    let seeds = sweep_seeds(4);
+    let disconnected = seeds.iter().any(|&seed| {
+        let bfs = BfsConfig::quick(6, 1, seed);
+        bfs::reference_summary(&bfs).reached < bfs.graph.nverts() as u64
+    });
+    assert!(disconnected, "every sparse graph was connected — the sweep proves nothing");
+    run(cfg(4), |env| {
+        for seed in seeds.iter() {
+            let bfs = BfsConfig::quick(6, 1, *seed);
+            let report = bfs::run_checked(env, &bfs).unwrap();
+            assert_eq!(report.summary, bfs::reference_summary(&bfs));
+        }
+    })
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Sample sort: oracle sweeps
+// ---------------------------------------------------------------------------
+
+/// Ten seeded uniform key streams through the full pipeline, every
+/// unit's output partition audited against `sort_unstable` on the same
+/// stream in `run_checked`.
+#[test]
+fn sort_matches_oracle_across_seeds() {
+    run(cfg(4), |env| {
+        for seed in sweep_seeds(10) {
+            let sort = SortConfig::quick(256, seed);
+            let report = samplesort::run_checked(env, &sort).unwrap();
+            assert!(report.sorted_ok);
+            assert_eq!(report.checksum_in, report.checksum_out);
+            assert_eq!(report.count, 256);
+        }
+    })
+    .unwrap();
+}
+
+/// The degenerate key distributions: heavy duplicates (empty buckets),
+/// all keys equal (every element lands in bucket 0), already sorted, and
+/// reverse sorted. Each must survive splitter selection and produce the
+/// oracle's permutation.
+#[test]
+fn sort_handles_degenerate_key_distributions() {
+    run(cfg(4), |env| {
+        for dist in [KeyDist::Skewed, KeyDist::AllEqual, KeyDist::Sorted, KeyDist::Reverse] {
+            for seed in [0x0DD5_EED5u64, 0xFACE_0FF5] {
+                let sort = SortConfig { n: 240, seed, dist, oversample: 4, team: DART_TEAM_ALL };
+                let report = samplesort::run_checked(env, &sort).unwrap();
+                assert!(report.sorted_ok, "{dist:?}: not sorted");
+                assert_eq!(report.checksum_in, report.checksum_out, "{dist:?}: not a permutation");
+            }
+        }
+    })
+    .unwrap();
+}
+
+/// Inputs smaller than the team — including the empty input, whose
+/// every decomposition (input, buckets, output) is a zero-length
+/// pattern — must sort without a special case.
+#[test]
+fn sort_handles_inputs_smaller_than_the_team() {
+    run(cfg(4), |env| {
+        for n in [0usize, 1, 3, 5] {
+            let sort = SortConfig::quick(n, 0x7E57_5EED);
+            let report = samplesort::run_checked(env, &sort).unwrap();
+            assert!(report.sorted_ok, "n={n}: not sorted");
+            assert_eq!(report.count, n as u64, "n={n}: wrong key count");
+            assert_eq!(report.checksum_in, report.checksum_out, "n={n}: not a permutation");
+        }
+    })
+    .unwrap();
+}
+
+/// The unit-count axis is invisible to the output: the same key stream
+/// sorted by 1, 2, 5, and 8 units lands every key at the same global
+/// position (bit-identical position checksum, audited per-unit).
+#[test]
+fn sort_agrees_across_unit_counts() {
+    let sort = SortConfig::quick(300, 0xC0C0_A5EED);
+    let (multiset, position) = samplesort::reference_checksums(&sort);
+    for units in [1usize, 2, 5, 8] {
+        let out: Mutex<Option<(u64, u64)>> = Mutex::new(None);
+        run(cfg(units), |env| {
+            let report = samplesort::run_checked(env, &sort).unwrap();
+            if env.myid() == 0 {
+                *out.lock().unwrap() = Some((report.checksum_out, report.position_checksum));
+            }
+        })
+        .unwrap();
+        let got = out.into_inner().unwrap().expect("unit 0 captured no checksums");
+        assert_eq!(got, (multiset, position), "{units}-unit world diverged from the oracle");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-extent regressions: empty patterns and arrays are legal and inert
+// ---------------------------------------------------------------------------
+
+/// The sharp edge the sort's empty buckets exposed: zero-length
+/// distributions must construct, report themselves empty, and behave as
+/// no-ops in the access tiers and collective algorithms instead of
+/// erroring at `Pattern::new`.
+#[test]
+fn empty_arrays_are_legal_and_inert() {
+    run(cfg(4), |env| {
+        let a: Array<'_, u64> = Array::blocked(env, DART_TEAM_ALL, 0).unwrap();
+        assert!(a.is_empty());
+        assert_eq!(a.len(), 0);
+        assert_eq!(a.local_len(), 0);
+        assert_eq!(a.read_local().unwrap(), Vec::<u64>::new());
+        // Element access out of an empty domain is an error, not a panic.
+        assert!(a.get(0).is_err());
+        // Zero-length bulk transfers issue zero one-sided operations.
+        assert_eq!(a.copy_in(0, &[]).unwrap(), 0);
+        assert_eq!(a.copy_in_async(0, &[]).unwrap(), 0);
+        let mut none: [u64; 0] = [];
+        assert_eq!(a.copy_out(0, &mut none).unwrap(), 0);
+        // Collective algorithms: sum of nothing is zero, extremum of
+        // nothing is an error (it used to panic), copy of nothing is a
+        // zero-op barrier.
+        assert_eq!(algorithms::sum(&a).unwrap(), 0);
+        assert!(algorithms::min_element(&a).is_err());
+        assert!(algorithms::max_element(&a).is_err());
+        let b: Array<'_, u64> = Array::cyclic(env, DART_TEAM_ALL, 0).unwrap();
+        assert_eq!(algorithms::copy(&a, &b).unwrap(), 0);
+        env.barrier(DART_TEAM_ALL).unwrap();
+        b.free().unwrap();
+        a.free().unwrap();
+    })
+    .unwrap();
+}
+
+/// Redistribution with fewer elements than units: some units hold a
+/// zero-length partition and must participate only in the barriers while
+/// the data still lands bit-exactly.
+#[test]
+fn copy_redistributes_with_zero_extent_units() {
+    run(cfg(4), |env| {
+        let me = env.team_myid(DART_TEAM_ALL).unwrap();
+        for n in [1usize, 2, 3] {
+            let src: Array<'_, u64> =
+                Array::new(env, DART_TEAM_ALL, Pattern::blocked(n, 4).unwrap()).unwrap();
+            let dst: Array<'_, u64> =
+                Array::new(env, DART_TEAM_ALL, Pattern::cyclic(n, 4).unwrap()).unwrap();
+            algorithms::transform(&src, |g, _| (g as u64 + 1) * 0x9E37).unwrap();
+            algorithms::copy(&src, &dst).unwrap();
+            let local = dst.read_local().unwrap();
+            for (l, got) in local.iter().enumerate() {
+                let g = dst.pattern().local_to_global(me, l);
+                assert_eq!(*got, (g as u64 + 1) * 0x9E37, "n={n}, element {g}");
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+            dst.free().unwrap();
+            src.free().unwrap();
+        }
+    })
+    .unwrap();
+}

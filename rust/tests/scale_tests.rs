@@ -1,12 +1,19 @@
 //! Tier-1 scale smoke: a 256-unit world runs one barrier + allreduce +
 //! put/flush round under both execution modes, producing bit-identical
 //! results, with the pooled mode's concurrently runnable ranks bounded
-//! by the configured slot limit and the channel table staying sparse.
+//! by the configured slot limit and the channel table staying sparse —
+//! plus the irregular-workload agreement sweep: BFS and sample sort must
+//! be bit-identical across flat/hier collectives, fast path on/off, and
+//! both execution modes.
 
+use dart::apps::bfs::{self, BfsConfig, BfsSummary};
+use dart::apps::samplesort::{self, KeyDist, SortConfig};
 use dart::dart::{UnitId, DART_TEAM_ALL};
+use dart::dash::GraphConfig;
 use dart::mpisim::{ExecMode, MpiOp};
 use dart::simnet::PinPolicy;
 use dart::testing::world;
+use std::sync::Mutex;
 
 const UNITS: usize = 256;
 const NODES: usize = 16;
@@ -88,4 +95,100 @@ fn smoke_256_units_both_exec_modes() {
     // populate nowhere near the 65 536 eager pairs.
     let channels = pooled[0].2;
     assert!(channels > 0 && channels < UNITS * UNITS / 8, "channel table not sparse: {channels}");
+}
+
+// ---------------------------------------------------------------------
+// Irregular-workload cross-config agreement
+// ---------------------------------------------------------------------
+
+/// What one (hier, fastpath, exec) cell leaves behind: the BFS level
+/// summary and the sample sort's oracle checksums.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct IrregularOutcome {
+    bfs: BfsSummary,
+    sort_multiset: u64,
+    sort_position: u64,
+}
+
+fn irregular_cell(hier: bool, fastpath: bool, exec: ExecMode) -> IrregularOutcome {
+    let graph = GraphConfig { scale: 6, edge_factor: 8, seed: 0xA6EE_D0C5 };
+    let bfs_cfg = BfsConfig { graph, root: 0, combine: hier, team: DART_TEAM_ALL };
+    let sort_cfg = SortConfig {
+        n: 1 << 10,
+        seed: 0xA6EE_D0C5,
+        dist: KeyDist::Skewed,
+        oversample: 8,
+        team: DART_TEAM_ALL,
+    };
+    let out: Mutex<Option<IrregularOutcome>> = Mutex::new(None);
+    world(8)
+        .nodes(2)
+        .placement(PinPolicy::ScatterNode)
+        .pools(1 << 17, 1 << 19)
+        .shmem(true)
+        .fastpath(fastpath)
+        .hierarchical(hier)
+        .exec(exec, 4)
+        .launch(|env| {
+            let b = bfs::run_distributed(env, &bfs_cfg).unwrap();
+            let s = samplesort::run_distributed(env, &sort_cfg).unwrap();
+            assert!(s.sorted_ok, "sort output not globally sorted");
+            assert_eq!(s.checksum_in, s.checksum_out, "sort lost or invented keys");
+            if env.myid() == 0 {
+                *out.lock().unwrap() = Some(IrregularOutcome {
+                    bfs: b.summary,
+                    sort_multiset: s.checksum_out,
+                    sort_position: s.position_checksum,
+                });
+            }
+            env.barrier(DART_TEAM_ALL).unwrap();
+        });
+    out.into_inner().unwrap().expect("unit 0 captured no outcome")
+}
+
+/// BFS levels and the sorted permutation are functions of (graph seed,
+/// key stream) alone — every runtime configuration axis must be
+/// invisible: flat vs hierarchical collectives (with intra-node claim
+/// combining riding the hier cells), the shmem fast path on vs off, and
+/// thread-per-rank vs pooled execution. All eight cells must agree
+/// bit-for-bit with each other and with the sequential oracles.
+#[test]
+fn irregular_workloads_agree_across_configs() {
+    let mut cells = Vec::new();
+    for exec in [ExecMode::ThreadPerRank, ExecMode::Pooled] {
+        for hier in [false, true] {
+            for fastpath in [false, true] {
+                cells.push(((hier, fastpath, exec), irregular_cell(hier, fastpath, exec)));
+            }
+        }
+    }
+    let baseline = cells[0].1;
+    for (label, cell) in &cells[1..] {
+        assert_eq!(
+            *cell, baseline,
+            "config {label:?} diverged from {:?}",
+            (false, false, ExecMode::ThreadPerRank)
+        );
+    }
+
+    let graph = GraphConfig { scale: 6, edge_factor: 8, seed: 0xA6EE_D0C5 };
+    let oracle = bfs::reference_summary(&BfsConfig {
+        graph,
+        root: 0,
+        combine: false,
+        team: DART_TEAM_ALL,
+    });
+    assert_eq!(baseline.bfs, oracle, "distributed BFS disagrees with the sequential oracle");
+    let (multiset, position) = samplesort::reference_checksums(&SortConfig {
+        n: 1 << 10,
+        seed: 0xA6EE_D0C5,
+        dist: KeyDist::Skewed,
+        oversample: 8,
+        team: DART_TEAM_ALL,
+    });
+    assert_eq!(
+        (baseline.sort_multiset, baseline.sort_position),
+        (multiset, position),
+        "distributed sort disagrees with the sequential oracle"
+    );
 }

@@ -98,6 +98,39 @@ SCHEMAS = {
         ],
         "other_keys": ["scenario", "placement"],
     },
+    "perf_graph": {
+        "top": ["bench", "reps", "scale", "edge_factor", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "nverts",
+            "nedges",
+            "reached",
+            "max_level",
+            "checksum",
+            "rounds",
+            "claims",
+            "fastpath_atomics",
+            "teps",
+            "wall_ms",
+        ],
+        "other_keys": ["mode", "fastpath"],
+    },
+    "perf_sort": {
+        "top": ["bench", "reps", "n", "results"],
+        "rows": lambda doc: doc["results"],
+        "numeric_keys": [
+            "units",
+            "n",
+            "checksum",
+            "position_checksum",
+            "max_bucket",
+            "redist_ops",
+            "keys_per_sec",
+            "wall_ms",
+        ],
+        "other_keys": ["collectives", "fastpath", "dist"],
+    },
     "perf_scale": {
         "top": ["bench", "reps", "max_units", "results"],
         "rows": lambda doc: doc["results"],
